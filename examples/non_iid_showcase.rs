@@ -1,0 +1,58 @@
+//! Non-IID showcase — paper §4.1.1 (Fig 6).
+//!
+//! Splits the synth-cifar10 train split across 5 agents under IID and
+//! non-IID (`niid_factor` 1 / 3 / 5) and renders each agent's label
+//! histogram as an ASCII bar chart — the textual rendition of Fig 6,
+//! plus the Dirichlet extension.
+//!
+//! Run: `cargo run --release --example non_iid_showcase`
+
+use anyhow::Result;
+use ferrisfl::datasets::{Dataset, Split};
+use ferrisfl::federation::{shard, Scheme};
+use ferrisfl::runtime::Manifest;
+use ferrisfl::util::Rng;
+
+fn bar(n: usize, max: usize, width: usize) -> String {
+    let filled = if max == 0 { 0 } else { n * width / max };
+    "█".repeat(filled)
+}
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let ds = Dataset::load(&manifest, "synth-cifar10", 42)?;
+    let labels = ds.labels(Split::Train);
+    let classes = ds.info.num_classes;
+    let mut rng = Rng::new(42);
+
+    for scheme in [
+        Scheme::Iid,
+        Scheme::NonIid { niid_factor: 1 },
+        Scheme::NonIid { niid_factor: 3 },
+        Scheme::NonIid { niid_factor: 5 },
+        Scheme::Dirichlet { alpha: 0.3 },
+    ] {
+        let p = shard(&labels, 5, scheme, &mut rng)?;
+        let hist = p.label_histogram(&labels, classes);
+        let uniq = p.unique_labels(&labels);
+        let max = hist.iter().flatten().copied().max().unwrap_or(1);
+        println!("\n=== split: {scheme} ===");
+        for (agent, row) in hist.iter().enumerate() {
+            println!(
+                "agent {agent} ({} samples, {} unique labels)",
+                p.shards[agent].len(),
+                uniq[agent]
+            );
+            for (label, &count) in row.iter().enumerate() {
+                if count > 0 {
+                    println!("  label {label}: {:<30} {count}", bar(count, max, 30));
+                }
+            }
+        }
+    }
+    println!(
+        "\npaper shape check: unique labels per agent grow with niid_factor \
+         (niid=1 = single-label extreme); IID is near-uniform."
+    );
+    Ok(())
+}

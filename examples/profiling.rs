@@ -1,0 +1,76 @@
+//! Profiling — paper §4.2.2 + §4.2.3 (Table 4 + Fig 10).
+//!
+//! Trains LeNet-5 on synth-mnist for one (subsampled) epoch under the
+//! SimpleProfiler and the runtime memory tracker, then prints the
+//! Table-4 action table and the Fig-10 per-batch byte series.
+//!
+//! Run: `cargo run --release --example profiling`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use ferrisfl::datasets::{Dataset, Split};
+use ferrisfl::entrypoint::worker::{evaluate, with_runtime, RuntimeKey};
+use ferrisfl::profiler::{MemoryTracker, SimpleProfiler};
+use ferrisfl::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let manifest = Arc::new(Manifest::load("artifacts")?);
+    let dataset = Dataset::load(&manifest, "synth-mnist", 42)?;
+    let n = 1600.min(dataset.num_train());
+    let key = RuntimeKey {
+        model: "lenet5".into(),
+        dataset: "synth-mnist".into(),
+        optimizer: "sgd".into(),
+        mode: "full".into(),
+        entry_tag: String::new(),
+    };
+    let art = manifest.artifact("lenet5", "synth-mnist")?;
+    let mut params = manifest.read_f32(&art.init_file)?;
+
+    let mut profiler = SimpleProfiler::new();
+    let mut tracker = MemoryTracker::new();
+
+    with_runtime(&manifest, &key, |rt| {
+        let b = rt.train_batch;
+        let mut start = 0;
+        while start + b <= n {
+            let idx: Vec<usize> = (start..start + b).collect();
+            let batch =
+                profiler.time("batch_synthesis", || dataset.batch(Split::Train, &idx));
+            profiler.time("optimizer_step", || {
+                rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)
+            })?;
+            tracker.sample_batch();
+            start += b;
+        }
+        profiler.time("validation", || -> Result<()> {
+            evaluate(rt, &dataset)(&params)?;
+            Ok(())
+        })?;
+        Ok(())
+    })?;
+    profiler.stop();
+
+    println!("=== Table 4: SimpleProfiler (LeNet-5, 1 epoch) ===\n");
+    println!("{}", profiler.report());
+
+    println!("=== Fig 10: per-batch runtime bytes (first/last 5 batches) ===\n");
+    println!("{:>6} {:>14} {:>12} {:>14}", "batch", "allocated", "freed", "in_use");
+    let samples = tracker.samples();
+    for m in samples.iter().take(5) {
+        println!("{:>6} {:>14} {:>12} {:>14}", m.batch, m.allocated, m.freed, m.in_use);
+    }
+    println!("{:>6}", "...");
+    for m in samples.iter().rev().take(5).rev() {
+        println!("{:>6} {:>14} {:>12} {:>14}", m.batch, m.allocated, m.freed, m.in_use);
+    }
+    let total_alloc: u64 = samples.iter().map(|m| m.allocated).sum();
+    println!(
+        "\n{} batches, {:.1} MiB marshalled total, steady in-use {} B",
+        samples.len(),
+        total_alloc as f64 / (1024.0 * 1024.0),
+        samples.last().map(|m| m.in_use).unwrap_or(0)
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart — the minimal end-to-end FerrisFL experiment.
+//!
+//! Mirrors the paper's Appendix A flow: build `FLParams`, shard a
+//! dataset, initialise agents, pick a sampler + aggregator, hand it all
+//! to the `Entrypoint`, and run. Everything below the `Entrypoint` is
+//! AOT-compiled HLO executing through PJRT — no python anywhere.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use ferrisfl::config::FlParams;
+use ferrisfl::entrypoint::Entrypoint;
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::ConsoleLogger;
+use ferrisfl::runtime::Manifest;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT manifest (build with `make artifacts`).
+    let manifest = Arc::new(Manifest::load("artifacts")?);
+
+    // 2. FLParams — the same hyperparameter surface as the paper's
+    //    FLParams object (Fig 16 of the paper).
+    let params = FlParams {
+        experiment_name: "quickstart".into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 10,
+        sampling_ratio: 0.5,
+        global_epochs: 5,
+        local_epochs: 2,
+        split: Scheme::NonIid { niid_factor: 3 },
+        sampler: "random".into(),
+        aggregator: "fedavg".into(),
+        optimizer: "sgd".into(),
+        mode: "full".into(),
+        use_pretrained: false,
+        lr: 0.05,
+        seed: 42,
+        workers: 4,
+        eval_every: 1,
+        max_local_steps: 0,
+        log_dir: String::new(),
+        dropout: 0.0,
+        defense: "none".into(),
+        compression: "none".into(),
+    };
+
+    // 3. Entrypoint wires dataset -> sharding -> agents -> runtime.
+    let mut entrypoint = Entrypoint::new(params, manifest)?;
+    println!(
+        "agents hold between {} and {} samples each",
+        entrypoint.agents.iter().map(|a| a.num_samples()).min().unwrap(),
+        entrypoint.agents.iter().map(|a| a.num_samples()).max().unwrap(),
+    );
+
+    // 4. Run, streaming per-round metrics to the console.
+    let mut logger = ConsoleLogger::default();
+    let result = entrypoint.run(&mut logger)?;
+
+    println!(
+        "\nquickstart done: final accuracy {:.1}% over {} test examples",
+        100.0 * result.final_eval.accuracy(),
+        result.final_eval.count as u64
+    );
+    println!("\n{}", result.profiler.report());
+    Ok(())
+}

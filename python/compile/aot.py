@@ -1,0 +1,327 @@
+"""AOT pipeline: lower the L2/L1 stack to HLO text + build all artifacts.
+
+Run once by ``make artifacts``; python never appears on the request path.
+Outputs (all under ``artifacts/``):
+
+  manifest.json                    — the L2<->L3 contract (see DESIGN.md)
+  <entry>_<model>_<dataset>.hlo.txt — AOT-lowered executables
+  agg_p<P>_k<K>.hlo.txt            — FedAvg aggregation per parameter size
+  templates_<dataset>.bin          — raw f32 class templates (datagen)
+  init_<model>_<dataset>.f32       — He-initialised flat weights
+  pretrained_<model>_<dataset>.f32 — upstream-pretrained flat weights
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, kernels, pretrain
+from .kernels import ref as kref
+from .models.registry import Model, build_model, MODEL_REGISTRY
+from .models.train import (
+    make_aggregate,
+    make_eval_step,
+    make_train_step_adam,
+    make_train_step_sgd,
+)
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 128
+K_PAD = 16  # max sampled agents per round for the single agg artifact
+
+#: The artifact matrix: every (model, dataset) pair an experiment needs.
+#: ``opts``: list of (optimizer, mode) train entries to lower.
+#: ``pretrain``: build upstream-pretrained weights (transfer experiments).
+#: ``ref_variant``: additionally lower with pure-jnp reference kernels
+#:                  (the kernel-ablation bench).
+ARTIFACTS = [
+    dict(
+        model="mlp-s",
+        dataset="synth-mnist",
+        opts=[("sgd", "full"), ("sgd", "featext")],
+        pretrain=True,
+        ref_variant=True,
+    ),
+    dict(
+        model="lenet5",
+        dataset="synth-mnist",
+        opts=[("sgd", "full")],
+        pretrain=False,
+        ref_variant=False,
+    ),
+    dict(
+        model="cnn-m",
+        dataset="synth-cifar10",
+        opts=[("sgd", "full"), ("sgd", "featext")],
+        pretrain=True,
+        pretrain_steps=100,
+        pretrain_batch=32,
+        ref_variant=False,
+    ),
+    dict(
+        model="micronet-05",
+        dataset="synth-mnist",
+        opts=[("adam", "featext"), ("adam", "full"), ("sgd", "full")],
+        pretrain=True,
+        pretrain_steps=400,
+        pretrain_opt="adam",
+        pretrain_lr=0.01,
+        ref_variant=False,
+    ),
+]
+
+#: Canonical dataset per family, used for the Table-2 zoo inventory.
+CANONICAL_DATASET = {
+    "mlp": "synth-mnist",
+    "lenet": "synth-mnist",
+    "cnn": "synth-cifar10",
+    "micronet": "synth-mnist",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    # The HLO text printer elides large literals as "{...}", which the
+    # downstream text parser silently reads back as zeros.  Any such
+    # constant would corrupt the artifact — the graphs are written to
+    # avoid big literals (e.g. iota-based masks), and this guard keeps it
+    # that way.
+    if "{...}" in text:
+        raise RuntimeError(
+            "lowered HLO contains an elided large constant ({...}); "
+            "rewrite the graph to avoid large literals (use iota/broadcast)"
+        )
+    return text
+
+
+@contextlib.contextmanager
+def ref_kernels():
+    """Swap the Pallas kernels for the pure-jnp oracle (ablation builds).
+
+    The layer code resolves ``kernels.<fn>`` at call time, so patching the
+    module attributes reroutes the whole zoo through the reference path.
+    """
+    saved = {
+        "dense": kernels.dense,
+        "conv2d": kernels.conv2d,
+        "matmul": kernels.matmul,
+        "softmax_xent": kernels.softmax_xent,
+        "avg_pool": kernels.avg_pool,
+        "max_pool": kernels.max_pool,
+        "fedavg_aggregate": kernels.fedavg_aggregate,
+    }
+    kernels.dense = kref.dense_ref
+    kernels.conv2d = kref.conv2d_ref
+    kernels.matmul = kref.matmul_ref
+    kernels.softmax_xent = kref.softmax_xent_ref
+    kernels.avg_pool = kref.avg_pool_ref
+    kernels.max_pool = kref.max_pool_ref
+    kernels.fedavg_aggregate = kref.fedavg_ref
+    try:
+        yield
+    finally:
+        for k, v in saved.items():
+            setattr(kernels, k, v)
+
+
+def _shape(dt, *dims):
+    return jax.ShapeDtypeStruct(tuple(dims), dt)
+
+
+def lower_entries(model: Model, spec: datagen.DatasetSpec, opts, tag=""):
+    """Lower train/eval entry points for one model@dataset.
+
+    Returns ``{entry_name: hlo_text}``.
+    """
+    p = model.num_params
+    h, w, c = spec.input_shape
+    f32, i32 = jnp.float32, jnp.int32
+    out = {}
+
+    xb = _shape(f32, TRAIN_BATCH, h, w, c)
+    yb = _shape(i32, TRAIN_BATCH)
+    scalar = _shape(f32)
+    pvec = _shape(f32, p)
+
+    for optname, mode in opts:
+        mode_key = "scratch" if mode == "full" else "featext"
+        if optname == "sgd":
+            fn = make_train_step_sgd(model, mode_key)
+            lowered = jax.jit(fn).lower(pvec, xb, yb, scalar)
+        elif optname == "adam":
+            fn = make_train_step_adam(model, mode_key)
+            lowered = jax.jit(fn).lower(
+                pvec, pvec, pvec, scalar, xb, yb, scalar
+            )
+        else:
+            raise ValueError(optname)
+        out[f"train_{optname}_{mode}{tag}"] = to_hlo_text(lowered)
+
+    ev = make_eval_step(model)
+    lowered = jax.jit(ev).lower(
+        pvec,
+        _shape(f32, EVAL_BATCH, h, w, c),
+        _shape(i32, EVAL_BATCH),
+        _shape(f32, EVAL_BATCH),
+    )
+    out[f"eval{tag}"] = to_hlo_text(lowered)
+    return out
+
+
+def lower_aggregate(p: int, k_pad: int = K_PAD) -> str:
+    fn = make_aggregate(k_pad)
+    lowered = jax.jit(fn).lower(
+        _shape(jnp.float32, k_pad, p),
+        _shape(jnp.float32, k_pad),
+        _shape(jnp.float32, p),
+    )
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    manifest: dict = {
+        "version": 1,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "k_pad": K_PAD,
+        "datasets": {},
+        "zoo": {},
+        "artifacts": [],
+    }
+
+    # ---- datasets: registry + templates --------------------------------
+    for name, spec in datagen.DATASET_REGISTRY.items():
+        templates = datagen.make_templates(spec)
+        tpath = os.path.join(out_dir, spec.template_file)
+        templates.astype("<f4").tofile(tpath)
+        manifest["datasets"][name] = {
+            "group": spec.group,
+            "height": spec.height,
+            "width": spec.width,
+            "channels": spec.channels,
+            "num_classes": spec.num_classes,
+            "train_n": spec.train_n,
+            "test_n": spec.test_n,
+            "real_train_n": spec.real_train_n,
+            "real_test_n": spec.real_test_n,
+            "noise": spec.noise,
+            "jitter": spec.jitter,
+            "template_file": spec.template_file,
+        }
+        print(f"[datagen] {name}: templates {templates.shape} -> {tpath}")
+
+    # ---- zoo inventory (Table 2) ----------------------------------------
+    for variant, mspec in MODEL_REGISTRY.items():
+        ds = datagen.DATASET_REGISTRY[CANONICAL_DATASET[mspec.family]]
+        m = build_model(variant, ds.input_shape, ds.num_classes)
+        manifest["zoo"][variant] = {
+            "family": mspec.family,
+            "description": mspec.description,
+            "canonical_dataset": ds.name,
+            "num_params": m.num_params,
+            "head_size": m.head_size,
+            "feature_extract": True,
+            "finetune": True,
+        }
+
+    # ---- per-experiment artifacts ---------------------------------------
+    agg_done: set[int] = set()
+    for art in ARTIFACTS:
+        variant, dsname = art["model"], art["dataset"]
+        spec = datagen.DATASET_REGISTRY[dsname]
+        model = build_model(variant, spec.input_shape, spec.num_classes)
+        ident = f"{variant}_{dsname}"
+        print(f"[aot] lowering {ident} (P={model.num_params}) ...")
+
+        entries = lower_entries(model, spec, art["opts"])
+        if art.get("ref_variant"):
+            with ref_kernels():
+                entries.update(lower_entries(model, spec, art["opts"], "_ref"))
+
+        entry_files = {}
+        for ename, text in entries.items():
+            fname = f"{ename}_{ident}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry_files[ename] = fname
+
+        # aggregation artifact, one per distinct P
+        agg_file = f"agg_p{model.num_params}_k{K_PAD}.hlo.txt"
+        if model.num_params not in agg_done:
+            agg_done.add(model.num_params)
+            with open(os.path.join(out_dir, agg_file), "w") as f:
+                f.write(lower_aggregate(model.num_params))
+            print(f"[aot]   agg artifact {agg_file}")
+
+        # initial + pretrained weights
+        init_file = f"init_{ident}.f32"
+        model.init(seed=0xF157).astype("<f4").tofile(
+            os.path.join(out_dir, init_file)
+        )
+        pre_file = None
+        if art["pretrain"]:
+            steps = 20 if quick else art.get("pretrain_steps", 150)
+            batch = art.get("pretrain_batch", 64)
+            opt = art.get("pretrain_opt", "sgd")
+            lr = art.get("pretrain_lr", 0.05)
+            print(f"[pretrain] {ident} ({steps} steps, batch {batch}, {opt}) ...")
+            wts = pretrain.pretrain(
+                variant, dsname, steps=steps, batch=batch, lr=lr, optimizer=opt
+            )
+            pre_file = f"pretrained_{ident}.f32"
+            wts.astype("<f4").tofile(os.path.join(out_dir, pre_file))
+
+        manifest["artifacts"].append(
+            {
+                "id": ident,
+                "model": variant,
+                "dataset": dsname,
+                "num_params": model.num_params,
+                "head_size": model.head_size,
+                "entries": entry_files,
+                "agg_file": agg_file,
+                "init_file": init_file,
+                "pretrained_file": pre_file,
+            }
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"[aot] wrote manifest with {len(manifest['artifacts'])} artifacts "
+        f"in {time.time() - t0:.1f}s"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="FerrisFL AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="short pretraining (CI/tests)"
+    )
+    args = ap.parse_args()
+    build(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Synthetic dataset substrate (DESIGN.md Substitution #1).
+
+The paper's datamodules wrap MNIST / EMNIST / CIFAR / FashionMNIST.  This
+environment has no network or dataset files, so we build the closest
+synthetic equivalent that exercises the same code paths: class-structured
+image data where each class ``c`` has a fixed latent *template* image and
+a sample is ``clip(template[c] + affine jitter + pixel noise)``.
+
+The templates are generated HERE (once, at artifact-build time, from a
+fixed seed) and stored as raw f32 in ``artifacts/templates_<name>.bin``;
+the rust coordinator memory-maps them and synthesises train/test samples
+deterministically from (split, index).  Python uses the same templates
+for the *upstream* pre-training task (different jitter/noise level), which
+is what makes the transfer-learning experiments meaningful.
+
+The registry mirrors paper Table 1, scaled ~6x down by default so a full
+FL experiment runs in CPU-minutes; the real sizes are kept in the spec for
+reference and can be enabled via ``full_size=True`` runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """One registry entry (a row of paper Table 1)."""
+
+    name: str
+    group: str  # paper Table 1 "Group"
+    height: int
+    width: int
+    channels: int
+    num_classes: int
+    train_n: int  # scaled-down default
+    test_n: int
+    real_train_n: int  # the paper dataset's true size, for the record
+    real_test_n: int
+    noise: float = 1.0  # downstream sample pixel-noise sigma
+    jitter: int = 3  # max |shift| in pixels for downstream samples
+    template_seed: int = 0x7F0A
+
+    @property
+    def input_shape(self) -> tuple[int, int, int]:
+        return (self.height, self.width, self.channels)
+
+    @property
+    def template_file(self) -> str:
+        return f"templates_{self.name}.bin"
+
+
+def _spec(name, group, h, w, c, classes, rtrain, rtest, scale=6):
+    return DatasetSpec(
+        name=name,
+        group=group,
+        height=h,
+        width=w,
+        channels=c,
+        num_classes=classes,
+        train_n=max(classes * 40, rtrain // scale // 10 * 10),
+        test_n=max(classes * 10, rtest // scale // 10 * 10),
+        real_train_n=rtrain,
+        real_test_n=rtest,
+    )
+
+
+#: Paper Table 1, synthetic equivalents.  All support IID and non-IID
+#: sharding (sharding is dataset-agnostic, rust/src/federation).
+DATASET_REGISTRY: dict[str, DatasetSpec] = {
+    s.name: s
+    for s in [
+        _spec("synth-mnist", "MNIST", 28, 28, 1, 10, 60000, 10000),
+        _spec("synth-fmnist", "FashionMNIST", 28, 28, 1, 10, 60000, 10000),
+        _spec("synth-cifar10", "CIFAR", 32, 32, 3, 10, 50000, 10000),
+        _spec("synth-cifar100", "CIFAR", 32, 32, 3, 100, 50000, 10000),
+        _spec("synth-emnist-digits", "EMNIST", 28, 28, 1, 10, 240000, 40000, 24),
+        _spec("synth-emnist-letters", "EMNIST", 28, 28, 1, 26, 124800, 20800, 12),
+        _spec("synth-emnist-balanced", "EMNIST", 28, 28, 1, 47, 112800, 18800, 12),
+        _spec("synth-emnist-byclass", "EMNIST", 28, 28, 1, 62, 697932, 116323, 70),
+        _spec("synth-emnist-bymerge", "EMNIST", 28, 28, 1, 47, 697932, 116323, 70),
+    ]
+}
+
+
+def make_templates(spec: DatasetSpec) -> np.ndarray:
+    """Deterministic per-class latent templates ``f32[C, H, W, ch]``.
+
+    Each template is a smooth random field (sum of random 2-D sinusoids)
+    plus a class-specific localized blob, normalised to [0, 1].  Smoothness
+    makes small spatial jitter label-preserving; the blob gives each class
+    a distinct low-frequency signature a small CNN/MLP can learn.
+    """
+    rng = np.random.default_rng(spec.template_seed ^ hash(spec.name) % (2**31))
+    h, w, ch = spec.input_shape
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    yy /= h
+    xx /= w
+    out = np.zeros((spec.num_classes, h, w, ch), np.float32)
+    for c in range(spec.num_classes):
+        for k in range(ch):
+            field = np.zeros((h, w), np.float32)
+            # low-frequency sinusoid mixture
+            for _ in range(4):
+                fy, fx = rng.uniform(0.5, 3.0, 2)
+                py, px = rng.uniform(0, 2 * np.pi, 2)
+                amp = rng.uniform(0.5, 1.0)
+                field += amp * np.sin(2 * np.pi * (fy * yy + fx * xx) + py + px)
+            # class blob: Gaussian bump at a class-dependent location
+            cy = 0.2 + 0.6 * ((c * 37 % spec.num_classes) / max(spec.num_classes - 1, 1))
+            cx = 0.2 + 0.6 * ((c * 17 % spec.num_classes) / max(spec.num_classes - 1, 1))
+            sig = 0.08 + 0.04 * (c % 3)
+            blob = np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * sig**2)))
+            field += 2.5 * blob
+            lo, hi = field.min(), field.max()
+            out[c, :, :, k] = (field - lo) / max(hi - lo, 1e-6)
+    return out
+
+
+def synthesize(
+    templates: np.ndarray,
+    labels: np.ndarray,
+    rng: np.random.Generator,
+    noise: float,
+    jitter: int,
+) -> np.ndarray:
+    """Draw samples ``f32[N, H, W, C]`` for given labels.
+
+    sample = roll(template[label], random shift) + N(0, noise), clipped to
+    [-0.5, 1.5] then centred.  The SAME recipe is implemented in rust
+    (rust/src/datasets) for the downstream task; python only uses it for
+    upstream pre-training, with a different (noise, jitter) setting.
+    """
+    n = len(labels)
+    _, h, w, ch = templates.shape
+    out = np.empty((n, h, w, ch), np.float32)
+    for i, lab in enumerate(labels):
+        img = templates[lab]
+        if jitter:
+            dy = int(rng.integers(-jitter, jitter + 1))
+            dx = int(rng.integers(-jitter, jitter + 1))
+            img = np.roll(np.roll(img, dy, axis=0), dx, axis=1)
+        img = img + rng.normal(0.0, noise, img.shape).astype(np.float32)
+        out[i] = np.clip(img, -0.5, 1.5) - 0.5
+    return out

@@ -1,0 +1,30 @@
+"""L1: Pallas kernels for FerrisFL's compute hot-spots.
+
+Public surface:
+  - :func:`matmul` — blocked MXU matmul (custom VJP).
+  - :func:`dense` — fused ``act(x @ w + b)`` (custom VJP).
+  - :func:`conv2d`, :func:`im2col`, :func:`avg_pool`, :func:`max_pool` —
+    conv stack via im2col + MXU matmul.
+  - :func:`softmax_xent` — fused CE loss + top-1 hit (custom VJP).
+  - :func:`fedavg_aggregate` — the FL server aggregation kernel (Eq. 2).
+
+Everything lowers under ``interpret=True`` so the emitted HLO runs on the
+rust coordinator's PJRT CPU client; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .conv2d import avg_pool, conv2d, im2col, max_pool
+from .dense import dense
+from .fedavg import fedavg_aggregate
+from .matmul import matmul
+from .softmax_xent import softmax_xent
+
+__all__ = [
+    "avg_pool",
+    "conv2d",
+    "dense",
+    "fedavg_aggregate",
+    "im2col",
+    "matmul",
+    "max_pool",
+    "softmax_xent",
+]

@@ -1,0 +1,102 @@
+"""Conv2D via im2col + the Pallas MXU matmul.
+
+This is the documented TPU adaptation of a CUDA-style direct convolution
+(DESIGN.md §Hardware-Adaptation): instead of cuDNN implicit GEMM over
+threadblocks, we lay the receptive fields out as rows of a patch matrix
+(im2col, pure data movement that XLA fuses into the surrounding graph) and
+feed the MXU one large tiled matmul of shape
+``[B*OH*OW, KH*KW*C] @ [KH*KW*C, O]``.
+
+The im2col unfolding is plain (differentiable) jnp slicing, so autodiff
+flows through it and reaches the custom VJP of the Pallas matmul — no
+bespoke conv backward kernel is needed, and the backward pass is itself
+two MXU matmuls.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0):
+    """Unfold ``x: f32[B,H,W,C]`` into patches ``f32[B,OH,OW,KH*KW*C]``.
+
+    Feature order of the last axis is (kh, kw, c) flattened, matching
+    ``w.reshape(KH*KW*C, O)`` for weights stored as ``f32[KH,KW,C,O]``.
+    """
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    b, h, w_, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w_ - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    patches = jnp.stack(cols, axis=3)  # [B, OH, OW, KH*KW, C]
+    return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+    act: str = "relu",
+) -> jnp.ndarray:
+    """2-D convolution with fused bias + activation.
+
+    Args:
+      x: ``f32[B, H, W, C]`` NHWC input.
+      w: ``f32[KH, KW, C, O]`` HWIO filters.
+      b: ``f32[O]`` bias.
+      stride: spatial stride (same for H and W).
+      pad: symmetric zero padding.
+      act: ``"linear" | "relu" | "tanh"``.
+
+    Returns:
+      ``f32[B, OH, OW, O]``.
+    """
+    kh, kw, c, o = w.shape
+    patches = im2col(x, kh, kw, stride, pad)
+    bsz, oh, ow, pk = patches.shape
+    flat = patches.reshape(bsz * oh * ow, pk)
+    y = matmul(flat, w.reshape(kh * kw * c, o)) + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    return y.reshape(bsz, oh, ow, o)
+
+
+def avg_pool(x: jnp.ndarray, k: int = 2, stride: int | None = None):
+    """Average pooling over NHWC, window ``k`` x ``k``."""
+    stride = stride or k
+    b, h, w_, c = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w_ - k) // stride + 1
+    acc = jnp.zeros((b, oh, ow, c), x.dtype)
+    for i in range(k):
+        for j in range(k):
+            acc = acc + x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+    return acc / float(k * k)
+
+
+def max_pool(x: jnp.ndarray, k: int = 2, stride: int | None = None):
+    """Max pooling over NHWC, window ``k`` x ``k``."""
+    stride = stride or k
+    b, h, w_, c = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w_ - k) // stride + 1
+    out = jnp.full((b, oh, ow, c), -jnp.inf, x.dtype)
+    for i in range(k):
+        for j in range(k):
+            out = jnp.maximum(
+                out, x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            )
+    return out

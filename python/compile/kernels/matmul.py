@@ -1,0 +1,100 @@
+"""Blocked MXU matmul Pallas kernel with a custom VJP.
+
+This is the workhorse of the kernel layer: the dense layers, the conv
+layers (via im2col), and both backward passes all lower to this kernel, so
+the entire model fwd/bwd hot path is expressed as MXU-tiled matmuls.
+
+Schedule: a 3-D grid ``(M/bm, N/bn, K/bk)``; the K axis is the reduction
+strip.  Each (i, j) output block stays resident in VMEM across the K steps
+("arbitrary" semantics on the K axis), accumulating partial products — the
+same HBM<->VMEM schedule a CUDA kernel would express with a threadblock
+per output tile and a shared-memory K loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import assert_vmem_ok, pad2, pick_matmul_blocks
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # preferred_element_type pins the MXU accumulator to f32 even if the
+    # inputs are bf16 — matching how TPU matmuls should be written.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """``x @ w`` via the blocked Pallas kernel.
+
+    Args:
+      x: ``f32[M, K]``.
+      w: ``f32[K, N]``.
+      bm/bn/bk: optional block overrides (defaults are MXU-aligned picks).
+
+    Returns:
+      ``f32[M, N]``.
+    """
+    return _matmul_impl(x, w, bm, bn, bk)
+
+
+def _matmul_impl(x, w, bm=None, bn=None, bk=None):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {w.shape}"
+    abm, abk, abn = pick_matmul_blocks(m, k, n)
+    bm, bk, bn = bm or abm, bk or abk, bn or abn
+    assert_vmem_ok((bm, bk), (bk, bn), (bm, bn))
+
+    xp = pad2(x, bm, bk)
+    wp = pad2(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _matmul_fwd(x, w, bm, bn, bk):
+    return _matmul_impl(x, w, bm, bn, bk), (x, w)
+
+
+def _matmul_bwd(bm, bn, bk, res, g):
+    x, w = res
+    # dX = g @ W^T and dW = X^T @ g — both through the same Pallas kernel,
+    # so the backward pass is MXU-tiled too.
+    dx = _matmul_impl(g, w.T)
+    dw = _matmul_impl(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

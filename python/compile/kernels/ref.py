@@ -1,0 +1,74 @@
+"""Pure-jnp correctness oracle for every Pallas kernel.
+
+These are deliberately the most naive possible expressions of each
+operation — no blocking, no fusion, no padding tricks — so that a mismatch
+always indicts the kernel, never the oracle.  pytest (python/tests) sweeps
+shapes/dtypes with hypothesis and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain ``x @ w``."""
+    return jnp.matmul(x, w)
+
+
+def dense_ref(x, w, b, act: str = "relu"):
+    """``act(x @ w + b)`` with the same activation vocabulary as dense()."""
+    z = jnp.matmul(x, w) + b
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "tanh":
+        return jnp.tanh(z)
+    return z
+
+
+def conv2d_ref(x, w, b, stride: int = 1, pad: int = 0, act: str = "relu"):
+    """NHWC/HWIO convolution via lax.conv_general_dilated."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def softmax_xent_ref(z, y):
+    """Stable per-example CE loss + top-1 hit indicator."""
+    z = z.astype(jnp.float32)
+    zmax = jnp.max(z, axis=1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z - zmax), axis=1)) + zmax[:, 0]
+    zy = jnp.take_along_axis(z, y[:, None], axis=1)[:, 0]
+    loss = lse - zy
+    hit = (jnp.argmax(z, axis=1).astype(y.dtype) == y).astype(jnp.float32)
+    return loss, hit
+
+
+def fedavg_ref(deltas, weights, global_params):
+    """``global + weights @ deltas`` (Eq. 2 of the paper)."""
+    return global_params + jnp.einsum("k,kp->p", weights, deltas)
+
+
+def avg_pool_ref(x, k: int = 2, stride: int | None = None):
+    stride = stride or k
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    ) / float(k * k)
+
+
+def max_pool_ref(x, k: int = 2, stride: int | None = None):
+    stride = stride or k
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )

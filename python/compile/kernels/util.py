@@ -1,0 +1,98 @@
+"""Shared helpers for the Pallas kernel layer.
+
+All kernels in this package are written TPU-style — blocked for VMEM with
+MXU-aligned tiles — but are lowered with ``interpret=True`` so the emitted
+HLO runs on any PJRT backend (the rust coordinator uses the CPU client).
+Real-TPU lowering would emit a Mosaic custom-call the CPU plugin cannot
+execute; see DESIGN.md §Hardware-Adaptation.
+
+Because Pallas blocks must tile the array exactly for the schedules we use,
+every public kernel wrapper pads its operands up to block multiples and
+slices the result back.  Padding is with zeros, which is exact for the
+matmul/reduction semantics used here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# MXU-shaped default tiles.  The MXU is a 128x128 systolic array; the VPU
+# lane width is 128 and sublane is 8, so (128, 128) blocks with a 128-deep
+# reduction strip keep both units fed while staying far under the ~16 MiB
+# VMEM budget (3 f32 blocks of 128x128 = 192 KiB).
+MXU_TILE = 128
+
+# Hard VMEM budget we validate block choices against (bytes).  TPU v4 has
+# 16 MiB of VMEM per core; we keep a 2x safety margin for double-buffering.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, preferred: int = MXU_TILE) -> int:
+    """Choose a block size for a dimension of size ``dim``.
+
+    Small dimensions use the padded dimension itself as a single block
+    (padding a 10-wide logit matrix to 128 lanes is cheaper than an extra
+    grid axis); large dimensions use the MXU-aligned ``preferred`` tile.
+    """
+    if dim <= preferred:
+        # Keep lane alignment: pad tiny dims up to a multiple of 8
+        # (f32 sublane) so interpret-mode and Mosaic agree on layout.
+        return max(8, round_up(dim, 8))
+    return preferred
+
+
+def pick_matmul_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Blocks (bm, bk, bn) for an ``[m,k] @ [k,n]`` matmul.
+
+    Policy (§Perf, EXPERIMENTS.md): lane dims (n, k) get MXU-aligned tiles;
+    the row dim bm then grows as large as the VMEM budget allows. Fewer,
+    fatter grid steps amortise the per-step HBM↔VMEM transfer setup (and,
+    on the interpret path the CPU runtime executes, the per-step loop
+    overhead — measured 12x on the cnn-l conv matmuls).
+    """
+    bn = pick_block(n)
+    # Take the whole reduction dim when it fits a reasonable strip: one
+    # K-step means the accumulator never round-trips to HBM.
+    bk = round_up(k, 8) if k <= 2048 else MXU_TILE * 8
+    bm = 8192
+    m_pad = max(8, round_up(m, 8))
+    while bm > 8 and (
+        vmem_bytes((bm, bk), (bk, bn), (bm, bn)) > VMEM_BUDGET or bm >= 2 * m_pad
+    ):
+        bm //= 2
+    bm = max(8, min(bm, m_pad))
+    return bm, bk, bn
+
+
+def pad2(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    """Zero-pad a rank-2 array so each dim is a multiple of (m0, m1)."""
+    p0 = round_up(x.shape[0], m0) - x.shape[0]
+    p1 = round_up(x.shape[1], m1) - x.shape[1]
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def vmem_bytes(*block_shapes: tuple[int, ...], dtype_bytes: int = 4) -> int:
+    """Total VMEM footprint of a set of simultaneously-resident blocks."""
+    total = 0
+    for shape in block_shapes:
+        n = dtype_bytes
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def assert_vmem_ok(*block_shapes: tuple[int, ...]) -> None:
+    """Static sanity check that a kernel's blocks fit the VMEM budget."""
+    used = vmem_bytes(*block_shapes)
+    if used > VMEM_BUDGET:
+        raise ValueError(
+            f"kernel blocks need {used} B of VMEM, budget is {VMEM_BUDGET} B"
+        )

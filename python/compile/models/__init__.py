@@ -1,0 +1,25 @@
+"""L2: the FerrisFL model zoo (JAX, calling the L1 Pallas kernels).
+
+Mirrors TorchFL's ``models`` library (paper Table 2): model *families*
+with *variants*, each exposing the flat-parameter ABI that the rust
+coordinator consumes (DESIGN.md §Flat-parameter ABI).
+
+Families:
+  - ``mlp``       — mlp-s / mlp-m / mlp-l          (paper: MLP)
+  - ``lenet``     — lenet5                          (paper: LeNet)
+  - ``cnn``       — cnn-s / cnn-m / cnn-l           (paper: VGG/AlexNet class)
+  - ``micronet``  — micronet-05 / micronet-10       (paper: MobileNet class)
+
+Every variant supports the three training modes the paper evaluates:
+``scratch``, ``finetune`` (warm start, all params trainable) and
+``featext`` (warm start, only the classifier head trains).
+"""
+
+from .registry import (
+    MODEL_REGISTRY,
+    ModelSpec,
+    build_model,
+    list_variants,
+)
+
+__all__ = ["MODEL_REGISTRY", "ModelSpec", "build_model", "list_variants"]

@@ -1,0 +1,190 @@
+"""Layer mini-framework over the L1 Pallas kernels.
+
+Each layer declares its parameter shapes (so the model can be flattened
+into the single ``f32[P]`` vector the rust coordinator owns) and an
+``apply`` over a list of unflattened parameter arrays.
+
+MXU work (dense, conv-as-im2col-matmul) goes through the Pallas kernels;
+pure data-movement / VPU work (pooling, flatten, depthwise conv) is plain
+jnp, which XLA fuses around the kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels as K
+
+Shape = tuple[int, ...]
+
+
+class Layer:
+    """Base layer: parameter introspection + functional apply."""
+
+    def param_shapes(self, in_shape: Shape) -> tuple[list[Shape], Shape]:
+        """Return (list of parameter shapes, output shape) for ``in_shape``
+        (shape of a single example, no batch dim)."""
+        raise NotImplementedError
+
+    def apply(self, params: Sequence[jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+        """Apply to a batched input ``x`` (leading batch dim)."""
+        raise NotImplementedError
+
+    def init_scale(self, shape: Shape, in_shape: Shape) -> float:
+        """He-style fan-in init scale for a parameter of ``shape``."""
+        fan_in = int(math.prod(in_shape))
+        return math.sqrt(2.0 / max(fan_in, 1))
+
+
+@dataclasses.dataclass
+class Dense(Layer):
+    """Fully-connected layer via the fused Pallas dense kernel."""
+
+    units: int
+    act: str = "relu"
+
+    def param_shapes(self, in_shape):
+        (d,) = in_shape
+        return [(d, self.units), (self.units,)], (self.units,)
+
+    def apply(self, params, x):
+        w, b = params
+        return K.dense(x, w, b, self.act)
+
+
+@dataclasses.dataclass
+class Conv(Layer):
+    """Convolution via im2col + the Pallas MXU matmul."""
+
+    filters: int
+    kernel: int = 3
+    stride: int = 1
+    pad: int = 1
+    act: str = "relu"
+
+    def param_shapes(self, in_shape):
+        h, w, c = in_shape
+        oh = (h + 2 * self.pad - self.kernel) // self.stride + 1
+        ow = (w + 2 * self.pad - self.kernel) // self.stride + 1
+        return (
+            [(self.kernel, self.kernel, c, self.filters), (self.filters,)],
+            (oh, ow, self.filters),
+        )
+
+    def apply(self, params, x):
+        w, b = params
+        return K.conv2d(x, w, b, self.stride, self.pad, self.act)
+
+
+@dataclasses.dataclass
+class DepthwiseConv(Layer):
+    """Depthwise 3x3 conv (MicroNet family).
+
+    Channel-wise spatial filtering is VPU work, not MXU work, so it is
+    expressed as shifted-slice multiplies in plain jnp (the TPU analogue of
+    a CUDA depthwise kernel that never touches tensor cores); the paired
+    pointwise 1x1 conv (a real matmul) goes through the Pallas kernel.
+    """
+
+    kernel: int = 3
+    stride: int = 1
+    pad: int = 1
+    act: str = "linear"
+
+    def param_shapes(self, in_shape):
+        h, w, c = in_shape
+        oh = (h + 2 * self.pad - self.kernel) // self.stride + 1
+        ow = (w + 2 * self.pad - self.kernel) // self.stride + 1
+        return [(self.kernel, self.kernel, c), (c,)], (oh, ow, c)
+
+    def apply(self, params, x):
+        w, b = params
+        if self.pad:
+            x = jnp.pad(
+                x, ((0, 0), (self.pad, self.pad), (self.pad, self.pad), (0, 0))
+            )
+        _, h, ww, c = x.shape
+        oh = (h - self.kernel) // self.stride + 1
+        ow = (ww - self.kernel) // self.stride + 1
+        acc = jnp.zeros((x.shape[0], oh, ow, c), x.dtype)
+        for i in range(self.kernel):
+            for j in range(self.kernel):
+                sl = x[
+                    :,
+                    i : i + oh * self.stride : self.stride,
+                    j : j + ow * self.stride : self.stride,
+                    :,
+                ]
+                acc = acc + sl * w[i, j][None, None, None, :]
+        y = acc + b
+        if self.act == "relu":
+            y = jnp.maximum(y, 0.0)
+        return y
+
+
+@dataclasses.dataclass
+class PointwiseConv(Layer):
+    """1x1 conv == per-pixel matmul on the MXU via the Pallas kernel."""
+
+    filters: int
+    act: str = "relu"
+
+    def param_shapes(self, in_shape):
+        h, w, c = in_shape
+        return [(c, self.filters), (self.filters,)], (h, w, self.filters)
+
+    def apply(self, params, x):
+        w, b = params
+        bsz, h, ww, c = x.shape
+        y = K.dense(x.reshape(bsz * h * ww, c), w, b, self.act)
+        return y.reshape(bsz, h, ww, self.filters)
+
+
+@dataclasses.dataclass
+class AvgPool(Layer):
+    k: int = 2
+
+    def param_shapes(self, in_shape):
+        h, w, c = in_shape
+        return [], (h // self.k, w // self.k, c)
+
+    def apply(self, params, x):
+        return K.avg_pool(x, self.k)
+
+
+@dataclasses.dataclass
+class MaxPool(Layer):
+    k: int = 2
+
+    def param_shapes(self, in_shape):
+        h, w, c = in_shape
+        return [], (h // self.k, w // self.k, c)
+
+    def apply(self, params, x):
+        return K.max_pool(x, self.k)
+
+
+@dataclasses.dataclass
+class Flatten(Layer):
+    def param_shapes(self, in_shape):
+        return [], (int(math.prod(in_shape)),)
+
+    def apply(self, params, x):
+        return x.reshape(x.shape[0], -1)
+
+
+@dataclasses.dataclass
+class GlobalAvgPool(Layer):
+    """Spatial mean -> feature vector (MicroNet head input)."""
+
+    def param_shapes(self, in_shape):
+        h, w, c = in_shape
+        return [], (c,)
+
+    def apply(self, params, x):
+        return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,247 @@
+"""The FerrisFL model zoo registry (paper Table 2 analogue).
+
+A ``ModelSpec`` names a variant and builds its layer stack for a given
+input shape / class count.  ``build_model`` instantiates a ``Model`` —
+the object that owns the flat-parameter layout and the forward pass.
+
+The registry mirrors TorchFL's family/variant structure:
+
+  family     variants                  featext  finetune
+  ---------  ------------------------  -------  --------
+  mlp        mlp-s, mlp-m, mlp-l       yes      yes
+  lenet      lenet5                    yes      yes
+  cnn        cnn-s, cnn-m, cnn-l       yes      yes
+  micronet   micronet-05, micronet-10  yes      yes
+
+(TorchFL marks ALEXNET/LENET/MLP as not supporting transfer modes because
+torchvision ships no ImageNet weights for them; our pretraining substrate
+pre-trains every variant, so every variant supports both modes.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (
+    AvgPool,
+    Conv,
+    Dense,
+    DepthwiseConv,
+    Flatten,
+    GlobalAvgPool,
+    Layer,
+    MaxPool,
+    PointwiseConv,
+)
+
+Shape = tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A zoo entry: family, variant name, and a layer-stack builder."""
+
+    family: str
+    variant: str
+    build: Callable[[Shape, int], list[Layer]]
+    description: str = ""
+
+
+class Model:
+    """A concrete model: layer stack + flat-parameter layout.
+
+    The flat layout is the contract with the rust coordinator: parameters
+    of every layer, in order, each flattened C-order, concatenated into a
+    single ``f32[P]``.  The classifier head (the final Dense) occupies the
+    trailing slice ``[P - head_size, P)`` — featext mode trains only that
+    slice.
+    """
+
+    def __init__(self, spec: ModelSpec, input_shape: Shape, num_classes: int):
+        self.spec = spec
+        self.input_shape = tuple(input_shape)
+        self.num_classes = num_classes
+        self.layers = spec.build(self.input_shape, num_classes)
+
+        # Walk shapes once to freeze the layout.
+        self.param_shapes: list[Shape] = []
+        self.layer_param_counts: list[int] = []
+        shape = self.input_shape
+        for layer in self.layers:
+            shapes, shape = layer.param_shapes(shape)
+            self.param_shapes.extend(shapes)
+            self.layer_param_counts.append(len(shapes))
+        if shape != ():
+            assert shape == (num_classes,), (
+                f"{spec.variant}: final shape {shape} != ({num_classes},)"
+            )
+        self.sizes = [int(math.prod(s)) for s in self.param_shapes]
+        self.offsets = np.concatenate([[0], np.cumsum(self.sizes)]).astype(int)
+        self.num_params = int(self.offsets[-1])
+
+        # Head = parameters of the last layer that has any.
+        head_layers = [i for i, n in enumerate(self.layer_param_counts) if n]
+        assert head_layers, f"{spec.variant} has no parameters"
+        last = head_layers[-1]
+        n_before = sum(self.layer_param_counts[:last])
+        self.head_size = sum(self.sizes[n_before:])
+
+    # ------------------------------------------------------------- params
+
+    def unflatten(self, flat: jnp.ndarray) -> list[jnp.ndarray]:
+        """Split ``f32[P]`` into per-parameter arrays (zero-copy views)."""
+        out = []
+        for shape, size, off in zip(self.param_shapes, self.sizes, self.offsets):
+            out.append(jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape))
+        return out
+
+    def init(self, seed: int) -> np.ndarray:
+        """He-initialised flat parameter vector (numpy, host side)."""
+        rng = np.random.default_rng(seed)
+        chunks = []
+        for shape in self.param_shapes:
+            if len(shape) == 1:  # biases start at zero
+                chunks.append(np.zeros(shape, np.float32))
+            else:
+                fan_in = int(math.prod(shape[:-1]))
+                scale = math.sqrt(2.0 / max(fan_in, 1))
+                chunks.append(
+                    (rng.standard_normal(shape) * scale).astype(np.float32)
+                )
+        return np.concatenate([c.ravel() for c in chunks])
+
+    def head_mask(self) -> np.ndarray:
+        """``f32[P]`` mask: 1.0 on the classifier-head slice, else 0."""
+        mask = np.zeros(self.num_params, np.float32)
+        mask[self.num_params - self.head_size :] = 1.0
+        return mask
+
+    # ------------------------------------------------------------ forward
+
+    def forward(
+        self, flat: jnp.ndarray, x: jnp.ndarray, freeze_backbone: bool = False
+    ) -> jnp.ndarray:
+        """Logits for a batch ``x: f32[B, *input_shape]``.
+
+        With ``freeze_backbone=True`` a ``stop_gradient`` is inserted at
+        the classifier-head input, so reverse-mode AD never *builds* the
+        backbone backward pass — this is what makes feature extraction
+        genuinely cheaper per step (paper Table 3), not just masked.
+        """
+        params = self.unflatten(flat)
+        head_li = max(
+            i for i, n in enumerate(self.layer_param_counts) if n > 0
+        )
+        idx = 0
+        for li, (layer, n) in enumerate(
+            zip(self.layers, self.layer_param_counts)
+        ):
+            if freeze_backbone and li == head_li:
+                x = jax.lax.stop_gradient(x)
+            x = layer.apply(params[idx : idx + n], x)
+            idx += n
+        return x
+
+
+# ----------------------------------------------------------------- zoo
+
+
+def _mlp(hidden: Sequence[int]):
+    def build(input_shape: Shape, num_classes: int) -> list[Layer]:
+        layers: list[Layer] = [Flatten()]
+        for h in hidden:
+            layers.append(Dense(h, "relu"))
+        layers.append(Dense(num_classes, "linear"))
+        return layers
+
+    return build
+
+
+def _lenet5(input_shape: Shape, num_classes: int) -> list[Layer]:
+    """Classic LeNet-5 (tanh/avg-pool flavour), as in the paper's Fig 8."""
+    return [
+        Conv(6, kernel=5, stride=1, pad=2, act="tanh"),
+        AvgPool(2),
+        Conv(16, kernel=5, stride=1, pad=0, act="tanh"),
+        AvgPool(2),
+        Flatten(),
+        Dense(120, "tanh"),
+        Dense(84, "tanh"),
+        Dense(num_classes, "linear"),
+    ]
+
+
+def _cnn(widths: Sequence[int], dense: int):
+    """VGG-ish conv stack: [conv-conv-pool] blocks + classifier."""
+
+    def build(input_shape: Shape, num_classes: int) -> list[Layer]:
+        layers: list[Layer] = []
+        for w in widths:
+            layers.append(Conv(w, kernel=3, stride=1, pad=1, act="relu"))
+            layers.append(Conv(w, kernel=3, stride=1, pad=1, act="relu"))
+            layers.append(MaxPool(2))
+        layers.append(Flatten())
+        layers.append(Dense(dense, "relu"))
+        layers.append(Dense(num_classes, "linear"))
+        return layers
+
+    return build
+
+
+def _micronet(width_mult: float):
+    """MobileNet-style depthwise-separable stack (paper: MobileNetV3Small
+    stand-in for the federated-transfer experiment, Fig 8ii)."""
+
+    def c(base: int) -> int:
+        return max(8, int(base * width_mult))
+
+    def build(input_shape: Shape, num_classes: int) -> list[Layer]:
+        return [
+            Conv(c(16), kernel=3, stride=2, pad=1, act="relu"),
+            DepthwiseConv(kernel=3, stride=1, pad=1, act="relu"),
+            PointwiseConv(c(32), act="relu"),
+            DepthwiseConv(kernel=3, stride=2, pad=1, act="relu"),
+            PointwiseConv(c(64), act="relu"),
+            DepthwiseConv(kernel=3, stride=1, pad=1, act="relu"),
+            PointwiseConv(c(64), act="relu"),
+            GlobalAvgPool(),
+            Dense(num_classes, "linear"),
+        ]
+
+    return build
+
+
+MODEL_REGISTRY: dict[str, ModelSpec] = {
+    "mlp-s": ModelSpec("mlp", "mlp-s", _mlp([128]), "1 hidden layer, 128"),
+    "mlp-m": ModelSpec("mlp", "mlp-m", _mlp([256, 128]), "2 hidden layers"),
+    "mlp-l": ModelSpec("mlp", "mlp-l", _mlp([512, 256, 128]), "3 hidden layers"),
+    "lenet5": ModelSpec("lenet", "lenet5", _lenet5, "classic LeNet-5"),
+    "cnn-s": ModelSpec("cnn", "cnn-s", _cnn([16, 32], 128), "small VGG-ish"),
+    "cnn-m": ModelSpec("cnn", "cnn-m", _cnn([32, 64], 256), "medium VGG-ish"),
+    "cnn-l": ModelSpec("cnn", "cnn-l", _cnn([64, 128], 512), "large VGG-ish"),
+    "micronet-05": ModelSpec(
+        "micronet", "micronet-05", _micronet(0.5), "0.5x depthwise-separable"
+    ),
+    "micronet-10": ModelSpec(
+        "micronet", "micronet-10", _micronet(1.0), "1.0x depthwise-separable"
+    ),
+}
+
+
+def list_variants() -> list[str]:
+    return sorted(MODEL_REGISTRY)
+
+
+def build_model(variant: str, input_shape: Shape, num_classes: int) -> Model:
+    """Instantiate a zoo variant for a dataset's input shape/classes."""
+    if variant not in MODEL_REGISTRY:
+        raise KeyError(
+            f"unknown model {variant!r}; available: {list_variants()}"
+        )
+    return Model(MODEL_REGISTRY[variant], input_shape, num_classes)

@@ -1,0 +1,129 @@
+"""Training/eval step factories over the flat-parameter ABI.
+
+These are the functions ``aot.py`` lowers to HLO text; the rust
+coordinator executes them via PJRT with no python anywhere near the loop.
+
+Signatures (all f32 unless noted):
+
+  train_step_sgd  (params[P], x[B,...], y i32[B], lr[])
+                  -> (params'[P], loss[], correct[])
+  train_step_adam (params[P], m[P], v[P], t[], x, y, lr[])
+                  -> (params'[P], m'[P], v'[P], t'[], loss[], correct[])
+  eval_step       (params[P], x[Be,...], y i32[Be], mask[Be])
+                  -> (loss_sum[], correct[], count[])
+
+``mode``: "scratch" and "finetune" train every parameter; "featext"
+multiplies the gradient by the head mask inside the graph, so only the
+classifier head moves.  The rust side is mode-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels as K
+from .registry import Model
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def loss_and_hits(
+    model: Model,
+    flat: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    freeze_backbone: bool = False,
+):
+    """Mean CE loss + number of top-1 hits, via the fused Pallas kernel."""
+    logits = model.forward(flat, x, freeze_backbone=freeze_backbone)
+    loss, hit = K.softmax_xent(logits, y)
+    return jnp.mean(loss), jnp.sum(hit)
+
+
+def make_grad_fn(model: Model, mode: str):
+    """Value-and-grad of the mean loss.
+
+    ``featext`` freezes the backbone with a stop_gradient (so the frozen
+    backward pass is never built — the paper's Table-3 speedup) and
+    belt-and-braces multiplies by the head mask so backbone coordinates
+    are exactly unchanged.
+    """
+    featext = mode == "featext"
+    head_start = model.num_params - model.head_size
+
+    def objective(flat, x, y):
+        loss, hits = loss_and_hits(model, flat, x, y, freeze_backbone=featext)
+        return loss, hits
+
+    vg = jax.value_and_grad(objective, has_aux=True)
+
+    def grad_fn(flat, x, y):
+        (loss, hits), g = vg(flat, x, y)
+        if featext:
+            # Head mask built from an in-graph iota comparison, NOT a
+            # concrete array: XLA's text printer elides large literals
+            # ("{...}") and the HLO-text parser reads them back as zeros.
+            # lax.iota inside the trace stays a (tiny) iota op in text.
+            mask = (
+                jax.lax.iota(jnp.int32, model.num_params) >= head_start
+            ).astype(g.dtype)
+            g = g * mask
+        return loss, hits, g
+
+    return grad_fn
+
+
+def make_train_step_sgd(model: Model, mode: str):
+    grad_fn = make_grad_fn(model, mode)
+
+    def train_step(params, x, y, lr):
+        loss, hits, g = grad_fn(params, x, y)
+        new_params = params - lr * g
+        return new_params, loss, hits
+
+    return train_step
+
+
+def make_train_step_adam(model: Model, mode: str):
+    grad_fn = make_grad_fn(model, mode)
+
+    def train_step(params, m, v, t, x, y, lr):
+        loss, hits, g = grad_fn(params, x, y)
+        t = t + 1.0
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * (g * g)
+        mhat = m / (1.0 - ADAM_B1**t)
+        vhat = v / (1.0 - ADAM_B2**t)
+        new_params = params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return new_params, m, v, t, loss, hits
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    """Masked eval: ``mask`` zeroes padded tail examples in the last batch
+    so rust can evaluate any test-set size with one fixed-shape artifact."""
+
+    def eval_step(params, x, y, mask):
+        logits = model.forward(params, x)
+        loss, hit = K.softmax_xent(logits, y)
+        return (
+            jnp.sum(loss * mask),
+            jnp.sum(hit * mask),
+            jnp.sum(mask),
+        )
+
+    return eval_step
+
+
+def make_aggregate(k_pad: int):
+    """FedAvg aggregation entry point at fixed K_pad (Eq. 2)."""
+
+    def aggregate(deltas, weights, global_params):
+        assert deltas.shape[0] == k_pad
+        return K.fedavg_aggregate(deltas, weights, global_params)
+
+    return aggregate

@@ -1,0 +1,79 @@
+"""Upstream pre-training substrate (DESIGN.md Substitution #2).
+
+The paper warm-starts finetune/feature-extract runs from ImageNet
+weights.  Our stand-in: pre-train each model on an *upstream* task drawn
+from the same class templates but with a different corruption regime
+(heavier noise, larger jitter) — a genuinely related-but-shifted
+distribution, which is exactly the structure transfer learning exploits.
+
+Runs once inside ``make artifacts``; the flat weight vectors land in
+``artifacts/pretrained_<model>_<dataset>.f32`` for the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import datagen
+from .models.registry import Model, build_model
+from .models.train import make_train_step_adam, make_train_step_sgd
+
+# Upstream regime: heavier corruption than the downstream task (rust uses
+# the spec's own noise/jitter), so the tasks differ but share structure.
+UPSTREAM_NOISE = 0.55
+UPSTREAM_JITTER = 4
+UPSTREAM_SEED = 0x5EED
+
+
+def pretrain(
+    variant: str,
+    dataset: str,
+    steps: int = 150,
+    batch: int = 64,
+    lr: float = 0.05,
+    optimizer: str = "sgd",
+    verbose: bool = True,
+) -> np.ndarray:
+    """Pre-train ``variant`` on the upstream task of ``dataset``.
+
+    Returns the flat f32[P] weight vector.  ``optimizer`` is "sgd" or
+    "adam" — tiny depthwise models (micronet) only train well under Adam.
+    """
+    spec = datagen.DATASET_REGISTRY[dataset]
+    templates = datagen.make_templates(spec)
+    model = build_model(variant, spec.input_shape, spec.num_classes)
+
+    rng = np.random.default_rng(UPSTREAM_SEED)
+    params = jnp.asarray(model.init(seed=UPSTREAM_SEED))
+    if optimizer == "adam":
+        step = jax.jit(make_train_step_adam(model, "scratch"))
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        t = jnp.float32(0.0)
+    else:
+        step = jax.jit(make_train_step_sgd(model, "scratch"))
+
+    last_loss = float("nan")
+    for i in range(steps):
+        labels = rng.integers(0, spec.num_classes, batch)
+        x = datagen.synthesize(
+            templates, labels, rng, UPSTREAM_NOISE, UPSTREAM_JITTER
+        )
+        xb = jnp.asarray(x)
+        yb = jnp.asarray(labels.astype(np.int32))
+        if optimizer == "adam":
+            params, m, v, t, loss, hits = step(
+                params, m, v, t, xb, yb, jnp.float32(lr)
+            )
+        else:
+            params, loss, hits = step(params, xb, yb, jnp.float32(lr))
+        last_loss = float(loss)
+        if verbose and (i + 1) % 50 == 0:
+            acc = float(hits) / batch
+            print(
+                f"  [pretrain {variant}@{dataset}] step {i + 1}/{steps} "
+                f"loss={last_loss:.4f} acc={acc:.3f}"
+            )
+    return np.asarray(params)

@@ -1,0 +1,276 @@
+"""Kernel-vs-ref correctness: the CORE signal for the L1 layer.
+
+Hypothesis sweeps shapes (deliberately non-MXU-aligned to exercise the
+padding paths) and checks every Pallas kernel against the pure-jnp oracle
+in ``compile.kernels.ref``, forward and backward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+from compile.kernels import util
+
+jax.config.update("jax_enable_x64", False)
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 140),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    got = K.matmul(x, w)
+    want = R.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(2, 40),
+    k=st.integers(2, 40),
+    n=st.integers(2, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_vjp_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    g1 = jax.grad(lambda a, b: jnp.sum(K.matmul(a, b) ** 2), (0, 1))(x, w)
+    g2 = jax.grad(lambda a, b: jnp.sum(R.matmul_ref(a, b) ** 2), (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_large_mxu_aligned():
+    rng = np.random.default_rng(7)
+    x, w = _arr(rng, 256, 384), _arr(rng, 384, 256)
+    np.testing.assert_allclose(
+        K.matmul(x, w), R.matmul_ref(x, w), rtol=1e-4, atol=1e-3
+    )
+
+
+# ----------------------------------------------------------------- dense
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 150),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["linear", "relu", "tanh"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    np.testing.assert_allclose(
+        K.dense(x, w, b, act), R.dense_ref(x, w, b, act), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**_SETTINGS)
+@given(
+    act=st.sampled_from(["linear", "relu", "tanh"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_vjp_matches_ref(act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, 9, 33), _arr(rng, 33, 12), _arr(rng, 12)
+
+    def loss_k(x, w, b):
+        return jnp.sum(jnp.sin(K.dense(x, w, b, act)))
+
+    def loss_r(x, w, b):
+        return jnp.sum(jnp.sin(R.dense_ref(x, w, b, act)))
+
+    g1 = jax.grad(loss_k, (0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_r, (0, 1, 2))(x, w, b)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-3)
+
+
+def test_dense_relu_is_nonnegative():
+    rng = np.random.default_rng(3)
+    y = K.dense(_arr(rng, 16, 16), _arr(rng, 16, 16), _arr(rng, 16), "relu")
+    assert float(jnp.min(y)) >= 0.0
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.integers(6, 16),
+    c=st.integers(1, 4),
+    o=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, hw, c, o, k, stride, pad, seed):
+    if hw + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, b, hw, hw, c)
+    w = _arr(rng, k, k, c, o, scale=0.2)
+    bias = _arr(rng, o, scale=0.2)
+    got = K.conv2d(x, w, bias, stride, pad, "linear")
+    want = R.conv2d_ref(x, w, bias, stride, pad, "linear")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_grad_flows():
+    rng = np.random.default_rng(11)
+    x = _arr(rng, 2, 8, 8, 3)
+    w = _arr(rng, 3, 3, 3, 4, scale=0.2)
+    bias = _arr(rng, 4, scale=0.2)
+
+    def loss_k(w, bias):
+        return jnp.sum(K.conv2d(x, w, bias, 1, 1, "relu"))
+
+    def loss_r(w, bias):
+        return jnp.sum(R.conv2d_ref(x, w, bias, 1, 1, "relu"))
+
+    g1 = jax.grad(loss_k, (0, 1))(w, bias)
+    g2 = jax.grad(loss_r, (0, 1))(w, bias)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.sampled_from([4, 6, 8, 12]),
+    k=st.sampled_from([2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pools_match_ref(hw, k, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, 2, hw, hw, 3)
+    np.testing.assert_allclose(
+        K.avg_pool(x, k), R.avg_pool_ref(x, k), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        K.max_pool(x, k), R.max_pool_ref(x, k), rtol=1e-5, atol=1e-5
+    )
+
+
+# ----------------------------------------------------------- softmax_xent
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.integers(1, 64),
+    c=st.integers(2, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    z = _arr(rng, b, c, scale=3.0)
+    y = jnp.asarray(rng.integers(0, c, b).astype(np.int32))
+    l1, h1 = K.softmax_xent(z, y)
+    l2, h2 = R.softmax_xent_ref(z, y)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h1, h2)
+
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_vjp_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    z = _arr(rng, 17, 10, scale=2.0)
+    y = jnp.asarray(rng.integers(0, 10, 17).astype(np.int32))
+    g1 = jax.grad(lambda z: jnp.mean(K.softmax_xent(z, y)[0]))(z)
+    g2 = jax.grad(lambda z: jnp.mean(R.softmax_xent_ref(z, y)[0]))(z)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    z = jnp.array([[1e4, -1e4, 0.0], [-1e4, 1e4, 0.0]], jnp.float32)
+    y = jnp.array([0, 1], jnp.int32)
+    loss, hit = K.softmax_xent(z, y)
+    assert bool(jnp.all(jnp.isfinite(loss)))
+    np.testing.assert_allclose(hit, [1.0, 1.0])
+
+
+# ---------------------------------------------------------------- fedavg
+
+
+@settings(**_SETTINGS)
+@given(
+    k=st.integers(1, 16),
+    p=st.integers(1, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_matches_ref(k, p, seed):
+    rng = np.random.default_rng(seed)
+    d = _arr(rng, k, p)
+    w = jnp.asarray(rng.random(k).astype(np.float32))
+    w = w / jnp.sum(w)
+    g = _arr(rng, p)
+    np.testing.assert_allclose(
+        K.fedavg_aggregate(d, w, g), R.fedavg_ref(d, w, g), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**_SETTINGS)
+@given(
+    k=st.integers(1, 8),
+    kpad=st.integers(0, 8),
+    p=st.integers(10, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_padding_invariance(k, kpad, p, seed):
+    """Zero-weight padded rows must not change the result — the rust
+    coordinator relies on this to compile a single K_pad artifact."""
+    rng = np.random.default_rng(seed)
+    d = _arr(rng, k, p)
+    w = jnp.asarray(rng.random(k).astype(np.float32))
+    w = w / jnp.sum(w)
+    g = _arr(rng, p)
+    base = K.fedavg_aggregate(d, w, g)
+    dp = jnp.concatenate([d, _arr(rng, kpad, p)], axis=0) if kpad else d
+    wp = jnp.concatenate([w, jnp.zeros(kpad, jnp.float32)]) if kpad else w
+    padded = K.fedavg_aggregate(dp, wp, g)
+    np.testing.assert_allclose(base, padded, rtol=1e-4, atol=1e-4)
+
+
+def test_fedavg_zero_weights_is_identity():
+    rng = np.random.default_rng(5)
+    d = _arr(rng, 4, 257)
+    g = _arr(rng, 257)
+    out = K.fedavg_aggregate(d, jnp.zeros(4, jnp.float32), g)
+    np.testing.assert_allclose(out, g, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------------ util
+
+
+def test_vmem_budget_enforced():
+    with pytest.raises(ValueError):
+        util.assert_vmem_ok((4096, 4096))  # 64 MiB block
+
+
+def test_pick_block_alignment():
+    assert util.pick_block(1) == 8
+    assert util.pick_block(10) == 16
+    assert util.pick_block(128) == 128
+    assert util.pick_block(1000) == 128

@@ -1,0 +1,160 @@
+"""L2 model-zoo tests: shapes, flat-param layout, training semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen
+from compile.models.registry import MODEL_REGISTRY, build_model
+from compile.models.train import (
+    make_eval_step,
+    make_train_step_adam,
+    make_train_step_sgd,
+)
+
+MNIST = datagen.DATASET_REGISTRY["synth-mnist"]
+CIFAR = datagen.DATASET_REGISTRY["synth-cifar10"]
+
+
+def dataset_for(variant):
+    return CIFAR if MODEL_REGISTRY[variant].family == "cnn" else MNIST
+
+
+def tiny_batch(spec, b=8, seed=0):
+    rng = np.random.default_rng(seed)
+    tpl = datagen.make_templates(spec)
+    labels = rng.integers(0, spec.num_classes, b)
+    x = datagen.synthesize(tpl, labels, rng, spec.noise, spec.jitter)
+    return jnp.asarray(x), jnp.asarray(labels.astype(np.int32))
+
+
+@pytest.mark.parametrize("variant", sorted(MODEL_REGISTRY))
+def test_forward_shape_and_param_layout(variant):
+    spec = dataset_for(variant)
+    m = build_model(variant, spec.input_shape, spec.num_classes)
+    # Layout bookkeeping is self-consistent.
+    assert m.num_params == sum(m.sizes)
+    assert 0 < m.head_size < m.num_params
+    flat = jnp.asarray(m.init(0))
+    assert flat.shape == (m.num_params,)
+    x = jnp.zeros((4, *spec.input_shape), jnp.float32)
+    logits = m.forward(flat, x)
+    assert logits.shape == (4, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("variant", sorted(MODEL_REGISTRY))
+def test_init_is_deterministic_and_seed_sensitive(variant):
+    spec = dataset_for(variant)
+    m = build_model(variant, spec.input_shape, spec.num_classes)
+    a, b = m.init(7), m.init(7)
+    np.testing.assert_array_equal(a, b)
+    c = m.init(8)
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("variant", ["mlp-s", "lenet5", "micronet-05"])
+def test_sgd_step_overfits_one_batch(variant):
+    spec = dataset_for(variant)
+    m = build_model(variant, spec.input_shape, spec.num_classes)
+    x, y = tiny_batch(spec, b=8)
+    opt = "adam" if m.spec.family == "micronet" else "sgd"
+    if opt == "adam":
+        step = jax.jit(make_train_step_adam(m, "scratch"))
+        params = jnp.asarray(m.init(1))
+        mm, vv, t = (
+            jnp.zeros_like(params),
+            jnp.zeros_like(params),
+            jnp.float32(0),
+        )
+        losses = []
+        for _ in range(30):
+            params, mm, vv, t, loss, hits = step(
+                params, mm, vv, t, x, y, jnp.float32(0.01)
+            )
+            losses.append(float(loss))
+    else:
+        step = jax.jit(make_train_step_sgd(m, "scratch"))
+        params = jnp.asarray(m.init(1))
+        losses = []
+        for _ in range(30):
+            params, loss, hits = step(params, x, y, jnp.float32(0.1))
+            losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+
+
+def test_featext_moves_only_head():
+    m = build_model("mlp-s", MNIST.input_shape, MNIST.num_classes)
+    x, y = tiny_batch(MNIST)
+    step = jax.jit(make_train_step_sgd(m, "featext"))
+    p0 = jnp.asarray(m.init(2))
+    p1, loss, _ = step(p0, x, y, jnp.float32(0.1))
+    bb = m.num_params - m.head_size
+    assert bool(jnp.all(p0[:bb] == p1[:bb])), "backbone moved"
+    assert not bool(jnp.all(p0[bb:] == p1[bb:])), "head frozen"
+
+
+def test_featext_matches_masked_scratch_on_head():
+    """featext's head update equals the scratch head gradient step
+    (stop_gradient changes which params move, not the head math)."""
+    m = build_model("mlp-s", MNIST.input_shape, MNIST.num_classes)
+    x, y = tiny_batch(MNIST, seed=3)
+    p0 = jnp.asarray(m.init(3))
+    lr = jnp.float32(0.05)
+    full = jax.jit(make_train_step_sgd(m, "scratch"))(p0, x, y, lr)[0]
+    feat = jax.jit(make_train_step_sgd(m, "featext"))(p0, x, y, lr)[0]
+    bb = m.num_params - m.head_size
+    np.testing.assert_allclose(full[bb:], feat[bb:], rtol=1e-4, atol=1e-5)
+
+
+def test_eval_step_mask_semantics():
+    m = build_model("mlp-s", MNIST.input_shape, MNIST.num_classes)
+    ev = jax.jit(make_eval_step(m))
+    params = jnp.asarray(m.init(4))
+    x, y = tiny_batch(MNIST, b=8, seed=5)
+    full_mask = jnp.ones(8, jnp.float32)
+    half_mask = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    l_full, c_full, n_full = ev(params, x, y, full_mask)
+    l_half, c_half, n_half = ev(params, x, y, half_mask)
+    assert float(n_full) == 8.0
+    assert float(n_half) == 4.0
+    assert float(l_half) <= float(l_full) + 1e-5
+    # Masked loss equals the sum over the first four examples.
+    l4, _, _ = ev(
+        params,
+        jnp.concatenate([x[:4], jnp.zeros_like(x[:4])]),
+        jnp.concatenate([y[:4], jnp.zeros_like(y[:4])]),
+        half_mask,
+    )
+    np.testing.assert_allclose(float(l4), float(l_half), rtol=1e-4)
+
+
+def test_adam_step_shapes_and_state_progression():
+    m = build_model("micronet-05", MNIST.input_shape, MNIST.num_classes)
+    step = jax.jit(make_train_step_adam(m, "scratch"))
+    params = jnp.asarray(m.init(6))
+    mm = jnp.zeros_like(params)
+    vv = jnp.zeros_like(params)
+    t = jnp.float32(0.0)
+    x, y = tiny_batch(MNIST)
+    params2, m2, v2, t2, loss, hits = step(params, mm, vv, t, x, y, jnp.float32(0.01))
+    assert params2.shape == params.shape
+    assert float(t2) == 1.0
+    assert bool(jnp.any(m2 != 0.0))
+    assert bool(jnp.all(v2 >= 0.0))
+    assert 0.0 <= float(hits) <= len(y)
+
+
+def test_unflatten_round_trips():
+    m = build_model("lenet5", MNIST.input_shape, MNIST.num_classes)
+    flat = jnp.asarray(m.init(9))
+    parts = m.unflatten(flat)
+    assert len(parts) == len(m.param_shapes)
+    rebuilt = jnp.concatenate([p.reshape(-1) for p in parts])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+
+def test_registry_rejects_unknown_variant():
+    with pytest.raises(KeyError):
+        build_model("resnet-152", MNIST.input_shape, 10)

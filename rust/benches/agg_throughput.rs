@@ -1,0 +1,80 @@
+//! Bench: FedAvg aggregation throughput (the FL server hot-spot, Eq. 2).
+//!
+//! Compares the PJRT path (L1 Pallas kernel) against the pure-rust host
+//! reference and the robust rules, over the zoo's parameter sizes and a
+//! K sweep. Backs EXPERIMENTS.md §Perf and the aggregator ablation.
+//!
+//! Run: `cargo bench --bench agg_throughput`
+
+use std::sync::Arc;
+
+use ferrisfl::aggregators::{self, fedavg_host, sample_weights, Update};
+use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
+use ferrisfl::runtime::Manifest;
+use ferrisfl::util::Rng;
+
+fn updates(rng: &mut Rng, k: usize, p: usize) -> Vec<Update> {
+    (0..k)
+        .map(|i| Update {
+            agent_id: i,
+            delta: (0..p).map(|_| rng.next_gaussian() * 0.01).collect(),
+            num_samples: 10 + i,
+        })
+        .collect()
+}
+
+fn main() {
+    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let mut rng = Rng::new(0xbe7c);
+
+    for (model, dataset) in [
+        ("micronet-05", "synth-mnist"),
+        ("lenet5", "synth-mnist"),
+        ("mlp-s", "synth-mnist"),
+        ("cnn-m", "synth-cifar10"),
+    ] {
+        let art = manifest.artifact(model, dataset).unwrap();
+        let p = art.num_params;
+        header(&format!("FedAvg aggregation, P = {p} ({model})"));
+        let key = RuntimeKey {
+            model: model.into(),
+            dataset: dataset.into(),
+            optimizer: "sgd".into(),
+            mode: "full".into(),
+            entry_tag: String::new(),
+        };
+        let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian() * 0.1).collect();
+        for k in [4usize, 8, 16] {
+            let ups = updates(&mut rng, k, p);
+            let w = sample_weights(&ups);
+            let deltas: Vec<Vec<f32>> = ups.iter().map(|u| u.delta.clone()).collect();
+            // bytes touched per aggregation: read K*P deltas + read/write P
+            let gib = ((k + 2) * p * 4) as f64 / (1024.0 * 1024.0 * 1024.0);
+
+            let s = with_runtime(&manifest, &key, |rt| {
+                Ok(bench(2, 8, || rt.aggregate(&global, &deltas, &w).unwrap()))
+            })
+            .unwrap();
+            report(
+                &format!("pjrt/pallas  K={k}"),
+                &s,
+                &format!("{:.2} GiB/s", gib / s.mean),
+            );
+
+            let s = bench(2, 8, || fedavg_host(&global, &ups, &w));
+            report(
+                &format!("rust host    K={k}"),
+                &s,
+                &format!("{:.2} GiB/s", gib / s.mean),
+            );
+        }
+        // Robust rules (host side), K = 8.
+        let ups = updates(&mut rng, 8, p);
+        for name in ["median", "trim:0.2", "fedadam", "fedavgm"] {
+            let mut agg = aggregators::from_name(name).unwrap();
+            let s = bench(1, 5, || agg.aggregate(&global, &ups, None).unwrap());
+            report(&format!("{name:<12} K=8"), &s, "");
+        }
+    }
+}

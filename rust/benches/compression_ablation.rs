@@ -1,0 +1,60 @@
+//! Bench/ablation: update compression vs accuracy + wire bytes.
+//!
+//! Runs the same short FL experiment under each compressor and reports
+//! final accuracy, upload bytes, and the compression ratio — the
+//! communication/quality trade-off behind DESIGN.md's compression
+//! substrate (paper §6.3 extension).
+//!
+//! Run: `cargo bench --bench compression_ablation`
+
+use std::sync::Arc;
+
+use ferrisfl::benchutil::header;
+use ferrisfl::config::FlParams;
+use ferrisfl::entrypoint::Entrypoint;
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::NullLogger;
+use ferrisfl::runtime::Manifest;
+
+fn main() {
+    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    header("compression ablation: mlp-s, 8 agents, 6 rounds, FedAvg");
+    println!(
+        "{:<12} {:>10} {:>14} {:>10} {:>10}",
+        "compressor", "final acc", "upload bytes", "ratio", "loss"
+    );
+    for comp in ["none", "int8", "topk:0.25", "topk:0.05", "randk:0.25"] {
+        let params = FlParams {
+            experiment_name: format!("comp_{comp}"),
+            model: "mlp-s".into(),
+            dataset: "synth-mnist".into(),
+            num_agents: 8,
+            sampling_ratio: 0.5,
+            global_epochs: 6,
+            local_epochs: 1,
+            split: Scheme::Iid,
+            optimizer: "sgd".into(),
+            lr: 0.05,
+            seed: 42,
+            workers: 4,
+            eval_every: 0,
+            max_local_steps: 10,
+            compression: comp.into(),
+            ..FlParams::default()
+        };
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let res = ep.run(&mut NullLogger).unwrap();
+        println!(
+            "{:<12} {:>10.3} {:>14} {:>9.1}x {:>10.4}",
+            comp,
+            res.final_eval.accuracy(),
+            res.comm.wire_bytes,
+            res.comm.ratio(),
+            res.final_eval.mean_loss()
+        );
+    }
+    println!(
+        "\nexpected shape: int8 ≈ dense accuracy at ~4x compression; topk \
+         trades accuracy for upload as the kept fraction shrinks."
+    );
+}

@@ -1,0 +1,93 @@
+//! Bench: one full federation round, end to end (the Fig 8 workload).
+//!
+//! LeNet-5 on synth-mnist, 100 agents, 10 sampled, 1 local epoch —
+//! measures round walltime across worker-pool sizes and reports the
+//! local/aggregate/eval split from the profiler. Backs the paper's
+//! "embarrassingly parallel" distributed-training claim (§3.3.4) and
+//! EXPERIMENTS.md §Perf L3.
+//!
+//! Run: `cargo bench --bench round_e2e`
+
+use std::sync::Arc;
+
+use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::config::FlParams;
+use ferrisfl::entrypoint::Entrypoint;
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::NullLogger;
+use ferrisfl::runtime::Manifest;
+
+fn main() {
+    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    header("one FL round: lenet5, 100 agents, 10 sampled, 1 local epoch");
+    for workers in [1usize, 2, 4, 8] {
+        let params = FlParams {
+            experiment_name: format!("bench_round_w{workers}"),
+            model: "lenet5".into(),
+            dataset: "synth-mnist".into(),
+            num_agents: 100,
+            sampling_ratio: 0.1,
+            global_epochs: 1,
+            local_epochs: 1,
+            split: Scheme::Iid,
+            sampler: "random".into(),
+            aggregator: "fedavg".into(),
+            optimizer: "sgd".into(),
+            mode: "full".into(),
+            use_pretrained: false,
+            lr: 0.05,
+            seed: 42,
+            workers,
+            eval_every: 1,
+            max_local_steps: 0,
+            log_dir: String::new(),
+            dropout: 0.0,
+            defense: "none".into(),
+            compression: "none".into(),
+        };
+        // Pool + compiled executables are rebuilt per Entrypoint; measure
+        // the steady-state round by running 2 rounds and keeping the
+        // second (first pays compile).
+        let s = bench(0, 3, || {
+            let mut ep =
+                Entrypoint::new(params.clone(), Arc::clone(&manifest)).unwrap();
+            let mut logger = NullLogger;
+            let res = ep.run(&mut logger).unwrap();
+            res.rounds[0].secs
+        });
+        report(&format!("round walltime, workers={workers}"), &s, "");
+    }
+
+    header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");
+    let params = FlParams {
+        experiment_name: "bench_steady".into(),
+        model: "lenet5".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 100,
+        sampling_ratio: 0.1,
+        global_epochs: 5,
+        local_epochs: 1,
+        split: Scheme::Iid,
+        sampler: "random".into(),
+        aggregator: "fedavg".into(),
+        optimizer: "sgd".into(),
+        mode: "full".into(),
+        use_pretrained: false,
+        lr: 0.05,
+        seed: 42,
+        workers: 4,
+        eval_every: 0,
+        max_local_steps: 0,
+        log_dir: String::new(),
+        dropout: 0.0,
+        defense: "none".into(),
+        compression: "none".into(),
+    };
+    let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+    let mut logger = NullLogger;
+    let res = ep.run(&mut logger).unwrap();
+    for r in &res.rounds {
+        println!("  round {}: {:.3}s", r.round, r.secs);
+    }
+    println!("\nprofiler split:\n{}", res.profiler.report());
+}

@@ -1,0 +1,36 @@
+//! Bench: sampler cost vs population size.
+//!
+//! Cross-device FL populations are huge (the paper's setting targets
+//! many thousands of clients); per-round sampling must stay trivial.
+//! Sweeps every sampler over 10^2..10^5 agents.
+//!
+//! Run: `cargo bench --bench sampler_scaling`
+
+use ferrisfl::agents::Agent;
+use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::samplers;
+use ferrisfl::util::Rng;
+
+fn main() {
+    let mut seed_rng = Rng::new(9);
+    for n in [100usize, 1_000, 10_000, 100_000] {
+        header(&format!("sampling 10% of {n} agents"));
+        let mut agents: Vec<Agent> =
+            (0..n).map(|i| Agent::new(i, Vec::new())).collect();
+        for a in agents.iter_mut() {
+            a.reputation = seed_rng.next_f64();
+            a.last_loss = seed_rng.next_f64() * 3.0;
+        }
+        let k = n / 10;
+        for name in ["random", "round-robin", "reputation", "poc"] {
+            let mut s = samplers::from_name(name).unwrap();
+            let mut rng = Rng::new(17);
+            let stats = bench(2, 10, || s.sample(&agents, k, &mut rng));
+            report(
+                &format!("{name:<12} k={k}"),
+                &stats,
+                &format!("{:.1} Magents/s", n as f64 / stats.mean / 1e6),
+            );
+        }
+    }
+}

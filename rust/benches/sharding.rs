@@ -1,0 +1,37 @@
+//! Bench: federation sharding cost (the Fig 6 substrate at scale).
+//!
+//! IID / non-IID(sort-and-shard) / Dirichlet over dataset sizes up to
+//! 1M samples and agent counts up to 1000. Sharding must stay noise-level
+//! next to training; this bench guards that.
+//!
+//! Run: `cargo bench --bench sharding`
+
+use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::federation::{shard, Scheme};
+use ferrisfl::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x54a4d);
+    for n in [10_000usize, 100_000, 1_000_000] {
+        let labels: Vec<usize> =
+            (0..n).map(|_| rng.next_below(100) as usize).collect();
+        header(&format!("sharding {n} samples, 100 classes"));
+        for agents in [10usize, 100, 1000] {
+            for scheme in [
+                Scheme::Iid,
+                Scheme::NonIid { niid_factor: 3 },
+                Scheme::Dirichlet { alpha: 0.5 },
+            ] {
+                let mut r = Rng::new(1);
+                let s = bench(1, 5, || {
+                    shard(&labels, agents, scheme, &mut r).unwrap()
+                });
+                report(
+                    &format!("{scheme:<16} agents={agents}"),
+                    &s,
+                    &format!("{:.1} Msamples/s", n as f64 / s.mean / 1e6),
+                );
+            }
+        }
+    }
+}

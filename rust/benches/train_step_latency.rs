@@ -1,0 +1,117 @@
+//! Bench: per-model PJRT train/eval step latency (the client hot path).
+//!
+//! Covers every artifact in the manifest plus the pure-jnp reference
+//! ablation for mlp-s (kernel vs ref HLO) — the numbers behind Table 3's
+//! time column and EXPERIMENTS.md §Perf L1/L2.
+//!
+//! Run: `cargo bench --bench train_step_latency`
+
+use std::sync::Arc;
+
+use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::datasets::{Dataset, Split};
+use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
+use ferrisfl::runtime::Manifest;
+
+fn main() {
+    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+
+    header("train_step latency (batch 32) + eval_batch latency (batch 128)");
+    let mut cases: Vec<(String, String, String, String)> = Vec::new();
+    for art in &manifest.artifacts {
+        for entry in art.entries.keys() {
+            if let Some(rest) = entry.strip_prefix("train_") {
+                // rest = "<opt>_<mode>[_ref]"
+                let tag = if rest.ends_with("_ref") { "_ref" } else { "" };
+                let rest = rest.trim_end_matches("_ref");
+                let (opt, mode) = rest.split_once('_').unwrap();
+                cases.push((
+                    art.model.clone(),
+                    art.dataset.clone(),
+                    opt.to_string(),
+                    format!("{mode}{tag}"),
+                ));
+            }
+        }
+    }
+    cases.sort();
+
+    for (model, dataset, opt, mode_tag) in cases {
+        let (mode, tag) = if let Some(m) = mode_tag.strip_suffix("_ref") {
+            (m.to_string(), "_ref".to_string())
+        } else {
+            (mode_tag.clone(), String::new())
+        };
+        let key = RuntimeKey {
+            model: model.clone(),
+            dataset: dataset.clone(),
+            optimizer: opt.clone(),
+            mode,
+            entry_tag: tag.clone(),
+        };
+        let ds = Dataset::load(&manifest, &dataset, 1).unwrap();
+        let art = manifest.artifact(&model, &dataset).unwrap();
+        let init = manifest.read_f32(&art.init_file).unwrap();
+        with_runtime(&manifest, &key, |rt| {
+            let idx: Vec<usize> = (0..rt.train_batch).collect();
+            let batch = ds.batch(Split::Train, &idx);
+            let mut params = init.clone();
+            if opt == "adam" {
+                let mut state = ferrisfl::runtime::AdamState::zeros(params.len());
+                let s = bench(2, 10, || {
+                    rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01)
+                        .unwrap()
+                });
+                report(&format!("{model} {opt} {mode_tag}"), &s, "");
+            } else {
+                let s = bench(2, 10, || {
+                    rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05).unwrap()
+                });
+                report(&format!("{model} {opt} {mode_tag}"), &s, "");
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    header("eval_batch latency (batch 128)");
+    for art in &manifest.artifacts {
+        let key = RuntimeKey {
+            model: art.model.clone(),
+            dataset: art.dataset.clone(),
+            optimizer: if art.entries.contains_key("train_sgd_full") {
+                "sgd".into()
+            } else {
+                "adam".into()
+            },
+            mode: if art.entries.contains_key("train_sgd_full")
+                || art.entries.contains_key("train_adam_full")
+            {
+                "full".into()
+            } else {
+                "featext".into()
+            },
+            entry_tag: String::new(),
+        };
+        let ds = Dataset::load(&manifest, &art.dataset, 1).unwrap();
+        let params = manifest.read_f32(&art.init_file).unwrap();
+        with_runtime(&manifest, &key, |rt| {
+            let idx: Vec<usize> = (0..rt.eval_batch).collect();
+            let batch = ds.batch(Split::Test, &idx);
+            let s = bench(2, 10, || {
+                rt.eval_batch(&params, &batch.x, &batch.y, rt.eval_batch).unwrap()
+            });
+            report(&art.id, &s, &format!("{:.0} ex/s", s.per_sec(rt.eval_batch as f64)));
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    header("dataset synthesis (batch 32)");
+    for name in ["synth-mnist", "synth-cifar10", "synth-cifar100"] {
+        let ds = Dataset::load(&manifest, name, 1).unwrap();
+        let idx: Vec<usize> = (0..32).collect();
+        let s = bench(2, 20, || ds.batch(Split::Train, &idx));
+        report(name, &s, &format!("{:.0} ex/s", s.per_sec(32.0)));
+    }
+}

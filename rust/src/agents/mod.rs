@@ -1,0 +1,116 @@
+//! Agents — the primary FL entity (paper §3.2.1).
+//!
+//! TorchFL decouples the agent from "an integer id" so research on
+//! reputation-based sampling, incentive mechanisms, and poisoning
+//! defenses can attach state to it. `Agent` mirrors that: a unique id, a
+//! data shard, and extensible metadata (reputation, counters, arbitrary
+//! key/value pairs) that samplers and aggregators read and update.
+
+use std::collections::BTreeMap;
+
+/// One federated client.
+#[derive(Clone, Debug)]
+pub struct Agent {
+    /// Unique identifier within the experiment.
+    pub id: usize,
+    /// Indices into the dataset's train split owned by this agent.
+    pub shard: Vec<usize>,
+    /// Reputation score in [0, 1]; samplers may use it (paper cites
+    /// reputation-based sampling as a motivating extension).
+    pub reputation: f64,
+    /// How many rounds this agent has been sampled into.
+    pub times_sampled: usize,
+    /// How many local epochs this agent has run in total.
+    pub epochs_trained: usize,
+    /// Most recent local training loss (NaN before first training).
+    pub last_loss: f64,
+    /// Free-form metadata for custom extensions.
+    pub metadata: BTreeMap<String, f64>,
+}
+
+impl Agent {
+    /// Create an agent with a data shard and default metadata.
+    pub fn new(id: usize, shard: Vec<usize>) -> Self {
+        Self {
+            id,
+            shard,
+            reputation: 0.5,
+            times_sampled: 0,
+            epochs_trained: 0,
+            last_loss: f64::NAN,
+            metadata: BTreeMap::new(),
+        }
+    }
+
+    /// Number of local samples.
+    pub fn num_samples(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Record the outcome of a local round; nudges reputation toward
+    /// 1 when the local loss improved, toward 0 otherwise (simple EWMA —
+    /// a stand-in for the richer mechanisms the paper cites).
+    pub fn record_round(&mut self, loss: f64, epochs: usize) {
+        let improved = self.last_loss.is_nan() || loss < self.last_loss;
+        let target = if improved { 1.0 } else { 0.0 };
+        self.reputation = 0.8 * self.reputation + 0.2 * target;
+        self.last_loss = loss;
+        self.times_sampled += 1;
+        self.epochs_trained += epochs;
+    }
+}
+
+/// Build one agent per shard of a partition.
+pub fn from_partition(shards: Vec<Vec<usize>>) -> Vec<Agent> {
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| Agent::new(id, shard))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_agent_defaults() {
+        let a = Agent::new(3, vec![1, 2, 3]);
+        assert_eq!(a.id, 3);
+        assert_eq!(a.num_samples(), 3);
+        assert!((a.reputation - 0.5).abs() < 1e-12);
+        assert_eq!(a.times_sampled, 0);
+        assert!(a.last_loss.is_nan());
+    }
+
+    #[test]
+    fn reputation_rises_on_improvement() {
+        let mut a = Agent::new(0, vec![]);
+        a.record_round(1.0, 2); // first round counts as improvement
+        a.record_round(0.5, 2);
+        a.record_round(0.3, 2);
+        assert!(a.reputation > 0.5, "rep={}", a.reputation);
+        assert_eq!(a.times_sampled, 3);
+        assert_eq!(a.epochs_trained, 6);
+    }
+
+    #[test]
+    fn reputation_falls_on_regression() {
+        let mut a = Agent::new(0, vec![]);
+        a.record_round(0.5, 1);
+        for _ in 0..5 {
+            a.record_round(2.0, 1);
+            a.last_loss = 0.5; // keep regressing relative to a good loss
+        }
+        assert!(a.reputation < 0.5, "rep={}", a.reputation);
+    }
+
+    #[test]
+    fn from_partition_assigns_sequential_ids() {
+        let agents = from_partition(vec![vec![0, 1], vec![2], vec![]]);
+        assert_eq!(agents.len(), 3);
+        assert_eq!(agents[0].id, 0);
+        assert_eq!(agents[2].id, 2);
+        assert_eq!(agents[1].shard, vec![2]);
+    }
+}

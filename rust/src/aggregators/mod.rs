@@ -1,0 +1,539 @@
+//! Aggregators — combining agent updates into the global model
+//! (paper §3.2.3, Eq. 2).
+//!
+//! TorchFL ships FedAvg and FedSGD plus a customisation interface. We
+//! implement those, two server-side-optimizer variants (FedOpt family),
+//! and two Byzantine-robust rules the paper cites as motivating
+//! extensions (poisoning defenses):
+//!
+//! - [`FedAvg`] — sample-weighted averaging (Eq. 2). The weighted sum
+//!   runs on the **PJRT path through the L1 Pallas kernel**; a pure-rust
+//!   reference ([`fedavg_host`]) backs property tests and benches.
+//! - [`FedSgd`] — equal-weight averaging (the FedSGD limit: one local
+//!   step, gradients ≈ deltas).
+//! - [`FedAvgM`] — server momentum over the aggregated pseudo-gradient.
+//! - [`FedAdam`] — server Adam over the aggregated pseudo-gradient.
+//! - [`CoordinateMedian`] — coordinate-wise median of deltas.
+//! - [`TrimmedMean`] — coordinate-wise β-trimmed mean.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::ModelRuntime;
+
+/// One agent's contribution to a round.
+#[derive(Clone, Debug)]
+pub struct Update {
+    pub agent_id: usize,
+    /// `delta_i = W_i^{t+1} - W^t` (Eq. 1), flat.
+    pub delta: Vec<f32>,
+    /// Local sample count (FedAvg weighting).
+    pub num_samples: usize,
+}
+
+/// Strategy interface for the server-side aggregation rule.
+pub trait Aggregator: Send {
+    /// Produce the next global parameter vector.
+    ///
+    /// `rt` is the leader's model runtime: rules that are a weighted sum
+    /// route it through the compiled Pallas aggregation kernel when it is
+    /// available, and fall back to the host reference otherwise; purely
+    /// host-side rules (median/trim, server optimizers) ignore it.
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+fn check(global: &[f32], updates: &[Update]) -> Result<()> {
+    if updates.is_empty() {
+        bail!("aggregate called with no updates");
+    }
+    for u in updates {
+        if u.delta.len() != global.len() {
+            bail!(
+                "agent {} delta has {} params, global has {}",
+                u.agent_id,
+                u.delta.len(),
+                global.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Sample-count weights normalised to the simplex (Γ in Eq. 2).
+pub fn sample_weights(updates: &[Update]) -> Vec<f32> {
+    let total: f64 = updates.iter().map(|u| u.num_samples as f64).sum();
+    if total <= 0.0 {
+        // all-zero sample counts: fall back to uniform
+        return vec![1.0 / updates.len() as f32; updates.len()];
+    }
+    updates
+        .iter()
+        .map(|u| (u.num_samples as f64 / total) as f32)
+        .collect()
+}
+
+/// Host-side reference for the weighted sum: `global + Σ w_i · delta_i`.
+/// Property tests assert it matches the PJRT/Pallas path to 1e-5.
+pub fn fedavg_host(global: &[f32], updates: &[Update], weights: &[f32]) -> Vec<f32> {
+    let mut out = global.to_vec();
+    for (u, &w) in updates.iter().zip(weights) {
+        for (o, &d) in out.iter_mut().zip(&u.delta) {
+            *o += w * d;
+        }
+    }
+    out
+}
+
+/// FedAvg (Eq. 2): sample-weighted averaging.
+///
+/// Two execution paths, selected by `use_pjrt`:
+/// - **host** (default): the straight rust loop. §Perf measured the
+///   CPU-interpret Pallas path at 160x slower than this loop (14 ms vs
+///   0.09 ms at P=102k; 775 ms vs 1.8 ms at P=1.1M) — on CPU the
+///   kernel's K_pad x P marshalling + interpret grid loop dominates, so
+///   the host loop is the honest hot path.
+/// - **pjrt** (`fedavg-pjrt`): the L1 Pallas aggregation kernel via the
+///   compiled artifact — the path a real TPU deployment would take, and
+///   the one the host loop is property-tested against (1e-5).
+#[derive(Default)]
+pub struct FedAvg {
+    pub use_pjrt: bool,
+}
+
+impl Aggregator for FedAvg {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        let weights = sample_weights(updates);
+        match (self.use_pjrt, rt) {
+            (true, Some(rt)) => {
+                let deltas: Vec<Vec<f32>> =
+                    updates.iter().map(|u| u.delta.clone()).collect();
+                rt.aggregate(global, &deltas, &weights)
+            }
+            _ => Ok(fedavg_host(global, updates, &weights)),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+}
+
+/// FedSGD: equal-weight averaging.
+#[derive(Default)]
+pub struct FedSgd;
+
+impl Aggregator for FedSgd {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        let w = 1.0 / updates.len() as f32;
+        let weights = vec![w; updates.len()];
+        match rt {
+            Some(rt) => {
+                let deltas: Vec<Vec<f32>> =
+                    updates.iter().map(|u| u.delta.clone()).collect();
+                rt.aggregate(global, &deltas, &weights)
+            }
+            None => Ok(fedavg_host(global, updates, &weights)),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fedsgd"
+    }
+}
+
+/// Server momentum (FedAvgM): `v ← β v + Δ̄`, `W ← W + η v`.
+pub struct FedAvgM {
+    pub beta: f32,
+    pub server_lr: f32,
+    velocity: Vec<f32>,
+}
+
+impl FedAvgM {
+    pub fn new(beta: f32, server_lr: f32) -> Self {
+        Self {
+            beta,
+            server_lr,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Aggregator for FedAvgM {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        let weights = sample_weights(updates);
+        // mean delta (pseudo-gradient), host side — the momentum state
+        // lives here anyway.
+        let mut mean = vec![0.0f32; global.len()];
+        for (u, &w) in updates.iter().zip(&weights) {
+            for (m, &d) in mean.iter_mut().zip(&u.delta) {
+                *m += w * d;
+            }
+        }
+        if self.velocity.len() != global.len() {
+            self.velocity = vec![0.0; global.len()];
+        }
+        let mut out = global.to_vec();
+        for i in 0..global.len() {
+            self.velocity[i] = self.beta * self.velocity[i] + mean[i];
+            out[i] += self.server_lr * self.velocity[i];
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+}
+
+/// Server Adam (FedAdam, Reddi et al.): Adam over the pseudo-gradient.
+pub struct FedAdam {
+    pub server_lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl FedAdam {
+    pub fn new(server_lr: f32) -> Self {
+        Self {
+            server_lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+}
+
+impl Aggregator for FedAdam {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        let weights = sample_weights(updates);
+        let mut g = vec![0.0f32; global.len()];
+        for (u, &w) in updates.iter().zip(&weights) {
+            for (gi, &d) in g.iter_mut().zip(&u.delta) {
+                *gi += w * d;
+            }
+        }
+        if self.m.len() != global.len() {
+            self.m = vec![0.0; global.len()];
+            self.v = vec![0.0; global.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t);
+        let bc2 = 1.0 - self.b2.powi(self.t);
+        let mut out = global.to_vec();
+        for i in 0..global.len() {
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g[i];
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g[i] * g[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            out[i] += self.server_lr * mhat / (vhat.sqrt() + self.eps);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+}
+
+/// Coordinate-wise median of the deltas — robust to up to
+/// ⌊(K-1)/2⌋ poisoned updates.
+#[derive(Default)]
+pub struct CoordinateMedian;
+
+impl Aggregator for CoordinateMedian {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        let k = updates.len();
+        let mut out = global.to_vec();
+        let mut col = vec![0.0f32; k];
+        for i in 0..global.len() {
+            for (j, u) in updates.iter().enumerate() {
+                col[j] = u.delta[i];
+            }
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = if k % 2 == 1 {
+                col[k / 2]
+            } else {
+                0.5 * (col[k / 2 - 1] + col[k / 2])
+            };
+            out[i] += med;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "median"
+    }
+}
+
+/// Coordinate-wise β-trimmed mean: drop the ⌊βK⌋ largest and smallest
+/// values per coordinate, average the rest.
+pub struct TrimmedMean {
+    pub beta: f64,
+}
+
+impl TrimmedMean {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..0.5).contains(&beta), "beta must be in [0, 0.5)");
+        Self { beta }
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&ModelRuntime>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        let k = updates.len();
+        let trim = ((k as f64) * self.beta).floor() as usize;
+        if 2 * trim >= k {
+            bail!("trimmed mean would drop all {k} updates (beta={})", self.beta);
+        }
+        let kept = k - 2 * trim;
+        let mut out = global.to_vec();
+        let mut col = vec![0.0f32; k];
+        for i in 0..global.len() {
+            for (j, u) in updates.iter().enumerate() {
+                col[j] = u.delta[i];
+            }
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let s: f32 = col[trim..k - trim].iter().sum();
+            out[i] += s / kept as f32;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+}
+
+/// Build an aggregator from its config name: `fedavg | fedavg-pjrt |
+/// fedsgd | fedavgm[:beta,lr] | fedadam[:lr] | median | trim[:beta]`.
+pub fn from_name(name: &str) -> Result<Box<dyn Aggregator>> {
+    let t = name.trim().to_ascii_lowercase();
+    match t.as_str() {
+        "fedavg" => return Ok(Box::new(FedAvg::default())),
+        "fedavg-pjrt" => return Ok(Box::new(FedAvg { use_pjrt: true })),
+        "fedsgd" => return Ok(Box::new(FedSgd)),
+        "median" => return Ok(Box::new(CoordinateMedian)),
+        "fedavgm" => return Ok(Box::new(FedAvgM::new(0.9, 1.0))),
+        "fedadam" => return Ok(Box::new(FedAdam::new(0.01))),
+        "trim" => return Ok(Box::new(TrimmedMean::new(0.1))),
+        _ => {}
+    }
+    if let Some(rest) = t.strip_prefix("fedavgm:") {
+        let parts: Vec<&str> = rest.split(',').collect();
+        if parts.len() != 2 {
+            bail!("fedavgm:<beta>,<server_lr>");
+        }
+        return Ok(Box::new(FedAvgM::new(parts[0].parse()?, parts[1].parse()?)));
+    }
+    if let Some(rest) = t.strip_prefix("fedadam:") {
+        return Ok(Box::new(FedAdam::new(rest.parse()?)));
+    }
+    if let Some(rest) = t.strip_prefix("trim:") {
+        return Ok(Box::new(TrimmedMean::new(rest.parse()?)));
+    }
+    bail!(
+        "unknown aggregator {name:?} \
+         (fedavg | fedsgd | fedavgm[:b,lr] | fedadam[:lr] | median | trim[:b])"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(id: usize, delta: Vec<f32>, n: usize) -> Update {
+        Update {
+            agent_id: id,
+            delta,
+            num_samples: n,
+        }
+    }
+
+    #[test]
+    fn sample_weights_normalised() {
+        let ups = vec![
+            upd(0, vec![0.0], 10),
+            upd(1, vec![0.0], 30),
+            upd(2, vec![0.0], 60),
+        ];
+        let w = sample_weights(&ups);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((w[2] / w[0] - 6.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sample_weights_zero_counts_fall_back_to_uniform() {
+        let ups = vec![upd(0, vec![], 0), upd(1, vec![], 0)];
+        let w = sample_weights(&ups);
+        assert_eq!(w, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn fedavg_host_weighted_sum() {
+        let global = vec![1.0, 2.0];
+        let ups = vec![upd(0, vec![1.0, 0.0], 1), upd(1, vec![0.0, 2.0], 3)];
+        let w = sample_weights(&ups);
+        let out = fedavg_host(&global, &ups, &w);
+        assert!((out[0] - 1.25).abs() < 1e-6);
+        assert!((out[1] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_weights_by_sample_count() {
+        let global = vec![0.0];
+        let ups = vec![upd(0, vec![1.0], 90), upd(1, vec![-1.0], 10)];
+        let out = FedAvg::default().aggregate(&global, &ups, None).unwrap();
+        assert!((out[0] - 0.8).abs() < 1e-5, "{out:?}");
+    }
+
+    #[test]
+    fn fedsgd_weights_equally() {
+        let global = vec![0.0];
+        let ups = vec![upd(0, vec![1.0], 90), upd(1, vec![-1.0], 10)];
+        let out = FedSgd.aggregate(&global, &ups, None).unwrap();
+        assert!(out[0].abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn fedavgm_accumulates_momentum() {
+        let global = vec![0.0];
+        let ups = vec![upd(0, vec![1.0], 1)];
+        let mut m = FedAvgM::new(0.9, 1.0);
+        let g1 = m.aggregate(&global, &ups, None).unwrap();
+        assert!((g1[0] - 1.0).abs() < 1e-6);
+        // Same delta again: velocity = 0.9*1 + 1 = 1.9 on top of g1.
+        let g2 = m.aggregate(&g1, &ups, None).unwrap();
+        assert!((g2[0] - (1.0 + 1.9)).abs() < 1e-5, "{g2:?}");
+    }
+
+    #[test]
+    fn fedadam_first_step_is_lr_sized() {
+        let global = vec![0.0; 3];
+        let ups = vec![upd(0, vec![0.5, -0.5, 0.25], 1)];
+        let mut a = FedAdam::new(0.01);
+        let out = a.aggregate(&global, &ups, None).unwrap();
+        // Adam's first step has magnitude ~lr regardless of grad scale.
+        for (i, &v) in out.iter().enumerate() {
+            assert!((v.abs() - 0.01).abs() < 1e-4, "coord {i}: {v}");
+        }
+        assert_eq!(out[1] < 0.0, true);
+    }
+
+    #[test]
+    fn median_ignores_single_poisoned_delta() {
+        let global = vec![0.0; 4];
+        let mut ups: Vec<Update> =
+            (0..4).map(|i| upd(i, vec![0.1; 4], 1)).collect();
+        ups.push(upd(4, vec![1e6; 4], 1)); // poisoned
+        let out = CoordinateMedian.aggregate(&global, &ups, None).unwrap();
+        assert!(out.iter().all(|&v| (v - 0.1).abs() < 1e-5), "{out:?}");
+    }
+
+    #[test]
+    fn median_even_count_averages_middle() {
+        let global = vec![0.0];
+        let ups = vec![
+            upd(0, vec![1.0], 1),
+            upd(1, vec![2.0], 1),
+            upd(2, vec![3.0], 1),
+            upd(3, vec![4.0], 1),
+        ];
+        let out = CoordinateMedian.aggregate(&global, &ups, None).unwrap();
+        assert!((out[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let global = vec![0.0; 2];
+        let ups = vec![
+            upd(0, vec![-100.0, -100.0], 1),
+            upd(1, vec![0.2, 0.2], 1),
+            upd(2, vec![0.2, 0.2], 1),
+            upd(3, vec![100.0, 100.0], 1),
+        ];
+        let out = TrimmedMean::new(0.25)
+            .aggregate(&global, &ups, None)
+            .unwrap();
+        assert!(out.iter().all(|&v| (v - 0.2).abs() < 1e-5), "{out:?}");
+    }
+
+    #[test]
+    fn mismatched_delta_len_is_error() {
+        let global = vec![0.0; 3];
+        let ups = vec![upd(0, vec![1.0], 1)];
+        assert!(FedAvg::default().aggregate(&global, &ups, None).is_err());
+    }
+
+    #[test]
+    fn empty_updates_is_error() {
+        assert!(FedAvg::default().aggregate(&[0.0], &[], None).is_err());
+    }
+
+    #[test]
+    fn from_name_parses_all() {
+        for n in [
+            "fedavg", "fedavg-pjrt", "fedsgd", "fedavgm", "fedavgm:0.9,1.0",
+            "fedadam", "fedadam:0.05", "median", "trim", "trim:0.2",
+        ] {
+            assert!(from_name(n).is_ok(), "{n}");
+        }
+        assert!(from_name("bogus").is_err());
+        assert!(from_name("fedavgm:1").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn trimmed_mean_rejects_bad_beta() {
+        TrimmedMean::new(0.5);
+    }
+}

@@ -1,0 +1,78 @@
+//! Tiny benchmark harness used by `cargo bench` targets.
+//!
+//! The vendored crate set carries no criterion, so the bench binaries
+//! (`rust/benches/*.rs`, `harness = false`) use this: warmup + N timed
+//! iterations, reporting min/mean/p50/max. Deterministic workloads, wall
+//! clock, no statistics theatre — adequate for the before/after deltas
+//! EXPERIMENTS.md §Perf tracks.
+
+use std::time::Instant;
+
+/// Timing summary over the measured iterations (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    /// Throughput in items/sec given items processed per iteration.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        iters,
+        min: times[0],
+        mean: times.iter().sum::<f64>() / iters as f64,
+        p50: times[iters / 2],
+        max: times[iters - 1],
+    }
+}
+
+/// Print one standard bench row.
+pub fn report(name: &str, stats: &BenchStats, extra: &str) {
+    println!(
+        "{name:<44} mean {:>9.3} ms  p50 {:>9.3} ms  min {:>9.3} ms  {extra}",
+        stats.mean * 1e3,
+        stats.p50 * 1e3,
+        stats.min * 1e3,
+    );
+}
+
+/// Print a bench section header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min >= 0.001);
+        assert!(s.mean >= s.min && s.max >= s.mean);
+        assert!(s.per_sec(10.0) > 0.0);
+    }
+}

@@ -1,0 +1,302 @@
+//! Update compression — the communication-efficiency substrate
+//! (paper §6.3 names gradient/parameter compression as a target
+//! extension; cross-device FL is upload-bound).
+//!
+//! A [`Compressor`] turns a dense delta into a [`CompressedDelta`] on
+//! the client and reconstructs it on the server, tracking wire bytes so
+//! experiments can trade accuracy against upload size:
+//!
+//! - [`TopK`] — keep the `k` largest-magnitude coordinates (classic
+//!   sparsification; unbiased under error feedback, here plain).
+//! - [`RandK`] — keep `k` random coordinates, rescaled by `d/k` so the
+//!   expectation matches the dense delta.
+//! - [`Int8`] — per-tensor affine quantization to i8.
+//! - [`NoCompression`] — identity baseline.
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+/// A compressed client→server update plus bookkeeping.
+#[derive(Clone, Debug)]
+pub enum CompressedDelta {
+    Dense(Vec<f32>),
+    /// (dim, indices, values)
+    Sparse {
+        dim: usize,
+        idx: Vec<u32>,
+        val: Vec<f32>,
+        /// rescale factor applied at decompression (RandK uses d/k).
+        scale: f32,
+    },
+    /// Per-tensor affine i8: value = q * scale + zero.
+    Quantized {
+        q: Vec<i8>,
+        scale: f32,
+        zero: f32,
+    },
+}
+
+impl CompressedDelta {
+    /// Bytes this update would cost on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            CompressedDelta::Dense(v) => v.len() * 4,
+            CompressedDelta::Sparse { idx, val, .. } => idx.len() * 4 + val.len() * 4 + 8,
+            CompressedDelta::Quantized { q, .. } => q.len() + 8,
+        }
+    }
+
+    /// Reconstruct the dense delta.
+    pub fn decompress(&self) -> Vec<f32> {
+        match self {
+            CompressedDelta::Dense(v) => v.clone(),
+            CompressedDelta::Sparse {
+                dim,
+                idx,
+                val,
+                scale,
+            } => {
+                let mut out = vec![0.0f32; *dim];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v * scale;
+                }
+                out
+            }
+            CompressedDelta::Quantized { q, scale, zero } => {
+                q.iter().map(|&qi| qi as f32 * scale + zero).collect()
+            }
+        }
+    }
+}
+
+/// Client-side compression strategy.
+pub trait Compressor: Send {
+    fn compress(&mut self, delta: &[f32]) -> CompressedDelta;
+    fn name(&self) -> &'static str;
+}
+
+/// Identity baseline.
+#[derive(Default)]
+pub struct NoCompression;
+
+impl Compressor for NoCompression {
+    fn compress(&mut self, delta: &[f32]) -> CompressedDelta {
+        CompressedDelta::Dense(delta.to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// Keep the fraction `frac` of largest-|.| coordinates.
+pub struct TopK {
+    pub frac: f64,
+}
+
+impl TopK {
+    pub fn new(frac: f64) -> Self {
+        assert!((0.0..=1.0).contains(&frac) && frac > 0.0);
+        Self { frac }
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, delta: &[f32]) -> CompressedDelta {
+        let d = delta.len();
+        let k = ((d as f64 * self.frac).ceil() as usize).clamp(1, d);
+        // Partial select: indices of the k largest magnitudes.
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            delta[b as usize]
+                .abs()
+                .partial_cmp(&delta[a as usize].abs())
+                .unwrap()
+        });
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        let val = idx.iter().map(|&i| delta[i as usize]).collect();
+        CompressedDelta::Sparse {
+            dim: d,
+            idx,
+            val,
+            scale: 1.0,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+/// Keep `frac` random coordinates, unbiased (scaled by 1/frac).
+pub struct RandK {
+    pub frac: f64,
+    rng: Rng,
+}
+
+impl RandK {
+    pub fn new(frac: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&frac) && frac > 0.0);
+        Self {
+            frac,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&mut self, delta: &[f32]) -> CompressedDelta {
+        let d = delta.len();
+        let k = ((d as f64 * self.frac).ceil() as usize).clamp(1, d);
+        let mut idx: Vec<u32> = self
+            .rng
+            .sample_indices(d, k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let val = idx.iter().map(|&i| delta[i as usize]).collect();
+        CompressedDelta::Sparse {
+            dim: d,
+            idx,
+            val,
+            scale: (d as f64 / k as f64) as f32,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+}
+
+/// Per-tensor affine i8 quantization.
+#[derive(Default)]
+pub struct Int8;
+
+impl Compressor for Int8 {
+    fn compress(&mut self, delta: &[f32]) -> CompressedDelta {
+        let lo = delta.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = delta.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let (lo, hi) = if lo.is_finite() && hi.is_finite() {
+            (lo, hi)
+        } else {
+            (0.0, 0.0)
+        };
+        let scale = ((hi - lo) / 254.0).max(1e-12);
+        let zero = (lo + hi) * 0.5;
+        let q = delta
+            .iter()
+            .map(|&v| (((v - zero) / scale).round().clamp(-127.0, 127.0)) as i8)
+            .collect();
+        CompressedDelta::Quantized { q, scale, zero }
+    }
+
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+}
+
+/// Parse a config name: `none | topk:<frac> | randk:<frac> | int8`.
+pub fn from_name(name: &str, seed: u64) -> Result<Box<dyn Compressor>> {
+    let t = name.trim().to_ascii_lowercase();
+    if t == "none" || t.is_empty() {
+        return Ok(Box::new(NoCompression));
+    }
+    if t == "int8" {
+        return Ok(Box::new(Int8));
+    }
+    if let Some(rest) = t.strip_prefix("topk:") {
+        return Ok(Box::new(TopK::new(rest.parse()?)));
+    }
+    if let Some(rest) = t.strip_prefix("randk:") {
+        return Ok(Box::new(RandK::new(rest.parse()?, seed)));
+    }
+    bail!("unknown compressor {name:?} (none | topk:<f> | randk:<f> | int8)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn dense_round_trips_exactly() {
+        let d = delta(100, 1);
+        let c = NoCompression.compress(&d);
+        assert_eq!(c.decompress(), d);
+        assert_eq!(c.wire_bytes(), 400);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let d = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let c = TopK::new(0.4).compress(&d);
+        let out = c.decompress();
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+        // 2 entries x (4B idx + 4B val) + 8B header
+        assert_eq!(c.wire_bytes(), 24);
+    }
+
+    #[test]
+    fn topk_wire_bytes_scale_with_frac() {
+        let d = delta(10_000, 2);
+        let small = TopK::new(0.01).compress(&d).wire_bytes();
+        let big = TopK::new(0.5).compress(&d).wire_bytes();
+        assert!(small < big);
+        // k=100 entries -> 100*8 + 8 header, far below the 40 KB dense cost
+        assert!(small <= 10_000 * 4 / 49);
+    }
+
+    #[test]
+    fn randk_is_unbiased_in_expectation() {
+        let d = vec![1.0f32; 1000];
+        let mut c = RandK::new(0.1, 7);
+        // Average many reconstructions: each coordinate ~ 1.0.
+        let mut acc = vec![0.0f64; 1000];
+        let reps = 300;
+        for _ in 0..reps {
+            for (a, v) in acc.iter_mut().zip(c.compress(&d).decompress()) {
+                *a += v as f64;
+            }
+        }
+        let mean: f64 = acc.iter().map(|a| a / reps as f64).sum::<f64>() / 1000.0;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn int8_bounded_error() {
+        let d = delta(5000, 3);
+        let c = Int8.compress(&d);
+        let out = c.decompress();
+        let lo = d.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = d.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let step = (hi - lo) / 254.0;
+        for (a, b) in d.iter().zip(&out) {
+            assert!((a - b).abs() <= step * 0.75 + 1e-6);
+        }
+        assert_eq!(c.wire_bytes(), 5008);
+    }
+
+    #[test]
+    fn int8_constant_vector() {
+        let d = vec![0.5f32; 64];
+        let out = Int8.compress(&d).decompress();
+        for v in out {
+            assert!((v - 0.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn from_name_parses() {
+        for n in ["none", "topk:0.1", "randk:0.05", "int8"] {
+            assert!(from_name(n, 0).is_ok(), "{n}");
+        }
+        assert!(from_name("zstd", 0).is_err());
+    }
+}

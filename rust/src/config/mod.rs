@@ -1,0 +1,242 @@
+//! Experiment configuration (paper §3.2.4: `FLParams` + config files).
+//!
+//! TorchFL wraps all FL hyperparameters in an `FLParams` object fed to
+//! the entrypoint; we mirror that, parsed from a TOML file (see
+//! `configs/*.toml`) with CLI overrides applied on top.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::federation::Scheme;
+pub use toml::{TomlDoc, TomlValue};
+
+/// All hyperparameters of one FL experiment — the paper's `FLParams`.
+#[derive(Clone, Debug)]
+pub struct FlParams {
+    /// Experiment name (log file prefix).
+    pub experiment_name: String,
+    /// Zoo model variant (must have an AOT artifact for `dataset`).
+    pub model: String,
+    /// Dataset registry entry.
+    pub dataset: String,
+    /// Total number of agents K.
+    pub num_agents: usize,
+    /// Fraction of agents sampled per round (paper: sampling_ratio).
+    pub sampling_ratio: f64,
+    /// Global federation rounds T (paper: global_epochs).
+    pub global_epochs: usize,
+    /// Local epochs per sampled agent per round.
+    pub local_epochs: usize,
+    /// Data distribution across agents.
+    pub split: Scheme,
+    /// Sampler name (see samplers::from_name).
+    pub sampler: String,
+    /// Aggregator name (see aggregators::from_name).
+    pub aggregator: String,
+    /// Local optimizer: "sgd" or "adam".
+    pub optimizer: String,
+    /// Training mode: "full" (scratch/finetune) or "featext".
+    pub mode: String,
+    /// Start from the pretrained weights (finetune / featext)?
+    pub use_pretrained: bool,
+    /// Local learning rate.
+    pub lr: f32,
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+    /// Worker threads simulating parallel clients (0 = auto).
+    pub workers: usize,
+    /// Evaluate the global model every N rounds (0 = only at the end).
+    pub eval_every: usize,
+    /// Optional cap on per-agent local steps per epoch (0 = full shard).
+    pub max_local_steps: usize,
+    /// Directory for CSV/JSONL logs (empty = no file logs).
+    pub log_dir: String,
+    /// Probability a sampled agent drops out of the round (cross-device
+    /// FL straggler/failure simulation; 0 = nobody drops).
+    pub dropout: f64,
+    /// Server-side update defense (see defense::from_name).
+    pub defense: String,
+    /// Client update compression (see compression::from_name).
+    pub compression: String,
+}
+
+impl Default for FlParams {
+    fn default() -> Self {
+        Self {
+            experiment_name: "experiment".into(),
+            model: "lenet5".into(),
+            dataset: "synth-mnist".into(),
+            num_agents: 10,
+            sampling_ratio: 0.5,
+            global_epochs: 10,
+            local_epochs: 2,
+            split: Scheme::Iid,
+            sampler: "random".into(),
+            aggregator: "fedavg".into(),
+            optimizer: "sgd".into(),
+            mode: "full".into(),
+            use_pretrained: false,
+            lr: 0.05,
+            seed: 42,
+            workers: 0,
+            eval_every: 1,
+            max_local_steps: 0,
+            log_dir: String::new(),
+            dropout: 0.0,
+            defense: "none".into(),
+            compression: "none".into(),
+        }
+    }
+}
+
+impl FlParams {
+    /// Number of agents sampled per round (at least 1).
+    pub fn sampled_per_round(&self) -> usize {
+        ((self.num_agents as f64 * self.sampling_ratio).round() as usize)
+            .clamp(1, self.num_agents)
+    }
+
+    /// Parse from TOML text (section `[fl]` + top-level `name`).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Parse from an already-parsed document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = FlParams::default();
+        let p = FlParams {
+            experiment_name: doc.get_str("name", &d.experiment_name)?,
+            model: doc.get_str("fl.model", &d.model)?,
+            dataset: doc.get_str("fl.dataset", &d.dataset)?,
+            num_agents: doc.get_int("fl.num_agents", d.num_agents as i64)? as usize,
+            sampling_ratio: doc.get_float("fl.sampling_ratio", d.sampling_ratio)?,
+            global_epochs: doc.get_int("fl.global_epochs", d.global_epochs as i64)?
+                as usize,
+            local_epochs: doc.get_int("fl.local_epochs", d.local_epochs as i64)?
+                as usize,
+            split: Scheme::parse(&doc.get_str("fl.split", "iid")?)?,
+            sampler: doc.get_str("fl.sampler", &d.sampler)?,
+            aggregator: doc.get_str("fl.aggregator", &d.aggregator)?,
+            optimizer: doc.get_str("train.optimizer", &d.optimizer)?,
+            mode: doc.get_str("train.mode", &d.mode)?,
+            use_pretrained: doc.get_bool("train.use_pretrained", d.use_pretrained)?,
+            lr: doc.get_float("train.lr", d.lr as f64)? as f32,
+            seed: doc.get_int("fl.seed", d.seed as i64)? as u64,
+            workers: doc.get_int("run.workers", d.workers as i64)? as usize,
+            eval_every: doc.get_int("run.eval_every", d.eval_every as i64)? as usize,
+            max_local_steps: doc.get_int("run.max_local_steps", 0)? as usize,
+            log_dir: doc.get_str("run.log_dir", &d.log_dir)?,
+            dropout: doc.get_float("fl.dropout", 0.0)?,
+            defense: doc.get_str("fl.defense", "none")?,
+            compression: doc.get_str("fl.compression", "none")?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Sanity-check ranges and enums.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_agents == 0 {
+            bail!("num_agents must be >= 1");
+        }
+        if !(0.0 < self.sampling_ratio && self.sampling_ratio <= 1.0) {
+            bail!("sampling_ratio must be in (0, 1]");
+        }
+        if self.global_epochs == 0 || self.local_epochs == 0 {
+            bail!("global_epochs and local_epochs must be >= 1");
+        }
+        if !matches!(self.optimizer.as_str(), "sgd" | "adam") {
+            bail!("optimizer must be sgd or adam, got {:?}", self.optimizer);
+        }
+        if !matches!(self.mode.as_str(), "full" | "featext") {
+            bail!("mode must be full or featext, got {:?}", self.mode);
+        }
+        if self.mode == "featext" && !self.use_pretrained {
+            bail!("featext mode requires use_pretrained = true");
+        }
+        if !(self.lr.is_finite() && self.lr > 0.0) {
+            bail!("lr must be positive");
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            bail!("dropout must be in [0, 1)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        FlParams::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "fig8i"
+            [fl]
+            model = "lenet5"
+            dataset = "synth-mnist"
+            num_agents = 100
+            sampling_ratio = 0.1
+            global_epochs = 50
+            local_epochs = 5
+            split = "niid:2"
+            sampler = "random"
+            aggregator = "fedavg"
+            seed = 7
+            [train]
+            optimizer = "sgd"
+            lr = 0.05
+            [run]
+            workers = 4
+            eval_every = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.experiment_name, "fig8i");
+        assert_eq!(p.num_agents, 100);
+        assert_eq!(p.sampled_per_round(), 10);
+        assert_eq!(p.split, Scheme::NonIid { niid_factor: 2 });
+        assert_eq!(p.eval_every, 5);
+    }
+
+    #[test]
+    fn sampled_per_round_clamps() {
+        let mut p = FlParams::default();
+        p.num_agents = 3;
+        p.sampling_ratio = 0.01;
+        assert_eq!(p.sampled_per_round(), 1);
+        p.sampling_ratio = 1.0;
+        assert_eq!(p.sampled_per_round(), 3);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let mut p = FlParams::default();
+        p.sampling_ratio = 0.0;
+        assert!(p.validate().is_err());
+
+        let mut p = FlParams::default();
+        p.optimizer = "rmsprop".into();
+        assert!(p.validate().is_err());
+
+        let mut p = FlParams::default();
+        p.mode = "featext".into();
+        p.use_pretrained = false;
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Minimal TOML parser — the experiment-config substrate.
+//!
+//! Supports the subset experiment configs need: `[section]` and
+//! `[section.sub]` headers, `key = value` with strings, integers,
+//! floats, booleans, and flat arrays, plus `#` comments. Nested keys
+//! flatten to dotted paths: `[fl] agents = 10` → `"fl.agents"`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A TOML scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed document: dotted-path -> value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("line {}: {raw:?}", lineno + 1);
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner
+                    .strip_suffix(']')
+                    .with_context(|| format!("unterminated section, {}", ctx()))?;
+                let name = inner.trim();
+                if name.is_empty() || !name.chars().all(is_key_char_dotted) {
+                    bail!("bad section name, {}", ctx());
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("expected key = value, {}", ctx()))?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(is_key_char_dotted) {
+                bail!("bad key {key:?}, {}", ctx());
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("bad value, {}", ctx()))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.values.insert(path.clone(), value).is_some() {
+                bail!("duplicate key {path:?}, {}", ctx());
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    pub fn get_str(&self, path: &str, default: &str) -> Result<String> {
+        match self.values.get(path) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn get_int(&self, path: &str, default: i64) -> Result<i64> {
+        match self.values.get(path) {
+            Some(v) => v.as_int(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_float(&self, path: &str, default: f64) -> Result<f64> {
+        match self.values.get(path) {
+            Some(v) => v.as_float(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_bool(&self, path: &str, default: bool) -> Result<bool> {
+        match self.values.get(path) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+}
+
+fn is_key_char_dotted(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .with_context(|| "unterminated string".to_string())?;
+        if !rest[end + 1..].trim().is_empty() {
+            bail!("trailing characters after string");
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .with_context(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+/// Split array items on commas outside quotes.
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&text[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_experiment_config_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+            # quickstart config
+            name = "demo"
+            [fl]
+            num_agents = 10          # inline comment
+            sampling_ratio = 0.5
+            split = "niid:3"
+            [train]
+            lr = 0.05
+            use_pretrained = true
+            tags = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name", "").unwrap(), "demo");
+        assert_eq!(doc.get_int("fl.num_agents", 0).unwrap(), 10);
+        assert!((doc.get_float("fl.sampling_ratio", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(doc.get_str("fl.split", "").unwrap(), "niid:3");
+        assert!(doc.get_bool("train.use_pretrained", false).unwrap());
+        assert_eq!(
+            doc.get("train.tags").unwrap(),
+            &TomlValue::Array(vec![
+                TomlValue::Str("a".into()),
+                TomlValue::Str("b".into())
+            ])
+        );
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.get_int("x", 7).unwrap(), 7);
+        assert_eq!(doc.get_str("y", "d").unwrap(), "d");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("lr = 1").unwrap();
+        assert_eq!(doc.get_float("lr", 0.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get_str("s", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+        assert!(TomlDoc::parse("x = \"open").is_err());
+        assert!(TomlDoc::parse("x = 1\nx = 2").is_err());
+        assert!(TomlDoc::parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn sectioned_duplicate_between_sections_ok() {
+        let doc =
+            TomlDoc::parse("[a]\nx = 1\n[b]\nx = 2\n").unwrap();
+        assert_eq!(doc.get_int("a.x", 0).unwrap(), 1);
+        assert_eq!(doc.get_int("b.x", 0).unwrap(), 2);
+    }
+}

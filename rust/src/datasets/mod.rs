@@ -1,0 +1,264 @@
+//! Synthetic datasets — the datamodules substrate (paper §3.1, Table 1).
+//!
+//! The paper's datamodules wrap torchvision datasets; our substitute
+//! (DESIGN.md Substitution #1) generates class-structured images from the
+//! per-class latent templates built at artifact time:
+//!
+//! `sample(i) = clip(roll(template[label(i)], jitter_i) + noise_i) - 0.5`
+//!
+//! Labels and corruptions are derived deterministically from
+//! `(dataset seed, split, index)` via split RNG streams, so any shard of
+//! any dataset can be regenerated on any worker without storing data —
+//! the whole "data pipeline" is O(templates) memory.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{DatasetInfo, Manifest};
+use crate::util::Rng;
+
+/// Which split a sample comes from (affects its RNG stream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    fn salt(self) -> u64 {
+        match self {
+            Split::Train => 0x7121,
+            Split::Test => 0x7e57,
+        }
+    }
+}
+
+/// A generated batch, laid out for the runtime ABI.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// `f32[n * H * W * C]`, row-major NHWC.
+    pub x: Vec<f32>,
+    /// `i32[n]` labels.
+    pub y: Vec<i32>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// A synthetic dataset: templates + deterministic sample synthesis.
+pub struct Dataset {
+    pub info: DatasetInfo,
+    /// `f32[num_classes * H * W * C]` class templates.
+    templates: Vec<f32>,
+    seed: u64,
+}
+
+impl Dataset {
+    /// Load the templates for `name` from the artifact directory.
+    pub fn load(manifest: &Manifest, name: &str, seed: u64) -> Result<Self> {
+        let info = manifest.dataset(name)?.clone();
+        let templates = manifest.read_f32(&info.template_file)?;
+        let want = info.num_classes * info.example_len();
+        if templates.len() != want {
+            bail!(
+                "{name}: template file has {} floats, want {want}",
+                templates.len()
+            );
+        }
+        Ok(Self {
+            info,
+            templates,
+            seed,
+        })
+    }
+
+    /// Build a dataset from raw parts (tests / benches).
+    pub fn from_parts(info: DatasetInfo, templates: Vec<f32>, seed: u64) -> Self {
+        Self {
+            info,
+            templates,
+            seed,
+        }
+    }
+
+    pub fn num_train(&self) -> usize {
+        self.info.train_n
+    }
+
+    pub fn num_test(&self) -> usize {
+        self.info.test_n
+    }
+
+    /// Label of sample `index` in `split`.
+    ///
+    /// Labels are a deterministic pseudo-random function of the index, so
+    /// the *global* class distribution is uniform — matching the balanced
+    /// datasets in paper Table 1 (MNIST/CIFAR are class-balanced).
+    pub fn label(&self, split: Split, index: usize) -> usize {
+        let mut r = Rng::new(self.seed ^ split.salt()).split(index as u64);
+        r.next_below(self.info.num_classes as u64) as usize
+    }
+
+    /// All labels of a split (used by the federation layer for sharding).
+    pub fn labels(&self, split: Split) -> Vec<usize> {
+        let n = match split {
+            Split::Train => self.info.train_n,
+            Split::Test => self.info.test_n,
+        };
+        (0..n).map(|i| self.label(split, i)).collect()
+    }
+
+    /// Synthesize sample `index` of `split` into `out` (len H*W*C).
+    pub fn synthesize_into(&self, split: Split, index: usize, out: &mut [f32]) {
+        let ex = self.info.example_len();
+        debug_assert_eq!(out.len(), ex);
+        let label = self.label(split, index);
+        // Separate stream for the corruption so label/corruption are
+        // independent.
+        let mut r = Rng::new(self.seed ^ split.salt() ^ 0xC0FFEE).split(index as u64);
+        let (h, w, c) = (self.info.height, self.info.width, self.info.channels);
+        let j = self.info.jitter;
+        let dy = if j > 0 { r.range_i64(-j, j) } else { 0 };
+        let dx = if j > 0 { r.range_i64(-j, j) } else { 0 };
+        let tpl = &self.templates[label * ex..(label + 1) * ex];
+        let noise = self.info.noise;
+        for yy in 0..h {
+            // torus roll, matching numpy.roll in python/compile/datagen.py
+            let sy = (yy as i64 - dy).rem_euclid(h as i64) as usize;
+            for xx in 0..w {
+                let sx = (xx as i64 - dx).rem_euclid(w as i64) as usize;
+                for ch in 0..c {
+                    let v = tpl[(sy * w + sx) * c + ch] + noise * r.next_gaussian();
+                    out[(yy * w + xx) * c + ch] = v.clamp(-0.5, 1.5) - 0.5;
+                }
+            }
+        }
+    }
+
+    /// Synthesize a batch for the given sample indices.
+    pub fn batch(&self, split: Split, indices: &[usize]) -> Batch {
+        let ex = self.info.example_len();
+        let mut x = vec![0.0f32; indices.len() * ex];
+        let mut y = Vec::with_capacity(indices.len());
+        for (i, &idx) in indices.iter().enumerate() {
+            self.synthesize_into(split, idx, &mut x[i * ex..(i + 1) * ex]);
+            y.push(self.label(split, idx) as i32);
+        }
+        Batch { x, y }
+    }
+
+    /// Iterate the test split in eval-batch-size chunks:
+    /// yields (batch, n_valid) with the final short chunk un-padded
+    /// (the runtime pads + masks).
+    pub fn test_batches(&self, batch_size: usize) -> Vec<(Batch, usize)> {
+        let n = self.info.test_n;
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + batch_size).min(n);
+            let idx: Vec<usize> = (start..end).collect();
+            out.push((self.batch(Split::Test, &idx), end - start));
+            start = end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_info() -> DatasetInfo {
+        DatasetInfo {
+            name: "tiny".into(),
+            group: "TEST".into(),
+            height: 4,
+            width: 4,
+            channels: 1,
+            num_classes: 3,
+            train_n: 60,
+            test_n: 30,
+            real_train_n: 600,
+            real_test_n: 300,
+            noise: 0.1,
+            jitter: 1,
+            template_file: "none".into(),
+        }
+    }
+
+    fn tiny_dataset(seed: u64) -> Dataset {
+        let info = tiny_info();
+        let ex = info.example_len();
+        let templates: Vec<f32> = (0..info.num_classes * ex)
+            .map(|i| (i % 7) as f32 / 7.0)
+            .collect();
+        Dataset::from_parts(info, templates, seed)
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let d = tiny_dataset(42);
+        let b1 = d.batch(Split::Train, &[0, 5, 17]);
+        let b2 = d.batch(Split::Train, &[0, 5, 17]);
+        assert_eq!(b1.x, b2.x);
+        assert_eq!(b1.y, b2.y);
+    }
+
+    #[test]
+    fn splits_are_independent() {
+        let d = tiny_dataset(42);
+        let tr = d.batch(Split::Train, &[3]);
+        let te = d.batch(Split::Test, &[3]);
+        assert_ne!(tr.x, te.x, "train/test index 3 must differ");
+    }
+
+    #[test]
+    fn labels_roughly_uniform() {
+        let d = tiny_dataset(7);
+        let labels = d.labels(Split::Train);
+        let mut counts = [0usize; 3];
+        for l in labels {
+            counts[l] += 1;
+        }
+        // 60 samples over 3 classes: each class within [10, 30].
+        for (c, &n) in counts.iter().enumerate() {
+            assert!((10..=30).contains(&n), "class {c}: {n}");
+        }
+    }
+
+    #[test]
+    fn values_in_range() {
+        let d = tiny_dataset(9);
+        let b = d.batch(Split::Train, &(0..20).collect::<Vec<_>>());
+        assert!(b.x.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn test_batches_cover_split_exactly() {
+        let d = tiny_dataset(11);
+        let chunks = d.test_batches(8);
+        let total: usize = chunks.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, d.num_test());
+        // all but last are full
+        for (b, n) in &chunks[..chunks.len() - 1] {
+            assert_eq!(b.len(), 8);
+            assert_eq!(*n, 8);
+        }
+        let (last, n_last) = &chunks[chunks.len() - 1];
+        assert_eq!(last.len(), *n_last);
+        assert_eq!(*n_last, 30 % 8);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = tiny_dataset(1).batch(Split::Train, &[0]);
+        let b = tiny_dataset(2).batch(Split::Train, &[0]);
+        assert_ne!(a.x, b.x);
+    }
+}

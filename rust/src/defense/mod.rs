@@ -1,0 +1,296 @@
+//! Poisoning defenses — server-side update filters (paper §6.3; the
+//! paper's own citation [23] is FedClean, a parameter-poisoning
+//! defense).
+//!
+//! A [`Defense`] inspects the round's updates *before* aggregation and
+//! may clip or reject them:
+//!
+//! - [`NormClip`] — scale any delta whose L2 norm exceeds `c` down to
+//!   the threshold (bounds the influence of any single client).
+//! - [`CosineFilter`] — reject updates whose cosine similarity to the
+//!   coordinate-median direction falls below a threshold (directional
+//!   outliers; a FedClean-flavoured filter).
+//! - [`NormOutlierFilter`] — reject updates whose norm exceeds
+//!   `k` × median norm (magnitude outliers).
+//! - [`NoDefense`] — pass-through baseline.
+//!
+//! Defenses compose with any aggregator: the entrypoint applies the
+//! defense, then hands surviving updates to the aggregation rule.
+
+use anyhow::{bail, Result};
+
+use crate::aggregators::Update;
+
+/// Outcome of screening one round's updates.
+#[derive(Clone, Debug, Default)]
+pub struct DefenseReport {
+    /// Agent ids whose updates were rejected outright.
+    pub rejected: Vec<usize>,
+    /// Agent ids whose updates were modified (e.g. clipped).
+    pub clipped: Vec<usize>,
+}
+
+/// Server-side update screen.
+pub trait Defense: Send {
+    /// Filter/transform `updates` in place; return what happened.
+    fn screen(&mut self, updates: &mut Vec<Update>) -> DefenseReport;
+    fn name(&self) -> &'static str;
+}
+
+fn l2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Pass-through.
+#[derive(Default)]
+pub struct NoDefense;
+
+impl Defense for NoDefense {
+    fn screen(&mut self, _updates: &mut Vec<Update>) -> DefenseReport {
+        DefenseReport::default()
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// Clip every delta to L2 norm <= `c`.
+pub struct NormClip {
+    pub c: f64,
+}
+
+impl NormClip {
+    pub fn new(c: f64) -> Self {
+        assert!(c > 0.0);
+        Self { c }
+    }
+}
+
+impl Defense for NormClip {
+    fn screen(&mut self, updates: &mut Vec<Update>) -> DefenseReport {
+        let mut report = DefenseReport::default();
+        for u in updates.iter_mut() {
+            let n = l2(&u.delta);
+            if n > self.c {
+                let s = (self.c / n) as f32;
+                for d in u.delta.iter_mut() {
+                    *d *= s;
+                }
+                report.clipped.push(u.agent_id);
+            }
+        }
+        report
+    }
+
+    fn name(&self) -> &'static str {
+        "normclip"
+    }
+}
+
+/// Reject deltas whose norm exceeds `k` × median norm.
+pub struct NormOutlierFilter {
+    pub k: f64,
+}
+
+impl NormOutlierFilter {
+    pub fn new(k: f64) -> Self {
+        assert!(k >= 1.0);
+        Self { k }
+    }
+}
+
+impl Defense for NormOutlierFilter {
+    fn screen(&mut self, updates: &mut Vec<Update>) -> DefenseReport {
+        let mut report = DefenseReport::default();
+        if updates.len() < 3 {
+            return report; // not enough context to call outliers
+        }
+        let mut norms: Vec<f64> = updates.iter().map(|u| l2(&u.delta)).collect();
+        let mut sorted = norms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2].max(1e-12);
+        let mut i = 0;
+        updates.retain(|u| {
+            let keep = norms[i] <= self.k * median;
+            if !keep {
+                report.rejected.push(u.agent_id);
+            }
+            i += 1;
+            keep
+        });
+        norms.clear();
+        report
+    }
+
+    fn name(&self) -> &'static str {
+        "normfilter"
+    }
+}
+
+/// Reject deltas pointing away from the robust (median) direction.
+pub struct CosineFilter {
+    /// Minimum cosine similarity to the median direction to survive.
+    pub min_cos: f64,
+}
+
+impl CosineFilter {
+    pub fn new(min_cos: f64) -> Self {
+        assert!((-1.0..=1.0).contains(&min_cos));
+        Self { min_cos }
+    }
+}
+
+impl Defense for CosineFilter {
+    fn screen(&mut self, updates: &mut Vec<Update>) -> DefenseReport {
+        let mut report = DefenseReport::default();
+        if updates.len() < 3 {
+            return report;
+        }
+        let p = updates[0].delta.len();
+        // Coordinate-median reference direction (robust to < half bad).
+        let mut median = vec![0.0f32; p];
+        let mut col = vec![0.0f32; updates.len()];
+        for i in 0..p {
+            for (j, u) in updates.iter().enumerate() {
+                col[j] = u.delta[i];
+            }
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            median[i] = col[col.len() / 2];
+        }
+        let mnorm = l2(&median);
+        if mnorm < 1e-12 {
+            return report;
+        }
+        let cos: Vec<f64> = updates
+            .iter()
+            .map(|u| {
+                let dot: f64 = u
+                    .delta
+                    .iter()
+                    .zip(&median)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                dot / (l2(&u.delta).max(1e-12) * mnorm)
+            })
+            .collect();
+        let mut i = 0;
+        updates.retain(|u| {
+            let keep = cos[i] >= self.min_cos;
+            if !keep {
+                report.rejected.push(u.agent_id);
+            }
+            i += 1;
+            keep
+        });
+        report
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+}
+
+/// Parse a config name:
+/// `none | normclip:<c> | normfilter:<k> | cosine:<min_cos>`.
+pub fn from_name(name: &str) -> Result<Box<dyn Defense>> {
+    let t = name.trim().to_ascii_lowercase();
+    if t == "none" || t.is_empty() {
+        return Ok(Box::new(NoDefense));
+    }
+    if let Some(rest) = t.strip_prefix("normclip:") {
+        return Ok(Box::new(NormClip::new(rest.parse()?)));
+    }
+    if let Some(rest) = t.strip_prefix("normfilter:") {
+        return Ok(Box::new(NormOutlierFilter::new(rest.parse()?)));
+    }
+    if let Some(rest) = t.strip_prefix("cosine:") {
+        return Ok(Box::new(CosineFilter::new(rest.parse()?)));
+    }
+    bail!(
+        "unknown defense {name:?} \
+         (none | normclip:<c> | normfilter:<k> | cosine:<min_cos>)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(id: usize, delta: Vec<f32>) -> Update {
+        Update {
+            agent_id: id,
+            delta,
+            num_samples: 1,
+        }
+    }
+
+    #[test]
+    fn normclip_scales_oversized() {
+        let mut ups = vec![upd(0, vec![3.0, 4.0]), upd(1, vec![0.3, 0.4])];
+        let mut d = NormClip::new(1.0);
+        let rep = d.screen(&mut ups);
+        assert_eq!(rep.clipped, vec![0]);
+        let n0 = l2(&ups[0].delta);
+        assert!((n0 - 1.0).abs() < 1e-6);
+        // direction preserved
+        assert!((ups[0].delta[0] / ups[0].delta[1] - 0.75).abs() < 1e-5);
+        // small update untouched
+        assert_eq!(ups[1].delta, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn normfilter_rejects_magnitude_outlier() {
+        let mut ups: Vec<Update> =
+            (0..5).map(|i| upd(i, vec![0.1, 0.1])).collect();
+        ups.push(upd(5, vec![1e4, 1e4]));
+        let mut d = NormOutlierFilter::new(3.0);
+        let rep = d.screen(&mut ups);
+        assert_eq!(rep.rejected, vec![5]);
+        assert_eq!(ups.len(), 5);
+    }
+
+    #[test]
+    fn cosine_rejects_signflip_attack() {
+        // honest updates ~ +0.1 direction; attacker sign-flips.
+        let mut ups: Vec<Update> = (0..6)
+            .map(|i| upd(i, vec![0.1, 0.11, 0.09, 0.1]))
+            .collect();
+        ups.push(upd(6, vec![-0.8, -0.88, -0.72, -0.8]));
+        let mut d = CosineFilter::new(0.0);
+        let rep = d.screen(&mut ups);
+        assert_eq!(rep.rejected, vec![6]);
+        assert_eq!(ups.len(), 6);
+    }
+
+    #[test]
+    fn defenses_pass_clean_rounds() {
+        let clean: Vec<Update> = (0..5)
+            .map(|i| upd(i, vec![0.1 + 0.01 * i as f32, 0.1]))
+            .collect();
+        for name in ["normclip:10", "normfilter:5", "cosine:0.5"] {
+            let mut ups = clean.clone();
+            let mut d = from_name(name).unwrap();
+            let rep = d.screen(&mut ups);
+            assert!(rep.rejected.is_empty(), "{name}");
+            assert_eq!(ups.len(), 5, "{name}");
+        }
+    }
+
+    #[test]
+    fn small_rounds_are_not_filtered() {
+        let mut ups = vec![upd(0, vec![1e6, 1e6]), upd(1, vec![0.1, 0.1])];
+        let mut d = NormOutlierFilter::new(2.0);
+        let rep = d.screen(&mut ups);
+        assert!(rep.rejected.is_empty());
+        assert_eq!(ups.len(), 2);
+    }
+
+    #[test]
+    fn from_name_parses() {
+        for n in ["none", "normclip:2.0", "normfilter:3", "cosine:0.2"] {
+            assert!(from_name(n).is_ok(), "{n}");
+        }
+        assert!(from_name("krum").is_err());
+    }
+}

@@ -1,0 +1,370 @@
+//! Entrypoint — the federated experiment orchestrator (paper §3.2.4).
+//!
+//! TorchFL's `Entrypoint` wraps agents, a sampler, and an aggregator and
+//! runs the whole experiment from an `FLParams` config; this module is
+//! the rust analogue, with local training fanned out over the worker
+//! pool (each worker = one simulated client device with its own PJRT
+//! client) and aggregation + evaluation on the leader thread.
+//!
+//! Round loop (the FL lifecycle of paper Fig 1):
+//!   1. sampler picks `A^t ⊆ A`
+//!   2. each sampled agent trains locally from `W^t` (worker pool)
+//!   3. the aggregator folds the deltas into `W^{t+1}` (Eq. 2)
+//!   4. the leader evaluates the global model on the test split
+//!   5. loggers receive per-round + per-agent records
+
+pub mod trainer;
+pub mod worker;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::agents::{self, Agent};
+use crate::aggregators::{self, Aggregator};
+use crate::compression::{self, Compressor};
+use crate::config::FlParams;
+use crate::datasets::{Dataset, Split};
+use crate::defense::{self, Defense};
+use crate::federation;
+use crate::incentives::ContributionTracker;
+use crate::loggers::Logger;
+use crate::metrics::{Accumulator, AgentRecord, RoundRecord};
+use crate::profiler::SimpleProfiler;
+use crate::runtime::{EvalStats, Manifest};
+use crate::samplers::{self, Sampler};
+use crate::util::{Rng, WorkerPool};
+
+use worker::{LocalJob, RuntimeKey};
+
+/// Communication accounting for a run (compression effectiveness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    /// Bytes the updates would cost dense (f32).
+    pub dense_bytes: u64,
+    /// Bytes actually "sent" after compression.
+    pub wire_bytes: u64,
+}
+
+impl CommStats {
+    pub fn ratio(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.dense_bytes as f64 / self.wire_bytes as f64
+        }
+    }
+}
+
+/// Result of a full federated run.
+pub struct RunResult {
+    pub rounds: Vec<RoundRecord>,
+    pub agent_records: Vec<AgentRecord>,
+    pub final_eval: EvalStats,
+    pub profiler: SimpleProfiler,
+    /// Upload accounting (non-trivial when compression is enabled).
+    pub comm: CommStats,
+    /// Gradient-alignment contribution scores per agent (incentives).
+    pub contributions: ContributionTracker,
+    /// Agents that dropped out, per round.
+    pub dropped: Vec<Vec<usize>>,
+    /// Updates rejected by the defense, per round.
+    pub defense_rejected: Vec<Vec<usize>>,
+}
+
+/// The federated experiment orchestrator.
+pub struct Entrypoint {
+    pub params: FlParams,
+    pub manifest: Arc<Manifest>,
+    pub dataset: Arc<Dataset>,
+    pub agents: Vec<Agent>,
+    sampler: Box<dyn Sampler>,
+    aggregator: Box<dyn Aggregator>,
+    defense: Box<dyn Defense>,
+    compressor: Box<dyn Compressor>,
+    pool: WorkerPool,
+    global: Vec<f32>,
+    key: RuntimeKey,
+    rng: Rng,
+}
+
+impl Entrypoint {
+    /// Build an experiment from config: loads the manifest + dataset,
+    /// shards the train split, initialises agents and the global model.
+    pub fn new(params: FlParams, manifest: Arc<Manifest>) -> Result<Self> {
+        params.validate()?;
+        let mut rng = Rng::new(params.seed);
+
+        let dataset = Arc::new(Dataset::load(&manifest, &params.dataset, params.seed)?);
+        let labels = dataset.labels(Split::Train);
+        let partition =
+            federation::shard(&labels, params.num_agents, params.split, &mut rng)?;
+        let agents = agents::from_partition(partition.shards);
+
+        let art = manifest.artifact(&params.model, &params.dataset)?;
+        let global = if params.use_pretrained {
+            let f = art.pretrained_file.as_ref().with_context(|| {
+                format!(
+                    "config wants pretrained weights but artifact {} has none \
+                     (set pretrain=True in python/compile/aot.py)",
+                    art.id
+                )
+            })?;
+            manifest.read_f32(f)?
+        } else {
+            manifest.read_f32(&art.init_file)?
+        };
+
+        let sampler = samplers::from_name(&params.sampler)?;
+        let aggregator = aggregators::from_name(&params.aggregator)?;
+        let defense = defense::from_name(&params.defense)?;
+        let compressor = compression::from_name(&params.compression, params.seed)?;
+        let workers = if params.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4)
+        } else {
+            params.workers
+        };
+        let key = RuntimeKey {
+            model: params.model.clone(),
+            dataset: params.dataset.clone(),
+            optimizer: params.optimizer.clone(),
+            mode: params.mode.clone(),
+            entry_tag: String::new(),
+        };
+
+        Ok(Self {
+            params,
+            manifest,
+            dataset,
+            agents,
+            sampler,
+            aggregator,
+            defense,
+            compressor,
+            pool: WorkerPool::new(workers),
+            global,
+            key,
+            rng,
+        })
+    }
+
+    /// Current global parameters.
+    pub fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// Run the full experiment, emitting records into `logger`.
+    pub fn run(&mut self, logger: &mut dyn Logger) -> Result<RunResult> {
+        let mut profiler = SimpleProfiler::new();
+        let mut rounds = Vec::new();
+        let mut agent_records = Vec::new();
+        let mut comm = CommStats::default();
+        let mut contributions = ContributionTracker::new();
+        let mut dropped_log = Vec::new();
+        let mut rejected_log = Vec::new();
+        let k = self.params.sampled_per_round();
+
+        for round in 0..self.params.global_epochs {
+            let t_round = Instant::now();
+
+            // 1. sample A^t
+            let mut sampled = profiler.time("sampling", || {
+                self.sampler.sample(&self.agents, k, &mut self.rng)
+            });
+
+            // 1b. straggler/failure injection: each sampled device drops
+            // with probability `dropout` (cross-device FL reality; the
+            // round proceeds with survivors, paper Fig 1 lifecycle).
+            let mut dropped = Vec::new();
+            if self.params.dropout > 0.0 {
+                sampled.retain(|&aid| {
+                    if self.rng.next_f64() < self.params.dropout {
+                        dropped.push(aid);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            if sampled.is_empty() {
+                // whole cohort offline: skip the round
+                dropped_log.push(dropped);
+                rejected_log.push(Vec::new());
+                let rec = RoundRecord {
+                    round,
+                    train_loss: f64::NAN,
+                    train_acc: f64::NAN,
+                    eval_loss: f64::NAN,
+                    eval_acc: f64::NAN,
+                    sampled,
+                    secs: t_round.elapsed().as_secs_f64(),
+                };
+                logger.log_round(&rec)?;
+                rounds.push(rec);
+                continue;
+            }
+
+            // 2. local training on the worker pool
+            let t_local = Instant::now();
+            let global = Arc::new(self.global.clone());
+            let jobs: Vec<_> = sampled
+                .iter()
+                .map(|&aid| {
+                    let job = LocalJob {
+                        agent_id: aid,
+                        round,
+                        shard: self.agents[aid].shard.clone(),
+                        global: Arc::clone(&global),
+                        lr: self.params.lr,
+                        local_epochs: self.params.local_epochs,
+                        max_steps_per_epoch: self.params.max_local_steps,
+                        seed: self.params.seed,
+                    };
+                    let manifest = Arc::clone(&self.manifest);
+                    let dataset = Arc::clone(&self.dataset);
+                    let key = self.key.clone();
+                    move |_wid: usize| -> Result<_> {
+                        worker::with_runtime(&manifest, &key, |rt| {
+                            worker::run_local(rt, &dataset, &job)
+                        })
+                    }
+                })
+                .collect();
+            let results = self.pool.run(jobs);
+            profiler.record("local_training", t_local.elapsed().as_secs_f64());
+
+            let mut updates = Vec::with_capacity(results.len());
+            let mut train_loss = Accumulator::default();
+            let mut train_acc = Accumulator::default();
+            for res in results {
+                let (mut update, record) = res?;
+                train_loss.add(record.final_loss());
+                train_acc.add(record.final_acc());
+                self.agents[record.agent_id]
+                    .record_round(record.final_loss(), self.params.local_epochs);
+                logger.log_agent(&record)?;
+                agent_records.push(record);
+                // client-side compression: the update crosses the "wire"
+                // compressed; the server reconstructs before aggregation.
+                let dense = (update.delta.len() * 4) as u64;
+                let compressed = self.compressor.compress(&update.delta);
+                comm.dense_bytes += dense;
+                comm.wire_bytes += compressed.wire_bytes() as u64;
+                update.delta = compressed.decompress();
+                updates.push(update);
+            }
+
+            // 2b. server-side defense screens the cohort before Eq. 2.
+            let report = profiler.time("defense", || self.defense.screen(&mut updates));
+            rejected_log.push(report.rejected.clone());
+            dropped_log.push(dropped);
+            if updates.is_empty() {
+                // defense rejected everything: keep the old global model
+                let rec = RoundRecord {
+                    round,
+                    train_loss: train_loss.mean(),
+                    train_acc: train_acc.mean(),
+                    eval_loss: f64::NAN,
+                    eval_acc: f64::NAN,
+                    sampled,
+                    secs: t_round.elapsed().as_secs_f64(),
+                };
+                logger.log_round(&rec)?;
+                rounds.push(rec);
+                continue;
+            }
+
+            // 3. aggregate (Eq. 2) — on the leader's runtime (Pallas path)
+            let t_agg = Instant::now();
+            let manifest = Arc::clone(&self.manifest);
+            let key = self.key.clone();
+            let aggregator = &mut self.aggregator;
+            let new_global = worker::with_runtime(&manifest, &key, |rt| {
+                aggregator.aggregate(&self.global, &updates, Some(rt))
+            })?;
+            // incentives: score the cohort's gradient alignment against
+            // the realised round delta.
+            let round_delta: Vec<f32> = new_global
+                .iter()
+                .zip(&self.global)
+                .map(|(n, g)| n - g)
+                .collect();
+            contributions.record_round(&updates, &round_delta);
+            self.global = new_global;
+            profiler.record("aggregation", t_agg.elapsed().as_secs_f64());
+
+            // 4. evaluate
+            let do_eval = self.params.eval_every > 0
+                && (round + 1) % self.params.eval_every == 0;
+            let eval = if do_eval {
+                let t_eval = Instant::now();
+                let stats = self.evaluate()?;
+                profiler.record("evaluation", t_eval.elapsed().as_secs_f64());
+                Some(stats)
+            } else {
+                None
+            };
+
+            // 5. log
+            let rec = RoundRecord {
+                round,
+                train_loss: train_loss.mean(),
+                train_acc: train_acc.mean(),
+                eval_loss: eval.map_or(f64::NAN, |e| e.mean_loss()),
+                eval_acc: eval.map_or(f64::NAN, |e| e.accuracy()),
+                sampled,
+                secs: t_round.elapsed().as_secs_f64(),
+            };
+            logger.log_round(&rec)?;
+            rounds.push(rec);
+        }
+
+        let final_eval = self.evaluate()?;
+        profiler.stop();
+        logger.finish()?;
+        Ok(RunResult {
+            rounds,
+            agent_records,
+            final_eval,
+            profiler,
+            comm,
+            contributions,
+            dropped: dropped_log,
+            defense_rejected: rejected_log,
+        })
+    }
+
+    /// Evaluate the current global model over the full test split.
+    pub fn evaluate(&self) -> Result<EvalStats> {
+        let manifest = Arc::clone(&self.manifest);
+        worker::with_runtime(&manifest, &self.key, |rt| {
+            let eval = worker::evaluate(rt, &self.dataset);
+            eval(&self.global)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entrypoint_validates_params() {
+        let mut p = FlParams::default();
+        p.sampling_ratio = -1.0;
+        // Invalid params must fail before any artifact I/O.
+        let m = Arc::new(Manifest {
+            dir: "/nonexistent".into(),
+            train_batch: 32,
+            eval_batch: 128,
+            k_pad: 16,
+            datasets: Default::default(),
+            zoo: Default::default(),
+            artifacts: vec![],
+        });
+        assert!(Entrypoint::new(p, m).is_err());
+    }
+}

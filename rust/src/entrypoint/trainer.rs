@@ -1,0 +1,269 @@
+//! Central (non-federated) trainer — paper §4.1.2 (Table 3, Fig 7).
+//!
+//! TorchFL trains models outside the FL loop through the Lightning
+//! Trainer; this is the rust analogue used by the transfer-learning
+//! experiments: train one model on the full train split for E epochs,
+//! recording per-epoch wall-clock, validation loss and accuracy.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::datasets::{Dataset, Split};
+use crate::runtime::{AdamState, Manifest};
+use crate::util::Rng;
+
+use super::worker::{self, RuntimeKey};
+
+/// Training mode for the transfer-learning experiments (Table 3 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Random init, all parameters trainable.
+    Scratch,
+    /// Pretrained init, all parameters trainable.
+    Finetune,
+    /// Pretrained init, only the classifier head trainable.
+    FeatureExtract,
+}
+
+impl TrainMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            TrainMode::Scratch => "SCRATCH",
+            TrainMode::Finetune => "FINETUNE",
+            TrainMode::FeatureExtract => "FEATURE_EXTRACT",
+        }
+    }
+
+    /// AOT entry mode this maps to ("full" trains everything).
+    fn entry_mode(self) -> &'static str {
+        match self {
+            TrainMode::FeatureExtract => "featext",
+            _ => "full",
+        }
+    }
+
+    fn pretrained(self) -> bool {
+        !matches!(self, TrainMode::Scratch)
+    }
+}
+
+/// One epoch's record (a Fig 7 point).
+#[derive(Clone, Copy, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+    pub secs: f64,
+}
+
+/// Result of a central training run (a Table 3 row + Fig 7 curve).
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub mode: TrainMode,
+    pub epochs: Vec<EpochRecord>,
+    /// Trainable parameter count (head only under feature extraction).
+    pub trainable_params: usize,
+    pub total_params: usize,
+    pub mean_epoch_secs: f64,
+}
+
+impl TrainResult {
+    pub fn non_trainable_params(&self) -> usize {
+        self.total_params - self.trainable_params
+    }
+}
+
+/// Configuration for a central run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub dataset: String,
+    pub mode: TrainMode,
+    pub epochs: usize,
+    pub lr: f32,
+    pub optimizer: String,
+    /// Samples per epoch (0 = the full train split).
+    pub epoch_samples: usize,
+    /// Test samples used for per-epoch validation (0 = full test split).
+    /// Large interpret-mode conv models make full-test eval dominate the
+    /// walltime of curve experiments; a fixed subset preserves the trend.
+    pub eval_samples: usize,
+    pub seed: u64,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "cnn-m".into(),
+            dataset: "synth-cifar10".into(),
+            mode: TrainMode::Scratch,
+            epochs: 10,
+            lr: 0.05,
+            optimizer: "sgd".into(),
+            epoch_samples: 0,
+            eval_samples: 0,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+/// Evaluate on the first `n` test samples only (fixed subset).
+fn eval_subset(
+    rt: &crate::runtime::ModelRuntime,
+    dataset: &Dataset,
+    params: &[f32],
+    n: usize,
+) -> Result<crate::runtime::EvalStats> {
+    let n = n.min(dataset.num_test());
+    let mut total = crate::runtime::EvalStats::default();
+    let mut start = 0;
+    while start < n {
+        let end = (start + rt.eval_batch).min(n);
+        let idx: Vec<usize> = (start..end).collect();
+        let batch = dataset.batch(Split::Test, &idx);
+        let s = rt.eval_batch(params, &batch.x, &batch.y, end - start)?;
+        total.loss_sum += s.loss_sum;
+        total.correct += s.correct;
+        total.count += s.count;
+        start = end;
+    }
+    Ok(total)
+}
+
+/// Train centrally; returns per-epoch metrics and parameter counts.
+pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult> {
+    let dataset = Dataset::load(manifest, &cfg.dataset, cfg.seed)?;
+    let art = manifest.artifact(&cfg.model, &cfg.dataset)?;
+    let mut params = if cfg.mode.pretrained() {
+        let f = art.pretrained_file.as_ref().with_context(|| {
+            format!("artifact {} has no pretrained weights", art.id)
+        })?;
+        manifest.read_f32(f)?
+    } else {
+        manifest.read_f32(&art.init_file)?
+    };
+    let trainable = match cfg.mode {
+        TrainMode::FeatureExtract => art.head_size,
+        _ => art.num_params,
+    };
+
+    let key = RuntimeKey {
+        model: cfg.model.clone(),
+        dataset: cfg.dataset.clone(),
+        optimizer: cfg.optimizer.clone(),
+        mode: cfg.mode.entry_mode().to_string(),
+        entry_tag: String::new(),
+    };
+
+    let n = if cfg.epoch_samples == 0 {
+        dataset.num_train()
+    } else {
+        cfg.epoch_samples.min(dataset.num_train())
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0x7e41);
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+
+    worker::with_runtime(manifest, &key, |rt| {
+        let b = rt.train_batch;
+        let mut adam =
+            (cfg.optimizer == "adam").then(|| AdamState::zeros(params.len()));
+        let mut order: Vec<usize> = (0..n).collect();
+        for epoch in 0..cfg.epochs {
+            let t0 = Instant::now();
+            rng.shuffle(&mut order);
+            let mut loss_sum = 0.0f64;
+            let mut hits = 0.0f64;
+            let mut seen = 0usize;
+            let mut start = 0usize;
+            while start < order.len() {
+                let mut idx = Vec::with_capacity(b);
+                for i in 0..b {
+                    idx.push(order[(start + i) % order.len()]);
+                }
+                let batch = dataset.batch(Split::Train, &idx);
+                let stats = match adam.as_mut() {
+                    Some(st) => {
+                        rt.train_step_adam(&mut params, st, &batch.x, &batch.y, cfg.lr)?
+                    }
+                    None => rt.train_step_sgd(&mut params, &batch.x, &batch.y, cfg.lr)?,
+                };
+                loss_sum += stats.loss as f64 * b as f64;
+                hits += stats.hits as f64;
+                seen += b;
+                start += b;
+            }
+            let train_secs = t0.elapsed().as_secs_f64();
+            let eval = if cfg.eval_samples == 0 {
+                worker::evaluate(rt, &dataset)(&params)?
+            } else {
+                eval_subset(rt, &dataset, &params, cfg.eval_samples)?
+            };
+            let rec = EpochRecord {
+                epoch,
+                train_loss: loss_sum / seen.max(1) as f64,
+                train_acc: hits / seen.max(1) as f64,
+                val_loss: eval.mean_loss(),
+                val_acc: eval.accuracy(),
+                secs: train_secs,
+            };
+            if cfg.verbose {
+                println!(
+                    "  [{} epoch {:>2}] train loss {:.4} acc {:.3} | val loss {:.4} acc {:.3} | {:.1}s",
+                    cfg.mode.label(),
+                    epoch,
+                    rec.train_loss,
+                    rec.train_acc,
+                    rec.val_loss,
+                    rec.val_acc,
+                    rec.secs
+                );
+            }
+            epochs.push(rec);
+        }
+        Ok(())
+    })?;
+
+    let mean_epoch_secs =
+        epochs.iter().map(|e| e.secs).sum::<f64>() / epochs.len().max(1) as f64;
+    Ok(TrainResult {
+        mode: cfg.mode,
+        epochs,
+        trainable_params: trainable,
+        total_params: art.num_params,
+        mean_epoch_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels_and_entries() {
+        assert_eq!(TrainMode::Scratch.label(), "SCRATCH");
+        assert_eq!(TrainMode::Scratch.entry_mode(), "full");
+        assert_eq!(TrainMode::Finetune.entry_mode(), "full");
+        assert_eq!(TrainMode::FeatureExtract.entry_mode(), "featext");
+        assert!(!TrainMode::Scratch.pretrained());
+        assert!(TrainMode::Finetune.pretrained());
+    }
+
+    #[test]
+    fn non_trainable_math() {
+        let r = TrainResult {
+            mode: TrainMode::FeatureExtract,
+            epochs: vec![],
+            trainable_params: 100,
+            total_params: 1000,
+            mean_epoch_secs: 0.0,
+        };
+        assert_eq!(r.non_trainable_params(), 900);
+    }
+}

@@ -1,0 +1,196 @@
+//! Worker-side local training (the simulated FL client).
+//!
+//! Each pool worker owns its own PJRT device + compiled executables (the
+//! `xla` wrappers are `Rc`-based and must not cross threads) — the
+//! simulated analogue of every client having its own accelerator. The
+//! runtime cache is thread-local and keyed by (artifact, optimizer, mode,
+//! tag), so sequential experiments in one process reuse compilations.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::aggregators::Update;
+use crate::datasets::{Dataset, Split};
+use crate::metrics::AgentRecord;
+use crate::runtime::{AdamState, Device, Manifest, ModelRuntime};
+use crate::util::Rng;
+
+thread_local! {
+    static DEVICE: RefCell<Option<Rc<Device>>> = const { RefCell::new(None) };
+    static RUNTIMES: RefCell<HashMap<String, Rc<ModelRuntime>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Identifies one compiled (model, dataset, optimizer, mode, tag) bundle.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RuntimeKey {
+    pub model: String,
+    pub dataset: String,
+    pub optimizer: String,
+    pub mode: String,
+    /// "" for Pallas-kernel artifacts, "_ref" for the pure-jnp ablation.
+    pub entry_tag: String,
+}
+
+impl RuntimeKey {
+    fn cache_key(&self) -> String {
+        format!(
+            "{}@{}:{}:{}:{}",
+            self.model, self.dataset, self.optimizer, self.mode, self.entry_tag
+        )
+    }
+}
+
+/// Get (or lazily build) this thread's runtime for `key`.
+pub fn with_runtime<T>(
+    manifest: &Arc<Manifest>,
+    key: &RuntimeKey,
+    f: impl FnOnce(&ModelRuntime) -> Result<T>,
+) -> Result<T> {
+    let device = DEVICE.with(|d| -> Result<Rc<Device>> {
+        let mut d = d.borrow_mut();
+        if d.is_none() {
+            *d = Some(Rc::new(Device::cpu()?));
+        }
+        Ok(Rc::clone(d.as_ref().unwrap()))
+    })?;
+    let rt = RUNTIMES.with(|r| -> Result<Rc<ModelRuntime>> {
+        let mut r = r.borrow_mut();
+        if let Some(rt) = r.get(&key.cache_key()) {
+            return Ok(Rc::clone(rt));
+        }
+        let art = manifest.artifact(&key.model, &key.dataset)?;
+        let ds = manifest.dataset(&key.dataset)?;
+        let rt = Rc::new(
+            ModelRuntime::load(
+                &device,
+                manifest,
+                art,
+                ds,
+                &key.optimizer,
+                &key.mode,
+                &key.entry_tag,
+            )
+            .with_context(|| format!("loading runtime for {}", key.cache_key()))?,
+        );
+        r.insert(key.cache_key(), Rc::clone(&rt));
+        Ok(rt)
+    })?;
+    f(&rt)
+}
+
+/// Everything a worker needs to run one agent's local round.
+#[derive(Clone)]
+pub struct LocalJob {
+    pub agent_id: usize,
+    pub round: usize,
+    pub shard: Vec<usize>,
+    pub global: Arc<Vec<f32>>,
+    pub lr: f32,
+    pub local_epochs: usize,
+    /// 0 = unlimited (full shard per epoch).
+    pub max_steps_per_epoch: usize,
+    pub seed: u64,
+}
+
+/// Run local training for one agent; returns its parameter delta (Eq. 1)
+/// and per-epoch metrics (the Fig 9 series).
+pub fn run_local(
+    rt: &ModelRuntime,
+    dataset: &Dataset,
+    job: &LocalJob,
+) -> Result<(Update, AgentRecord)> {
+    let t0 = Instant::now();
+    let b = rt.train_batch;
+    let mut params: Vec<f32> = (*job.global).clone();
+    let mut adam = (rt.optimizer == "adam").then(|| AdamState::zeros(params.len()));
+
+    let mut epoch_losses = Vec::with_capacity(job.local_epochs);
+    let mut epoch_accs = Vec::with_capacity(job.local_epochs);
+    let mut order = job.shard.clone();
+    let mut rng = Rng::new(job.seed)
+        .split(job.round as u64)
+        .split(job.agent_id as u64);
+
+    for _epoch in 0..job.local_epochs {
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0.0f64;
+        let mut hit_sum = 0.0f64;
+        let mut seen = 0usize;
+        let mut steps = 0usize;
+        let mut start = 0usize;
+        while start < order.len() {
+            if job.max_steps_per_epoch > 0 && steps >= job.max_steps_per_epoch {
+                break;
+            }
+            // Fixed-shape batches: wrap around the shard for the tail.
+            let mut idx = Vec::with_capacity(b);
+            for i in 0..b {
+                idx.push(order[(start + i) % order.len()]);
+            }
+            let batch = dataset.batch(Split::Train, &idx);
+            let stats = match adam.as_mut() {
+                Some(state) => {
+                    rt.train_step_adam(&mut params, state, &batch.x, &batch.y, job.lr)?
+                }
+                None => rt.train_step_sgd(&mut params, &batch.x, &batch.y, job.lr)?,
+            };
+            loss_sum += stats.loss as f64 * b as f64;
+            hit_sum += stats.hits as f64;
+            seen += b;
+            steps += 1;
+            start += b;
+        }
+        if seen > 0 {
+            epoch_losses.push(loss_sum / seen as f64);
+            epoch_accs.push(hit_sum / seen as f64);
+        }
+    }
+
+    // delta_i = W_i^{t+1} - W^t (Eq. 1)
+    let delta: Vec<f32> = params
+        .iter()
+        .zip(job.global.iter())
+        .map(|(p, g)| p - g)
+        .collect();
+
+    let record = AgentRecord {
+        round: job.round,
+        agent_id: job.agent_id,
+        epoch_losses,
+        epoch_accs,
+        num_samples: job.shard.len(),
+        secs: t0.elapsed().as_secs_f64(),
+    };
+    Ok((
+        Update {
+            agent_id: job.agent_id,
+            delta,
+            num_samples: job.shard.len(),
+        },
+        record,
+    ))
+}
+
+/// Evaluate `params` over the full test split (padding + masking the
+/// final short batch inside the graph).
+pub fn evaluate<'a>(
+    rt: &'a ModelRuntime,
+    dataset: &'a Dataset,
+) -> impl Fn(&[f32]) -> Result<crate::runtime::EvalStats> + 'a {
+    move |params: &[f32]| {
+        let mut total = crate::runtime::EvalStats::default();
+        for (batch, n_valid) in dataset.test_batches(rt.eval_batch) {
+            let s = rt.eval_batch(params, &batch.x, &batch.y, n_valid)?;
+            total.loss_sum += s.loss_sum;
+            total.correct += s.correct;
+            total.count += s.count;
+        }
+        Ok(total)
+    }
+}

@@ -1,0 +1,150 @@
+//! Incentive mechanisms — contribution scoring + reward allocation
+//! (paper §3.2.1 motivates the decoupled agent precisely so incentive
+//! research can attach state; §6.3 lists incentive mechanisms as a
+//! target extension; the paper cites Zeng et al.'s incentive survey).
+//!
+//! [`ContributionTracker`] scores each sampled agent per round by
+//! *gradient alignment*: the projection of the agent's delta onto the
+//! aggregated round delta, normalised across the cohort. Aligned,
+//! large-magnitude updates earn more; orthogonal or adversarial
+//! (negatively aligned) updates earn zero-floored credit. Cumulative
+//! scores drive [`ContributionTracker::allocate`] (proportional payout)
+//! and can feed the reputation sampler.
+
+use std::collections::BTreeMap;
+
+use crate::aggregators::Update;
+
+/// Per-agent cumulative contribution state.
+#[derive(Clone, Debug, Default)]
+pub struct Contribution {
+    /// Sum of per-round normalised alignment scores.
+    pub score: f64,
+    /// Rounds this agent participated in.
+    pub rounds: usize,
+    /// Last round's raw alignment (for diagnostics).
+    pub last_alignment: f64,
+}
+
+/// Gradient-alignment contribution scoring.
+#[derive(Clone, Debug, Default)]
+pub struct ContributionTracker {
+    pub contributions: BTreeMap<usize, Contribution>,
+}
+
+impl ContributionTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Score one round: `updates` are the cohort's deltas, `aggregated`
+    /// is the round's combined delta (e.g. `global' - global`).
+    ///
+    /// score_i = max(0, <delta_i, aggregated>) / Σ_j max(0, <delta_j, aggregated>)
+    pub fn record_round(&mut self, updates: &[Update], aggregated: &[f32]) {
+        let dots: Vec<f64> = updates
+            .iter()
+            .map(|u| {
+                u.delta
+                    .iter()
+                    .zip(aggregated)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>()
+            })
+            .collect();
+        let positive: f64 = dots.iter().map(|&d| d.max(0.0)).sum();
+        for (u, &dot) in updates.iter().zip(&dots) {
+            let entry = self.contributions.entry(u.agent_id).or_default();
+            entry.rounds += 1;
+            entry.last_alignment = dot;
+            if positive > 0.0 {
+                entry.score += dot.max(0.0) / positive;
+            }
+        }
+    }
+
+    /// Split a reward `budget` proportionally to cumulative scores.
+    /// Agents with zero (or negative-only) contribution receive nothing.
+    pub fn allocate(&self, budget: f64) -> BTreeMap<usize, f64> {
+        let total: f64 = self.contributions.values().map(|c| c.score).sum();
+        self.contributions
+            .iter()
+            .map(|(&id, c)| {
+                let share = if total > 0.0 {
+                    budget * c.score / total
+                } else {
+                    0.0
+                };
+                (id, share)
+            })
+            .collect()
+    }
+
+    /// Contribution score of one agent (0 if never seen).
+    pub fn score(&self, agent_id: usize) -> f64 {
+        self.contributions
+            .get(&agent_id)
+            .map_or(0.0, |c| c.score)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(id: usize, delta: Vec<f32>) -> Update {
+        Update {
+            agent_id: id,
+            delta,
+            num_samples: 1,
+        }
+    }
+
+    #[test]
+    fn aligned_agents_earn_more() {
+        let mut t = ContributionTracker::new();
+        let agg = vec![1.0f32, 1.0];
+        let ups = vec![
+            upd(0, vec![1.0, 1.0]),   // perfectly aligned, big
+            upd(1, vec![0.1, 0.1]),   // aligned, small
+            upd(2, vec![-1.0, -1.0]), // adversarial
+        ];
+        t.record_round(&ups, &agg);
+        assert!(t.score(0) > t.score(1));
+        assert_eq!(t.score(2), 0.0);
+        // Scores normalise to 1 per round (over positive contributors).
+        let sum: f64 = (0..3).map(|i| t.score(i)).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allocation_is_proportional_and_budget_preserving() {
+        let mut t = ContributionTracker::new();
+        let agg = vec![1.0f32];
+        t.record_round(&[upd(0, vec![3.0]), upd(1, vec![1.0])], &agg);
+        let pay = t.allocate(100.0);
+        assert!((pay[&0] - 75.0).abs() < 1e-6);
+        assert!((pay[&1] - 25.0).abs() < 1e-6);
+        assert!((pay.values().sum::<f64>() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulates_across_rounds() {
+        let mut t = ContributionTracker::new();
+        let agg = vec![1.0f32];
+        t.record_round(&[upd(0, vec![1.0]), upd(1, vec![1.0])], &agg);
+        t.record_round(&[upd(0, vec![1.0])], &agg);
+        assert_eq!(t.contributions[&0].rounds, 2);
+        assert_eq!(t.contributions[&1].rounds, 1);
+        assert!(t.score(0) > t.score(1));
+    }
+
+    #[test]
+    fn zero_aggregate_gives_no_credit() {
+        let mut t = ContributionTracker::new();
+        t.record_round(&[upd(0, vec![1.0, -1.0])], &[0.0, 0.0]);
+        assert_eq!(t.score(0), 0.0);
+        let pay = t.allocate(10.0);
+        assert_eq!(pay[&0], 0.0);
+    }
+}

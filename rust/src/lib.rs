@@ -1,0 +1,37 @@
+//! # FerrisFL
+//!
+//! A performant library for bootstrapping federated-learning experiments —
+//! a Rust + JAX + Pallas reproduction of *TorchFL* (arXiv:2211.00735).
+//!
+//! Three layers, python never on the request path:
+//! - **L3 (this crate)** — the FL coordinator: datasets + sharding,
+//!   agents, samplers, aggregators, the experiment entrypoint, loggers,
+//!   profilers, and the reproduction harness for every table/figure in
+//!   the paper.
+//! - **L2 (python/compile, build-time)** — the JAX model zoo, AOT-lowered
+//!   to HLO text by `make artifacts`.
+//! - **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
+//!   compute hot-spots (MXU matmul/dense/conv, fused softmax-xent, FedAvg
+//!   aggregation).
+//!
+//! Quickstart: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- run --config configs/quickstart.toml`.
+
+pub mod agents;
+pub mod benchutil;
+pub mod aggregators;
+pub mod compression;
+pub mod config;
+pub mod defense;
+pub mod datasets;
+pub mod entrypoint;
+pub mod federation;
+pub mod incentives;
+pub mod loggers;
+pub mod metrics;
+pub mod profiler;
+pub mod repro;
+pub mod runtime;
+pub mod samplers;
+pub mod util;
+pub mod zoo;

@@ -1,0 +1,325 @@
+//! Loggers — Lightning-logger analogues (paper §3.3.1).
+//!
+//! TorchFL inherits CSV/TensorBoard/MLflow loggers from Lightning; we
+//! provide the same fan-out shape: a [`Logger`] trait, [`CsvLogger`] and
+//! [`JsonlLogger`] file sinks, a [`ConsoleLogger`], and [`MultiLogger`]
+//! to broadcast. Global (per-round) and per-agent channels are separate
+//! files, which is how the paper collects "granular metrics for
+//! individual agents" (§4.2.1) without post-hoc filtering.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{AgentRecord, RoundRecord};
+use crate::util::Json;
+
+/// Sink for experiment records.
+pub trait Logger: Send {
+    fn log_round(&mut self, rec: &RoundRecord) -> Result<()>;
+    fn log_agent(&mut self, rec: &AgentRecord) -> Result<()>;
+    /// Flush buffers (called at experiment end).
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// No-op logger.
+#[derive(Default)]
+pub struct NullLogger;
+
+impl Logger for NullLogger {
+    fn log_round(&mut self, _: &RoundRecord) -> Result<()> {
+        Ok(())
+    }
+
+    fn log_agent(&mut self, _: &AgentRecord) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Prints a one-line summary per round (and nothing per agent).
+#[derive(Default)]
+pub struct ConsoleLogger {
+    /// Also print each agent line (verbose).
+    pub verbose: bool,
+}
+
+impl Logger for ConsoleLogger {
+    fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
+        let eval = if r.eval_loss.is_nan() {
+            String::new()
+        } else {
+            format!(
+                " | eval loss {:.4} acc {:.3}",
+                r.eval_loss, r.eval_acc
+            )
+        };
+        println!(
+            "[round {:>3}] train loss {:.4} acc {:.3}{} | {} agents | {:.2}s",
+            r.round,
+            r.train_loss,
+            r.train_acc,
+            eval,
+            r.sampled.len(),
+            r.secs
+        );
+        Ok(())
+    }
+
+    fn log_agent(&mut self, r: &AgentRecord) -> Result<()> {
+        if self.verbose {
+            println!(
+                "  [agent {:>3}] round {} loss {:.4} acc {:.3} ({} samples)",
+                r.agent_id,
+                r.round,
+                r.final_loss(),
+                r.final_acc(),
+                r.num_samples
+            );
+        }
+        Ok(())
+    }
+}
+
+/// CSV sink: `<dir>/<name>_rounds.csv` + `<dir>/<name>_agents.csv`.
+pub struct CsvLogger {
+    rounds: BufWriter<File>,
+    agents: BufWriter<File>,
+}
+
+impl CsvLogger {
+    pub fn create(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating log dir {dir:?}"))?;
+        let mut rounds = BufWriter::new(
+            File::create(dir.join(format!("{name}_rounds.csv")))
+                .context("creating rounds csv")?,
+        );
+        let mut agents = BufWriter::new(
+            File::create(dir.join(format!("{name}_agents.csv")))
+                .context("creating agents csv")?,
+        );
+        writeln!(
+            rounds,
+            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,secs"
+        )?;
+        writeln!(
+            agents,
+            "round,agent_id,final_loss,final_acc,num_samples,secs"
+        )?;
+        Ok(Self { rounds, agents })
+    }
+}
+
+impl Logger for CsvLogger {
+    fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
+        writeln!(
+            self.rounds,
+            "{},{},{},{},{},{},{}",
+            r.round,
+            r.train_loss,
+            r.train_acc,
+            r.eval_loss,
+            r.eval_acc,
+            r.sampled.len(),
+            r.secs
+        )?;
+        Ok(())
+    }
+
+    fn log_agent(&mut self, r: &AgentRecord) -> Result<()> {
+        writeln!(
+            self.agents,
+            "{},{},{},{},{},{}",
+            r.round,
+            r.agent_id,
+            r.final_loss(),
+            r.final_acc(),
+            r.num_samples,
+            r.secs
+        )?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.rounds.flush()?;
+        self.agents.flush()?;
+        Ok(())
+    }
+}
+
+/// JSONL sink: one JSON object per record, both channels in one file
+/// (discriminated by a `kind` field) — convenient for ad-hoc analysis.
+pub struct JsonlLogger {
+    out: BufWriter<File>,
+}
+
+impl JsonlLogger {
+    pub fn create(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let out = BufWriter::new(
+            File::create(dir.join(format!("{name}.jsonl")))
+                .context("creating jsonl log")?,
+        );
+        Ok(Self { out })
+    }
+}
+
+impl Logger for JsonlLogger {
+    fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
+        let j = Json::obj(vec![
+            ("kind", Json::str("round")),
+            ("round", Json::num(r.round as f64)),
+            ("train_loss", Json::num(r.train_loss)),
+            ("train_acc", Json::num(r.train_acc)),
+            ("eval_loss", Json::num(r.eval_loss)),
+            ("eval_acc", Json::num(r.eval_acc)),
+            (
+                "sampled",
+                Json::Arr(r.sampled.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            ("secs", Json::num(r.secs)),
+        ]);
+        writeln!(self.out, "{}", j.to_string())?;
+        Ok(())
+    }
+
+    fn log_agent(&mut self, r: &AgentRecord) -> Result<()> {
+        let j = Json::obj(vec![
+            ("kind", Json::str("agent")),
+            ("round", Json::num(r.round as f64)),
+            ("agent_id", Json::num(r.agent_id as f64)),
+            (
+                "epoch_losses",
+                Json::Arr(r.epoch_losses.iter().map(|&v| Json::num(v)).collect()),
+            ),
+            (
+                "epoch_accs",
+                Json::Arr(r.epoch_accs.iter().map(|&v| Json::num(v)).collect()),
+            ),
+            ("num_samples", Json::num(r.num_samples as f64)),
+            ("secs", Json::num(r.secs)),
+        ]);
+        writeln!(self.out, "{}", j.to_string())?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Broadcast to several loggers.
+pub struct MultiLogger {
+    pub sinks: Vec<Box<dyn Logger>>,
+}
+
+impl MultiLogger {
+    pub fn new(sinks: Vec<Box<dyn Logger>>) -> Self {
+        Self { sinks }
+    }
+}
+
+impl Logger for MultiLogger {
+    fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
+        for s in &mut self.sinks {
+            s.log_round(r)?;
+        }
+        Ok(())
+    }
+
+    fn log_agent(&mut self, r: &AgentRecord) -> Result<()> {
+        for s in &mut self.sinks {
+            s.log_agent(r)?;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        for s in &mut self.sinks {
+            s.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_round() -> RoundRecord {
+        RoundRecord {
+            round: 3,
+            train_loss: 1.25,
+            train_acc: 0.5,
+            eval_loss: 1.0,
+            eval_acc: 0.6,
+            sampled: vec![1, 4],
+            secs: 0.25,
+        }
+    }
+
+    fn sample_agent() -> AgentRecord {
+        AgentRecord {
+            round: 3,
+            agent_id: 4,
+            epoch_losses: vec![2.0, 1.0],
+            epoch_accs: vec![0.2, 0.7],
+            num_samples: 50,
+            secs: 0.1,
+        }
+    }
+
+    #[test]
+    fn csv_logger_writes_both_channels() {
+        let dir = std::env::temp_dir().join(format!("ferrisfl-csv-{}", std::process::id()));
+        let mut l = CsvLogger::create(&dir, "t").unwrap();
+        l.log_round(&sample_round()).unwrap();
+        l.log_agent(&sample_agent()).unwrap();
+        l.finish().unwrap();
+        let rounds = std::fs::read_to_string(dir.join("t_rounds.csv")).unwrap();
+        assert!(rounds.lines().count() == 2);
+        assert!(rounds.contains("3,1.25,0.5,1,0.6,2,0.25"));
+        let agents = std::fs::read_to_string(dir.join("t_agents.csv")).unwrap();
+        assert!(agents.contains("3,4,1,0.7,50,0.1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_logger_emits_valid_json() {
+        let dir =
+            std::env::temp_dir().join(format!("ferrisfl-jsonl-{}", std::process::id()));
+        let mut l = JsonlLogger::create(&dir, "t").unwrap();
+        l.log_round(&sample_round()).unwrap();
+        l.log_agent(&sample_agent()).unwrap();
+        l.finish().unwrap();
+        let text = std::fs::read_to_string(dir.join("t.jsonl")).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert!(matches!(
+                v.req("kind").unwrap().as_str().unwrap(),
+                "round" | "agent"
+            ));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_logger_broadcasts() {
+        let mut m = MultiLogger::new(vec![
+            Box::new(NullLogger),
+            Box::new(NullLogger),
+        ]);
+        m.log_round(&sample_round()).unwrap();
+        m.log_agent(&sample_agent()).unwrap();
+        m.finish().unwrap();
+    }
+}

@@ -1,0 +1,196 @@
+//! ferrisfl — CLI leader entrypoint.
+//!
+//! ```text
+//! ferrisfl run --config configs/quickstart.toml [--artifacts DIR]
+//! ferrisfl list [datasets|models|artifacts]
+//! ferrisfl repro <table1|table2|table3|table4|fig6|...|all> [--quick]
+//! ferrisfl info
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use ferrisfl::config::FlParams;
+use ferrisfl::entrypoint::Entrypoint;
+use ferrisfl::loggers::{ConsoleLogger, CsvLogger, JsonlLogger, Logger, MultiLogger};
+use ferrisfl::repro::{self, ReproOptions};
+use ferrisfl::runtime::{Device, Manifest};
+use ferrisfl::zoo;
+
+const USAGE: &str = "\
+ferrisfl — FerrisFL: bootstrap federated-learning experiments (TorchFL repro)
+
+USAGE:
+  ferrisfl run --config <file.toml> [--artifacts <dir>] [--workers <n>]
+  ferrisfl list [datasets|models|artifacts] [--artifacts <dir>]
+  ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--artifacts <dir>]
+  ferrisfl info [--artifacts <dir>]
+
+EXPERIMENTS (paper artefacts):
+  table1 table2 table3 table4 fig6 fig7 fig8i fig8ii fig9 fig10 | all
+";
+
+/// Tiny argv parser: positionals + --key value + --flag.
+struct Args {
+    positional: Vec<String>,
+    options: std::collections::BTreeMap<String, String>,
+    flags: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut options = std::collections::BTreeMap::new();
+        let mut flags = std::collections::BTreeSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // Flags we know take no value.
+                if matches!(name, "quick" | "verbose" | "help") {
+                    flags.insert(name.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    options.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self {
+            positional,
+            options,
+            flags,
+        })
+    }
+
+    fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+}
+
+fn load_manifest(args: &Args) -> Result<Arc<Manifest>> {
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    Ok(Arc::new(Manifest::load(dir)?))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let config = args
+        .opt("config")
+        .context("run requires --config <file.toml>")?;
+    let mut params = FlParams::from_file(config)?;
+    if let Some(w) = args.opt("workers") {
+        params.workers = w.parse()?;
+    }
+    let manifest = load_manifest(args)?;
+
+    println!(
+        "experiment {:?}: {}@{} | {} agents, {:.0}% sampled, {} rounds x {} local epochs | split {} | {} + {}",
+        params.experiment_name,
+        params.model,
+        params.dataset,
+        params.num_agents,
+        params.sampling_ratio * 100.0,
+        params.global_epochs,
+        params.local_epochs,
+        params.split,
+        params.sampler,
+        params.aggregator,
+    );
+
+    let mut sinks: Vec<Box<dyn Logger>> = vec![Box::new(ConsoleLogger {
+        verbose: args.flags.contains("verbose"),
+    })];
+    if !params.log_dir.is_empty() {
+        sinks.push(Box::new(CsvLogger::create(
+            &params.log_dir,
+            &params.experiment_name,
+        )?));
+        sinks.push(Box::new(JsonlLogger::create(
+            &params.log_dir,
+            &params.experiment_name,
+        )?));
+    }
+    let mut logger = MultiLogger::new(sinks);
+
+    let mut ep = Entrypoint::new(params, manifest)?;
+    let res = ep.run(&mut logger)?;
+    println!(
+        "\nfinal global model: eval loss {:.4}, accuracy {:.3} ({} examples)",
+        res.final_eval.mean_loss(),
+        res.final_eval.accuracy(),
+        res.final_eval.count as u64,
+    );
+    println!("\n{}", res.profiler.report());
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    if matches!(what, "datasets" | "all") {
+        println!("{}", zoo::datasets_table(&manifest));
+    }
+    if matches!(what, "models" | "all") {
+        println!("{}", zoo::models_table(&manifest));
+    }
+    if matches!(what, "artifacts" | "all") {
+        println!("{}", zoo::artifacts_table(&manifest));
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = args
+        .positional
+        .get(1)
+        .context("repro requires an experiment id (or `all`)")?;
+    let manifest = load_manifest(args)?;
+    let opts = ReproOptions {
+        quick: args.flags.contains("quick"),
+        out_dir: args.opt("out").unwrap_or("results").into(),
+        workers: args.opt("workers").map(|w| w.parse()).transpose()?.unwrap_or(0),
+        seed: args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
+    };
+    repro::run(exp, &manifest, &opts)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let device = Device::cpu()?;
+    println!("FerrisFL — TorchFL (arXiv:2211.00735) reproduction");
+    println!("PJRT platform : {}", device.platform());
+    println!("artifacts dir : {}", manifest.dir.display());
+    println!("datasets      : {}", manifest.datasets.len());
+    println!("zoo variants  : {}", manifest.zoo.len());
+    println!("artifacts     : {}", manifest.artifacts.len());
+    println!("train batch   : {}", manifest.train_batch);
+    println!("eval batch    : {}", manifest.eval_batch);
+    println!("agg K_pad     : {}", manifest.k_pad);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    if args.flags.contains("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "run" => cmd_run(&args),
+        "list" => cmd_list(&args),
+        "repro" => cmd_repro(&args),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

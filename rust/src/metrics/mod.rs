@@ -1,0 +1,126 @@
+//! Metrics — round/epoch records and accumulators (paper §4.2.1, Fig 8–9).
+//!
+//! Structured records the entrypoint emits to the loggers: per-round
+//! global metrics (Fig 8 series) and per-agent local metrics (Fig 9
+//! series). Plain data + a tiny accumulator; serialisation lives in
+//! `loggers`.
+
+/// Global model metrics after one federation round (one Fig 8 point).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean local training loss over the sampled agents.
+    pub train_loss: f64,
+    /// Mean local training accuracy over the sampled agents.
+    pub train_acc: f64,
+    /// Global model eval loss (NaN if not evaluated this round).
+    pub eval_loss: f64,
+    /// Global model eval accuracy (NaN if not evaluated this round).
+    pub eval_acc: f64,
+    /// Ids of the sampled agents.
+    pub sampled: Vec<usize>,
+    /// Wall-clock seconds for the round.
+    pub secs: f64,
+}
+
+/// One agent's local-training metrics for one round (one Fig 9 point).
+#[derive(Clone, Debug)]
+pub struct AgentRecord {
+    pub round: usize,
+    pub agent_id: usize,
+    /// Per-local-epoch mean training loss.
+    pub epoch_losses: Vec<f64>,
+    /// Per-local-epoch training accuracy.
+    pub epoch_accs: Vec<f64>,
+    pub num_samples: usize,
+    pub secs: f64,
+}
+
+impl AgentRecord {
+    pub fn final_loss(&self) -> f64 {
+        self.epoch_losses.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn final_acc(&self) -> f64 {
+        self.epoch_accs.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Streaming mean/min/max accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    pub n: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn add(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_tracks_stats() {
+        let mut a = Accumulator::default();
+        for v in [2.0, 4.0, 6.0] {
+            a.add(v);
+        }
+        assert_eq!(a.n, 3);
+        assert!((a.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(a.min, 2.0);
+        assert_eq!(a.max, 6.0);
+    }
+
+    #[test]
+    fn accumulator_ignores_nan() {
+        let mut a = Accumulator::default();
+        a.add(f64::NAN);
+        a.add(1.0);
+        assert_eq!(a.n, 1);
+        assert_eq!(a.mean(), 1.0);
+    }
+
+    #[test]
+    fn empty_accumulator_is_nan() {
+        assert!(Accumulator::default().mean().is_nan());
+    }
+
+    #[test]
+    fn agent_record_final_values() {
+        let r = AgentRecord {
+            round: 1,
+            agent_id: 99,
+            epoch_losses: vec![2.0, 1.5],
+            epoch_accs: vec![0.3, 0.5],
+            num_samples: 100,
+            secs: 0.1,
+        };
+        assert_eq!(r.final_loss(), 1.5);
+        assert_eq!(r.final_acc(), 0.5);
+    }
+}

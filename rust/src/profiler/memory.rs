@@ -1,0 +1,111 @@
+//! Memory tracker — the Fig 10 series (paper §4.2.3).
+//!
+//! Samples the runtime's global marshalling counters
+//! (`runtime::stats`) at batch boundaries, yielding per-batch bytes
+//! allocated / freed / in-use — the same stacked-area series the paper
+//! draws from Lightning's device-stats monitor.
+
+use crate::runtime::stats::{snapshot, MemSnapshot};
+
+/// One per-batch sample.
+#[derive(Clone, Copy, Debug)]
+pub struct MemorySample {
+    pub batch: usize,
+    /// Bytes marshalled into device buffers during this batch.
+    pub allocated: u64,
+    /// Bytes released during this batch.
+    pub freed: u64,
+    /// Cumulative in-use bytes after this batch.
+    pub in_use: u64,
+}
+
+/// Batch-boundary sampler over the global runtime counters.
+pub struct MemoryTracker {
+    base: MemSnapshot,
+    last: MemSnapshot,
+    samples: Vec<MemorySample>,
+}
+
+impl Default for MemoryTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryTracker {
+    /// Start tracking from the current counter state.
+    pub fn new() -> Self {
+        let now = snapshot();
+        Self {
+            base: now,
+            last: now,
+            samples: Vec::new(),
+        }
+    }
+
+    /// Record the end of one batch.
+    pub fn sample_batch(&mut self) {
+        let now = snapshot();
+        let delta = now.since(&self.last);
+        let since_base = now.since(&self.base);
+        self.samples.push(MemorySample {
+            batch: self.samples.len(),
+            allocated: delta.allocated,
+            freed: delta.freed,
+            in_use: since_base.in_use(),
+        });
+        self.last = now;
+    }
+
+    /// All samples so far.
+    pub fn samples(&self) -> &[MemorySample] {
+        &self.samples
+    }
+
+    /// Render the Fig 10 series as CSV text
+    /// (`batch,allocated,freed,in_use`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("batch,bytes_allocated,bytes_freed,bytes_in_use\n");
+        for m in &self.samples {
+            s.push_str(&format!(
+                "{},{},{},{}\n",
+                m.batch, m.allocated, m.freed, m.in_use
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::stats;
+
+    #[test]
+    fn tracks_batch_deltas() {
+        let mut t = MemoryTracker::new();
+        stats::add_allocated(1000);
+        stats::add_freed(400);
+        t.sample_batch();
+        stats::add_allocated(50);
+        t.sample_batch();
+        let s = t.samples();
+        assert_eq!(s.len(), 2);
+        // Other tests may add to the global counters concurrently, so
+        // deltas are lower bounds.
+        assert!(s[0].allocated >= 1000);
+        assert!(s[0].freed >= 400);
+        assert!(s[1].allocated >= 50);
+        assert_eq!(s[1].batch, 1);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = MemoryTracker::new();
+        t.sample_batch();
+        let csv = t.to_csv();
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines[0], "batch,bytes_allocated,bytes_freed,bytes_in_use");
+        assert_eq!(lines.len(), 2);
+    }
+}

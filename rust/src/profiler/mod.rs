@@ -1,0 +1,238 @@
+//! Profilers — Lightning-profiler analogues (paper §3.3.2, Table 4 and
+//! §4.2.3, Fig 10).
+//!
+//! [`SimpleProfiler`] mirrors Lightning's `SimpleProfiler`: named action
+//! timers with mean duration / call count / total / percentage, rendered
+//! in exactly Table 4's schema. [`MemoryTracker`] samples the runtime's
+//! marshalling counters per batch, producing Fig 10's
+//! allocated/freed/in-use series.
+
+pub mod memory;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+pub use memory::{MemoryTracker, MemorySample};
+
+/// One profiled action's accumulated timing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActionStats {
+    pub num_calls: usize,
+    pub total_secs: f64,
+}
+
+impl ActionStats {
+    pub fn mean_secs(&self) -> f64 {
+        if self.num_calls == 0 {
+            0.0
+        } else {
+            self.total_secs / self.num_calls as f64
+        }
+    }
+}
+
+/// A row of the rendered profile (Table 4 schema).
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub action: String,
+    pub mean_secs: f64,
+    pub num_calls: usize,
+    pub total_secs: f64,
+    pub percent: f64,
+}
+
+/// Named-action wall-clock profiler.
+#[derive(Default)]
+pub struct SimpleProfiler {
+    actions: BTreeMap<String, ActionStats>,
+    started: Option<Instant>,
+    /// Total profiled wall-clock (set on `stop`, or live if running).
+    total: f64,
+}
+
+/// RAII timer: records on drop.
+pub struct ActionTimer<'p> {
+    profiler: &'p mut SimpleProfiler,
+    action: &'static str,
+    start: Instant,
+}
+
+impl Drop for ActionTimer<'_> {
+    fn drop(&mut self) {
+        let dt = self.start.elapsed().as_secs_f64();
+        self.profiler.record(self.action, dt);
+    }
+}
+
+impl SimpleProfiler {
+    pub fn new() -> Self {
+        Self {
+            actions: BTreeMap::new(),
+            started: Some(Instant::now()),
+            total: 0.0,
+        }
+    }
+
+    /// Record a completed action of `secs` duration.
+    pub fn record(&mut self, action: &str, secs: f64) {
+        let e = self.actions.entry(action.to_string()).or_default();
+        e.num_calls += 1;
+        e.total_secs += secs;
+    }
+
+    /// Time a closure under `action`.
+    pub fn time<T>(&mut self, action: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(action, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Start an RAII timer (records when the guard drops).
+    pub fn start(&mut self, action: &'static str) -> ActionTimer<'_> {
+        ActionTimer {
+            start: Instant::now(),
+            action,
+            profiler: self,
+        }
+    }
+
+    /// Freeze the total wall-clock.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total = t0.elapsed().as_secs_f64();
+        }
+    }
+
+    fn total_secs(&self) -> f64 {
+        match self.started {
+            Some(t0) => t0.elapsed().as_secs_f64(),
+            None => self.total,
+        }
+    }
+
+    /// Rows sorted by total time descending, plus the "Total Run" row
+    /// first — exactly the paper's Table 4 layout.
+    pub fn rows(&self) -> Vec<ProfileRow> {
+        let total = self.total_secs().max(1e-12);
+        let total_calls: usize = self.actions.values().map(|a| a.num_calls).sum();
+        let mut rows = vec![ProfileRow {
+            action: "Total Run".into(),
+            mean_secs: f64::NAN,
+            num_calls: total_calls,
+            total_secs: total,
+            percent: 100.0,
+        }];
+        let mut body: Vec<ProfileRow> = self
+            .actions
+            .iter()
+            .map(|(name, a)| ProfileRow {
+                action: name.clone(),
+                mean_secs: a.mean_secs(),
+                num_calls: a.num_calls,
+                total_secs: a.total_secs,
+                percent: 100.0 * a.total_secs / total,
+            })
+            .collect();
+        body.sort_by(|a, b| b.total_secs.partial_cmp(&a.total_secs).unwrap());
+        rows.extend(body);
+        rows
+    }
+
+    /// Render the Table-4-style report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{:<28} {:>12} {:>10} {:>12} {:>9}\n",
+            "Action", "Mean Dur.(s)", "Num Calls", "Total(s)", "Percent."
+        ));
+        s.push_str(&"-".repeat(76));
+        s.push('\n');
+        for r in self.rows() {
+            let mean = if r.mean_secs.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.6}", r.mean_secs)
+            };
+            s.push_str(&format!(
+                "{:<28} {:>12} {:>10} {:>12.4} {:>9.4}\n",
+                r.action, mean, r.num_calls, r.total_secs, r.percent
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_calls_and_totals() {
+        let mut p = SimpleProfiler::new();
+        p.record("opt_step", 0.002);
+        p.record("opt_step", 0.004);
+        p.record("data_marshal", 0.001);
+        let rows = p.rows();
+        assert_eq!(rows[0].action, "Total Run");
+        let opt = rows.iter().find(|r| r.action == "opt_step").unwrap();
+        assert_eq!(opt.num_calls, 2);
+        assert!((opt.total_secs - 0.006).abs() < 1e-9);
+        assert!((opt.mean_secs - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_sorted_by_total_desc() {
+        let mut p = SimpleProfiler::new();
+        p.record("small", 0.001);
+        p.record("big", 1.0);
+        let rows = p.rows();
+        assert_eq!(rows[1].action, "big");
+        assert_eq!(rows[2].action, "small");
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = SimpleProfiler::new();
+        let v = p.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(p.rows().len(), 2);
+    }
+
+    #[test]
+    fn raii_timer_records_on_drop() {
+        let mut p = SimpleProfiler::new();
+        {
+            let _t = p.start("scoped");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let rows = p.rows();
+        let scoped = rows.iter().find(|r| r.action == "scoped").unwrap();
+        assert_eq!(scoped.num_calls, 1);
+        assert!(scoped.total_secs >= 0.002);
+    }
+
+    #[test]
+    fn report_contains_table4_columns() {
+        let mut p = SimpleProfiler::new();
+        p.record("lr_sched", 0.0006);
+        p.stop();
+        let rep = p.report();
+        for col in ["Action", "Mean Dur.(s)", "Num Calls", "Total(s)", "Percent."] {
+            assert!(rep.contains(col), "missing column {col}");
+        }
+        assert!(rep.contains("Total Run"));
+        assert!(rep.contains("lr_sched"));
+    }
+
+    #[test]
+    fn percentages_relative_to_total() {
+        let mut p = SimpleProfiler::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        p.record("x", 0.001);
+        p.stop();
+        let rows = p.rows();
+        let x = rows.iter().find(|r| r.action == "x").unwrap();
+        assert!(x.percent > 0.0 && x.percent < 100.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Reproduction harness — regenerates every table and figure in the
+//! paper's evaluation section (DESIGN.md §Experiment index).
+//!
+//! Each experiment prints the paper's rows/series to stdout and writes a
+//! CSV under `results/` for plotting. Experiment ids:
+//!
+//! | id       | paper artefact                                  |
+//! |----------|--------------------------------------------------|
+//! | `table1` | dataset registry + IID/non-IID support           |
+//! | `table2` | model zoo + transfer-mode support                |
+//! | `table3` | transfer params + time/epoch (ResNet152→CNN-M)   |
+//! | `table4` | SimpleProfiler action table                      |
+//! | `fig6`   | per-agent label histograms (IID, niid 1/3/5)     |
+//! | `fig7`   | scratch/finetune/featext training curves         |
+//! | `fig8i`  | FL from scratch: LeNet-5, 100 agents             |
+//! | `fig8ii` | federated transfer: featext MicroNet, 10 agents  |
+//! | `fig9`   | per-agent local metrics across rounds            |
+//! | `fig10`  | per-batch bytes allocated/freed/in-use           |
+//! | `all`    | everything above                                 |
+
+mod figures;
+mod tables;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+/// Options shared by all reproduction experiments.
+#[derive(Clone, Debug)]
+pub struct ReproOptions {
+    /// Scale rounds/epochs down ~5-10x for smoke runs.
+    pub quick: bool,
+    /// Where CSV outputs land.
+    pub out_dir: PathBuf,
+    /// Worker threads for FL runs (0 = auto).
+    pub workers: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for ReproOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            out_dir: PathBuf::from("results"),
+            workers: 0,
+            seed: 42,
+        }
+    }
+}
+
+impl ReproOptions {
+    /// `full` if not quick, else `quick` (for scaling knobs).
+    pub fn scale(&self, full: usize, quick: usize) -> usize {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    pub(crate) fn write_csv(&self, name: &str, content: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(name);
+        std::fs::write(&path, content)?;
+        println!("  -> wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table3", "table4", "fig6", "fig7", "fig8i", "fig8ii",
+    "fig9", "fig10",
+];
+
+/// Run one experiment (or `all`).
+pub fn run(name: &str, manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
+    match name {
+        "table1" => tables::table1(manifest, opts),
+        "table2" => tables::table2(manifest, opts),
+        "table3" => tables::table3(manifest, opts),
+        "table4" => tables::table4(manifest, opts),
+        "fig6" => figures::fig6(manifest, opts),
+        "fig7" => figures::fig7(manifest, opts),
+        "fig8i" => figures::fig8i(manifest, opts),
+        "fig8ii" => figures::fig8ii(manifest, opts),
+        "fig9" => figures::fig9(manifest, opts),
+        "fig10" => figures::fig10(manifest, opts),
+        "all" => {
+            for id in ALL {
+                run(id, manifest, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; available: {ALL:?} or all"),
+    }
+}

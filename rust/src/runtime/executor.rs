@@ -1,0 +1,368 @@
+//! PJRT execution: load HLO text, compile once, run from the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API) exactly as the reference in
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! The `xla` wrappers are `Rc`-based (not `Send`), so a `Device` and
+//! everything loaded on it live on ONE thread. The worker pool gives each
+//! worker its own `Device` — the simulated analogue of each FL client
+//! owning its own accelerator.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactInfo, DatasetInfo, Manifest};
+use super::stats;
+
+/// A PJRT device (CPU client) plus a compile cache keyed by HLO path.
+pub struct Device {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Device {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file, memoised per device.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.borrow().get(&path) {
+            return Ok(Rc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(path, Rc::clone(&exe));
+        Ok(exe)
+    }
+}
+
+/// Execute with literal args, unwrap the 1-tuple root into its elements,
+/// and record marshalling stats.
+fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let in_bytes: usize = args.iter().map(|l| l.size_bytes()).sum();
+    stats::add_allocated(in_bytes as u64);
+    stats::add_execution();
+    let mut outs = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| anyhow::anyhow!("PJRT execute: {e}"))?;
+    stats::add_freed(in_bytes as u64);
+    if outs.is_empty() || outs[0].is_empty() {
+        bail!("executable returned no outputs");
+    }
+    let root = outs
+        .swap_remove(0)
+        .swap_remove(0)
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+    // aot.py lowers with return_tuple=True: the root is always a tuple.
+    // NOTE: size_bytes() must only be called on the *elements* — XLA's
+    // ByteSizeOf CHECK-fails on tuple shapes (pointer_size = -1).
+    let elems = root
+        .to_tuple()
+        .map_err(|e| anyhow::anyhow!("untupling result: {e}"))?;
+    let out_bytes: usize = elems.iter().map(|l| l.size_bytes()).sum();
+    stats::add_allocated(out_bytes as u64);
+    stats::add_freed(out_bytes as u64);
+    Ok(elems)
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+}
+
+fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e}"))
+}
+
+fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar: {e}"))
+}
+
+/// Result of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub hits: f32,
+}
+
+/// Aggregate eval result over a full test set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub count: f64,
+}
+
+impl EvalStats {
+    pub fn mean_loss(&self) -> f64 {
+        if self.count > 0.0 {
+            self.loss_sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.count > 0.0 {
+            self.correct / self.count
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Adam optimizer state held by the coordinator between local epochs.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+impl AdamState {
+    pub fn zeros(p: usize) -> Self {
+        Self {
+            m: vec![0.0; p],
+            v: vec![0.0; p],
+            t: 0.0,
+        }
+    }
+}
+
+/// Everything needed to train/eval one model@dataset on one device.
+///
+/// Loads the train entry named by (`optimizer`, `mode`) — e.g.
+/// ("sgd", "full") → `train_sgd_full` — plus eval and the FedAvg
+/// aggregation executable.
+pub struct ModelRuntime {
+    pub train_exe: Rc<xla::PjRtLoadedExecutable>,
+    pub eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    pub agg_exe: Rc<xla::PjRtLoadedExecutable>,
+    pub num_params: usize,
+    pub head_size: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub k_pad: usize,
+    pub input_dims: Vec<i64>, // [H, W, C]
+    pub optimizer: String,
+}
+
+impl ModelRuntime {
+    /// Load the runtime for `art` on `device`. `entry_tag` selects kernel
+    /// vs reference artifacts ("" or "_ref").
+    pub fn load(
+        device: &Device,
+        manifest: &Manifest,
+        art: &ArtifactInfo,
+        ds: &DatasetInfo,
+        optimizer: &str,
+        mode: &str,
+        entry_tag: &str,
+    ) -> Result<Self> {
+        let train_key = format!("train_{optimizer}_{mode}{entry_tag}");
+        let train_file = art.entries.get(&train_key).with_context(|| {
+            format!(
+                "artifact {} has no entry {train_key}; available: {:?}",
+                art.id,
+                art.entries.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let eval_key = format!("eval{entry_tag}");
+        let eval_file = art
+            .entries
+            .get(&eval_key)
+            .with_context(|| format!("artifact {} has no {eval_key}", art.id))?;
+        Ok(Self {
+            train_exe: device.load_hlo(manifest.path(train_file))?,
+            eval_exe: device.load_hlo(manifest.path(eval_file))?,
+            agg_exe: device.load_hlo(manifest.path(&art.agg_file))?,
+            num_params: art.num_params,
+            head_size: art.head_size,
+            train_batch: manifest.train_batch,
+            eval_batch: manifest.eval_batch,
+            k_pad: manifest.k_pad,
+            input_dims: vec![ds.height as i64, ds.width as i64, ds.channels as i64],
+            optimizer: optimizer.to_string(),
+        })
+    }
+
+    fn x_dims(&self, batch: usize) -> Vec<i64> {
+        let mut d = vec![batch as i64];
+        d.extend_from_slice(&self.input_dims);
+        d
+    }
+
+    /// One SGD train step. `params` is updated in place.
+    pub fn train_step_sgd(
+        &self,
+        params: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepStats> {
+        debug_assert_eq!(params.len(), self.num_params);
+        debug_assert_eq!(y.len(), self.train_batch);
+        let args = [
+            lit_f32(params, &[self.num_params as i64])?,
+            lit_f32(x, &self.x_dims(self.train_batch))?,
+            lit_i32(y, &[self.train_batch as i64])?,
+            xla::Literal::scalar(lr),
+        ];
+        let outs = run(&self.train_exe, &args)?;
+        if outs.len() != 3 {
+            bail!("train_sgd returned {} outputs, want 3", outs.len());
+        }
+        *params = to_f32(&outs[0])?;
+        Ok(StepStats {
+            loss: scalar_f32(&outs[1])?,
+            hits: scalar_f32(&outs[2])?,
+        })
+    }
+
+    /// One Adam train step. `params` and `state` update in place.
+    pub fn train_step_adam(
+        &self,
+        params: &mut Vec<f32>,
+        state: &mut AdamState,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepStats> {
+        let p = self.num_params as i64;
+        let args = [
+            lit_f32(params, &[p])?,
+            lit_f32(&state.m, &[p])?,
+            lit_f32(&state.v, &[p])?,
+            xla::Literal::scalar(state.t),
+            lit_f32(x, &self.x_dims(self.train_batch))?,
+            lit_i32(y, &[self.train_batch as i64])?,
+            xla::Literal::scalar(lr),
+        ];
+        let outs = run(&self.train_exe, &args)?;
+        if outs.len() != 6 {
+            bail!("train_adam returned {} outputs, want 6", outs.len());
+        }
+        *params = to_f32(&outs[0])?;
+        state.m = to_f32(&outs[1])?;
+        state.v = to_f32(&outs[2])?;
+        state.t = scalar_f32(&outs[3])?;
+        Ok(StepStats {
+            loss: scalar_f32(&outs[4])?,
+            hits: scalar_f32(&outs[5])?,
+        })
+    }
+
+    /// Evaluate `params` on one (possibly short) batch; `x`/`y` may hold
+    /// fewer than `eval_batch` examples — the tail is zero-padded and
+    /// masked out inside the graph.
+    pub fn eval_batch(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        n_valid: usize,
+    ) -> Result<EvalStats> {
+        let be = self.eval_batch;
+        assert!(n_valid <= be);
+        let ex_len: usize = self.input_dims.iter().product::<i64>() as usize;
+        let mut xp = vec![0.0f32; be * ex_len];
+        xp[..x.len()].copy_from_slice(x);
+        let mut yp = vec![0i32; be];
+        yp[..y.len()].copy_from_slice(y);
+        let mut mask = vec![0.0f32; be];
+        for m in mask.iter_mut().take(n_valid) {
+            *m = 1.0;
+        }
+        let args = [
+            lit_f32(params, &[self.num_params as i64])?,
+            lit_f32(&xp, &self.x_dims(be))?,
+            lit_i32(&yp, &[be as i64])?,
+            lit_f32(&mask, &[be as i64])?,
+        ];
+        let outs = run(&self.eval_exe, &args)?;
+        if outs.len() != 3 {
+            bail!("eval returned {} outputs, want 3", outs.len());
+        }
+        Ok(EvalStats {
+            loss_sum: scalar_f32(&outs[0])? as f64,
+            correct: scalar_f32(&outs[1])? as f64,
+            count: scalar_f32(&outs[2])? as f64,
+        })
+    }
+
+    /// FedAvg aggregation on the PJRT path (the L1 Pallas kernel):
+    /// `global' = global + Σ w_i · delta_i`, with zero-padding up to
+    /// `k_pad` (exact by the kernel's weighted-sum semantics).
+    pub fn aggregate(
+        &self,
+        global: &[f32],
+        deltas: &[Vec<f32>],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        let k = deltas.len();
+        if k != weights.len() {
+            bail!("{k} deltas but {} weights", weights.len());
+        }
+        if k > self.k_pad {
+            bail!(
+                "{k} sampled agents exceeds the compiled K_pad={} — raise \
+                 K_PAD in python/compile/aot.py and rebuild artifacts",
+                self.k_pad
+            );
+        }
+        let p = self.num_params;
+        let mut dstack = vec![0.0f32; self.k_pad * p];
+        for (i, d) in deltas.iter().enumerate() {
+            if d.len() != p {
+                bail!("delta {i} has {} params, want {p}", d.len());
+            }
+            dstack[i * p..(i + 1) * p].copy_from_slice(d);
+        }
+        let mut wpad = vec![0.0f32; self.k_pad];
+        wpad[..k].copy_from_slice(weights);
+        let args = [
+            lit_f32(&dstack, &[self.k_pad as i64, p as i64])?,
+            lit_f32(&wpad, &[self.k_pad as i64])?,
+            lit_f32(global, &[p as i64])?,
+        ];
+        let outs = run(&self.agg_exe, &args)?;
+        if outs.len() != 1 {
+            bail!("agg returned {} outputs, want 1", outs.len());
+        }
+        to_f32(&outs[0])
+    }
+}

@@ -1,0 +1,263 @@
+//! `artifacts/manifest.json` — the L2↔L3 contract.
+//!
+//! The AOT pipeline (python/compile/aot.py) records every lowered
+//! executable, dataset spec, weight file, and the zoo inventory here; the
+//! rust side never guesses shapes — everything is read from the manifest.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// A dataset spec (paper Table 1 row), synthetic substitute.
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub group: String,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub real_train_n: usize,
+    pub real_test_n: usize,
+    pub noise: f32,
+    pub jitter: i64,
+    pub template_file: String,
+}
+
+impl DatasetInfo {
+    /// Per-example element count (H*W*C).
+    pub fn example_len(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+}
+
+/// A zoo inventory row (paper Table 2).
+#[derive(Clone, Debug)]
+pub struct ZooInfo {
+    pub variant: String,
+    pub family: String,
+    pub description: String,
+    pub canonical_dataset: String,
+    pub num_params: usize,
+    pub head_size: usize,
+    pub feature_extract: bool,
+    pub finetune: bool,
+}
+
+/// One AOT-lowered model@dataset bundle.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub id: String,
+    pub model: String,
+    pub dataset: String,
+    pub num_params: usize,
+    pub head_size: usize,
+    /// entry name (e.g. "train_sgd_full", "eval") -> HLO file name.
+    pub entries: BTreeMap<String, String>,
+    pub agg_file: String,
+    pub init_file: String,
+    pub pretrained_file: Option<String>,
+}
+
+/// Parsed manifest + the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub k_pad: usize,
+    pub datasets: BTreeMap<String, DatasetInfo>,
+    pub zoo: BTreeMap<String, ZooInfo>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut datasets = BTreeMap::new();
+        for (name, d) in v.req("datasets")?.as_obj()? {
+            datasets.insert(
+                name.clone(),
+                DatasetInfo {
+                    name: name.clone(),
+                    group: d.req("group")?.as_str()?.to_string(),
+                    height: d.req("height")?.as_usize()?,
+                    width: d.req("width")?.as_usize()?,
+                    channels: d.req("channels")?.as_usize()?,
+                    num_classes: d.req("num_classes")?.as_usize()?,
+                    train_n: d.req("train_n")?.as_usize()?,
+                    test_n: d.req("test_n")?.as_usize()?,
+                    real_train_n: d.req("real_train_n")?.as_usize()?,
+                    real_test_n: d.req("real_test_n")?.as_usize()?,
+                    noise: d.req("noise")?.as_f64()? as f32,
+                    jitter: d.req("jitter")?.as_f64()? as i64,
+                    template_file: d.req("template_file")?.as_str()?.to_string(),
+                },
+            );
+        }
+
+        let mut zoo = BTreeMap::new();
+        for (name, z) in v.req("zoo")?.as_obj()? {
+            zoo.insert(
+                name.clone(),
+                ZooInfo {
+                    variant: name.clone(),
+                    family: z.req("family")?.as_str()?.to_string(),
+                    description: z.req("description")?.as_str()?.to_string(),
+                    canonical_dataset: z
+                        .req("canonical_dataset")?
+                        .as_str()?
+                        .to_string(),
+                    num_params: z.req("num_params")?.as_usize()?,
+                    head_size: z.req("head_size")?.as_usize()?,
+                    feature_extract: matches!(
+                        z.req("feature_extract")?,
+                        Json::Bool(true)
+                    ),
+                    finetune: matches!(z.req("finetune")?, Json::Bool(true)),
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v.req("artifacts")?.as_arr()? {
+            let mut entries = BTreeMap::new();
+            for (k, f) in a.req("entries")?.as_obj()? {
+                entries.insert(k.clone(), f.as_str()?.to_string());
+            }
+            let pre = a.req("pretrained_file")?;
+            artifacts.push(ArtifactInfo {
+                id: a.req("id")?.as_str()?.to_string(),
+                model: a.req("model")?.as_str()?.to_string(),
+                dataset: a.req("dataset")?.as_str()?.to_string(),
+                num_params: a.req("num_params")?.as_usize()?,
+                head_size: a.req("head_size")?.as_usize()?,
+                entries,
+                agg_file: a.req("agg_file")?.as_str()?.to_string(),
+                init_file: a.req("init_file")?.as_str()?.to_string(),
+                pretrained_file: if pre.is_null() {
+                    None
+                } else {
+                    Some(pre.as_str()?.to_string())
+                },
+            });
+        }
+
+        Ok(Self {
+            dir,
+            train_batch: v.req("train_batch")?.as_usize()?,
+            eval_batch: v.req("eval_batch")?.as_usize()?,
+            k_pad: v.req("k_pad")?.as_usize()?,
+            datasets,
+            zoo,
+            artifacts,
+        })
+    }
+
+    /// Find the artifact bundle for `model` @ `dataset`.
+    pub fn artifact(&self, model: &str, dataset: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.dataset == dataset)
+            .with_context(|| {
+                let have: Vec<_> =
+                    self.artifacts.iter().map(|a| a.id.as_str()).collect();
+                format!(
+                    "no artifact for {model}@{dataset}; built: {have:?} \
+                     (extend ARTIFACTS in python/compile/aot.py)"
+                )
+            })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetInfo> {
+        self.datasets.get(name).with_context(|| {
+            let have: Vec<_> = self.datasets.keys().collect();
+            format!("unknown dataset {name}; available: {have:?}")
+        })
+    }
+
+    /// Absolute path of a file referenced by the manifest.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Read a raw little-endian f32 file (weights, templates).
+    pub fn read_f32(&self, file: &str) -> Result<Vec<f32>> {
+        let path = self.path(file);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.datasets.len(), 9, "paper Table 1 has 9 dataset rows");
+        assert_eq!(m.zoo.len(), 9, "zoo has 9 variants");
+        assert!(!m.artifacts.is_empty());
+        // Every referenced file exists.
+        for a in &m.artifacts {
+            for f in a.entries.values() {
+                assert!(m.path(f).exists(), "missing {f}");
+            }
+            assert!(m.path(&a.agg_file).exists());
+            assert!(m.path(&a.init_file).exists());
+        }
+        for d in m.datasets.values() {
+            assert!(m.path(&d.template_file).exists());
+        }
+    }
+
+    #[test]
+    fn init_weights_match_param_count() {
+        let Some(dir) = manifest_dir() else {
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        for a in &m.artifacts {
+            let w = m.read_f32(&a.init_file).unwrap();
+            assert_eq!(w.len(), a.num_params, "{}", a.id);
+            if let Some(pre) = &a.pretrained_file {
+                let w = m.read_f32(pre).unwrap();
+                assert_eq!(w.len(), a.num_params, "{} pretrained", a.id);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load("/nonexistent-ferrisfl").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: the bridge from AOT artifacts to the rust hot path.
+//!
+//! - [`manifest`] — parse `artifacts/manifest.json` (the L2↔L3 contract).
+//! - [`executor`] — PJRT client, compile cache, train/eval/aggregate
+//!   executables over the flat-parameter ABI.
+//! - [`stats`] — marshalling/memory counters feeding the profiler
+//!   (paper Fig 10).
+
+pub mod executor;
+pub mod manifest;
+pub mod stats;
+
+pub use executor::{AdamState, Device, EvalStats, ModelRuntime, StepStats};
+pub use manifest::{ArtifactInfo, DatasetInfo, Manifest, ZooInfo};
+pub use stats::{snapshot, MemSnapshot};

@@ -1,0 +1,80 @@
+//! Global marshalling/memory counters for the runtime.
+//!
+//! The paper's Fig 10 tracks bytes allocated / freed / in-use on the
+//! accelerator through training. PJRT CPU does not expose an allocator
+//! hook through the `xla` crate, so we count what the coordinator
+//! actually moves: bytes of literals marshalled host→device (alloc) and
+//! device→host results dropped after consumption (free). Relaxed atomics
+//! — these are observability counters, not synchronisation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+static FREED: AtomicU64 = AtomicU64::new(0);
+static EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Record `n` bytes marshalled into device buffers.
+pub fn add_allocated(n: u64) {
+    ALLOCATED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record `n` bytes of device results released.
+pub fn add_freed(n: u64) {
+    FREED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record one executable invocation.
+pub fn add_execution() {
+    EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemSnapshot {
+    pub allocated: u64,
+    pub freed: u64,
+    pub executions: u64,
+}
+
+impl MemSnapshot {
+    /// Bytes currently accounted as live (allocated - freed).
+    pub fn in_use(&self) -> u64 {
+        self.allocated.saturating_sub(self.freed)
+    }
+
+    /// Delta between two snapshots (self - earlier).
+    pub fn since(&self, earlier: &MemSnapshot) -> MemSnapshot {
+        MemSnapshot {
+            allocated: self.allocated - earlier.allocated,
+            freed: self.freed - earlier.freed,
+            executions: self.executions - earlier.executions,
+        }
+    }
+}
+
+/// Take a snapshot of the global counters.
+pub fn snapshot() -> MemSnapshot {
+    MemSnapshot {
+        allocated: ALLOCATED.load(Ordering::Relaxed),
+        freed: FREED.load(Ordering::Relaxed),
+        executions: EXECUTIONS.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let before = snapshot();
+        add_allocated(100);
+        add_freed(40);
+        add_execution();
+        let delta = snapshot().since(&before);
+        assert_eq!(delta.allocated, 100);
+        assert_eq!(delta.freed, 40);
+        assert_eq!(delta.executions, 1);
+        assert_eq!(delta.in_use(), 60);
+    }
+}

@@ -1,0 +1,275 @@
+//! Samplers — which agents train each round (paper §3.2.2).
+//!
+//! TorchFL ships random sampling as the baseline and an interface for
+//! custom mechanisms; we implement the baseline plus three mechanisms
+//! from the literature the paper cites as motivating extensions:
+//!
+//! - [`RandomSampler`] — uniform without replacement (the baseline).
+//! - [`RoundRobinSampler`] — deterministic rotation; every agent is
+//!   sampled equally often (useful for debugging/fairness baselines).
+//! - [`ReputationSampler`] — probability ∝ agent reputation (softmax
+//!   with temperature).
+//! - [`PowerOfChoiceSampler`] — the power-of-d-choices rule: draw a
+//!   candidate pool of size `d`, keep the agents with the highest last
+//!   local loss (bias toward under-fit clients).
+//!
+//! All samplers return distinct agent ids and respect `k <= n`.
+
+use anyhow::{bail, Result};
+
+use crate::agents::Agent;
+use crate::util::Rng;
+
+/// Strategy interface for per-round agent selection.
+pub trait Sampler: Send {
+    /// Select `k` distinct agent indices from `agents`.
+    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize>;
+
+    /// Human-readable name used in logs.
+    fn name(&self) -> &'static str;
+}
+
+fn check(agents: &[Agent], k: usize) -> Result<()> {
+    if k == 0 {
+        bail!("cannot sample 0 agents");
+    }
+    if k > agents.len() {
+        bail!("cannot sample {k} of {} agents", agents.len());
+    }
+    Ok(())
+}
+
+/// Uniform sampling without replacement — TorchFL's baseline.
+#[derive(Default)]
+pub struct RandomSampler;
+
+impl Sampler for RandomSampler {
+    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize> {
+        check(agents, k).expect("invalid sampling request");
+        rng.sample_indices(agents.len(), k)
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Deterministic rotation through the agent list.
+#[derive(Default)]
+pub struct RoundRobinSampler {
+    cursor: usize,
+}
+
+impl Sampler for RoundRobinSampler {
+    fn sample(&mut self, agents: &[Agent], k: usize, _rng: &mut Rng) -> Vec<usize> {
+        check(agents, k).expect("invalid sampling request");
+        let n = agents.len();
+        let out: Vec<usize> = (0..k).map(|i| (self.cursor + i) % n).collect();
+        self.cursor = (self.cursor + k) % n;
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Reputation-weighted sampling: P(i) ∝ exp(reputation_i / temperature),
+/// drawn without replacement.
+pub struct ReputationSampler {
+    pub temperature: f64,
+}
+
+impl Default for ReputationSampler {
+    fn default() -> Self {
+        Self { temperature: 0.25 }
+    }
+}
+
+impl Sampler for ReputationSampler {
+    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize> {
+        check(agents, k).expect("invalid sampling request");
+        let mut weights: Vec<f64> = agents
+            .iter()
+            .map(|a| (a.reputation / self.temperature.max(1e-9)).exp())
+            .collect();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = rng.sample_weighted(&weights);
+            out.push(i);
+            weights[i] = 0.0; // without replacement
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "reputation"
+    }
+}
+
+/// Power-of-d-choices: draw `d >= k` random candidates, keep the `k`
+/// with the highest last local loss (unseen agents rank first).
+pub struct PowerOfChoiceSampler {
+    pub d: usize,
+}
+
+impl Default for PowerOfChoiceSampler {
+    fn default() -> Self {
+        Self { d: 0 } // 0 = auto (2k)
+    }
+}
+
+impl Sampler for PowerOfChoiceSampler {
+    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize> {
+        check(agents, k).expect("invalid sampling request");
+        let d = if self.d == 0 { 2 * k } else { self.d }
+            .clamp(k, agents.len());
+        let mut pool = rng.sample_indices(agents.len(), d);
+        // Highest loss first; NaN (never trained) sorts before everything.
+        pool.sort_by(|&a, &b| {
+            let la = agents[a].last_loss;
+            let lb = agents[b].last_loss;
+            match (la.is_nan(), lb.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Less,
+                (false, true) => std::cmp::Ordering::Greater,
+                _ => lb.partial_cmp(&la).unwrap(),
+            }
+        });
+        pool.truncate(k);
+        pool
+    }
+
+    fn name(&self) -> &'static str {
+        "power-of-choice"
+    }
+}
+
+/// Build a sampler from its config name:
+/// `random | round-robin | reputation[:temp] | poc[:d]`.
+pub fn from_name(name: &str) -> Result<Box<dyn Sampler>> {
+    let t = name.trim().to_ascii_lowercase();
+    if t == "random" {
+        return Ok(Box::new(RandomSampler));
+    }
+    if t == "round-robin" {
+        return Ok(Box::new(RoundRobinSampler::default()));
+    }
+    if t == "reputation" {
+        return Ok(Box::new(ReputationSampler::default()));
+    }
+    if let Some(rest) = t.strip_prefix("reputation:") {
+        return Ok(Box::new(ReputationSampler {
+            temperature: rest.parse()?,
+        }));
+    }
+    if t == "poc" {
+        return Ok(Box::new(PowerOfChoiceSampler::default()));
+    }
+    if let Some(rest) = t.strip_prefix("poc:") {
+        return Ok(Box::new(PowerOfChoiceSampler { d: rest.parse()? }));
+    }
+    bail!("unknown sampler {name:?} (random | round-robin | reputation[:t] | poc[:d])")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agents(n: usize) -> Vec<Agent> {
+        (0..n).map(|i| Agent::new(i, vec![i])).collect()
+    }
+
+    fn assert_distinct(ids: &[usize], n: usize) {
+        let mut s = ids.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), ids.len(), "duplicate ids: {ids:?}");
+        assert!(s.iter().all(|&i| i < n));
+    }
+
+    #[test]
+    fn random_distinct_and_uniformish() {
+        let ag = agents(20);
+        let mut s = RandomSampler;
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0usize; 20];
+        for _ in 0..1000 {
+            let ids = s.sample(&ag, 5, &mut rng);
+            assert_distinct(&ids, 20);
+            for i in ids {
+                counts[i] += 1;
+            }
+        }
+        // Each agent expected 250 draws; allow generous slack.
+        assert!(counts.iter().all(|&c| (170..330).contains(&c)), "{counts:?}");
+    }
+
+    #[test]
+    fn round_robin_covers_everyone_equally() {
+        let ag = agents(10);
+        let mut s = RoundRobinSampler::default();
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; 10];
+        for _ in 0..10 {
+            for i in s.sample(&ag, 3, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        assert_eq!(counts, vec![3; 10]);
+    }
+
+    #[test]
+    fn reputation_prefers_high_reputation() {
+        let mut ag = agents(10);
+        ag[7].reputation = 1.0;
+        for a in ag.iter_mut() {
+            if a.id != 7 {
+                a.reputation = 0.0;
+            }
+        }
+        let mut s = ReputationSampler { temperature: 0.1 };
+        let mut rng = Rng::new(3);
+        let hits = (0..200)
+            .filter(|_| s.sample(&ag, 1, &mut rng)[0] == 7)
+            .count();
+        assert!(hits > 150, "agent 7 sampled {hits}/200");
+    }
+
+    #[test]
+    fn poc_picks_highest_loss() {
+        let mut ag = agents(10);
+        for a in ag.iter_mut() {
+            a.last_loss = a.id as f64 * 0.1;
+        }
+        let mut s = PowerOfChoiceSampler { d: 10 }; // full pool
+        let mut rng = Rng::new(4);
+        let ids = s.sample(&ag, 3, &mut rng);
+        assert_distinct(&ids, 10);
+        // With the full pool, must be the 3 highest-loss agents.
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn poc_prefers_untrained_agents() {
+        let mut ag = agents(6);
+        for a in ag.iter_mut().take(5) {
+            a.last_loss = 0.1;
+        }
+        // agent 5 never trained (NaN loss) — should rank first
+        let mut s = PowerOfChoiceSampler { d: 6 };
+        let mut rng = Rng::new(5);
+        let ids = s.sample(&ag, 1, &mut rng);
+        assert_eq!(ids, vec![5]);
+    }
+
+    #[test]
+    fn from_name_parses_all() {
+        for n in ["random", "round-robin", "reputation", "reputation:0.5", "poc", "poc:8"] {
+            assert!(from_name(n).is_ok(), "{n}");
+        }
+        assert!(from_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! A small fixed-size worker pool over std threads.
+//!
+//! The FL entrypoint dispatches each sampled agent's local training round
+//! onto this pool — the simulated analogue of clients training in
+//! parallel on their own devices. Workers own thread-local state (their
+//! own PJRT client + compiled executables, since the `xla` wrappers are
+//! `Rc`-based and not `Send`), created lazily by an `init` closure the
+//! first time a job runs on that worker.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce(usize) + Send + 'static>;
+
+/// Fixed pool of named worker threads consuming jobs from a shared queue.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (clamped to at least 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|wid| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ferrisfl-worker-{wid}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(wid),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `jobs` across the pool and collect results **in input order**.
+    /// Each job receives the worker id it landed on (for thread-local
+    /// state lookup). Blocks until all jobs finish.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(usize) -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (rtx, rrx) = channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            let boxed: Job = Box::new(move |wid| {
+                let out = job(wid);
+                // Receiver outlives all jobs within this call; ignore a
+                // send error only if the caller panicked.
+                let _ = rtx.send((i, out));
+            });
+            self.tx
+                .as_ref()
+                .expect("pool already shut down")
+                .send(boxed)
+                .expect("worker pool died");
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rrx.recv().expect("worker panicked");
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_input_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..32)
+            .map(|i| {
+                move |_wid: usize| {
+                    // Stagger so completion order != input order.
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        (32 - i) % 7,
+                    ));
+                    i * 10
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_execute_once() {
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                |_wid: usize| {
+                    COUNT.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(COUNT.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn worker_ids_within_bounds() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<_> = (0..16).map(|_| |wid: usize| wid).collect();
+        let ids = pool.run(jobs);
+        assert!(ids.iter().all(|&w| w < 2));
+    }
+
+    #[test]
+    fn sequential_batches_reuse_pool() {
+        let pool = WorkerPool::new(2);
+        for round in 0..5 {
+            let jobs: Vec<_> = (0..8).map(|i| move |_w: usize| i + round).collect();
+            let out = pool.run(jobs);
+            assert_eq!(out.len(), 8);
+        }
+    }
+
+    #[test]
+    fn zero_size_clamped() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.run(vec![|_w: usize| 7]);
+        assert_eq!(out, vec![7]);
+    }
+}

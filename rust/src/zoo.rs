@@ -1,0 +1,98 @@
+//! Zoo listings — formatted views of the model/dataset registries
+//! (paper Tables 1 and 2), backed by the AOT manifest.
+
+use crate::runtime::Manifest;
+
+/// Render the dataset registry as a paper-Table-1-style text table.
+pub fn datasets_table(manifest: &Manifest) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<14} {:<22} {:>7} {:>8} {:>8} {:>5} {:>8}\n",
+        "Group", "Dataset", "Classes", "Train", "Test", "IID", "Non-IID"
+    ));
+    s.push_str(&"-".repeat(80));
+    s.push('\n');
+    for d in manifest.datasets.values() {
+        s.push_str(&format!(
+            "{:<14} {:<22} {:>7} {:>8} {:>8} {:>5} {:>8}\n",
+            d.group, d.name, d.num_classes, d.train_n, d.test_n, "yes", "yes"
+        ));
+    }
+    s
+}
+
+/// Render the model zoo as a paper-Table-2-style text table.
+pub fn models_table(manifest: &Manifest) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<12} {:<14} {:>10} {:>9} {:>9} {:>9}\n",
+        "Family", "Variant", "Params", "Head", "FeatExt", "Finetune"
+    ));
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    for z in manifest.zoo.values() {
+        s.push_str(&format!(
+            "{:<12} {:<14} {:>10} {:>9} {:>9} {:>9}\n",
+            z.family,
+            z.variant,
+            z.num_params,
+            z.head_size,
+            if z.feature_extract { "yes" } else { "no" },
+            if z.finetune { "yes" } else { "no" },
+        ));
+    }
+    s
+}
+
+/// Render the built artifact bundles (what can actually run).
+pub fn artifacts_table(manifest: &Manifest) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28} {:>10} {:<12} entries\n",
+        "Artifact", "Params", "Pretrained"
+    ));
+    s.push_str(&"-".repeat(96));
+    s.push('\n');
+    for a in &manifest.artifacts {
+        let entries: Vec<&str> = a.entries.keys().map(|k| k.as_str()).collect();
+        s.push_str(&format!(
+            "{:<28} {:>10} {:<12} {}\n",
+            a.id,
+            a.num_params,
+            if a.pretrained_file.is_some() {
+                "yes"
+            } else {
+                "no"
+            },
+            entries.join(", ")
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn tables_render_all_rows() {
+        let Some(m) = manifest() else { return };
+        let t1 = datasets_table(&m);
+        assert_eq!(t1.lines().count(), 2 + m.datasets.len());
+        assert!(t1.contains("synth-cifar10"));
+        let t2 = models_table(&m);
+        assert_eq!(t2.lines().count(), 2 + m.zoo.len());
+        assert!(t2.contains("lenet5"));
+        let t3 = artifacts_table(&m);
+        assert!(t3.contains("lenet5_synth-mnist"));
+    }
+}

@@ -1,0 +1,513 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These require `make artifacts` to have run; they self-skip (with a
+//! note) when `artifacts/manifest.json` is absent so `cargo test` stays
+//! usable in a fresh checkout.
+
+use std::sync::Arc;
+
+use ferrisfl::aggregators::{self, fedavg_host, sample_weights, Update};
+use ferrisfl::config::FlParams;
+use ferrisfl::datasets::{Dataset, Split};
+use ferrisfl::entrypoint::trainer::{self, TrainConfig, TrainMode};
+use ferrisfl::entrypoint::worker::{self, LocalJob, RuntimeKey};
+use ferrisfl::entrypoint::Entrypoint;
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::NullLogger;
+use ferrisfl::runtime::Manifest;
+use ferrisfl::util::Rng;
+
+fn manifest() -> Option<Arc<Manifest>> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Manifest::load(dir).unwrap()))
+}
+
+fn mlp_key() -> RuntimeKey {
+    RuntimeKey {
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        optimizer: "sgd".into(),
+        mode: "full".into(),
+        entry_tag: String::new(),
+    }
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(m) = manifest() else { return };
+    let dataset = Dataset::load(&m, "synth-mnist", 1).unwrap();
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let mut params = m.read_f32(&art.init_file).unwrap();
+    worker::with_runtime(&m, &mlp_key(), |rt| {
+        let idx: Vec<usize> = (0..rt.train_batch).collect();
+        let batch = dataset.batch(Split::Train, &idx);
+        let first = rt
+            .train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)
+            .unwrap();
+        let mut last = first;
+        for _ in 0..20 {
+            last = rt
+                .train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)
+                .unwrap();
+        }
+        assert!(
+            last.loss < first.loss * 0.8,
+            "loss should drop when overfitting one batch: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn pjrt_fedavg_matches_host_reference() {
+    let Some(m) = manifest() else { return };
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let p = art.num_params;
+    let mut rng = Rng::new(7);
+    let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian() * 0.1).collect();
+    for k in [1usize, 3, 16] {
+        let updates: Vec<Update> = (0..k)
+            .map(|i| Update {
+                agent_id: i,
+                delta: (0..p).map(|_| rng.next_gaussian() * 0.01).collect(),
+                num_samples: 10 + i * 7,
+            })
+            .collect();
+        let weights = sample_weights(&updates);
+        let host = fedavg_host(&global, &updates, &weights);
+        let pjrt = worker::with_runtime(&m, &mlp_key(), |rt| {
+            let deltas: Vec<Vec<f32>> =
+                updates.iter().map(|u| u.delta.clone()).collect();
+            rt.aggregate(&global, &deltas, &weights)
+        })
+        .unwrap();
+        let max_err = host
+            .iter()
+            .zip(&pjrt)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-5, "k={k}: Pallas vs host max err {max_err}");
+    }
+}
+
+#[test]
+fn aggregate_rejects_too_many_updates() {
+    let Some(m) = manifest() else { return };
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let p = art.num_params;
+    let err = worker::with_runtime(&m, &mlp_key(), |rt| {
+        let deltas = vec![vec![0.0f32; p]; m.k_pad + 1];
+        let weights = vec![0.0f32; m.k_pad + 1];
+        match rt.aggregate(&vec![0.0; p], &deltas, &weights) {
+            Err(e) => Ok(format!("{e}")),
+            Ok(_) => Ok(String::new()),
+        }
+    })
+    .unwrap();
+    assert!(err.contains("K_pad"), "got: {err}");
+}
+
+#[test]
+fn eval_mask_ignores_padding() {
+    let Some(m) = manifest() else { return };
+    let dataset = Dataset::load(&m, "synth-mnist", 3).unwrap();
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let params = m.read_f32(&art.init_file).unwrap();
+    worker::with_runtime(&m, &mlp_key(), |rt| {
+        // Evaluate 40 examples as one short batch...
+        let idx: Vec<usize> = (0..40).collect();
+        let batch = dataset.batch(Split::Test, &idx);
+        let short = rt.eval_batch(&params, &batch.x, &batch.y, 40).unwrap();
+        assert_eq!(short.count, 40.0);
+        // ...and as a full batch where the tail is garbage but masked.
+        let idx_full: Vec<usize> = (0..rt.eval_batch).collect();
+        let full = dataset.batch(Split::Test, &idx_full);
+        let masked = rt.eval_batch(&params, &full.x, &full.y, 40).unwrap();
+        assert!(
+            (short.loss_sum - masked.loss_sum).abs() < 1e-2,
+            "{} vs {}",
+            short.loss_sum,
+            masked.loss_sum
+        );
+        assert_eq!(short.correct, masked.correct);
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn featext_keeps_backbone_frozen() {
+    let Some(m) = manifest() else { return };
+    let dataset = Dataset::load(&m, "synth-mnist", 5).unwrap();
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let pre = m
+        .read_f32(art.pretrained_file.as_ref().unwrap())
+        .unwrap();
+    let key = RuntimeKey {
+        mode: "featext".into(),
+        ..mlp_key()
+    };
+    worker::with_runtime(&m, &key, |rt| {
+        let mut params = pre.clone();
+        let idx: Vec<usize> = (0..rt.train_batch).collect();
+        let batch = dataset.batch(Split::Train, &idx);
+        rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.1).unwrap();
+        let backbone = art.num_params - art.head_size;
+        assert!(
+            params[..backbone] == pre[..backbone],
+            "backbone must not move under featext"
+        );
+        assert!(
+            params[backbone..] != pre[backbone..],
+            "head must move under featext"
+        );
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn adam_state_round_trips() {
+    let Some(m) = manifest() else { return };
+    let dataset = Dataset::load(&m, "synth-mnist", 9).unwrap();
+    let art = m.artifact("micronet-05", "synth-mnist").unwrap();
+    let mut params = m.read_f32(&art.init_file).unwrap();
+    let key = RuntimeKey {
+        model: "micronet-05".into(),
+        dataset: "synth-mnist".into(),
+        optimizer: "adam".into(),
+        mode: "full".into(),
+        entry_tag: String::new(),
+    };
+    worker::with_runtime(&m, &key, |rt| {
+        let mut state = ferrisfl::runtime::AdamState::zeros(params.len());
+        let idx: Vec<usize> = (0..rt.train_batch).collect();
+        let batch = dataset.batch(Split::Train, &idx);
+        let s1 = rt
+            .train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01)
+            .unwrap();
+        assert_eq!(state.t, 1.0);
+        let s2 = rt
+            .train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01)
+            .unwrap();
+        assert_eq!(state.t, 2.0);
+        assert!(s2.loss <= s1.loss * 1.5, "{} -> {}", s1.loss, s2.loss);
+        assert!(state.m.iter().any(|&v| v != 0.0), "moment must update");
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn local_training_is_deterministic() {
+    let Some(m) = manifest() else { return };
+    let dataset = Arc::new(Dataset::load(&m, "synth-mnist", 11).unwrap());
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let global = Arc::new(m.read_f32(&art.init_file).unwrap());
+    let job = LocalJob {
+        agent_id: 3,
+        round: 2,
+        shard: (0..200).collect(),
+        global,
+        lr: 0.05,
+        local_epochs: 2,
+        max_steps_per_epoch: 3,
+        seed: 42,
+    };
+    let run = || {
+        worker::with_runtime(&m, &mlp_key(), |rt| {
+            worker::run_local(rt, &dataset, &job)
+        })
+        .unwrap()
+    };
+    let (u1, r1) = run();
+    let (u2, r2) = run();
+    assert_eq!(u1.delta, u2.delta, "same seed => identical deltas");
+    assert_eq!(r1.epoch_losses, r2.epoch_losses);
+}
+
+#[test]
+fn full_fl_experiment_learns() {
+    let Some(m) = manifest() else { return };
+    let params = FlParams {
+        experiment_name: "itest".into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 8,
+        sampling_ratio: 0.5,
+        global_epochs: 3,
+        local_epochs: 2,
+        split: Scheme::NonIid { niid_factor: 3 },
+        sampler: "random".into(),
+        aggregator: "fedavg".into(),
+        optimizer: "sgd".into(),
+        mode: "full".into(),
+        use_pretrained: false,
+        lr: 0.05,
+        seed: 42,
+        workers: 2,
+        eval_every: 0,
+        max_local_steps: 16,
+        log_dir: String::new(),
+        dropout: 0.0,
+        defense: "none".into(),
+        compression: "none".into(),
+    };
+    let mut ep = Entrypoint::new(params, Arc::clone(&m)).unwrap();
+    let mut logger = NullLogger;
+    let res = ep.run(&mut logger).unwrap();
+    assert_eq!(res.rounds.len(), 3);
+    let first = res.rounds.first().unwrap().train_loss;
+    let eval = res.final_eval;
+    // Chance is 10% on the (deliberately hard) synthetic task; a few
+    // dozen non-IID steps must clearly beat it.
+    assert!(eval.accuracy() > 0.2, "accuracy {}", eval.accuracy());
+    // Loss must improve from the untrained baseline (ln 10 ≈ 2.30).
+    assert!(
+        eval.mean_loss() < 2.25,
+        "final eval loss {} should beat untrained ~2.30",
+        eval.mean_loss()
+    );
+    // Per-agent records exist for every sampled slot.
+    assert_eq!(res.agent_records.len(), 3 * 4);
+    let _ = first;
+}
+
+#[test]
+fn robust_aggregators_survive_poisoning_on_runtime_path() {
+    let Some(m) = manifest() else { return };
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let p = art.num_params;
+    let global = vec![0.0f32; p];
+    let mut rng = Rng::new(13);
+    let mut updates: Vec<Update> = (0..5)
+        .map(|i| Update {
+            agent_id: i,
+            delta: (0..p).map(|_| 0.01 + 0.001 * rng.next_gaussian()).collect(),
+            num_samples: 10,
+        })
+        .collect();
+    // poison one
+    for d in updates[0].delta.iter_mut() {
+        *d = -100.0;
+    }
+    worker::with_runtime(&m, &mlp_key(), |rt| {
+        let med = aggregators::from_name("median")
+            .unwrap()
+            .aggregate(&global, &updates, Some(rt))
+            .unwrap();
+        let mean_coord: f32 = med.iter().sum::<f32>() / p as f32;
+        assert!(
+            (mean_coord - 0.01).abs() < 0.005,
+            "median should ignore the poisoned update, got {mean_coord}"
+        );
+        let avg = aggregators::from_name("fedavg")
+            .unwrap()
+            .aggregate(&global, &updates, Some(rt))
+            .unwrap();
+        let mean_avg: f32 = avg.iter().sum::<f32>() / p as f32;
+        assert!(
+            mean_avg < -10.0,
+            "fedavg should be dragged by the poison, got {mean_avg}"
+        );
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn trainer_modes_report_param_counts() {
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        mode: TrainMode::FeatureExtract,
+        epochs: 1,
+        lr: 0.05,
+        optimizer: "sgd".into(),
+        epoch_samples: 64,
+        eval_samples: 128,
+        seed: 1,
+        verbose: false,
+    };
+    let res = trainer::train(&m, &cfg).unwrap();
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    assert_eq!(res.trainable_params, art.head_size);
+    assert_eq!(res.total_params, art.num_params);
+    assert_eq!(res.epochs.len(), 1);
+    assert!(res.epochs[0].val_acc > 0.05);
+}
+
+#[test]
+fn ref_kernel_ablation_artifacts_agree() {
+    let Some(m) = manifest() else { return };
+    let dataset = Dataset::load(&m, "synth-mnist", 17).unwrap();
+    let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+    let init = m.read_f32(&art.init_file).unwrap();
+    let idx: Vec<usize> = (0..32).collect();
+    let batch = dataset.batch(Split::Train, &idx);
+
+    let run_with = |tag: &str| {
+        let key = RuntimeKey {
+            entry_tag: tag.into(),
+            ..mlp_key()
+        };
+        worker::with_runtime(&m, &key, |rt| {
+            let mut p = init.clone();
+            let s = rt.train_step_sgd(&mut p, &batch.x, &batch.y, 0.05)?;
+            Ok((p, s.loss))
+        })
+        .unwrap()
+    };
+    let (p_kernel, loss_kernel) = run_with("");
+    let (p_ref, loss_ref) = run_with("_ref");
+    assert!(
+        (loss_kernel - loss_ref).abs() < 1e-3,
+        "kernel vs ref loss: {loss_kernel} vs {loss_ref}"
+    );
+    let max_err = p_kernel
+        .iter()
+        .zip(&p_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "kernel vs ref params diverge: {max_err}");
+}
+
+#[test]
+fn dropout_skips_agents_but_run_completes() {
+    let Some(m) = manifest() else { return };
+    let params = FlParams {
+        experiment_name: "itest_dropout".into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 10,
+        sampling_ratio: 0.8,
+        global_epochs: 4,
+        local_epochs: 1,
+        max_local_steps: 2,
+        eval_every: 0,
+        workers: 2,
+        dropout: 0.5,
+        ..FlParams::default()
+    };
+    let mut ep = Entrypoint::new(params, Arc::clone(&m)).unwrap();
+    let res = ep.run(&mut NullLogger).unwrap();
+    assert_eq!(res.dropped.len(), 4);
+    let total_dropped: usize = res.dropped.iter().map(|d| d.len()).sum();
+    assert!(total_dropped > 0, "with p=0.5 someone must drop over 4x8 draws");
+    // Agent records only exist for survivors.
+    let survivors: usize = res.rounds.iter().map(|r| r.sampled.len()).sum();
+    assert_eq!(res.agent_records.len(), survivors);
+}
+
+#[test]
+fn compression_reduces_wire_bytes_and_still_learns() {
+    let Some(m) = manifest() else { return };
+    let base = FlParams {
+        experiment_name: "itest_comp".into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 6,
+        sampling_ratio: 0.5,
+        global_epochs: 5,
+        local_epochs: 2,
+        max_local_steps: 16,
+        eval_every: 0,
+        workers: 2,
+        ..FlParams::default()
+    };
+    // dense baseline
+    let mut ep = Entrypoint::new(base.clone(), Arc::clone(&m)).unwrap();
+    let dense = ep.run(&mut NullLogger).unwrap();
+    assert_eq!(dense.comm.dense_bytes, dense.comm.wire_bytes);
+    // top-k 5%
+    let mut p = base.clone();
+    p.compression = "topk:0.05".into();
+    let mut ep = Entrypoint::new(p, Arc::clone(&m)).unwrap();
+    let topk = ep.run(&mut NullLogger).unwrap();
+    assert!(
+        topk.comm.ratio() > 8.0,
+        "topk:0.05 should compress ~10x, got {:.1}x",
+        topk.comm.ratio()
+    );
+    // Heavy sparsification slows convergence; it must still clearly beat
+    // the 10% random-guess floor on this short run.
+    assert!(
+        topk.final_eval.accuracy() > 0.15,
+        "topk acc {}",
+        topk.final_eval.accuracy()
+    );
+    // int8
+    let mut p = base;
+    p.compression = "int8".into();
+    let mut ep = Entrypoint::new(p, Arc::clone(&m)).unwrap();
+    let q = ep.run(&mut NullLogger).unwrap();
+    assert!(q.comm.ratio() > 3.5, "int8 ~4x, got {:.1}x", q.comm.ratio());
+    assert!(
+        q.final_eval.accuracy() > 0.2,
+        "int8 acc {}",
+        q.final_eval.accuracy()
+    );
+}
+
+#[test]
+fn defense_in_entrypoint_passes_clean_runs() {
+    let Some(m) = manifest() else { return };
+    let params = FlParams {
+        experiment_name: "itest_defense".into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 6,
+        sampling_ratio: 0.5,
+        global_epochs: 4,
+        local_epochs: 2,
+        max_local_steps: 16,
+        eval_every: 0,
+        workers: 2,
+        defense: "normfilter:5".into(),
+        ..FlParams::default()
+    };
+    let mut ep = Entrypoint::new(params, Arc::clone(&m)).unwrap();
+    let res = ep.run(&mut NullLogger).unwrap();
+    // Honest cohort: nothing rejected, training proceeds.
+    assert!(res.defense_rejected.iter().all(|r| r.is_empty()));
+    assert!(
+        res.final_eval.accuracy() > 0.2,
+        "acc {}",
+        res.final_eval.accuracy()
+    );
+}
+
+#[test]
+fn contributions_cover_all_participants() {
+    let Some(m) = manifest() else { return };
+    let params = FlParams {
+        experiment_name: "itest_contrib".into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 5,
+        sampling_ratio: 1.0,
+        global_epochs: 2,
+        local_epochs: 1,
+        max_local_steps: 3,
+        eval_every: 0,
+        workers: 2,
+        ..FlParams::default()
+    };
+    let mut ep = Entrypoint::new(params, Arc::clone(&m)).unwrap();
+    let res = ep.run(&mut NullLogger).unwrap();
+    assert_eq!(res.contributions.contributions.len(), 5);
+    let pay = res.contributions.allocate(100.0);
+    let total: f64 = pay.values().sum();
+    assert!((total - 100.0).abs() < 1e-6, "payout must preserve budget");
+    for (&id, c) in &res.contributions.contributions {
+        assert_eq!(c.rounds, 2, "agent {id} participated in both rounds");
+    }
+}

@@ -1,0 +1,458 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The vendored crate set has no proptest, so this is a small hand-rolled
+//! harness: seeded random case generation over many iterations, with the
+//! failing seed printed on assert — the same falsification discipline,
+//! reproducible by construction.
+
+use ferrisfl::aggregators::{self, fedavg_host, sample_weights, Update};
+use ferrisfl::config::FlParams;
+use ferrisfl::federation::{shard, Partition, Scheme};
+use ferrisfl::samplers;
+use ferrisfl::util::{Json, Rng};
+
+const CASES: u64 = 60;
+
+/// Run `f` over `CASES` seeded cases, tagging failures with the seed.
+fn for_all(test_name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xFE44_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("{test_name}: FAILED at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_labels(rng: &mut Rng) -> (Vec<usize>, usize) {
+    let classes = 2 + rng.next_below(20) as usize;
+    let n = (classes * 4) + rng.next_below(2000) as usize;
+    let labels = (0..n)
+        .map(|_| rng.next_below(classes as u64) as usize)
+        .collect();
+    (labels, classes)
+}
+
+fn random_scheme(rng: &mut Rng) -> Scheme {
+    match rng.next_below(3) {
+        0 => Scheme::Iid,
+        1 => Scheme::NonIid {
+            niid_factor: 1 + rng.next_below(6) as usize,
+        },
+        _ => Scheme::Dirichlet {
+            alpha: 0.05 + rng.next_f64() * 10.0,
+        },
+    }
+}
+
+// ---------------------------------------------------------------- sharding
+
+#[test]
+fn prop_sharding_is_exact_partition() {
+    for_all("sharding_partition", |rng| {
+        let (labels, _) = random_labels(rng);
+        let agents = 1 + rng.next_below(12) as usize;
+        if labels.len() < agents {
+            return;
+        }
+        let scheme = random_scheme(rng);
+        let p: Partition = shard(&labels, agents, scheme, rng).unwrap();
+        assert_eq!(p.shards.len(), agents);
+        let mut all: Vec<usize> = p.shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(
+            all.len(),
+            labels.len(),
+            "{scheme}: lost or duplicated samples"
+        );
+        assert_eq!(*all.last().unwrap(), labels.len() - 1);
+    });
+}
+
+#[test]
+fn prop_histogram_is_consistent_with_shards() {
+    for_all("histogram_consistency", |rng| {
+        let (labels, classes) = random_labels(rng);
+        let agents = 2 + rng.next_below(8) as usize;
+        if labels.len() < agents {
+            return;
+        }
+        let p = shard(&labels, agents, random_scheme(rng), rng).unwrap();
+        let hist = p.label_histogram(&labels, classes);
+        for (agent, row) in hist.iter().enumerate() {
+            assert_eq!(row.iter().sum::<usize>(), p.shards[agent].len());
+        }
+        // Column sums reproduce the global label counts.
+        let mut global = vec![0usize; classes];
+        for &l in &labels {
+            global[l] += 1;
+        }
+        for c in 0..classes {
+            let col: usize = hist.iter().map(|row| row[c]).sum();
+            assert_eq!(col, global[c]);
+        }
+    });
+}
+
+#[test]
+fn prop_iid_shards_balanced_within_one() {
+    for_all("iid_balance", |rng| {
+        let (labels, _) = random_labels(rng);
+        let agents = 1 + rng.next_below(10) as usize;
+        if labels.len() < agents {
+            return;
+        }
+        let p = shard(&labels, agents, Scheme::Iid, rng).unwrap();
+        let min = p.shards.iter().map(|s| s.len()).min().unwrap();
+        let max = p.shards.iter().map(|s| s.len()).max().unwrap();
+        assert!(max - min <= 1, "iid shard sizes differ by {}", max - min);
+    });
+}
+
+// ---------------------------------------------------------------- samplers
+
+#[test]
+fn prop_samplers_return_k_distinct_valid_ids() {
+    for_all("sampler_validity", |rng| {
+        let n = 2 + rng.next_below(40) as usize;
+        let k = 1 + rng.next_below(n as u64) as usize;
+        let mut agents: Vec<ferrisfl::agents::Agent> = (0..n)
+            .map(|i| ferrisfl::agents::Agent::new(i, vec![i]))
+            .collect();
+        // random reputations / losses so weighted samplers get variety
+        for a in agents.iter_mut() {
+            a.reputation = rng.next_f64();
+            if rng.next_below(2) == 0 {
+                a.last_loss = rng.next_f64() * 3.0;
+            }
+        }
+        for name in ["random", "round-robin", "reputation", "poc"] {
+            let mut s = samplers::from_name(name).unwrap();
+            let ids = s.sample(&agents, k, rng);
+            assert_eq!(ids.len(), k, "{name}");
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "{name}: duplicates");
+            assert!(sorted.iter().all(|&i| i < n), "{name}: out of range");
+        }
+    });
+}
+
+// -------------------------------------------------------------- aggregation
+
+fn random_updates(rng: &mut Rng, k: usize, p: usize) -> Vec<Update> {
+    (0..k)
+        .map(|i| Update {
+            agent_id: i,
+            delta: (0..p).map(|_| rng.next_gaussian()).collect(),
+            num_samples: 1 + rng.next_below(100) as usize,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sample_weights_on_simplex() {
+    for_all("weights_simplex", |rng| {
+        let k = 1 + rng.next_below(20) as usize;
+        let ups = random_updates(rng, k, 1);
+        let w = sample_weights(&ups);
+        assert_eq!(w.len(), k);
+        assert!(w.iter().all(|&x| x >= 0.0));
+        let sum: f32 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+    });
+}
+
+#[test]
+fn prop_fedavg_zero_weight_rows_are_noops() {
+    for_all("fedavg_padding", |rng| {
+        let k = 1 + rng.next_below(6) as usize;
+        let p = 1 + rng.next_below(300) as usize;
+        let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let ups = random_updates(rng, k, p);
+        let w = sample_weights(&ups);
+        let base = fedavg_host(&global, &ups, &w);
+        // Append zero-weight rows.
+        let mut ups_pad = ups.clone();
+        let extra = 1 + rng.next_below(4) as usize;
+        ups_pad.extend(random_updates(rng, extra, p));
+        let mut w_pad = w.clone();
+        w_pad.extend(std::iter::repeat(0.0).take(extra));
+        let padded = fedavg_host(&global, &ups_pad, &w_pad);
+        for (a, b) in base.iter().zip(&padded) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_fedavg_identical_deltas_are_fixed_point() {
+    for_all("fedavg_fixed_point", |rng| {
+        let p = 1 + rng.next_below(200) as usize;
+        let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let delta: Vec<f32> = (0..p).map(|_| rng.next_gaussian() * 0.1).collect();
+        let k = 1 + rng.next_below(8) as usize;
+        let ups: Vec<Update> = (0..k)
+            .map(|i| Update {
+                agent_id: i,
+                delta: delta.clone(),
+                num_samples: 1 + rng.next_below(50) as usize,
+            })
+            .collect();
+        let w = sample_weights(&ups);
+        let out = fedavg_host(&global, &ups, &w);
+        // Any simplex combination of identical deltas == global + delta.
+        for i in 0..p {
+            assert!((out[i] - (global[i] + delta[i])).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_median_bounded_by_update_range() {
+    for_all("median_bounds", |rng| {
+        let k = 3 + rng.next_below(8) as usize;
+        let p = 1 + rng.next_below(100) as usize;
+        let global = vec![0.0f32; p];
+        let ups = random_updates(rng, k, p);
+        let mut agg = aggregators::from_name("median").unwrap();
+        let out = agg.aggregate(&global, &ups, None).unwrap();
+        for i in 0..p {
+            let lo = ups.iter().map(|u| u.delta[i]).fold(f32::INFINITY, f32::min);
+            let hi = ups
+                .iter()
+                .map(|u| u.delta[i])
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(out[i] >= lo - 1e-6 && out[i] <= hi + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_trimmed_mean_robust_to_minority_poison() {
+    for_all("trim_robust", |rng| {
+        let k = 8;
+        let p = 1 + rng.next_below(50) as usize;
+        let global = vec![0.0f32; p];
+        let mut ups: Vec<Update> = (0..k)
+            .map(|i| Update {
+                agent_id: i,
+                delta: (0..p).map(|_| 0.1 + 0.01 * rng.next_gaussian()).collect(),
+                num_samples: 1,
+            })
+            .collect();
+        // Poison one update with huge values of random sign.
+        let sign = if rng.next_below(2) == 0 { 1.0 } else { -1.0 };
+        for d in ups[0].delta.iter_mut() {
+            *d = sign * 1e5;
+        }
+        let mut agg = aggregators::from_name("trim:0.2").unwrap();
+        let out = agg.aggregate(&global, &ups, None).unwrap();
+        for &v in &out {
+            assert!((v - 0.1).abs() < 0.1, "trimmed mean leaked poison: {v}");
+        }
+    });
+}
+
+// ------------------------------------------------------------------- util
+
+#[test]
+fn prop_json_round_trips_random_documents() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_below(2) == 0),
+            2 => Json::Num((rng.next_gaussian() * 100.0).round() as f64),
+            3 => {
+                let len = rng.next_below(8) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            char::from_u32(32 + rng.next_below(90) as u32).unwrap()
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.next_below(4)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.next_below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_all("json_round_trip", |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "round-trip failed for {text}");
+    });
+}
+
+#[test]
+fn prop_flparams_sampled_count_in_bounds() {
+    for_all("flparams_sampling", |rng| {
+        let mut p = FlParams::default();
+        p.num_agents = 1 + rng.next_below(500) as usize;
+        p.sampling_ratio = (rng.next_f64()).max(0.001);
+        let k = p.sampled_per_round();
+        assert!(k >= 1 && k <= p.num_agents);
+    });
+}
+
+#[test]
+fn prop_rng_split_streams_do_not_collide() {
+    for_all("rng_split", |rng| {
+        let base = Rng::new(rng.next_u64());
+        let a: Vec<u64> = {
+            let mut s = base.split(1);
+            (0..16).map(|_| s.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut s = base.split(2);
+            (0..16).map(|_| s.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+    });
+}
+
+// ------------------------------------------------------------ compression
+
+#[test]
+fn prop_compressors_preserve_dimension() {
+    use ferrisfl::compression;
+    for_all("compression_dim", |rng| {
+        let d = 1 + rng.next_below(2000) as usize;
+        let delta: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        for name in ["none", "int8", "topk:0.1", "randk:0.3"] {
+            let mut c = compression::from_name(name, rng.next_u64()).unwrap();
+            let out = c.compress(&delta).decompress();
+            assert_eq!(out.len(), d, "{name}");
+            assert!(out.iter().all(|v| v.is_finite()), "{name}");
+        }
+    });
+}
+
+#[test]
+fn prop_topk_never_costs_more_than_dense() {
+    use ferrisfl::compression::{Compressor, TopK};
+    for_all("topk_bytes", |rng| {
+        let d = 16 + rng.next_below(5000) as usize;
+        let delta: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let frac = 0.01 + rng.next_f64() * 0.4;
+        let c = TopK::new(frac).compress(&delta);
+        assert!(c.wire_bytes() <= d * 4 * 2 / 2 + 16);
+        // sparsity respected: kept entries <= ceil(frac*d)
+        if let ferrisfl::compression::CompressedDelta::Sparse { idx, .. } = &c {
+            assert!(idx.len() <= (frac * d as f64).ceil() as usize);
+            // indices strictly increasing (canonical form)
+            assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        } else {
+            panic!("topk must be sparse");
+        }
+    });
+}
+
+#[test]
+fn prop_int8_error_bounded_by_range() {
+    use ferrisfl::compression::{Compressor, Int8};
+    for_all("int8_error", |rng| {
+        let d = 1 + rng.next_below(3000) as usize;
+        let scale = 10f32.powi(rng.range_i64(-3, 2) as i32);
+        let delta: Vec<f32> = (0..d).map(|_| rng.next_gaussian() * scale).collect();
+        let out = Int8.compress(&delta).decompress();
+        let lo = delta.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = delta.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let step = (hi - lo) / 254.0;
+        for (a, b) in delta.iter().zip(&out) {
+            assert!((a - b).abs() <= step * 0.75 + 1e-7);
+        }
+    });
+}
+
+// --------------------------------------------------------------- defense
+
+#[test]
+fn prop_normclip_bounds_every_norm() {
+    use ferrisfl::defense::{Defense, NormClip};
+    for_all("normclip_bound", |rng| {
+        let k = 1 + rng.next_below(10) as usize;
+        let d = 1 + rng.next_below(500) as usize;
+        let c = 0.1 + rng.next_f64() * 5.0;
+        let mut ups: Vec<Update> = (0..k)
+            .map(|i| Update {
+                agent_id: i,
+                delta: (0..d).map(|_| rng.next_gaussian() * 10.0).collect(),
+                num_samples: 1,
+            })
+            .collect();
+        NormClip::new(c).screen(&mut ups);
+        for u in &ups {
+            let n: f64 = u
+                .delta
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt();
+            assert!(n <= c * 1.0001, "norm {n} > clip {c}");
+        }
+    });
+}
+
+#[test]
+fn prop_defenses_never_reject_majority_of_identical_updates() {
+    use ferrisfl::defense;
+    for_all("defense_identical", |rng| {
+        let k = 3 + rng.next_below(10) as usize;
+        let d = 1 + rng.next_below(200) as usize;
+        let delta: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        for name in ["normfilter:3", "cosine:0.5"] {
+            let mut ups: Vec<Update> = (0..k)
+                .map(|i| Update {
+                    agent_id: i,
+                    delta: delta.clone(),
+                    num_samples: 1,
+                })
+                .collect();
+            let mut def = defense::from_name(name).unwrap();
+            let rep = def.screen(&mut ups);
+            assert!(
+                rep.rejected.is_empty(),
+                "{name} rejected identical updates: {:?}",
+                rep.rejected
+            );
+        }
+    });
+}
+
+// -------------------------------------------------------------- incentives
+
+#[test]
+fn prop_contribution_scores_normalised_per_round() {
+    use ferrisfl::incentives::ContributionTracker;
+    for_all("contrib_norm", |rng| {
+        let k = 1 + rng.next_below(8) as usize;
+        let d = 1 + rng.next_below(100) as usize;
+        let ups = random_updates(rng, k, d);
+        let agg: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let mut t = ContributionTracker::new();
+        t.record_round(&ups, &agg);
+        let total: f64 = (0..k).map(|i| t.score(i)).sum();
+        // Either nobody aligned positively (total 0) or scores sum to 1.
+        assert!(
+            total.abs() < 1e-9 || (total - 1.0).abs() < 1e-9,
+            "total={total}"
+        );
+        let pay = t.allocate(50.0);
+        let paid: f64 = pay.values().sum();
+        assert!(paid <= 50.0 + 1e-9);
+        assert!(pay.values().all(|&v| v >= 0.0));
+    });
+}
