@@ -9,12 +9,12 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use ferrisfl::config::FlParams;
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::ConsoleLogger;
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::error::Result;
 
 fn main() -> Result<()> {
     let rounds: usize = std::env::args()
@@ -23,7 +23,7 @@ fn main() -> Result<()> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(10);
-    let manifest = Arc::new(Manifest::load("artifacts")?);
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
 
     let mut finals = Vec::new();
     for split in [Scheme::Iid, Scheme::NonIid { niid_factor: 3 }] {
@@ -51,6 +51,7 @@ fn main() -> Result<()> {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
+            backend: manifest.backend.name().into(),
         };
         let mut ep = Entrypoint::new(params, Arc::clone(&manifest))?;
         let mut logger = ConsoleLogger::default();

@@ -7,10 +7,10 @@
 //!
 //! Run: `cargo run --release --example non_iid_showcase`
 
-use anyhow::Result;
 use ferrisfl::datasets::{Dataset, Split};
 use ferrisfl::federation::{shard, Scheme};
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::error::Result;
 use ferrisfl::util::Rng;
 
 fn bar(n: usize, max: usize, width: usize) -> String {
@@ -19,7 +19,7 @@ fn bar(n: usize, max: usize, width: usize) -> String {
 }
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load("artifacts")?;
+    let manifest = Manifest::load_or_native("artifacts");
     let ds = Dataset::load(&manifest, "synth-cifar10", 42)?;
     let labels = ds.labels(Split::Train);
     let classes = ds.info.num_classes;

@@ -2,37 +2,38 @@
 //!
 //! Trains LeNet-5 on synth-mnist for one (subsampled) epoch under the
 //! SimpleProfiler and the runtime memory tracker, then prints the
-//! Table-4 action table and the Fig-10 per-batch byte series.
+//! Table-4 action table and the Fig-10 per-batch byte series. Runs on
+//! whichever backend the environment provides (native by default).
 //!
 //! Run: `cargo run --release --example profiling`
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use ferrisfl::datasets::{Dataset, Split};
 use ferrisfl::entrypoint::worker::{evaluate, with_runtime, RuntimeKey};
 use ferrisfl::profiler::{MemoryTracker, SimpleProfiler};
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::error::Result;
 
 fn main() -> Result<()> {
-    let manifest = Arc::new(Manifest::load("artifacts")?);
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     let dataset = Dataset::load(&manifest, "synth-mnist", 42)?;
     let n = 1600.min(dataset.num_train());
     let key = RuntimeKey {
+        backend: manifest.backend,
         model: "lenet5".into(),
         dataset: "synth-mnist".into(),
         optimizer: "sgd".into(),
         mode: "full".into(),
         entry_tag: String::new(),
     };
-    let art = manifest.artifact("lenet5", "synth-mnist")?;
-    let mut params = manifest.read_f32(&art.init_file)?;
 
     let mut profiler = SimpleProfiler::new();
     let mut tracker = MemoryTracker::new();
 
     with_runtime(&manifest, &key, |rt| {
-        let b = rt.train_batch;
+        let mut params = rt.init_params()?;
+        let b = rt.train_batch_size();
         let mut start = 0;
         while start + b <= n {
             let idx: Vec<usize> = (start..start + b).collect();

@@ -3,22 +3,24 @@
 //! Mirrors the paper's Appendix A flow: build `FLParams`, shard a
 //! dataset, initialise agents, pick a sampler + aggregator, hand it all
 //! to the `Entrypoint`, and run. Everything below the `Entrypoint` is
-//! AOT-compiled HLO executing through PJRT — no python anywhere.
+//! a `ModelExecutor` backend — the pure-rust native executor by
+//! default, or AOT-compiled HLO through PJRT — no python anywhere.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use ferrisfl::config::FlParams;
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::ConsoleLogger;
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::error::Result;
 
 fn main() -> Result<()> {
-    // 1. Load the AOT manifest (build with `make artifacts`).
-    let manifest = Arc::new(Manifest::load("artifacts")?);
+    // 1. Load the environment: the AOT manifest when artifacts are
+    //    built (PJRT feature), else the hermetic native backend.
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
 
     // 2. FLParams — the same hyperparameter surface as the paper's
     //    FLParams object (Fig 16 of the paper).
@@ -45,6 +47,7 @@ fn main() -> Result<()> {
         dropout: 0.0,
         defense: "none".into(),
         compression: "none".into(),
+        backend: manifest.backend.name().into(),
     };
 
     // 3. Entrypoint wires dataset -> sharding -> agents -> runtime.

@@ -10,38 +10,39 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use ferrisfl::aggregators;
 use ferrisfl::config::FlParams;
 use ferrisfl::datasets::{Dataset, Split};
 use ferrisfl::entrypoint::worker::{self, LocalJob, RuntimeKey};
 use ferrisfl::federation::{shard, Scheme};
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::error::Result;
 use ferrisfl::util::Rng;
 
 const POISONED: &[usize] = &[0, 1]; // agents 0 and 1 are malicious
 const ROUNDS: usize = 4;
 
 fn main() -> Result<()> {
-    let manifest = Arc::new(Manifest::load("artifacts")?);
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     let params = FlParams {
         model: "mlp-s".into(),
         dataset: "synth-mnist".into(),
+        backend: manifest.backend.name().into(),
         ..FlParams::default()
     };
     let dataset = Arc::new(Dataset::load(&manifest, &params.dataset, params.seed)?);
     let labels = dataset.labels(Split::Train);
     let mut rng = Rng::new(params.seed);
     let partition = shard(&labels, 8, Scheme::Iid, &mut rng)?;
-    let art = manifest.artifact(&params.model, &params.dataset)?;
-    let init = manifest.read_f32(&art.init_file)?;
     let key = RuntimeKey {
+        backend: manifest.backend,
         model: params.model.clone(),
         dataset: params.dataset.clone(),
         optimizer: "sgd".into(),
         mode: "full".into(),
         entry_tag: String::new(),
     };
+    let init = worker::with_runtime(&manifest, &key, |rt| rt.init_params())?;
 
     for agg_name in ["fedavg", "median", "trim:0.25"] {
         let mut aggregator = aggregators::from_name(agg_name)?;

@@ -8,9 +8,9 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
 use ferrisfl::entrypoint::trainer::{train, TrainConfig, TrainMode};
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::error::Result;
 
 fn main() -> Result<()> {
     let epochs: usize = std::env::args()
@@ -19,7 +19,7 @@ fn main() -> Result<()> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(3);
-    let manifest = Arc::new(Manifest::load("artifacts")?);
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
 
     println!("=== Transfer learning: CNN-M on synth-cifar10 ({epochs} epochs) ===\n");
     let mut rows = Vec::new();
@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         let cfg = TrainConfig {
             model: "cnn-m".into(),
             dataset: "synth-cifar10".into(),
+            backend: manifest.backend.name().into(),
             mode,
             epochs,
             lr: 0.03,

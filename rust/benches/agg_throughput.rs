@@ -1,6 +1,7 @@
 //! Bench: FedAvg aggregation throughput (the FL server hot-spot, Eq. 2).
 //!
-//! Compares the PJRT path (L1 Pallas kernel) against the pure-rust host
+//! Compares the executor backend's aggregation op (multithreaded native
+//! path, or the L1 Pallas kernel under PJRT) against the pure-rust host
 //! reference and the robust rules, over the zoo's parameter sizes and a
 //! K sweep. Backs EXPERIMENTS.md §Perf and the aggregator ablation.
 //!
@@ -25,7 +26,8 @@ fn updates(rng: &mut Rng, k: usize, p: usize) -> Vec<Update> {
 }
 
 fn main() {
-    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
+    let backend = manifest.backend;
     let mut rng = Rng::new(0xbe7c);
 
     for (model, dataset) in [
@@ -36,8 +38,9 @@ fn main() {
     ] {
         let art = manifest.artifact(model, dataset).unwrap();
         let p = art.num_params;
-        header(&format!("FedAvg aggregation, P = {p} ({model})"));
+        header(&format!("FedAvg aggregation, P = {p} ({model}, backend {backend})"));
         let key = RuntimeKey {
+            backend,
             model: model.into(),
             dataset: dataset.into(),
             optimizer: "sgd".into(),
@@ -57,7 +60,7 @@ fn main() {
             })
             .unwrap();
             report(
-                &format!("pjrt/pallas  K={k}"),
+                &format!("{backend} offload K={k}"),
                 &s,
                 &format!("{:.2} GiB/s", gib / s.mean),
             );

@@ -17,7 +17,7 @@ use ferrisfl::loggers::NullLogger;
 use ferrisfl::runtime::Manifest;
 
 fn main() {
-    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     header("compression ablation: mlp-s, 8 agents, 6 rounds, FedAvg");
     println!(
         "{:<12} {:>10} {:>14} {:>10} {:>10}",
@@ -40,6 +40,7 @@ fn main() {
             eval_every: 0,
             max_local_steps: 10,
             compression: comp.into(),
+            backend: manifest.backend.name().into(),
             ..FlParams::default()
         };
         let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();

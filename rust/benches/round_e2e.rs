@@ -18,7 +18,7 @@ use ferrisfl::loggers::NullLogger;
 use ferrisfl::runtime::Manifest;
 
 fn main() {
-    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     header("one FL round: lenet5, 100 agents, 10 sampled, 1 local epoch");
     for workers in [1usize, 2, 4, 8] {
         let params = FlParams {
@@ -44,6 +44,7 @@ fn main() {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
+            backend: manifest.backend.name().into(),
         };
         // Pool + compiled executables are rebuilt per Entrypoint; measure
         // the steady-state round by running 2 rounds and keeping the
@@ -82,6 +83,7 @@ fn main() {
         dropout: 0.0,
         defense: "none".into(),
         compression: "none".into(),
+        backend: manifest.backend.name().into(),
     };
     let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
     let mut logger = NullLogger;

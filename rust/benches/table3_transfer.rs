@@ -12,12 +12,13 @@ use ferrisfl::entrypoint::trainer::{train, TrainConfig, TrainMode};
 use ferrisfl::runtime::Manifest;
 
 fn main() {
-    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     header("Table 3: CNN-M scratch vs finetune vs feature-extract (320-sample epoch)");
     for mode in [TrainMode::Scratch, TrainMode::Finetune, TrainMode::FeatureExtract] {
         let cfg = TrainConfig {
             model: "cnn-m".into(),
             dataset: "synth-cifar10".into(),
+            backend: manifest.backend.name().into(),
             mode,
             epochs: 1,
             lr: 0.03,

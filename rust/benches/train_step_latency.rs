@@ -1,8 +1,10 @@
-//! Bench: per-model PJRT train/eval step latency (the client hot path).
+//! Bench: per-model train/eval step latency (the client hot path).
 //!
-//! Covers every artifact in the manifest plus the pure-jnp reference
-//! ablation for mlp-s (kernel vs ref HLO) — the numbers behind Table 3's
-//! time column and EXPERIMENTS.md §Perf L1/L2.
+//! Covers every artifact in the manifest — and, under PJRT, the
+//! pure-jnp reference ablation for mlp-s (kernel vs ref HLO) — the
+//! numbers behind Table 3's time column and EXPERIMENTS.md §Perf L1/L2.
+//! On the native backend the same discovery loop runs over the native
+//! zoo (no `_ref` entries: there is no kernel/ref split to ablate).
 //!
 //! Run: `cargo bench --bench train_step_latency`
 
@@ -14,9 +16,13 @@ use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
 use ferrisfl::runtime::Manifest;
 
 fn main() {
-    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
+    let backend = manifest.backend;
 
-    header("train_step latency (batch 32) + eval_batch latency (batch 128)");
+    header(&format!(
+        "train_step latency (batch {}) on backend {backend}",
+        manifest.train_batch
+    ));
     let mut cases: Vec<(String, String, String, String)> = Vec::new();
     for art in &manifest.artifacts {
         for entry in art.entries.keys() {
@@ -35,6 +41,7 @@ fn main() {
         }
     }
     cases.sort();
+    cases.dedup();
 
     for (model, dataset, opt, mode_tag) in cases {
         let (mode, tag) = if let Some(m) = mode_tag.strip_suffix("_ref") {
@@ -43,6 +50,7 @@ fn main() {
             (mode_tag.clone(), String::new())
         };
         let key = RuntimeKey {
+            backend,
             model: model.clone(),
             dataset: dataset.clone(),
             optimizer: opt.clone(),
@@ -50,12 +58,14 @@ fn main() {
             entry_tag: tag.clone(),
         };
         let ds = Dataset::load(&manifest, &dataset, 1).unwrap();
-        let art = manifest.artifact(&model, &dataset).unwrap();
-        let init = manifest.read_f32(&art.init_file).unwrap();
         with_runtime(&manifest, &key, |rt| {
-            let idx: Vec<usize> = (0..rt.train_batch).collect();
+            let idx: Vec<usize> = (0..rt.train_batch_size()).collect();
             let batch = ds.batch(Split::Train, &idx);
-            let mut params = init.clone();
+            let mut params = if key.mode == "featext" {
+                rt.pretrained_params()?
+            } else {
+                rt.init_params()?
+            };
             if opt == "adam" {
                 let mut state = ferrisfl::runtime::AdamState::zeros(params.len());
                 let s = bench(2, 10, || {
@@ -74,9 +84,10 @@ fn main() {
         .unwrap();
     }
 
-    header("eval_batch latency (batch 128)");
+    header(&format!("eval_batch latency (batch {})", manifest.eval_batch));
     for art in &manifest.artifacts {
         let key = RuntimeKey {
+            backend,
             model: art.model.clone(),
             dataset: art.dataset.clone(),
             optimizer: if art.entries.contains_key("train_sgd_full") {
@@ -94,14 +105,15 @@ fn main() {
             entry_tag: String::new(),
         };
         let ds = Dataset::load(&manifest, &art.dataset, 1).unwrap();
-        let params = manifest.read_f32(&art.init_file).unwrap();
         with_runtime(&manifest, &key, |rt| {
-            let idx: Vec<usize> = (0..rt.eval_batch).collect();
+            let be = rt.eval_batch_size();
+            let idx: Vec<usize> = (0..be).collect();
             let batch = ds.batch(Split::Test, &idx);
+            let params = rt.init_params()?;
             let s = bench(2, 10, || {
-                rt.eval_batch(&params, &batch.x, &batch.y, rt.eval_batch).unwrap()
+                rt.eval_batch(&params, &batch.x, &batch.y, be).unwrap()
             });
-            report(&art.id, &s, &format!("{:.0} ex/s", s.per_sec(rt.eval_batch as f64)));
+            report(&art.id, &s, &format!("{:.0} ex/s", s.per_sec(be as f64)));
             Ok(())
         })
         .unwrap();

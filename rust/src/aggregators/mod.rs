@@ -6,9 +6,10 @@
 //! and two Byzantine-robust rules the paper cites as motivating
 //! extensions (poisoning defenses):
 //!
-//! - [`FedAvg`] — sample-weighted averaging (Eq. 2). The weighted sum
-//!   runs on the **PJRT path through the L1 Pallas kernel**; a pure-rust
-//!   reference ([`fedavg_host`]) backs property tests and benches.
+//! - [`FedAvg`] — sample-weighted averaging (Eq. 2). Optionally offloads
+//!   the weighted sum to the executor backend (the multithreaded native
+//!   path, or the L1 Pallas kernel under PJRT); a pure-rust reference
+//!   ([`fedavg_host`]) backs property tests and benches.
 //! - [`FedSgd`] — equal-weight averaging (the FedSGD limit: one local
 //!   step, gradients ≈ deltas).
 //! - [`FedAvgM`] — server momentum over the aggregated pseudo-gradient.
@@ -16,9 +17,8 @@
 //! - [`CoordinateMedian`] — coordinate-wise median of deltas.
 //! - [`TrimmedMean`] — coordinate-wise β-trimmed mean.
 
-use anyhow::{bail, Result};
-
-use crate::runtime::ModelRuntime;
+use crate::runtime::ModelExecutor;
+use crate::util::error::{bail, Result};
 
 /// One agent's contribution to a round.
 #[derive(Clone, Debug)]
@@ -34,15 +34,15 @@ pub struct Update {
 pub trait Aggregator: Send {
     /// Produce the next global parameter vector.
     ///
-    /// `rt` is the leader's model runtime: rules that are a weighted sum
-    /// route it through the compiled Pallas aggregation kernel when it is
+    /// `rt` is the leader's executor: rules that are a weighted sum can
+    /// route it through the backend's aggregation op when it is
     /// available, and fall back to the host reference otherwise; purely
     /// host-side rules (median/trim, server optimizers) ignore it.
     fn aggregate(
         &mut self,
         global: &[f32],
         updates: &[Update],
-        rt: Option<&ModelRuntime>,
+        rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>>;
 
     fn name(&self) -> &'static str;
@@ -92,18 +92,18 @@ pub fn fedavg_host(global: &[f32], updates: &[Update], weights: &[f32]) -> Vec<f
 
 /// FedAvg (Eq. 2): sample-weighted averaging.
 ///
-/// Two execution paths, selected by `use_pjrt`:
+/// Two execution paths, selected by `offload`:
 /// - **host** (default): the straight rust loop. §Perf measured the
 ///   CPU-interpret Pallas path at 160x slower than this loop (14 ms vs
 ///   0.09 ms at P=102k; 775 ms vs 1.8 ms at P=1.1M) — on CPU the
 ///   kernel's K_pad x P marshalling + interpret grid loop dominates, so
-///   the host loop is the honest hot path.
-/// - **pjrt** (`fedavg-pjrt`): the L1 Pallas aggregation kernel via the
-///   compiled artifact — the path a real TPU deployment would take, and
-///   the one the host loop is property-tested against (1e-5).
+///   the host loop is the honest hot path for small cohorts.
+/// - **offload** (`fedavg-offload`, alias `fedavg-pjrt`): the backend's
+///   aggregation op — the multithreaded native path, or the L1 Pallas
+///   kernel under PJRT; property-tested against the host loop (1e-5).
 #[derive(Default)]
 pub struct FedAvg {
-    pub use_pjrt: bool,
+    pub offload: bool,
 }
 
 impl Aggregator for FedAvg {
@@ -111,11 +111,11 @@ impl Aggregator for FedAvg {
         &mut self,
         global: &[f32],
         updates: &[Update],
-        rt: Option<&ModelRuntime>,
+        rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>> {
         check(global, updates)?;
         let weights = sample_weights(updates);
-        match (self.use_pjrt, rt) {
+        match (self.offload, rt) {
             (true, Some(rt)) => {
                 let deltas: Vec<Vec<f32>> =
                     updates.iter().map(|u| u.delta.clone()).collect();
@@ -139,7 +139,7 @@ impl Aggregator for FedSgd {
         &mut self,
         global: &[f32],
         updates: &[Update],
-        rt: Option<&ModelRuntime>,
+        rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>> {
         check(global, updates)?;
         let w = 1.0 / updates.len() as f32;
@@ -181,7 +181,7 @@ impl Aggregator for FedAvgM {
         &mut self,
         global: &[f32],
         updates: &[Update],
-        _rt: Option<&ModelRuntime>,
+        _rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>> {
         check(global, updates)?;
         let weights = sample_weights(updates);
@@ -239,7 +239,7 @@ impl Aggregator for FedAdam {
         &mut self,
         global: &[f32],
         updates: &[Update],
-        _rt: Option<&ModelRuntime>,
+        _rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>> {
         check(global, updates)?;
         let weights = sample_weights(updates);
@@ -283,7 +283,7 @@ impl Aggregator for CoordinateMedian {
         &mut self,
         global: &[f32],
         updates: &[Update],
-        _rt: Option<&ModelRuntime>,
+        _rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>> {
         check(global, updates)?;
         let k = updates.len();
@@ -327,7 +327,7 @@ impl Aggregator for TrimmedMean {
         &mut self,
         global: &[f32],
         updates: &[Update],
-        _rt: Option<&ModelRuntime>,
+        _rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>> {
         check(global, updates)?;
         let k = updates.len();
@@ -354,13 +354,14 @@ impl Aggregator for TrimmedMean {
     }
 }
 
-/// Build an aggregator from its config name: `fedavg | fedavg-pjrt |
+/// Build an aggregator from its config name: `fedavg | fedavg-offload |
 /// fedsgd | fedavgm[:beta,lr] | fedadam[:lr] | median | trim[:beta]`.
 pub fn from_name(name: &str) -> Result<Box<dyn Aggregator>> {
     let t = name.trim().to_ascii_lowercase();
     match t.as_str() {
         "fedavg" => return Ok(Box::new(FedAvg::default())),
-        "fedavg-pjrt" => return Ok(Box::new(FedAvg { use_pjrt: true })),
+        // "fedavg-pjrt" kept as a config-compat alias for offload.
+        "fedavg-offload" | "fedavg-pjrt" => return Ok(Box::new(FedAvg { offload: true })),
         "fedsgd" => return Ok(Box::new(FedSgd)),
         "median" => return Ok(Box::new(CoordinateMedian)),
         "fedavgm" => return Ok(Box::new(FedAvgM::new(0.9, 1.0))),
@@ -382,8 +383,8 @@ pub fn from_name(name: &str) -> Result<Box<dyn Aggregator>> {
         return Ok(Box::new(TrimmedMean::new(rest.parse()?)));
     }
     bail!(
-        "unknown aggregator {name:?} \
-         (fedavg | fedsgd | fedavgm[:b,lr] | fedadam[:lr] | median | trim[:b])"
+        "unknown aggregator {name:?} (fedavg | fedavg-offload | fedsgd | \
+         fedavgm[:b,lr] | fedadam[:lr] | median | trim[:b])"
     )
 }
 
@@ -466,7 +467,7 @@ mod tests {
         for (i, &v) in out.iter().enumerate() {
             assert!((v.abs() - 0.01).abs() < 1e-4, "coord {i}: {v}");
         }
-        assert_eq!(out[1] < 0.0, true);
+        assert!(out[1] < 0.0);
     }
 
     #[test]
@@ -522,8 +523,8 @@ mod tests {
     #[test]
     fn from_name_parses_all() {
         for n in [
-            "fedavg", "fedavg-pjrt", "fedsgd", "fedavgm", "fedavgm:0.9,1.0",
-            "fedadam", "fedadam:0.05", "median", "trim", "trim:0.2",
+            "fedavg", "fedavg-offload", "fedavg-pjrt", "fedsgd", "fedavgm",
+            "fedavgm:0.9,1.0", "fedadam", "fedadam:0.05", "median", "trim", "trim:0.2",
         ] {
             assert!(from_name(n).is_ok(), "{n}");
         }

@@ -13,8 +13,7 @@
 //! - [`Int8`] — per-tensor affine quantization to i8.
 //! - [`NoCompression`] — identity baseline.
 
-use anyhow::{bail, Result};
-
+use crate::util::error::{bail, Result};
 use crate::util::Rng;
 
 /// A compressed client→server update plus bookkeeping.

@@ -6,9 +6,9 @@
 
 pub mod toml;
 
-use anyhow::{bail, Context, Result};
-
 use crate::federation::Scheme;
+use crate::runtime::BackendKind;
+use crate::util::error::{bail, Context, Result};
 pub use toml::{TomlDoc, TomlValue};
 
 /// All hyperparameters of one FL experiment — the paper's `FLParams`.
@@ -59,6 +59,9 @@ pub struct FlParams {
     pub defense: String,
     /// Client update compression (see compression::from_name).
     pub compression: String,
+    /// Execution backend: "native" (pure rust, default) or "pjrt"
+    /// (AOT artifacts; requires the `pjrt` cargo feature).
+    pub backend: String,
 }
 
 impl Default for FlParams {
@@ -86,6 +89,7 @@ impl Default for FlParams {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
+            backend: "native".into(),
         }
     }
 }
@@ -131,6 +135,7 @@ impl FlParams {
             dropout: doc.get_float("fl.dropout", 0.0)?,
             defense: doc.get_str("fl.defense", "none")?,
             compression: doc.get_str("fl.compression", "none")?,
+            backend: doc.get_str("run.backend", &d.backend)?,
         };
         p.validate()?;
         Ok(p)
@@ -148,7 +153,8 @@ impl FlParams {
         if self.num_agents == 0 {
             bail!("num_agents must be >= 1");
         }
-        if !(0.0 < self.sampling_ratio && self.sampling_ratio <= 1.0) {
+        let r = self.sampling_ratio;
+        if r.is_nan() || r <= 0.0 || r > 1.0 {
             bail!("sampling_ratio must be in (0, 1]");
         }
         if self.global_epochs == 0 || self.local_epochs == 0 {
@@ -163,12 +169,15 @@ impl FlParams {
         if self.mode == "featext" && !self.use_pretrained {
             bail!("featext mode requires use_pretrained = true");
         }
-        if !(self.lr.is_finite() && self.lr > 0.0) {
+        if !self.lr.is_finite() || self.lr <= 0.0 {
             bail!("lr must be positive");
         }
         if !(0.0..1.0).contains(&self.dropout) {
             bail!("dropout must be in [0, 1)");
         }
+        // Fails fast on unknown backends (whether the build can actually
+        // serve "pjrt" is decided at executor-construction time).
+        BackendKind::parse(&self.backend)?;
         Ok(())
     }
 }
@@ -231,6 +240,10 @@ mod tests {
         assert!(p.validate().is_err());
 
         let mut p = FlParams::default();
+        p.sampling_ratio = f64::NAN;
+        assert!(p.validate().is_err());
+
+        let mut p = FlParams::default();
         p.optimizer = "rmsprop".into();
         assert!(p.validate().is_err());
 
@@ -238,5 +251,23 @@ mod tests {
         p.mode = "featext".into();
         p.use_pretrained = false;
         assert!(p.validate().is_err());
+
+        let mut p = FlParams::default();
+        p.backend = "tpu".into();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn backend_parses_from_toml() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "b"
+            [run]
+            backend = "native"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.backend, "native");
+        assert_eq!(FlParams::default().backend, "native");
     }
 }

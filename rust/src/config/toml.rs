@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// A TOML scalar or flat array.
 #[derive(Clone, Debug, PartialEq)]

@@ -11,9 +11,8 @@
 //! any dataset can be regenerated on any worker without storing data —
 //! the whole "data pipeline" is O(templates) memory.
 
-use anyhow::{bail, Result};
-
 use crate::runtime::{DatasetInfo, Manifest};
+use crate::util::error::{bail, Result};
 use crate::util::Rng;
 
 /// Which split a sample comes from (affects its RNG stream).
@@ -59,11 +58,35 @@ pub struct Dataset {
     seed: u64,
 }
 
+/// Procedural class templates for manifests with no template files (the
+/// native backend): per-class gaussian patterns around mid-grey, seeded
+/// by the dataset *name* so templates are a fixed property of the
+/// dataset — independent of run seeds, workers, and threads (the native
+/// analogue of the template files `make artifacts` writes).
+pub fn native_templates(info: &DatasetInfo) -> Vec<f32> {
+    let ex = info.example_len();
+    let mut templates = Vec::with_capacity(info.num_classes * ex);
+    let base = Rng::new(crate::runtime::native::fnv1a(&info.name) ^ 0x7e3);
+    for class in 0..info.num_classes {
+        let mut r = base.split(class as u64);
+        for _ in 0..ex {
+            templates.push((0.5 + 0.35 * r.next_gaussian()).clamp(0.0, 1.0));
+        }
+    }
+    templates
+}
+
 impl Dataset {
-    /// Load the templates for `name` from the artifact directory.
+    /// Load the templates for `name`: from the artifact directory, or
+    /// synthesised procedurally when the manifest carries no template
+    /// file (the native backend).
     pub fn load(manifest: &Manifest, name: &str, seed: u64) -> Result<Self> {
         let info = manifest.dataset(name)?.clone();
-        let templates = manifest.read_f32(&info.template_file)?;
+        let templates = if info.template_file.is_empty() {
+            native_templates(&info)
+        } else {
+            manifest.read_f32(&info.template_file)?
+        };
         let want = info.num_classes * info.example_len();
         if templates.len() != want {
             bail!(
@@ -260,5 +283,28 @@ mod tests {
         let a = tiny_dataset(1).batch(Split::Train, &[0]);
         let b = tiny_dataset(2).batch(Split::Train, &[0]);
         assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn native_templates_are_deterministic_and_class_distinct() {
+        let m = Manifest::native();
+        let info = m.dataset("synth-mnist").unwrap();
+        let t1 = native_templates(info);
+        let t2 = native_templates(info);
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), info.num_classes * info.example_len());
+        assert!(t1.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let ex = info.example_len();
+        assert_ne!(t1[..ex], t1[ex..2 * ex], "classes must differ");
+    }
+
+    #[test]
+    fn native_dataset_loads_without_files() {
+        let m = Manifest::native();
+        let d = Dataset::load(&m, "synth-cifar10", 7).unwrap();
+        let b = d.batch(Split::Train, &[0, 1, 2]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.x.len(), 3 * d.info.example_len());
+        assert!(b.x.iter().all(|v| v.is_finite()));
     }
 }

@@ -17,9 +17,8 @@
 //! Defenses compose with any aggregator: the entrypoint applies the
 //! defense, then hands surviving updates to the aggregation rule.
 
-use anyhow::{bail, Result};
-
 use crate::aggregators::Update;
+use crate::util::error::{bail, Result};
 
 /// Outcome of screening one round's updates.
 #[derive(Clone, Debug, Default)]

@@ -3,8 +3,9 @@
 //! TorchFL's `Entrypoint` wraps agents, a sampler, and an aggregator and
 //! runs the whole experiment from an `FLParams` config; this module is
 //! the rust analogue, with local training fanned out over the worker
-//! pool (each worker = one simulated client device with its own PJRT
-//! client) and aggregation + evaluation on the leader thread.
+//! pool (each worker = one simulated client device with its own
+//! executor — native or PJRT, per `FlParams::backend`) and aggregation
+//! + evaluation on the leader thread.
 //!
 //! Round loop (the FL lifecycle of paper Fig 1):
 //!   1. sampler picks `A^t ⊆ A`
@@ -19,8 +20,6 @@ pub mod worker;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::agents::{self, Agent};
 use crate::aggregators::{self, Aggregator};
 use crate::compression::{self, Compressor};
@@ -32,8 +31,9 @@ use crate::incentives::ContributionTracker;
 use crate::loggers::Logger;
 use crate::metrics::{Accumulator, AgentRecord, RoundRecord};
 use crate::profiler::SimpleProfiler;
-use crate::runtime::{EvalStats, Manifest};
+use crate::runtime::{BackendKind, EvalStats, Manifest};
 use crate::samplers::{self, Sampler};
+use crate::util::error::Result;
 use crate::util::{Rng, WorkerPool};
 
 use worker::{LocalJob, RuntimeKey};
@@ -102,19 +102,24 @@ impl Entrypoint {
             federation::shard(&labels, params.num_agents, params.split, &mut rng)?;
         let agents = agents::from_partition(partition.shards);
 
-        let art = manifest.artifact(&params.model, &params.dataset)?;
-        let global = if params.use_pretrained {
-            let f = art.pretrained_file.as_ref().with_context(|| {
-                format!(
-                    "config wants pretrained weights but artifact {} has none \
-                     (set pretrain=True in python/compile/aot.py)",
-                    art.id
-                )
-            })?;
-            manifest.read_f32(f)?
-        } else {
-            manifest.read_f32(&art.init_file)?
+        let key = RuntimeKey {
+            backend: BackendKind::parse(&params.backend)?,
+            model: params.model.clone(),
+            dataset: params.dataset.clone(),
+            optimizer: params.optimizer.clone(),
+            mode: params.mode.clone(),
+            entry_tag: String::new(),
         };
+        // W^0 comes from the executor (op 5: model loading) — weight
+        // files under PJRT, deterministic synthesis under native.
+        let use_pretrained = params.use_pretrained;
+        let global = worker::with_runtime(&manifest, &key, |rt| {
+            if use_pretrained {
+                rt.pretrained_params()
+            } else {
+                rt.init_params()
+            }
+        })?;
 
         let sampler = samplers::from_name(&params.sampler)?;
         let aggregator = aggregators::from_name(&params.aggregator)?;
@@ -126,13 +131,6 @@ impl Entrypoint {
                 .unwrap_or(4)
         } else {
             params.workers
-        };
-        let key = RuntimeKey {
-            model: params.model.clone(),
-            dataset: params.dataset.clone(),
-            optimizer: params.optimizer.clone(),
-            mode: params.mode.clone(),
-            entry_tag: String::new(),
         };
 
         Ok(Self {
@@ -277,7 +275,7 @@ impl Entrypoint {
                 continue;
             }
 
-            // 3. aggregate (Eq. 2) — on the leader's runtime (Pallas path)
+            // 3. aggregate (Eq. 2) — on the leader's executor
             let t_agg = Instant::now();
             let manifest = Arc::clone(&self.manifest);
             let key = self.key.clone();
@@ -357,6 +355,7 @@ mod tests {
         p.sampling_ratio = -1.0;
         // Invalid params must fail before any artifact I/O.
         let m = Arc::new(Manifest {
+            backend: BackendKind::Native,
             dir: "/nonexistent".into(),
             train_batch: 32,
             eval_batch: 128,
@@ -366,5 +365,19 @@ mod tests {
             artifacts: vec![],
         });
         assert!(Entrypoint::new(p, m).is_err());
+    }
+
+    #[test]
+    fn entrypoint_builds_on_native_manifest() {
+        let p = FlParams {
+            num_agents: 4,
+            model: "mlp-s".into(),
+            workers: 1,
+            ..FlParams::default()
+        };
+        let m = Arc::new(Manifest::native());
+        let ep = Entrypoint::new(p, m).unwrap();
+        assert_eq!(ep.agents.len(), 4);
+        assert!(!ep.global_params().is_empty());
     }
 }

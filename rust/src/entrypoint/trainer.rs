@@ -4,14 +4,14 @@
 //! Trainer; this is the rust analogue used by the transfer-learning
 //! experiments: train one model on the full train split for E epochs,
 //! recording per-epoch wall-clock, validation loss and accuracy.
+//! Backend-agnostic: runs on whichever executor `cfg.backend` selects.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::datasets::{Dataset, Split};
-use crate::runtime::{AdamState, Manifest};
+use crate::runtime::{AdamState, BackendKind, Manifest, ModelExecutor};
+use crate::util::error::Result;
 use crate::util::Rng;
 
 use super::worker::{self, RuntimeKey};
@@ -36,7 +36,7 @@ impl TrainMode {
         }
     }
 
-    /// AOT entry mode this maps to ("full" trains everything).
+    /// Executor entry mode this maps to ("full" trains everything).
     fn entry_mode(self) -> &'static str {
         match self {
             TrainMode::FeatureExtract => "featext",
@@ -82,6 +82,8 @@ impl TrainResult {
 pub struct TrainConfig {
     pub model: String,
     pub dataset: String,
+    /// Execution backend ("native" | "pjrt").
+    pub backend: String,
     pub mode: TrainMode,
     pub epochs: usize,
     pub lr: f32,
@@ -102,6 +104,7 @@ impl Default for TrainConfig {
         Self {
             model: "cnn-m".into(),
             dataset: "synth-cifar10".into(),
+            backend: "native".into(),
             mode: TrainMode::Scratch,
             epochs: 10,
             lr: 0.05,
@@ -116,7 +119,7 @@ impl Default for TrainConfig {
 
 /// Evaluate on the first `n` test samples only (fixed subset).
 fn eval_subset(
-    rt: &crate::runtime::ModelRuntime,
+    rt: &dyn ModelExecutor,
     dataset: &Dataset,
     params: &[f32],
     n: usize,
@@ -125,7 +128,7 @@ fn eval_subset(
     let mut total = crate::runtime::EvalStats::default();
     let mut start = 0;
     while start < n {
-        let end = (start + rt.eval_batch).min(n);
+        let end = (start + rt.eval_batch_size()).min(n);
         let idx: Vec<usize> = (start..end).collect();
         let batch = dataset.batch(Split::Test, &idx);
         let s = rt.eval_batch(params, &batch.x, &batch.y, end - start)?;
@@ -140,21 +143,8 @@ fn eval_subset(
 /// Train centrally; returns per-epoch metrics and parameter counts.
 pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult> {
     let dataset = Dataset::load(manifest, &cfg.dataset, cfg.seed)?;
-    let art = manifest.artifact(&cfg.model, &cfg.dataset)?;
-    let mut params = if cfg.mode.pretrained() {
-        let f = art.pretrained_file.as_ref().with_context(|| {
-            format!("artifact {} has no pretrained weights", art.id)
-        })?;
-        manifest.read_f32(f)?
-    } else {
-        manifest.read_f32(&art.init_file)?
-    };
-    let trainable = match cfg.mode {
-        TrainMode::FeatureExtract => art.head_size,
-        _ => art.num_params,
-    };
-
     let key = RuntimeKey {
+        backend: BackendKind::parse(&cfg.backend)?,
         model: cfg.model.clone(),
         dataset: cfg.dataset.clone(),
         optimizer: cfg.optimizer.clone(),
@@ -162,18 +152,29 @@ pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult>
         entry_tag: String::new(),
     };
 
-    let n = if cfg.epoch_samples == 0 {
-        dataset.num_train()
-    } else {
-        cfg.epoch_samples.min(dataset.num_train())
-    };
     let mut rng = Rng::new(cfg.seed ^ 0x7e41);
     let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut trainable = 0usize;
+    let mut total_params = 0usize;
 
     worker::with_runtime(manifest, &key, |rt| {
-        let b = rt.train_batch;
-        let mut adam =
-            (cfg.optimizer == "adam").then(|| AdamState::zeros(params.len()));
+        let mut params = if cfg.mode.pretrained() {
+            rt.pretrained_params()?
+        } else {
+            rt.init_params()?
+        };
+        total_params = rt.num_params();
+        trainable = match cfg.mode {
+            TrainMode::FeatureExtract => rt.head_size(),
+            _ => rt.num_params(),
+        };
+        let n = if cfg.epoch_samples == 0 {
+            dataset.num_train()
+        } else {
+            cfg.epoch_samples.min(dataset.num_train())
+        };
+        let b = rt.train_batch_size();
+        let mut adam = (cfg.optimizer == "adam").then(|| AdamState::zeros(params.len()));
         let mut order: Vec<usize> = (0..n).collect();
         for epoch in 0..cfg.epochs {
             let t0 = Instant::now();
@@ -230,13 +231,12 @@ pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult>
         Ok(())
     })?;
 
-    let mean_epoch_secs =
-        epochs.iter().map(|e| e.secs).sum::<f64>() / epochs.len().max(1) as f64;
+    let mean_epoch_secs = epochs.iter().map(|e| e.secs).sum::<f64>() / epochs.len().max(1) as f64;
     Ok(TrainResult {
         mode: cfg.mode,
         epochs,
         trainable_params: trainable,
-        total_params: art.num_params,
+        total_params,
         mean_epoch_secs,
     })
 }
@@ -265,5 +265,24 @@ mod tests {
             mean_epoch_secs: 0.0,
         };
         assert_eq!(r.non_trainable_params(), 900);
+    }
+
+    #[test]
+    fn native_central_training_runs() {
+        let m = Arc::new(Manifest::native());
+        let cfg = TrainConfig {
+            model: "mlp-s".into(),
+            dataset: "synth-mnist".into(),
+            mode: TrainMode::Scratch,
+            epochs: 1,
+            epoch_samples: 64,
+            eval_samples: 64,
+            seed: 3,
+            ..TrainConfig::default()
+        };
+        let res = train(&m, &cfg).unwrap();
+        assert_eq!(res.epochs.len(), 1);
+        assert_eq!(res.trainable_params, res.total_params);
+        assert!(res.epochs[0].train_loss.is_finite());
     }
 }

@@ -1,10 +1,14 @@
 //! Worker-side local training (the simulated FL client).
 //!
-//! Each pool worker owns its own PJRT device + compiled executables (the
-//! `xla` wrappers are `Rc`-based and must not cross threads) — the
-//! simulated analogue of every client having its own accelerator. The
-//! runtime cache is thread-local and keyed by (artifact, optimizer, mode,
-//! tag), so sequential experiments in one process reuse compilations.
+//! Each pool worker owns its own executor cache — PJRT executors wrap
+//! `Rc`-based `xla` handles and must not cross threads, and the native
+//! executors are cheap to build — so the runtime cache is thread-local,
+//! keyed by (backend, artifact, optimizer, mode, tag). Sequential
+//! experiments in one process reuse compilations.
+//!
+//! This module is the only place that knows which concrete backend
+//! implements [`ModelExecutor`]; everything above it (entrypoint,
+//! trainer, repro, benches) is backend-agnostic.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -12,76 +16,134 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::aggregators::Update;
 use crate::datasets::{Dataset, Split};
 use crate::metrics::AgentRecord;
-use crate::runtime::{AdamState, Device, Manifest, ModelRuntime};
+use crate::runtime::{AdamState, BackendKind, Manifest, ModelExecutor, NativeExecutor};
+use crate::util::error::{bail, Result};
 use crate::util::Rng;
 
 thread_local! {
-    static DEVICE: RefCell<Option<Rc<Device>>> = const { RefCell::new(None) };
-    static RUNTIMES: RefCell<HashMap<String, Rc<ModelRuntime>>> =
+    static RUNTIMES: RefCell<HashMap<String, Rc<dyn ModelExecutor>>> =
         RefCell::new(HashMap::new());
 }
 
-/// Identifies one compiled (model, dataset, optimizer, mode, tag) bundle.
+#[cfg(feature = "pjrt")]
+thread_local! {
+    static DEVICE: RefCell<Option<Rc<crate::runtime::Device>>> = const { RefCell::new(None) };
+}
+
+/// Identifies one (backend, model, dataset, optimizer, mode, tag) bundle.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct RuntimeKey {
+    pub backend: BackendKind,
     pub model: String,
     pub dataset: String,
     pub optimizer: String,
     pub mode: String,
-    /// "" for Pallas-kernel artifacts, "_ref" for the pure-jnp ablation.
+    /// "" for Pallas-kernel artifacts, "_ref" for the pure-jnp ablation
+    /// (PJRT only).
     pub entry_tag: String,
 }
 
 impl RuntimeKey {
+    /// A native-backend key with the common defaults filled in.
+    pub fn native(model: &str, dataset: &str, optimizer: &str, mode: &str) -> Self {
+        Self {
+            backend: BackendKind::Native,
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            optimizer: optimizer.to_string(),
+            mode: mode.to_string(),
+            entry_tag: String::new(),
+        }
+    }
+
     fn cache_key(&self) -> String {
         format!(
-            "{}@{}:{}:{}:{}",
-            self.model, self.dataset, self.optimizer, self.mode, self.entry_tag
+            "{}:{}@{}:{}:{}:{}",
+            self.backend, self.model, self.dataset, self.optimizer, self.mode, self.entry_tag
         )
     }
 }
 
-/// Get (or lazily build) this thread's runtime for `key`.
+/// Get (or lazily build) this thread's executor for `key`.
 pub fn with_runtime<T>(
     manifest: &Arc<Manifest>,
     key: &RuntimeKey,
-    f: impl FnOnce(&ModelRuntime) -> Result<T>,
+    f: impl FnOnce(&dyn ModelExecutor) -> Result<T>,
 ) -> Result<T> {
-    let device = DEVICE.with(|d| -> Result<Rc<Device>> {
-        let mut d = d.borrow_mut();
-        if d.is_none() {
-            *d = Some(Rc::new(Device::cpu()?));
-        }
-        Ok(Rc::clone(d.as_ref().unwrap()))
-    })?;
-    let rt = RUNTIMES.with(|r| -> Result<Rc<ModelRuntime>> {
+    let rt = RUNTIMES.with(|r| -> Result<Rc<dyn ModelExecutor>> {
         let mut r = r.borrow_mut();
         if let Some(rt) = r.get(&key.cache_key()) {
             return Ok(Rc::clone(rt));
         }
-        let art = manifest.artifact(&key.model, &key.dataset)?;
-        let ds = manifest.dataset(&key.dataset)?;
-        let rt = Rc::new(
-            ModelRuntime::load(
-                &device,
-                manifest,
-                art,
-                ds,
-                &key.optimizer,
-                &key.mode,
-                &key.entry_tag,
-            )
-            .with_context(|| format!("loading runtime for {}", key.cache_key()))?,
-        );
+        let rt = build_executor(manifest, key)?;
         r.insert(key.cache_key(), Rc::clone(&rt));
         Ok(rt)
     })?;
-    f(&rt)
+    f(&*rt)
+}
+
+fn build_executor(manifest: &Arc<Manifest>, key: &RuntimeKey) -> Result<Rc<dyn ModelExecutor>> {
+    match key.backend {
+        BackendKind::Native => {
+            if !key.entry_tag.is_empty() {
+                bail!(
+                    "entry tag {:?} is a PJRT artifact ablation; the native \
+                     backend has no kernel/ref split",
+                    key.entry_tag
+                );
+            }
+            Ok(Rc::new(NativeExecutor::load(
+                manifest,
+                &key.model,
+                &key.dataset,
+                &key.optimizer,
+                &key.mode,
+            )?))
+        }
+        BackendKind::Pjrt => build_pjrt(manifest, key),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt(manifest: &Arc<Manifest>, key: &RuntimeKey) -> Result<Rc<dyn ModelExecutor>> {
+    use crate::util::error::Context;
+
+    let device = DEVICE.with(|d| -> Result<Rc<crate::runtime::Device>> {
+        let mut d = d.borrow_mut();
+        if d.is_none() {
+            *d = Some(Rc::new(crate::runtime::Device::cpu()?));
+        }
+        Ok(Rc::clone(d.as_ref().unwrap()))
+    })?;
+    let art = manifest.artifact(&key.model, &key.dataset)?;
+    let ds = manifest.dataset(&key.dataset)?;
+    let rt = crate::runtime::PjrtRuntime::load(
+        &device,
+        manifest,
+        art,
+        ds,
+        &key.optimizer,
+        &key.mode,
+        &key.entry_tag,
+    )
+    .with_context(|| format!("loading PJRT runtime for {}", key.cache_key()))?;
+    Ok(Rc::new(rt))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt(_manifest: &Arc<Manifest>, key: &RuntimeKey) -> Result<Rc<dyn ModelExecutor>> {
+    bail!(
+        "backend 'pjrt' requested for {}@{} but this build has no PJRT \
+         support — vendor the xla crate and add it under the `pjrt` \
+         feature (see the instructions in rust/Cargo.toml), then \
+         rebuild with `--features pjrt`; or use the default native \
+         backend",
+        key.model,
+        key.dataset
+    )
 }
 
 /// Everything a worker needs to run one agent's local round.
@@ -101,14 +163,14 @@ pub struct LocalJob {
 /// Run local training for one agent; returns its parameter delta (Eq. 1)
 /// and per-epoch metrics (the Fig 9 series).
 pub fn run_local(
-    rt: &ModelRuntime,
+    rt: &dyn ModelExecutor,
     dataset: &Dataset,
     job: &LocalJob,
 ) -> Result<(Update, AgentRecord)> {
     let t0 = Instant::now();
-    let b = rt.train_batch;
+    let b = rt.train_batch_size();
     let mut params: Vec<f32> = (*job.global).clone();
-    let mut adam = (rt.optimizer == "adam").then(|| AdamState::zeros(params.len()));
+    let mut adam = (rt.optimizer() == "adam").then(|| AdamState::zeros(params.len()));
 
     let mut epoch_losses = Vec::with_capacity(job.local_epochs);
     let mut epoch_accs = Vec::with_capacity(job.local_epochs);
@@ -178,19 +240,62 @@ pub fn run_local(
 }
 
 /// Evaluate `params` over the full test split (padding + masking the
-/// final short batch inside the graph).
+/// final short batch inside the executor).
 pub fn evaluate<'a>(
-    rt: &'a ModelRuntime,
+    rt: &'a dyn ModelExecutor,
     dataset: &'a Dataset,
 ) -> impl Fn(&[f32]) -> Result<crate::runtime::EvalStats> + 'a {
     move |params: &[f32]| {
         let mut total = crate::runtime::EvalStats::default();
-        for (batch, n_valid) in dataset.test_batches(rt.eval_batch) {
+        for (batch, n_valid) in dataset.test_batches(rt.eval_batch_size()) {
             let s = rt.eval_batch(params, &batch.x, &batch.y, n_valid)?;
             total.loss_sum += s.loss_sum;
             total.correct += s.correct;
             total.count += s.count;
         }
         Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_builds_and_caches() {
+        let m = Arc::new(Manifest::native());
+        let key = RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full");
+        let p1 = with_runtime(&m, &key, |rt| {
+            assert_eq!(rt.backend(), BackendKind::Native);
+            assert_eq!(rt.train_batch_size(), m.train_batch);
+            rt.init_params()
+        })
+        .unwrap();
+        // Second lookup hits the thread-local cache and agrees.
+        let p2 = with_runtime(&m, &key, |rt| rt.init_params()).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn native_rejects_ref_ablation_tag() {
+        let m = Arc::new(Manifest::native());
+        let key = RuntimeKey {
+            entry_tag: "_ref".into(),
+            ..RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full")
+        };
+        let err = with_runtime(&m, &key, |_| Ok(())).unwrap_err();
+        assert!(format!("{err}").contains("native"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_needs_feature() {
+        let m = Arc::new(Manifest::native());
+        let key = RuntimeKey {
+            backend: BackendKind::Pjrt,
+            ..RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full")
+        };
+        let err = with_runtime(&m, &key, |_| Ok(())).unwrap_err();
+        assert!(format!("{err}").contains("--features pjrt"), "{err}");
     }
 }

@@ -20,8 +20,7 @@
 
 use std::collections::BTreeSet;
 
-use anyhow::{bail, Result};
-
+use crate::util::error::{bail, Result};
 use crate::util::Rng;
 
 /// Sharding scheme (experiment-config surface).

@@ -1,29 +1,53 @@
 //! # FerrisFL
 //!
 //! A performant library for bootstrapping federated-learning experiments —
-//! a Rust + JAX + Pallas reproduction of *TorchFL* (arXiv:2211.00735).
+//! a Rust reproduction of *TorchFL* (arXiv:2211.00735) with pluggable
+//! execution backends.
 //!
-//! Three layers, python never on the request path:
-//! - **L3 (this crate)** — the FL coordinator: datasets + sharding,
-//!   agents, samplers, aggregators, the experiment entrypoint, loggers,
-//!   profilers, and the reproduction harness for every table/figure in
-//!   the paper.
-//! - **L2 (python/compile, build-time)** — the JAX model zoo, AOT-lowered
-//!   to HLO text by `make artifacts`.
-//! - **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
-//!   compute hot-spots (MXU matmul/dense/conv, fused softmax-xent, FedAvg
-//!   aggregation).
+//! ## Architecture
 //!
-//! Quickstart: see `examples/quickstart.rs`, or run
+//! The FL control plane (datasets + sharding, agents, samplers,
+//! aggregators, defenses, compression, the experiment entrypoint,
+//! loggers, profilers, and the reproduction harness) is backend-agnostic:
+//! every model operation goes through the
+//! [`runtime::ModelExecutor`] trait, which covers the five runtime ops —
+//! SGD step, Adam step, masked eval, FedAvg aggregation, and model
+//! loading. Two backends implement it:
+//!
+//! - **native** (default) — [`runtime::native`], a pure-rust MLP
+//!   forward/backward engine. Hermetic: no Python, no XLA, no AOT
+//!   artifacts, zero external crates. Local training fans out across the
+//!   [`util::threadpool::WorkerPool`] (one simulated client device per
+//!   worker) and large FedAvg aggregations shard the parameter range
+//!   across a process-wide pool.
+//! - **pjrt** (optional, `--features pjrt`) — [`runtime::pjrt`]: the
+//!   three-layer AOT path of the original design. L2 (python/compile)
+//!   lowers a JAX model zoo to HLO text via `make artifacts`; L1
+//!   (python/compile/kernels) supplies Pallas kernels for the compute
+//!   hot-spots; this crate compiles and executes them through the PJRT C
+//!   API (needs the vendored `xla` crate).
+//!
+//! Backends are selected per run: `--backend native|pjrt` on the CLI,
+//! `backend = "..."` under `[run]` in config TOML, or
+//! `FlParams::backend` / `TrainConfig::backend` in code.
+//!
+//! ## Verifying
+//!
+//! The tier-1 check is `cargo build --release && cargo test -q`, and it
+//! passes on a clean checkout — the native backend needs nothing outside
+//! this repository. PJRT-specific integration tests self-skip unless the
+//! `pjrt` feature is enabled *and* `artifacts/manifest.json` exists.
+//!
+//! Quickstart: `cargo run --release --example quickstart`, or
 //! `cargo run --release -- run --config configs/quickstart.toml`.
 
 pub mod agents;
-pub mod benchutil;
 pub mod aggregators;
+pub mod benchutil;
 pub mod compression;
 pub mod config;
-pub mod defense;
 pub mod datasets;
+pub mod defense;
 pub mod entrypoint;
 pub mod federation;
 pub mod incentives;

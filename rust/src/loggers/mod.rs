@@ -11,9 +11,8 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::metrics::{AgentRecord, RoundRecord};
+use crate::util::error::{Context, Result};
 use crate::util::Json;
 
 /// Sink for experiment records.

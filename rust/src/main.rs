@@ -1,7 +1,7 @@
 //! ferrisfl — CLI leader entrypoint.
 //!
 //! ```text
-//! ferrisfl run --config configs/quickstart.toml [--artifacts DIR]
+//! ferrisfl run --config configs/quickstart.toml [--backend native|pjrt]
 //! ferrisfl list [datasets|models|artifacts]
 //! ferrisfl repro <table1|table2|table3|table4|fig6|...|all> [--quick]
 //! ferrisfl info
@@ -9,23 +9,27 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use ferrisfl::config::FlParams;
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::loggers::{ConsoleLogger, CsvLogger, JsonlLogger, Logger, MultiLogger};
 use ferrisfl::repro::{self, ReproOptions};
-use ferrisfl::runtime::{Device, Manifest};
+use ferrisfl::runtime::{BackendKind, Manifest};
+use ferrisfl::util::error::{bail, Context, Result};
 use ferrisfl::zoo;
 
 const USAGE: &str = "\
 ferrisfl — FerrisFL: bootstrap federated-learning experiments (TorchFL repro)
 
 USAGE:
-  ferrisfl run --config <file.toml> [--artifacts <dir>] [--workers <n>]
-  ferrisfl list [datasets|models|artifacts] [--artifacts <dir>]
-  ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--artifacts <dir>]
-  ferrisfl info [--artifacts <dir>]
+  ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>]
+  ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
+  ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
+  ferrisfl info [--backend native|pjrt] [--artifacts <dir>]
+
+BACKENDS:
+  native  pure-rust CPU executor, no artifacts needed (default)
+  pjrt    AOT HLO artifacts via PJRT/XLA (build with --features pjrt,
+          then `make artifacts` and pass --artifacts <dir>)
 
 EXPERIMENTS (paper artefacts):
   table1 table2 table3 table4 fig6 fig7 fig8i fig8ii fig9 fig10 | all
@@ -74,9 +78,22 @@ impl Args {
     }
 }
 
-fn load_manifest(args: &Args) -> Result<Arc<Manifest>> {
-    let dir = args.opt("artifacts").unwrap_or("artifacts");
-    Ok(Arc::new(Manifest::load(dir)?))
+/// Resolve the backend: `--backend` wins, then `fallback` (a config
+/// value for `run`, "native" elsewhere).
+fn backend_of(args: &Args, fallback: &str) -> Result<BackendKind> {
+    BackendKind::parse(args.opt("backend").unwrap_or(fallback))
+}
+
+/// Load the environment for `backend`: the in-memory native manifest, or
+/// the AOT manifest from `--artifacts <dir>` for PJRT.
+fn load_manifest(args: &Args, backend: BackendKind) -> Result<Arc<Manifest>> {
+    match backend {
+        BackendKind::Native => Ok(Arc::new(Manifest::native())),
+        BackendKind::Pjrt => {
+            let dir = args.opt("artifacts").unwrap_or("artifacts");
+            Ok(Arc::new(Manifest::load(dir)?))
+        }
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -87,13 +104,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(w) = args.opt("workers") {
         params.workers = w.parse()?;
     }
-    let manifest = load_manifest(args)?;
+    let backend = backend_of(args, &params.backend)?;
+    params.backend = backend.name().into();
+    let manifest = load_manifest(args, backend)?;
 
     println!(
-        "experiment {:?}: {}@{} | {} agents, {:.0}% sampled, {} rounds x {} local epochs | split {} | {} + {}",
+        "experiment {:?}: {}@{} on {} | {} agents, {:.0}% sampled, {} rounds x {} local epochs | split {} | {} + {}",
         params.experiment_name,
         params.model,
         params.dataset,
+        params.backend,
         params.num_agents,
         params.sampling_ratio * 100.0,
         params.global_epochs,
@@ -131,7 +151,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
+    let manifest = load_manifest(args, backend_of(args, "native")?)?;
     let what = args
         .positional
         .get(1)
@@ -154,21 +174,28 @@ fn cmd_repro(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .context("repro requires an experiment id (or `all`)")?;
-    let manifest = load_manifest(args)?;
+    let backend = backend_of(args, "native")?;
+    let manifest = load_manifest(args, backend)?;
     let opts = ReproOptions {
         quick: args.flags.contains("quick"),
         out_dir: args.opt("out").unwrap_or("results").into(),
         workers: args.opt("workers").map(|w| w.parse()).transpose()?.unwrap_or(0),
         seed: args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(42),
+        backend: backend.name().into(),
     };
     repro::run(exp, &manifest, &opts)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let device = Device::cpu()?;
+    let backend = backend_of(args, "native")?;
+    let manifest = load_manifest(args, backend)?;
     println!("FerrisFL — TorchFL (arXiv:2211.00735) reproduction");
-    println!("PJRT platform : {}", device.platform());
+    println!("backend       : {}", manifest.backend);
+    #[cfg(feature = "pjrt")]
+    if backend == BackendKind::Pjrt {
+        let device = ferrisfl::runtime::Device::cpu()?;
+        println!("PJRT platform : {}", device.platform());
+    }
     println!("artifacts dir : {}", manifest.dir.display());
     println!("datasets      : {}", manifest.datasets.len());
     println!("zoo variants  : {}", manifest.zoo.len());

@@ -2,8 +2,6 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
-
 use crate::config::FlParams;
 use crate::datasets::{Dataset, Split};
 use crate::entrypoint::trainer::{self, TrainConfig, TrainMode};
@@ -12,6 +10,7 @@ use crate::federation::{self, Scheme};
 use crate::loggers::ConsoleLogger;
 use crate::profiler::MemoryTracker;
 use crate::runtime::Manifest;
+use crate::util::error::{Context, Result};
 use crate::util::Rng;
 
 use super::ReproOptions;
@@ -71,6 +70,7 @@ pub fn fig7(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         let cfg = TrainConfig {
             model: "cnn-m".into(),
             dataset: "synth-cifar10".into(),
+            backend: opts.backend.clone(),
             mode,
             epochs,
             lr: 0.03,
@@ -149,6 +149,7 @@ pub fn fig8i(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
+            backend: opts.backend.clone(),
         };
         let (rounds, _) = run_fl(manifest, p)?;
         for r in rounds {
@@ -196,6 +197,7 @@ pub fn fig8ii(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
+            backend: opts.backend.clone(),
         };
         let (rounds, _) = run_fl(manifest, p)?;
         for r in rounds {
@@ -236,6 +238,7 @@ pub fn fig9(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         dropout: 0.0,
         defense: "none".into(),
         compression: "none".into(),
+        backend: opts.backend.clone(),
     };
     let (_, agent_records) = run_fl(manifest, p)?;
 
@@ -276,17 +279,17 @@ pub fn fig10(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
     let dataset = Dataset::load(manifest, "synth-mnist", opts.seed)?;
     let n = opts.scale(2000, 320).min(dataset.num_train());
     let key = crate::entrypoint::worker::RuntimeKey {
+        backend: crate::runtime::BackendKind::parse(&opts.backend)?,
         model: "lenet5".into(),
         dataset: "synth-mnist".into(),
         optimizer: "sgd".into(),
         mode: "full".into(),
         entry_tag: String::new(),
     };
-    let art = manifest.artifact("lenet5", "synth-mnist")?;
-    let mut params = manifest.read_f32(&art.init_file)?;
     let mut tracker = MemoryTracker::new();
     crate::entrypoint::worker::with_runtime(manifest, &key, |rt| {
-        let b = rt.train_batch;
+        let mut params = rt.init_params()?;
+        let b = rt.train_batch_size();
         let mut start = 0;
         while start + b <= n {
             let idx: Vec<usize> = (start..start + b).collect();

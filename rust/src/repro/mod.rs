@@ -24,9 +24,8 @@ mod tables;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
 use crate::runtime::Manifest;
+use crate::util::error::{bail, Result};
 
 /// Options shared by all reproduction experiments.
 #[derive(Clone, Debug)]
@@ -39,6 +38,8 @@ pub struct ReproOptions {
     pub workers: usize,
     /// Base seed.
     pub seed: u64,
+    /// Execution backend ("native" | "pjrt").
+    pub backend: String,
 }
 
 impl Default for ReproOptions {
@@ -48,6 +49,7 @@ impl Default for ReproOptions {
             out_dir: PathBuf::from("results"),
             workers: 0,
             seed: 42,
+            backend: "native".into(),
         }
     }
 }

@@ -2,13 +2,12 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::datasets::{Dataset, Split};
 use crate::entrypoint::trainer::{self, TrainConfig, TrainMode};
 use crate::federation::{self, Scheme};
 use crate::profiler::SimpleProfiler;
 use crate::runtime::Manifest;
+use crate::util::error::Result;
 use crate::util::Rng;
 use crate::zoo;
 
@@ -84,6 +83,7 @@ pub fn table3(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         let cfg = TrainConfig {
             model: "cnn-m".into(),
             dataset: "synth-cifar10".into(),
+            backend: opts.backend.clone(),
             mode,
             epochs: 1,
             lr: 0.03,
@@ -127,6 +127,7 @@ pub fn table4(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
     let dataset = Dataset::load(manifest, "synth-mnist", opts.seed)?;
     let n = opts.scale(2000, 320).min(dataset.num_train());
     let key = crate::entrypoint::worker::RuntimeKey {
+        backend: crate::runtime::BackendKind::parse(&opts.backend)?,
         model: "lenet5".into(),
         dataset: "synth-mnist".into(),
         optimizer: "sgd".into(),
@@ -134,10 +135,9 @@ pub fn table4(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         entry_tag: String::new(),
     };
     let mut profiler = SimpleProfiler::new();
-    let art = manifest.artifact("lenet5", "synth-mnist")?;
-    let mut params = manifest.read_f32(&art.init_file)?;
     crate::entrypoint::worker::with_runtime(manifest, &key, |rt| {
-        let b = rt.train_batch;
+        let mut params = rt.init_params()?;
+        let b = rt.train_batch_size();
         let mut start = 0;
         while start + b <= n {
             let idx: Vec<usize> = (start..start + b).collect();

@@ -1,0 +1,217 @@
+//! The execution-backend abstraction (the L3↔runtime contract).
+//!
+//! Every consumer of the runtime — the FL entrypoint, the central
+//! trainer, the repro harness, benches — programs against
+//! [`ModelExecutor`], which covers the five runtime operations:
+//!
+//! 1. model/artifact loading ([`ModelExecutor::init_params`] /
+//!    [`ModelExecutor::pretrained_params`]),
+//! 2. one SGD train step,
+//! 3. one Adam train step,
+//! 4. masked batch evaluation,
+//! 5. weighted-delta FedAvg aggregation.
+//!
+//! Two backends implement it:
+//!
+//! - [`BackendKind::Native`] — `runtime::native`, a pure-rust MLP
+//!   forward/backward engine. Needs no Python, XLA, or AOT artifacts;
+//!   the default, and the only backend in a default-features build.
+//! - [`BackendKind::Pjrt`] — `runtime::pjrt`, the original PJRT/XLA
+//!   path over AOT-lowered HLO (the Pallas-kernel artifacts). Gated
+//!   behind the optional `pjrt` cargo feature.
+
+use crate::util::error::{bail, Result};
+
+/// Which execution backend drives the five runtime operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Pure-rust CPU backend (default; hermetic).
+    Native,
+    /// PJRT/XLA over AOT artifacts (requires the `pjrt` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a config/CLI name: `native` or `pjrt`.
+    pub fn parse(text: &str) -> Result<Self> {
+        match text.trim().to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (native | pjrt)"),
+        }
+    }
+
+    /// Canonical config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// Mean cross-entropy loss over the batch.
+    pub loss: f32,
+    /// Number of correct predictions in the batch (a count, not a rate).
+    pub hits: f32,
+}
+
+/// Aggregate eval result over a full test set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub count: f64,
+}
+
+impl EvalStats {
+    pub fn mean_loss(&self) -> f64 {
+        if self.count > 0.0 {
+            self.loss_sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.count > 0.0 {
+            self.correct / self.count
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Adam optimizer state held by the coordinator between local epochs.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+impl AdamState {
+    pub fn zeros(p: usize) -> Self {
+        Self {
+            m: vec![0.0; p],
+            v: vec![0.0; p],
+            t: 0.0,
+        }
+    }
+}
+
+/// Everything needed to train/eval/aggregate one model@dataset on one
+/// device, behind a uniform interface (see module docs for the op list).
+///
+/// Executors are created per worker thread by `entrypoint::worker` and
+/// cached there — the PJRT implementation is `Rc`-based and must not
+/// cross threads, so the trait is deliberately not `Send`.
+pub trait ModelExecutor {
+    /// Which backend this executor runs on.
+    fn backend(&self) -> BackendKind;
+
+    /// Total flat parameter count P.
+    fn num_params(&self) -> usize;
+
+    /// Parameters in the classifier head (the featext-trainable tail).
+    fn head_size(&self) -> usize;
+
+    /// Fixed train batch size B.
+    fn train_batch_size(&self) -> usize;
+
+    /// Fixed (maximum) eval batch size.
+    fn eval_batch_size(&self) -> usize;
+
+    /// Local optimizer this executor was built for ("sgd" | "adam").
+    fn optimizer(&self) -> &str;
+
+    /// Fresh initial parameters (op 5: model loading). Deterministic per
+    /// (model, dataset) so every agent starts from the same W^0.
+    fn init_params(&self) -> Result<Vec<f32>>;
+
+    /// Pretrained parameters for finetune/featext starts.
+    fn pretrained_params(&self) -> Result<Vec<f32>>;
+
+    /// One SGD train step. `params` is updated in place.
+    fn train_step_sgd(
+        &self,
+        params: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepStats>;
+
+    /// One Adam train step. `params` and `state` update in place.
+    fn train_step_adam(
+        &self,
+        params: &mut Vec<f32>,
+        state: &mut AdamState,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepStats>;
+
+    /// Evaluate `params` on one (possibly short) batch; only the first
+    /// `n_valid` examples count — the tail is masked out.
+    fn eval_batch(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        n_valid: usize,
+    ) -> Result<EvalStats>;
+
+    /// Weighted-delta FedAvg aggregation (Eq. 2):
+    /// `global' = global + Σ w_i · delta_i`.
+    fn aggregate(
+        &self,
+        global: &[f32],
+        deltas: &[Vec<f32>],
+        weights: &[f32],
+    ) -> Result<Vec<f32>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse(" PJRT ").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.name(), "native");
+        assert_eq!(format!("{}", BackendKind::Pjrt), "pjrt");
+    }
+
+    #[test]
+    fn eval_stats_ratios() {
+        let e = EvalStats {
+            loss_sum: 10.0,
+            correct: 8.0,
+            count: 16.0,
+        };
+        assert!((e.mean_loss() - 0.625).abs() < 1e-12);
+        assert!((e.accuracy() - 0.5).abs() < 1e-12);
+        let z = EvalStats::default();
+        assert!(z.mean_loss().is_nan());
+        assert!(z.accuracy().is_nan());
+    }
+
+    #[test]
+    fn adam_state_zeroed() {
+        let s = AdamState::zeros(4);
+        assert_eq!(s.m, vec![0.0; 4]);
+        assert_eq!(s.v, vec![0.0; 4]);
+        assert_eq!(s.t, 0.0);
+    }
+}

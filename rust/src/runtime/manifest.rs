@@ -7,9 +7,10 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::util::error::{bail, Context, Result};
 use crate::util::Json;
+
+use super::backend::BackendKind;
 
 /// A dataset spec (paper Table 1 row), synthetic substitute.
 #[derive(Clone, Debug)]
@@ -65,8 +66,14 @@ pub struct ArtifactInfo {
 }
 
 /// Parsed manifest + the directory it lives in.
+///
+/// Describes the execution environment for either backend: loaded from
+/// `artifacts/manifest.json` for PJRT, or synthesised in memory by
+/// [`Manifest::native`] (procedural datasets, native MLP zoo, no files).
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Which backend this manifest describes.
+    pub backend: BackendKind,
     pub dir: PathBuf,
     pub train_batch: usize,
     pub eval_batch: usize,
@@ -77,6 +84,31 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The in-memory manifest of the native backend: procedural datasets
+    /// and the native MLP zoo — no files, no Python, no artifacts.
+    pub fn native() -> Self {
+        super::native::native_manifest()
+    }
+
+    /// Load the AOT manifest from `dir` when present (and the `pjrt`
+    /// feature is compiled in); fall back to the native manifest. A
+    /// present-but-unreadable manifest falls back loudly on stderr.
+    pub fn load_or_native(dir: impl AsRef<Path>) -> Self {
+        #[cfg(feature = "pjrt")]
+        if dir.as_ref().join("manifest.json").exists() {
+            match Self::load(&dir) {
+                Ok(m) => return m,
+                Err(e) => eprintln!(
+                    "warning: ignoring unreadable manifest in {:?} ({e}); \
+                     falling back to the native backend",
+                    dir.as_ref()
+                ),
+            }
+        }
+        let _ = dir;
+        Self::native()
+    }
+
     /// Load `dir/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
@@ -155,6 +187,7 @@ impl Manifest {
         }
 
         Ok(Self {
+            backend: BackendKind::Pjrt,
             dir,
             train_batch: v.req("train_batch")?.as_usize()?,
             eval_batch: v.req("eval_batch")?.as_usize()?,
@@ -259,5 +292,32 @@ mod tests {
     fn missing_dir_is_actionable_error() {
         let err = Manifest::load("/nonexistent-ferrisfl").unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn native_manifest_is_self_consistent() {
+        let m = Manifest::native();
+        assert_eq!(m.backend, BackendKind::Native);
+        assert!(!m.datasets.is_empty());
+        assert!(!m.zoo.is_empty());
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            assert!(m.datasets.contains_key(&a.dataset), "{}", a.id);
+            assert!(m.zoo.contains_key(&a.model), "{}", a.id);
+            assert!(a.num_params > a.head_size, "{}", a.id);
+        }
+        // Procedural datasets carry no template files.
+        for d in m.datasets.values() {
+            assert!(d.template_file.is_empty(), "{}", d.name);
+        }
+        let art = m.artifact("mlp-s", "synth-mnist").unwrap();
+        assert_eq!(art.id, "mlp-s_synth-mnist");
+        assert!(m.artifact("mlp-s", "nope").is_err());
+    }
+
+    #[test]
+    fn load_or_native_falls_back() {
+        let m = Manifest::load_or_native("/nonexistent-ferrisfl");
+        assert_eq!(m.backend, BackendKind::Native);
     }
 }

@@ -1,15 +1,28 @@
-//! PJRT runtime: the bridge from AOT artifacts to the rust hot path.
+//! Runtime: pluggable execution backends behind one executor trait.
 //!
-//! - [`manifest`] — parse `artifacts/manifest.json` (the L2↔L3 contract).
-//! - [`executor`] — PJRT client, compile cache, train/eval/aggregate
-//!   executables over the flat-parameter ABI.
+//! - [`backend`] — the [`ModelExecutor`] trait covering the five runtime
+//!   ops (SGD step, Adam step, masked eval, FedAvg aggregation, model
+//!   loading) plus [`BackendKind`] and the shared stat types.
+//! - [`native`] — the default pure-rust CPU backend: hermetic, no
+//!   Python/XLA/artifacts, multithreaded aggregation on the worker pool.
+//! - [`pjrt`] — the PJRT/XLA path over AOT artifacts (the Pallas-kernel
+//!   route), behind the optional `pjrt` cargo feature.
+//! - [`manifest`] — the environment descriptor: parsed from
+//!   `artifacts/manifest.json` for PJRT, or synthesised in memory by
+//!   [`Manifest::native`] for the native backend.
 //! - [`stats`] — marshalling/memory counters feeding the profiler
 //!   (paper Fig 10).
 
-pub mod executor;
+pub mod backend;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod stats;
 
-pub use executor::{AdamState, Device, EvalStats, ModelRuntime, StepStats};
+pub use backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepStats};
 pub use manifest::{ArtifactInfo, DatasetInfo, Manifest, ZooInfo};
+pub use native::NativeExecutor;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Device, PjrtRuntime};
 pub use stats::{snapshot, MemSnapshot};

@@ -1,0 +1,858 @@
+//! Pure-rust native CPU backend — hermetic execution for every runtime op.
+//!
+//! Implements [`ModelExecutor`] with an MLP forward/backward engine that
+//! needs no Python, XLA, or AOT artifacts: parameters are a flat `f32`
+//! buffer (same ABI as the PJRT path), initialisation is deterministic
+//! per (model, dataset), and "pretrained" weights are synthesised by a
+//! short deterministic burn-in. Conv-family zoo names (lenet5, cnn-m)
+//! execute as MLP surrogates of comparable capacity — the FL control
+//! plane above the executor is identical either way.
+//!
+//! Parallelism: local training already fans out across agents on the
+//! entrypoint's `util::threadpool::WorkerPool` (one executor per worker
+//! thread); the server-side FedAvg aggregation here additionally shards
+//! the parameter range across a process-wide `WorkerPool` once `K × P`
+//! is large enough to amortise the fan-out.
+//!
+//! Parameter layout per layer `l` (fan_in `i`, fan_out `o`):
+//! `W_l` row-major `[o × i]`, then `b_l` `[o]`; the classifier head is
+//! the final layer, so featext freezing is "tail of the flat buffer
+//! trainable, rest frozen" — matching the AOT artifact convention.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::error::{bail, Context, Result};
+use crate::util::{Rng, WorkerPool};
+
+use super::backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepStats};
+use super::manifest::{ArtifactInfo, DatasetInfo, Manifest, ZooInfo};
+use super::stats;
+
+/// Default train batch size of the native manifest.
+pub const TRAIN_BATCH: usize = 32;
+/// Default eval batch size of the native manifest.
+pub const EVAL_BATCH: usize = 128;
+/// Aggregations smaller than this many elements (K × P) run serially.
+const PAR_MIN_ELEMS: usize = 1 << 20;
+/// SGD steps of the deterministic pretraining burn-in.
+const PRETRAIN_STEPS: usize = 48;
+/// Learning rate of the pretraining burn-in.
+const PRETRAIN_LR: f32 = 0.1;
+/// Dataset seed used for pretraining data (independent of run seeds).
+const PRETRAIN_SEED: u64 = 0x5eed;
+
+/// FNV-1a, for deterministic per-(model, dataset) init streams.
+pub(crate) fn fnv1a(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The native model zoo: variant name -> hidden layer widths.
+///
+/// Kept in sync with [`native_manifest`]; conv-family names map to MLP
+/// surrogates so configs/benches written for the artifact zoo run
+/// unchanged on the native backend.
+pub fn hidden_layers(model: &str) -> Result<&'static [usize]> {
+    Ok(match model {
+        "micronet-05" => &[16],
+        "mlp-s" => &[64],
+        "mlp-m" => &[128, 64],
+        "lenet5" => &[120, 84],
+        "cnn-m" => &[256, 128],
+        other => bail!(
+            "native backend has no model {other:?} \
+             (micronet-05 | mlp-s | mlp-m | lenet5 | cnn-m)"
+        ),
+    })
+}
+
+/// Flat parameter count of an MLP `input -> hidden... -> classes`.
+pub fn param_count(input_dim: usize, hidden: &[usize], classes: usize) -> usize {
+    layer_dims(input_dim, hidden, classes)
+        .iter()
+        .map(|&(i, o)| (i + 1) * o)
+        .sum()
+}
+
+/// Head (final-layer) parameter count.
+pub fn head_count(hidden: &[usize], classes: usize) -> usize {
+    let last = hidden.last().copied().unwrap_or(0);
+    (last + 1) * classes
+}
+
+fn layer_dims(input_dim: usize, hidden: &[usize], classes: usize) -> Vec<(usize, usize)> {
+    let mut dims = Vec::with_capacity(hidden.len() + 1);
+    let mut fan_in = input_dim;
+    for &h in hidden {
+        dims.push((fan_in, h));
+        fan_in = h;
+    }
+    dims.push((fan_in, classes));
+    dims
+}
+
+fn pool() -> &'static Mutex<WorkerPool> {
+    static POOL: OnceLock<Mutex<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Mutex::new(WorkerPool::new(n.clamp(2, 8)))
+    })
+}
+
+/// A pure-rust MLP executor for one model@dataset.
+pub struct NativeExecutor {
+    model: String,
+    dataset: String,
+    /// (fan_in, fan_out) per layer; last layer is the classifier head.
+    dims: Vec<(usize, usize)>,
+    input_dim: usize,
+    classes: usize,
+    num_params: usize,
+    head_size: usize,
+    train_batch: usize,
+    eval_batch: usize,
+    optimizer: String,
+    featext: bool,
+    /// Environment handle, needed lazily by the pretraining burn-in.
+    manifest: Arc<Manifest>,
+    pretrained_cache: RefCell<Option<Vec<f32>>>,
+}
+
+impl NativeExecutor {
+    /// Build the executor for `model@dataset` described by `manifest`.
+    pub fn load(
+        manifest: &Arc<Manifest>,
+        model: &str,
+        dataset: &str,
+        optimizer: &str,
+        mode: &str,
+    ) -> Result<Self> {
+        if !matches!(optimizer, "sgd" | "adam") {
+            bail!("native backend: optimizer must be sgd or adam, got {optimizer:?}");
+        }
+        let featext = match mode {
+            "full" => false,
+            "featext" => true,
+            other => bail!("native backend: mode must be full or featext, got {other:?}"),
+        };
+        let ds = manifest.dataset(dataset)?;
+        let hidden = hidden_layers(model)?;
+        let input_dim = ds.example_len();
+        let classes = ds.num_classes;
+        let dims = layer_dims(input_dim, hidden, classes);
+        Ok(Self {
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            num_params: param_count(input_dim, hidden, classes),
+            head_size: head_count(hidden, classes),
+            dims,
+            input_dim,
+            classes,
+            train_batch: manifest.train_batch,
+            eval_batch: manifest.eval_batch,
+            optimizer: optimizer.to_string(),
+            featext,
+            manifest: Arc::clone(manifest),
+            pretrained_cache: RefCell::new(None),
+        })
+    }
+
+    /// Forward pass over `n` examples. Returns hidden post-relu
+    /// activations (one buffer per hidden layer) plus the logits.
+    fn forward(&self, params: &[f32], x: &[f32], n: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.dims.len() - 1);
+        let mut offset = 0usize;
+        let mut logits = Vec::new();
+        for (l, &(fan_in, fan_out)) in self.dims.iter().enumerate() {
+            let w = &params[offset..offset + fan_out * fan_in];
+            let b = &params[offset + fan_out * fan_in..offset + fan_out * (fan_in + 1)];
+            offset += fan_out * (fan_in + 1);
+            let last = l + 1 == self.dims.len();
+            let mut out = vec![0.0f32; n * fan_out];
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            for i in 0..n {
+                let xi = &input[i * fan_in..(i + 1) * fan_in];
+                let zi = &mut out[i * fan_out..(i + 1) * fan_out];
+                for (o, z) in zi.iter_mut().enumerate() {
+                    let row = &w[o * fan_in..(o + 1) * fan_in];
+                    let mut acc = b[o];
+                    for (rw, rx) in row.iter().zip(xi) {
+                        acc += rw * rx;
+                    }
+                    *z = if last { acc } else { acc.max(0.0) };
+                }
+            }
+            if last {
+                logits = out;
+            } else {
+                acts.push(out);
+            }
+        }
+        (acts, logits)
+    }
+
+    /// Softmax cross-entropy over `n` logits rows: per-example loss and
+    /// correctness, plus (optionally) `dz = (softmax - onehot) * scale`.
+    fn softmax_xent(
+        &self,
+        logits: &[f32],
+        y: &[i32],
+        n: usize,
+        dz_scale: Option<f32>,
+    ) -> (Vec<f32>, Vec<bool>, Vec<f32>) {
+        let c = self.classes;
+        let mut losses = vec![0.0f32; n];
+        let mut correct = vec![false; n];
+        let mut dz = if dz_scale.is_some() {
+            vec![0.0f32; n * c]
+        } else {
+            Vec::new()
+        };
+        for i in 0..n {
+            let z = &logits[i * c..(i + 1) * c];
+            let mut max = f32::NEG_INFINITY;
+            let mut argmax = 0usize;
+            for (j, &v) in z.iter().enumerate() {
+                if v > max {
+                    max = v;
+                    argmax = j;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &v in z {
+                sum += (v - max).exp();
+            }
+            let lse = max + sum.ln();
+            let label = y[i] as usize;
+            losses[i] = lse - z[label];
+            correct[i] = argmax == label;
+            if let Some(scale) = dz_scale {
+                let d = &mut dz[i * c..(i + 1) * c];
+                for (j, &v) in z.iter().enumerate() {
+                    d[j] = ((v - lse).exp() - if j == label { 1.0 } else { 0.0 }) * scale;
+                }
+            }
+        }
+        (losses, correct, dz)
+    }
+
+    /// Backward pass: gradient of the mean batch loss wrt `params`.
+    /// Under featext only the final (head) layer's gradient is produced;
+    /// frozen entries stay zero.
+    fn backward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        acts: &[Vec<f32>],
+        dz_last: Vec<f32>,
+        n: usize,
+        featext: bool,
+    ) -> Vec<f32> {
+        let mut grad = vec![0.0f32; self.num_params];
+        // Per-layer parameter offsets.
+        let mut offsets = Vec::with_capacity(self.dims.len());
+        let mut off = 0usize;
+        for &(fan_in, fan_out) in &self.dims {
+            offsets.push(off);
+            off += fan_out * (fan_in + 1);
+        }
+        let mut dz = dz_last;
+        for l in (0..self.dims.len()).rev() {
+            let (fan_in, fan_out) = self.dims[l];
+            let off = offsets[l];
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            {
+                let (gw, gb) =
+                    grad[off..off + fan_out * (fan_in + 1)].split_at_mut(fan_out * fan_in);
+                for i in 0..n {
+                    let xi = &input[i * fan_in..(i + 1) * fan_in];
+                    let di = &dz[i * fan_out..(i + 1) * fan_out];
+                    for (o, &d) in di.iter().enumerate() {
+                        if d != 0.0 {
+                            let row = &mut gw[o * fan_in..(o + 1) * fan_in];
+                            for (g, &v) in row.iter_mut().zip(xi) {
+                                *g += d * v;
+                            }
+                        }
+                        gb[o] += d;
+                    }
+                }
+            }
+            if l == 0 || (featext && l + 1 == self.dims.len()) {
+                break;
+            }
+            // da_prev = W^T dz, masked by relu' (prev activation > 0).
+            let w = &params[off..off + fan_out * fan_in];
+            let prev = &acts[l - 1];
+            let mut dprev = vec![0.0f32; n * fan_in];
+            for i in 0..n {
+                let di = &dz[i * fan_out..(i + 1) * fan_out];
+                let dpi = &mut dprev[i * fan_in..(i + 1) * fan_in];
+                for (o, &d) in di.iter().enumerate() {
+                    if d != 0.0 {
+                        let row = &w[o * fan_in..(o + 1) * fan_in];
+                        for (dp, &rw) in dpi.iter_mut().zip(row) {
+                            *dp += d * rw;
+                        }
+                    }
+                }
+                let ai = &prev[i * fan_in..(i + 1) * fan_in];
+                for (dp, &a) in dpi.iter_mut().zip(ai) {
+                    if a <= 0.0 {
+                        *dp = 0.0;
+                    }
+                }
+            }
+            dz = dprev;
+        }
+        grad
+    }
+
+    /// Shared step core: forward + loss + backward, returning the batch
+    /// gradient and stats. `featext` controls gradient masking.
+    fn batch_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        featext: bool,
+    ) -> Result<(Vec<f32>, StepStats)> {
+        let n = self.train_batch;
+        self.check_batch(params, x, y, n)?;
+        let (acts, logits) = self.forward(params, x, n);
+        let (losses, correct, dz) = self.softmax_xent(&logits, y, n, Some(1.0 / n as f32));
+        let grad = self.backward(params, x, &acts, dz, n, featext);
+        let act_bytes = (acts.iter().map(|a| a.len()).sum::<usize>() + logits.len()) * 4;
+        stats::add_execution();
+        stats::add_allocated(act_bytes as u64);
+        stats::add_freed(act_bytes as u64);
+        Ok((
+            grad,
+            StepStats {
+                loss: losses.iter().sum::<f32>() / n as f32,
+                hits: correct.iter().filter(|&&c| c).count() as f32,
+            },
+        ))
+    }
+
+    fn check_batch(&self, params: &[f32], x: &[f32], y: &[i32], n: usize) -> Result<()> {
+        if params.len() != self.num_params {
+            bail!(
+                "{}@{}: params has {} entries, executor wants {}",
+                self.model,
+                self.dataset,
+                params.len(),
+                self.num_params
+            );
+        }
+        if x.len() < n * self.input_dim || y.len() < n {
+            bail!(
+                "{}@{}: batch holds {} examples / {} labels, step wants {n}",
+                self.model,
+                self.dataset,
+                x.len() / self.input_dim.max(1),
+                y.len()
+            );
+        }
+        for &label in &y[..n] {
+            if label < 0 || label as usize >= self.classes {
+                bail!("label {label} out of range for {} classes", self.classes);
+            }
+        }
+        Ok(())
+    }
+
+    /// First flat index the optimizer may touch (featext freezes the
+    /// backbone, i.e. everything before the head).
+    fn trainable_from(&self, featext: bool) -> usize {
+        if featext {
+            self.num_params - self.head_size
+        } else {
+            0
+        }
+    }
+
+    /// A full-mode SGD step, independent of the executor's own mode —
+    /// used by the pretraining burn-in.
+    fn sgd_step(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        featext: bool,
+    ) -> Result<StepStats> {
+        let (grad, step) = self.batch_grad(params, x, y, featext)?;
+        let from = self.trainable_from(featext);
+        for (p, g) in params[from..].iter_mut().zip(&grad[from..]) {
+            *p -= lr * g;
+        }
+        Ok(step)
+    }
+}
+
+impl ModelExecutor for NativeExecutor {
+    fn backend(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    fn head_size(&self) -> usize {
+        self.head_size
+    }
+
+    fn train_batch_size(&self) -> usize {
+        self.train_batch
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn optimizer(&self) -> &str {
+        &self.optimizer
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        // He-normal weights, zero biases, seeded by (model, dataset) so
+        // every worker/agent derives the identical W^0.
+        let mut rng = Rng::new(fnv1a(&format!("{}@{}", self.model, self.dataset)) ^ 0x1217);
+        let mut params = Vec::with_capacity(self.num_params);
+        for &(fan_in, fan_out) in &self.dims {
+            let std = (2.0 / fan_in as f32).sqrt();
+            for _ in 0..fan_out * fan_in {
+                params.push(rng.next_gaussian() * std);
+            }
+            params.resize(params.len() + fan_out, 0.0);
+        }
+        Ok(params)
+    }
+
+    fn pretrained_params(&self) -> Result<Vec<f32>> {
+        if let Some(p) = self.pretrained_cache.borrow().as_ref() {
+            return Ok(p.clone());
+        }
+        // Deterministic burn-in: a short full-mode SGD run over the
+        // canonical synthetic data stands in for the zoo's published
+        // pretrained checkpoints. The dataset is only built here, so
+        // scratch-mode runs never pay for it.
+        let data = crate::datasets::Dataset::load(&self.manifest, &self.dataset, PRETRAIN_SEED)
+            .with_context(|| {
+                format!("loading pretrain data for {}@{}", self.model, self.dataset)
+            })?;
+        let mut params = self.init_params()?;
+        let b = self.train_batch;
+        let n = data.num_train();
+        for step in 0..PRETRAIN_STEPS {
+            let idx: Vec<usize> = (0..b).map(|i| (step * b + i) % n).collect();
+            let batch = data.batch(crate::datasets::Split::Train, &idx);
+            self.sgd_step(&mut params, &batch.x, &batch.y, PRETRAIN_LR, false)?;
+        }
+        *self.pretrained_cache.borrow_mut() = Some(params.clone());
+        Ok(params)
+    }
+
+    fn train_step_sgd(
+        &self,
+        params: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepStats> {
+        self.sgd_step(params, x, y, lr, self.featext)
+    }
+
+    fn train_step_adam(
+        &self,
+        params: &mut Vec<f32>,
+        state: &mut AdamState,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<StepStats> {
+        if state.m.len() != self.num_params || state.v.len() != self.num_params {
+            bail!(
+                "adam state sized {} but executor has {} params",
+                state.m.len(),
+                self.num_params
+            );
+        }
+        let (grad, step) = self.batch_grad(params, x, y, self.featext)?;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        state.t += 1.0;
+        let bc1 = 1.0 - b1.powf(state.t);
+        let bc2 = 1.0 - b2.powf(state.t);
+        let from = self.trainable_from(self.featext);
+        for i in from..self.num_params {
+            let g = grad[i];
+            state.m[i] = b1 * state.m[i] + (1.0 - b1) * g;
+            state.v[i] = b2 * state.v[i] + (1.0 - b2) * g * g;
+            let mhat = state.m[i] / bc1;
+            let vhat = state.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        Ok(step)
+    }
+
+    fn eval_batch(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        n_valid: usize,
+    ) -> Result<EvalStats> {
+        if n_valid > self.eval_batch {
+            bail!("eval batch of {n_valid} exceeds eval_batch={}", self.eval_batch);
+        }
+        self.check_batch(params, x, y, n_valid)?;
+        // No padding needed on the host: just score the valid prefix
+        // (the mask semantics of the PJRT graph, computed directly).
+        let (_, logits) = self.forward(params, &x[..n_valid * self.input_dim], n_valid);
+        let (losses, correct, _) = self.softmax_xent(&logits, y, n_valid, None);
+        stats::add_execution();
+        Ok(EvalStats {
+            loss_sum: losses.iter().map(|&l| l as f64).sum(),
+            correct: correct.iter().filter(|&&c| c).count() as f64,
+            count: n_valid as f64,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        global: &[f32],
+        deltas: &[Vec<f32>],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        let k = deltas.len();
+        if k != weights.len() {
+            bail!("{k} deltas but {} weights", weights.len());
+        }
+        for (i, d) in deltas.iter().enumerate() {
+            if d.len() != global.len() {
+                bail!("delta {i} has {} params, global has {}", d.len(), global.len());
+            }
+        }
+        let p = global.len();
+        if k == 0 {
+            return Ok(global.to_vec());
+        }
+        if k * p < PAR_MIN_ELEMS {
+            return Ok(weighted_sum_range(global, deltas, weights, 0, p));
+        }
+        // Shard the parameter range across the process-wide pool. The
+        // pool's jobs are 'static, so the borrowed inputs are copied
+        // into Arcs here — one extra pass over memory the f64-accumulate
+        // loop reads K times anyway (only paid above PAR_MIN_ELEMS).
+        let pool = pool().lock().expect("aggregation pool poisoned");
+        let jobs_n = pool.size().min(p);
+        let chunk = p.div_ceil(jobs_n);
+        let global = Arc::new(global.to_vec());
+        let deltas = Arc::new(deltas.to_vec());
+        let weights = Arc::new(weights.to_vec());
+        let jobs: Vec<_> = (0..jobs_n)
+            .map(|j| {
+                let global = Arc::clone(&global);
+                let deltas = Arc::clone(&deltas);
+                let weights = Arc::clone(&weights);
+                move |_wid: usize| {
+                    let lo = (j * chunk).min(global.len());
+                    let hi = ((j + 1) * chunk).min(global.len());
+                    weighted_sum_range(&global, &deltas, &weights, lo, hi)
+                }
+            })
+            .collect();
+        let parts = pool.run(jobs);
+        let mut out = Vec::with_capacity(p);
+        for part in parts {
+            out.extend_from_slice(&part);
+        }
+        Ok(out)
+    }
+}
+
+/// `out[j] = global[j] + Σ_i w_i · delta_i[j]` over `[lo, hi)`,
+/// accumulated in f64 so the result agrees with `fedavg_host` to well
+/// under 1e-5 regardless of summation order.
+fn weighted_sum_range(
+    global: &[f32],
+    deltas: &[Vec<f32>],
+    weights: &[f32],
+    lo: usize,
+    hi: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(hi - lo);
+    for j in lo..hi {
+        let mut acc = global[j] as f64;
+        for (d, &w) in deltas.iter().zip(weights) {
+            acc += w as f64 * d[j] as f64;
+        }
+        out.push(acc as f32);
+    }
+    out
+}
+
+fn native_dataset(
+    name: &str,
+    group: &str,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    real: (usize, usize),
+    noise: f32,
+) -> DatasetInfo {
+    DatasetInfo {
+        name: name.to_string(),
+        group: group.to_string(),
+        height: h,
+        width: w,
+        channels: c,
+        num_classes: classes,
+        train_n: 2048,
+        test_n: 512,
+        real_train_n: real.0,
+        real_test_n: real.1,
+        noise,
+        jitter: 2,
+        // Empty => Dataset::load synthesises class templates procedurally.
+        template_file: String::new(),
+    }
+}
+
+/// Build the in-memory manifest of the native backend: procedural
+/// datasets, the native MLP zoo, and one "artifact" per runnable
+/// model@dataset pair (entry files are empty — nothing is on disk).
+pub fn native_manifest() -> Manifest {
+    let datasets: Vec<DatasetInfo> = vec![
+        native_dataset("synth-mnist", "MNIST", 28, 28, 1, 10, (60_000, 10_000), 0.15),
+        native_dataset("synth-fmnist", "FashionMNIST", 28, 28, 1, 10, (60_000, 10_000), 0.2),
+        native_dataset("synth-cifar10", "CIFAR", 32, 32, 3, 10, (50_000, 10_000), 0.2),
+        native_dataset("synth-cifar100", "CIFAR", 32, 32, 3, 100, (50_000, 10_000), 0.2),
+    ];
+    let zoo_rows: &[(&str, &str, &str, &str)] = &[
+        ("micronet-05", "MicroNet", "tiny MLP head for federated transfer", "synth-mnist"),
+        ("mlp-s", "MLP", "one hidden layer, MNIST-scale", "synth-mnist"),
+        ("mlp-m", "MLP", "two hidden layers, MNIST-scale", "synth-mnist"),
+        ("lenet5", "LeNet", "LeNet-5 capacity (MLP surrogate)", "synth-mnist"),
+        ("cnn-m", "CNN", "mid-size CNN capacity (MLP surrogate)", "synth-cifar10"),
+    ];
+    let pairs: &[(&str, &str)] = &[
+        ("micronet-05", "synth-mnist"),
+        ("mlp-s", "synth-mnist"),
+        ("mlp-m", "synth-mnist"),
+        ("lenet5", "synth-mnist"),
+        ("cnn-m", "synth-cifar10"),
+    ];
+
+    let ds_map: BTreeMap<String, DatasetInfo> =
+        datasets.into_iter().map(|d| (d.name.clone(), d)).collect();
+
+    let mut zoo = BTreeMap::new();
+    for &(variant, family, description, canonical) in zoo_rows {
+        let hidden = hidden_layers(variant).expect("zoo row");
+        let ds = &ds_map[canonical];
+        zoo.insert(
+            variant.to_string(),
+            ZooInfo {
+                variant: variant.to_string(),
+                family: family.to_string(),
+                description: description.to_string(),
+                canonical_dataset: canonical.to_string(),
+                num_params: param_count(ds.example_len(), hidden, ds.num_classes),
+                head_size: head_count(hidden, ds.num_classes),
+                feature_extract: true,
+                finetune: true,
+            },
+        );
+    }
+
+    let mut artifacts = Vec::new();
+    for &(model, dataset) in pairs {
+        let hidden = hidden_layers(model).expect("artifact pair");
+        let ds = &ds_map[dataset];
+        let entries: BTreeMap<String, String> = [
+            "train_sgd_full",
+            "train_adam_full",
+            "train_sgd_featext",
+            "train_adam_featext",
+            "eval",
+        ]
+        .iter()
+        .map(|&e| (e.to_string(), String::new()))
+        .collect();
+        artifacts.push(ArtifactInfo {
+            id: format!("{model}_{dataset}"),
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            num_params: param_count(ds.example_len(), hidden, ds.num_classes),
+            head_size: head_count(hidden, ds.num_classes),
+            entries,
+            agg_file: String::new(),
+            init_file: String::new(),
+            pretrained_file: Some(String::new()),
+        });
+    }
+
+    Manifest {
+        backend: BackendKind::Native,
+        dir: PathBuf::from("<native>"),
+        train_batch: TRAIN_BATCH,
+        eval_batch: EVAL_BATCH,
+        k_pad: 64,
+        datasets: ds_map,
+        zoo,
+        artifacts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Split;
+
+    fn executor(model: &str, dataset: &str, optimizer: &str, mode: &str) -> NativeExecutor {
+        let m = Arc::new(native_manifest());
+        NativeExecutor::load(&m, model, dataset, optimizer, mode).unwrap()
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        // 784 -> 16 -> 10: (784+1)*16 + (16+1)*10 = 12560 + 170.
+        assert_eq!(param_count(784, &[16], 10), 12730);
+        assert_eq!(head_count(&[16], 10), 170);
+        let e = executor("micronet-05", "synth-mnist", "sgd", "full");
+        assert_eq!(e.num_params(), 12730);
+        assert_eq!(e.init_params().unwrap().len(), 12730);
+    }
+
+    #[test]
+    fn manifest_artifacts_agree_with_executors() {
+        let m = Arc::new(native_manifest());
+        for art in &m.artifacts {
+            let e = NativeExecutor::load(&m, &art.model, &art.dataset, "sgd", "full").unwrap();
+            assert_eq!(e.num_params(), art.num_params, "{}", art.id);
+            assert_eq!(e.head_size(), art.head_size, "{}", art.id);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_model_specific() {
+        let a = executor("mlp-s", "synth-mnist", "sgd", "full");
+        let b = executor("mlp-s", "synth-mnist", "adam", "featext");
+        assert_eq!(a.init_params().unwrap(), b.init_params().unwrap());
+        let c = executor("lenet5", "synth-mnist", "sgd", "full");
+        assert_ne!(
+            a.init_params().unwrap()[..16],
+            c.init_params().unwrap()[..16]
+        );
+    }
+
+    #[test]
+    fn sgd_overfits_one_batch() {
+        let m = Arc::new(native_manifest());
+        let e = NativeExecutor::load(&m, "mlp-s", "synth-mnist", "sgd", "full").unwrap();
+        let ds = crate::datasets::Dataset::load(&m, "synth-mnist", 1).unwrap();
+        let idx: Vec<usize> = (0..e.train_batch_size()).collect();
+        let batch = ds.batch(Split::Train, &idx);
+        let mut params = e.init_params().unwrap();
+        let first = e.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05).unwrap();
+        let mut last = first;
+        for _ in 0..20 {
+            last = e.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05).unwrap();
+        }
+        assert!(
+            last.loss < first.loss * 0.8,
+            "loss should drop when overfitting one batch: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(last.hits >= first.hits);
+    }
+
+    #[test]
+    fn featext_freezes_backbone() {
+        let e = executor("mlp-s", "synth-mnist", "sgd", "featext");
+        let m = native_manifest();
+        let ds = crate::datasets::Dataset::load(&m, "synth-mnist", 5).unwrap();
+        let pre = e.pretrained_params().unwrap();
+        let mut params = pre.clone();
+        let idx: Vec<usize> = (0..e.train_batch_size()).collect();
+        let batch = ds.batch(Split::Train, &idx);
+        e.train_step_sgd(&mut params, &batch.x, &batch.y, 0.1).unwrap();
+        let backbone = e.num_params() - e.head_size();
+        assert_eq!(params[..backbone], pre[..backbone], "backbone must stay frozen");
+        assert_ne!(params[backbone..], pre[backbone..], "head must move");
+    }
+
+    #[test]
+    fn adam_tracks_state() {
+        let m = Arc::new(native_manifest());
+        let e = NativeExecutor::load(&m, "micronet-05", "synth-mnist", "adam", "full").unwrap();
+        let ds = crate::datasets::Dataset::load(&m, "synth-mnist", 9).unwrap();
+        let mut params = e.init_params().unwrap();
+        let mut state = AdamState::zeros(params.len());
+        let idx: Vec<usize> = (0..e.train_batch_size()).collect();
+        let batch = ds.batch(Split::Train, &idx);
+        e.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01).unwrap();
+        assert_eq!(state.t, 1.0);
+        e.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01).unwrap();
+        assert_eq!(state.t, 2.0);
+        assert!(state.m.iter().any(|&v| v != 0.0), "moment must update");
+    }
+
+    #[test]
+    fn eval_prefix_matches_short_batch() {
+        let m = Arc::new(native_manifest());
+        let e = NativeExecutor::load(&m, "mlp-s", "synth-mnist", "sgd", "full").unwrap();
+        let ds = crate::datasets::Dataset::load(&m, "synth-mnist", 3).unwrap();
+        let params = e.init_params().unwrap();
+        let idx: Vec<usize> = (0..40).collect();
+        let short = ds.batch(Split::Test, &idx);
+        let s = e.eval_batch(&params, &short.x, &short.y, 40).unwrap();
+        let idx_full: Vec<usize> = (0..e.eval_batch_size()).collect();
+        let full = ds.batch(Split::Test, &idx_full);
+        let masked = e.eval_batch(&params, &full.x, &full.y, 40).unwrap();
+        assert_eq!(s.count, 40.0);
+        assert_eq!(s.correct, masked.correct);
+        assert!((s.loss_sum - masked.loss_sum).abs() < 1e-4);
+    }
+
+    #[test]
+    fn aggregate_checks_shapes() {
+        let e = executor("micronet-05", "synth-mnist", "sgd", "full");
+        let global = vec![0.0f32; 8];
+        assert!(e.aggregate(&global, &[vec![0.0; 7]], &[1.0]).is_err());
+        assert!(e.aggregate(&global, &[vec![0.0; 8]], &[1.0, 2.0]).is_err());
+        let out = e.aggregate(&global, &[], &[]).unwrap();
+        assert_eq!(out, global);
+    }
+
+    #[test]
+    fn parallel_and_serial_aggregation_agree() {
+        let e = executor("micronet-05", "synth-mnist", "sgd", "full");
+        let mut rng = Rng::new(0xA66);
+        // Large enough that k*p crosses PAR_MIN_ELEMS (pool path).
+        let p = (PAR_MIN_ELEMS / 4) + 13;
+        let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let deltas: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..p).map(|_| rng.next_gaussian() * 0.01).collect())
+            .collect();
+        let weights = [0.4f32, 0.3, 0.2, 0.1];
+        let par = e.aggregate(&global, &deltas, &weights).unwrap();
+        let serial = weighted_sum_range(&global, &deltas, &weights, 0, p);
+        assert_eq!(par.len(), p);
+        for (a, b) in par.iter().zip(&serial) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,8 +1,9 @@
-//! PJRT execution: load HLO text, compile once, run from the hot path.
+//! PJRT execution backend: load HLO text, compile once, run hot.
 //!
-//! Wraps the `xla` crate (PJRT C API) exactly as the reference in
-//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Gated behind the `pjrt` cargo feature — enabling it requires the
+//! vendored `xla` crate (see rust/Cargo.toml).
 //!
 //! The `xla` wrappers are `Rc`-based (not `Send`), so a `Device` and
 //! everything loaded on it live on ONE thread. The worker pool gives each
@@ -13,9 +14,11 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, err, Context, Result};
 
+use super::backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepStats};
 use super::manifest::{ArtifactInfo, DatasetInfo, Manifest};
 use super::stats;
 
@@ -29,7 +32,8 @@ impl Device {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
         Ok(Self {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| err!("creating PJRT CPU client: {e}"))?,
             cache: RefCell::new(HashMap::new()),
         })
     }
@@ -46,16 +50,14 @@ impl Device {
             return Ok(Rc::clone(exe));
         }
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e}"))?;
+            .map_err(|e| err!("parsing HLO {path:?}: {e}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Rc::new(
             self.client
                 .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?,
+                .map_err(|e| err!("compiling {path:?}: {e}"))?,
         );
-        self.cache
-            .borrow_mut()
-            .insert(path, Rc::clone(&exe));
+        self.cache.borrow_mut().insert(path, Rc::clone(&exe));
         Ok(exe)
     }
 }
@@ -68,7 +70,7 @@ fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla
     stats::add_execution();
     let mut outs = exe
         .execute::<xla::Literal>(args)
-        .map_err(|e| anyhow::anyhow!("PJRT execute: {e}"))?;
+        .map_err(|e| err!("PJRT execute: {e}"))?;
     stats::add_freed(in_bytes as u64);
     if outs.is_empty() || outs[0].is_empty() {
         bail!("executable returned no outputs");
@@ -77,13 +79,11 @@ fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla
         .swap_remove(0)
         .swap_remove(0)
         .to_literal_sync()
-        .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        .map_err(|e| err!("fetching result: {e}"))?;
     // aot.py lowers with return_tuple=True: the root is always a tuple.
     // NOTE: size_bytes() must only be called on the *elements* — XLA's
     // ByteSizeOf CHECK-fails on tuple shapes (pointer_size = -1).
-    let elems = root
-        .to_tuple()
-        .map_err(|e| anyhow::anyhow!("untupling result: {e}"))?;
+    let elems = root.to_tuple().map_err(|e| err!("untupling result: {e}"))?;
     let out_bytes: usize = elems.iter().map(|l| l.size_bytes()).sum();
     stats::add_allocated(out_bytes as u64);
     stats::add_freed(out_bytes as u64);
@@ -93,74 +93,21 @@ fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla
 fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data)
         .reshape(dims)
-        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+        .map_err(|e| err!("reshape {dims:?}: {e}"))
 }
 
 fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data)
         .reshape(dims)
-        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+        .map_err(|e| err!("reshape {dims:?}: {e}"))
 }
 
 fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-    l.to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e}"))
+    l.to_vec::<f32>().map_err(|e| err!("literal to f32 vec: {e}"))
 }
 
 fn scalar_f32(l: &xla::Literal) -> Result<f32> {
-    l.get_first_element::<f32>()
-        .map_err(|e| anyhow::anyhow!("scalar: {e}"))
-}
-
-/// Result of one train step.
-#[derive(Clone, Copy, Debug)]
-pub struct StepStats {
-    pub loss: f32,
-    pub hits: f32,
-}
-
-/// Aggregate eval result over a full test set.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct EvalStats {
-    pub loss_sum: f64,
-    pub correct: f64,
-    pub count: f64,
-}
-
-impl EvalStats {
-    pub fn mean_loss(&self) -> f64 {
-        if self.count > 0.0 {
-            self.loss_sum / self.count
-        } else {
-            f64::NAN
-        }
-    }
-
-    pub fn accuracy(&self) -> f64 {
-        if self.count > 0.0 {
-            self.correct / self.count
-        } else {
-            f64::NAN
-        }
-    }
-}
-
-/// Adam optimizer state held by the coordinator between local epochs.
-#[derive(Clone, Debug)]
-pub struct AdamState {
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub t: f32,
-}
-
-impl AdamState {
-    pub fn zeros(p: usize) -> Self {
-        Self {
-            m: vec![0.0; p],
-            v: vec![0.0; p],
-            t: 0.0,
-        }
-    }
+    l.get_first_element::<f32>().map_err(|e| err!("scalar: {e}"))
 }
 
 /// Everything needed to train/eval one model@dataset on one device.
@@ -168,7 +115,7 @@ impl AdamState {
 /// Loads the train entry named by (`optimizer`, `mode`) — e.g.
 /// ("sgd", "full") → `train_sgd_full` — plus eval and the FedAvg
 /// aggregation executable.
-pub struct ModelRuntime {
+pub struct PjrtRuntime {
     pub train_exe: Rc<xla::PjRtLoadedExecutable>,
     pub eval_exe: Rc<xla::PjRtLoadedExecutable>,
     pub agg_exe: Rc<xla::PjRtLoadedExecutable>,
@@ -179,14 +126,17 @@ pub struct ModelRuntime {
     pub k_pad: usize,
     pub input_dims: Vec<i64>, // [H, W, C]
     pub optimizer: String,
+    manifest: Arc<Manifest>,
+    init_file: String,
+    pretrained_file: Option<String>,
 }
 
-impl ModelRuntime {
+impl PjrtRuntime {
     /// Load the runtime for `art` on `device`. `entry_tag` selects kernel
     /// vs reference artifacts ("" or "_ref").
     pub fn load(
         device: &Device,
-        manifest: &Manifest,
+        manifest: &Arc<Manifest>,
         art: &ArtifactInfo,
         ds: &DatasetInfo,
         optimizer: &str,
@@ -217,6 +167,9 @@ impl ModelRuntime {
             k_pad: manifest.k_pad,
             input_dims: vec![ds.height as i64, ds.width as i64, ds.channels as i64],
             optimizer: optimizer.to_string(),
+            manifest: Arc::clone(manifest),
+            init_file: art.init_file.clone(),
+            pretrained_file: art.pretrained_file.clone(),
         })
     }
 
@@ -225,9 +178,46 @@ impl ModelRuntime {
         d.extend_from_slice(&self.input_dims);
         d
     }
+}
+
+impl ModelExecutor for PjrtRuntime {
+    fn backend(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    fn head_size(&self) -> usize {
+        self.head_size
+    }
+
+    fn train_batch_size(&self) -> usize {
+        self.train_batch
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn optimizer(&self) -> &str {
+        &self.optimizer
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        self.manifest.read_f32(&self.init_file)
+    }
+
+    fn pretrained_params(&self) -> Result<Vec<f32>> {
+        let f = self.pretrained_file.as_ref().context(
+            "artifact has no pretrained weights (set pretrain=True in python/compile/aot.py)",
+        )?;
+        self.manifest.read_f32(f)
+    }
 
     /// One SGD train step. `params` is updated in place.
-    pub fn train_step_sgd(
+    fn train_step_sgd(
         &self,
         params: &mut Vec<f32>,
         x: &[f32],
@@ -254,7 +244,7 @@ impl ModelRuntime {
     }
 
     /// One Adam train step. `params` and `state` update in place.
-    pub fn train_step_adam(
+    fn train_step_adam(
         &self,
         params: &mut Vec<f32>,
         state: &mut AdamState,
@@ -289,7 +279,7 @@ impl ModelRuntime {
     /// Evaluate `params` on one (possibly short) batch; `x`/`y` may hold
     /// fewer than `eval_batch` examples — the tail is zero-padded and
     /// masked out inside the graph.
-    pub fn eval_batch(
+    fn eval_batch(
         &self,
         params: &[f32],
         x: &[f32],
@@ -327,7 +317,7 @@ impl ModelRuntime {
     /// FedAvg aggregation on the PJRT path (the L1 Pallas kernel):
     /// `global' = global + Σ w_i · delta_i`, with zero-padding up to
     /// `k_pad` (exact by the kernel's weighted-sum semantics).
-    pub fn aggregate(
+    fn aggregate(
         &self,
         global: &[f32],
         deltas: &[Vec<f32>],

@@ -15,9 +15,8 @@
 //!
 //! All samplers return distinct agent ids and respect `k <= n`.
 
-use anyhow::{bail, Result};
-
 use crate::agents::Agent;
+use crate::util::error::{bail, Result};
 use crate::util::Rng;
 
 /// Strategy interface for per-round agent selection.

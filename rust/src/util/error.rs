@@ -1,0 +1,151 @@
+//! First-party error handling (anyhow-style, zero dependencies).
+//!
+//! The crate previously leaned on the `anyhow` crate; to keep the
+//! default build fully hermetic (no registry access, no vendored set),
+//! this module provides the small slice of that API the codebase uses:
+//! a string-backed [`Error`], a [`Result`] alias, the [`Context`]
+//! extension for `Result` and `Option`, and the [`err!`]/[`bail!`]
+//! macros.
+//!
+//! `Error` deliberately does **not** implement `std::error::Error`, so
+//! the blanket `From<E: std::error::Error>` conversion (which powers
+//! `?` on io/parse errors) cannot overlap the reflexive `From` impl.
+
+use std::fmt;
+
+/// A boxed-string error with its context chain pre-rendered.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Self {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = std::error::Error::source(&e);
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures (`Result`) or absences (`Option`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("bad value {v}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`]: `bail!("bad value {v}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+// Make the macros importable from this module as well as the crate root.
+pub use crate::{bail, err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 7)
+    }
+
+    #[test]
+    fn bail_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner 7");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        let e = parse("nope").unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(3).context("never seen").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_keeps_source_chain() {
+        let e: Error = std::fs::read_to_string("/nonexistent-ferrisfl-err")
+            .context("reading config")
+            .unwrap_err();
+        let text = format!("{e}");
+        assert!(text.starts_with("reading config:"), "{text}");
+    }
+}

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use super::error::{bail, err, Result};
 
 /// A JSON value. Objects use a `BTreeMap` so output is deterministic.
 #[derive(Clone, Debug, PartialEq)]
@@ -33,7 +33,7 @@ impl Json {
     /// `obj["key"]` with a descriptive error.
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow!("missing JSON key {key:?}"))
+            .ok_or_else(|| err!("missing JSON key {key:?}"))
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -297,14 +297,14 @@ impl<'a> Parser<'a> {
                             let hex = self
                                 .bytes
                                 .get(self.pos + 1..self.pos + 5)
-                                .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                                .ok_or_else(|| err!("bad \\u escape"))?;
                             let code = u32::from_str_radix(
                                 std::str::from_utf8(hex)?,
                                 16,
                             )?;
                             s.push(
                                 char::from_u32(code)
-                                    .ok_or_else(|| anyhow!("bad codepoint"))?,
+                                    .ok_or_else(|| err!("bad codepoint"))?,
                             );
                             self.pos += 4;
                         }

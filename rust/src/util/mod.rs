@@ -1,14 +1,16 @@
-//! Zero-dependency substrates: RNG, JSON, and a worker pool.
+//! Zero-dependency substrates: errors, RNG, JSON, and a worker pool.
 //!
-//! FerrisFL builds fully offline against a vendored crate set that carries
-//! only `xla` and `anyhow`, so the small infrastructure pieces a project
-//! would normally pull from crates.io (rand, serde_json, tokio/rayon) are
-//! implemented here, each with its own unit tests.
+//! FerrisFL builds fully offline with **no external crates at all**, so
+//! the small infrastructure pieces a project would normally pull from
+//! crates.io (anyhow, rand, serde_json, tokio/rayon) are implemented
+//! here, each with its own unit tests.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod threadpool;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
 pub use threadpool::WorkerPool;

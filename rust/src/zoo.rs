@@ -95,4 +95,16 @@ mod tests {
         let t3 = artifacts_table(&m);
         assert!(t3.contains("lenet5_synth-mnist"));
     }
+
+    #[test]
+    fn tables_render_native_manifest() {
+        let m = Manifest::native();
+        let t1 = datasets_table(&m);
+        assert_eq!(t1.lines().count(), 2 + m.datasets.len());
+        assert!(t1.contains("synth-mnist"));
+        let t2 = models_table(&m);
+        assert!(t2.contains("mlp-s"));
+        let t3 = artifacts_table(&m);
+        assert!(t3.contains("lenet5_synth-mnist"));
+    }
 }

@@ -182,7 +182,7 @@ fn prop_fedavg_zero_weight_rows_are_noops() {
         let extra = 1 + rng.next_below(4) as usize;
         ups_pad.extend(random_updates(rng, extra, p));
         let mut w_pad = w.clone();
-        w_pad.extend(std::iter::repeat(0.0).take(extra));
+        w_pad.resize(w_pad.len() + extra, 0.0);
         let padded = fedavg_host(&global, &ups_pad, &w_pad);
         for (a, b) in base.iter().zip(&padded) {
             assert!((a - b).abs() < 1e-5);
