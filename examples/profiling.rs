@@ -34,13 +34,14 @@ fn main() -> Result<()> {
     with_runtime(&manifest, &key, |rt| {
         let mut params = rt.init_params()?;
         let b = rt.train_batch_size();
+        let mut scratch = rt.new_scratch();
         let mut start = 0;
         while start + b <= n {
             let idx: Vec<usize> = (start..start + b).collect();
             let batch =
                 profiler.time("batch_synthesis", || dataset.batch(Split::Train, &idx));
             profiler.time("optimizer_step", || {
-                rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)
+                rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)
             })?;
             tracker.sample_batch();
             start += b;

@@ -4,16 +4,18 @@
 //! path, or the L1 Pallas kernel under PJRT) against the pure-rust host
 //! reference and the robust rules, over the zoo's parameter sizes and a
 //! K sweep. Backs EXPERIMENTS.md §Perf and the aggregator ablation.
+//! Emits the `aggregation` section of `BENCH_native.json` (GB/s per
+//! model and cohort size).
 //!
 //! Run: `cargo bench --bench agg_throughput`
 
 use std::sync::Arc;
 
 use ferrisfl::aggregators::{self, fedavg_host, sample_weights, Update};
-use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::benchutil::{bench, header, merge_section, report, scaled_iters};
 use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
 use ferrisfl::runtime::Manifest;
-use ferrisfl::util::Rng;
+use ferrisfl::util::{Json, Rng};
 
 fn updates(rng: &mut Rng, k: usize, p: usize) -> Vec<Update> {
     (0..k)
@@ -29,6 +31,8 @@ fn main() {
     let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     let backend = manifest.backend;
     let mut rng = Rng::new(0xbe7c);
+    let iters = scaled_iters(8);
+    let mut rows: Vec<(String, Json)> = Vec::new();
 
     for (model, dataset) in [
         ("micronet-05", "synth-mnist"),
@@ -53,31 +57,54 @@ fn main() {
             let w = sample_weights(&ups);
             let deltas: Vec<Vec<f32>> = ups.iter().map(|u| u.delta.clone()).collect();
             // bytes touched per aggregation: read K*P deltas + read/write P
-            let gib = ((k + 2) * p * 4) as f64 / (1024.0 * 1024.0 * 1024.0);
+            let bytes = ((k + 2) * p * 4) as f64;
 
             let s = with_runtime(&manifest, &key, |rt| {
-                Ok(bench(2, 8, || rt.aggregate(&global, &deltas, &w).unwrap()))
+                Ok(bench(2, iters, || rt.aggregate(&global, &deltas, &w).unwrap()))
             })
             .unwrap();
             report(
                 &format!("{backend} offload K={k}"),
                 &s,
-                &format!("{:.2} GiB/s", gib / s.mean),
+                &format!("{:.2} GB/s", s.gb_per_sec(bytes)),
             );
+            rows.push((
+                format!("{model} K={k} offload"),
+                Json::obj(vec![
+                    ("mean_ms", Json::num(s.mean * 1e3)),
+                    ("gb_per_sec", Json::num(s.gb_per_sec(bytes))),
+                ]),
+            ));
 
-            let s = bench(2, 8, || fedavg_host(&global, &ups, &w));
+            let s = bench(2, iters, || fedavg_host(&global, &ups, &w));
             report(
                 &format!("rust host    K={k}"),
                 &s,
-                &format!("{:.2} GiB/s", gib / s.mean),
+                &format!("{:.2} GB/s", s.gb_per_sec(bytes)),
             );
+            rows.push((
+                format!("{model} K={k} host"),
+                Json::obj(vec![
+                    ("mean_ms", Json::num(s.mean * 1e3)),
+                    ("gb_per_sec", Json::num(s.gb_per_sec(bytes))),
+                ]),
+            ));
         }
         // Robust rules (host side), K = 8.
         let ups = updates(&mut rng, 8, p);
         for name in ["median", "trim:0.2", "fedadam", "fedavgm"] {
             let mut agg = aggregators::from_name(name).unwrap();
-            let s = bench(1, 5, || agg.aggregate(&global, &ups, None).unwrap());
+            let s = bench(1, scaled_iters(5), || agg.aggregate(&global, &ups, None).unwrap());
             report(&format!("{name:<12} K=8"), &s, "");
         }
     }
+
+    let row_obj = Json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    merge_section(
+        "aggregation",
+        Json::obj(vec![
+            ("backend", Json::str(backend.name())),
+            ("fedavg", row_obj),
+        ]),
+    );
 }

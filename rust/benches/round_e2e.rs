@@ -4,69 +4,30 @@
 //! measures round walltime across worker-pool sizes and reports the
 //! local/aggregate/eval split from the profiler. Backs the paper's
 //! "embarrassingly parallel" distributed-training claim (§3.3.4) and
-//! EXPERIMENTS.md §Perf L3.
+//! EXPERIMENTS.md §Perf L3. Emits the `round_e2e` section of
+//! `BENCH_native.json` (round walltime + rounds/s per pool size).
 //!
 //! Run: `cargo bench --bench round_e2e`
+//! Fast mode (CI): `FERRISFL_BENCH_FAST=1 cargo bench --bench round_e2e`
 
 use std::sync::Arc;
 
-use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::benchutil::{fast_mode, header, merge_section, report, BenchStats};
 use ferrisfl::config::FlParams;
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::NullLogger;
 use ferrisfl::runtime::Manifest;
+use ferrisfl::util::Json;
 
-fn main() {
-    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
-    header("one FL round: lenet5, 100 agents, 10 sampled, 1 local epoch");
-    for workers in [1usize, 2, 4, 8] {
-        let params = FlParams {
-            experiment_name: format!("bench_round_w{workers}"),
-            model: "lenet5".into(),
-            dataset: "synth-mnist".into(),
-            num_agents: 100,
-            sampling_ratio: 0.1,
-            global_epochs: 1,
-            local_epochs: 1,
-            split: Scheme::Iid,
-            sampler: "random".into(),
-            aggregator: "fedavg".into(),
-            optimizer: "sgd".into(),
-            mode: "full".into(),
-            use_pretrained: false,
-            lr: 0.05,
-            seed: 42,
-            workers,
-            eval_every: 1,
-            max_local_steps: 0,
-            log_dir: String::new(),
-            dropout: 0.0,
-            defense: "none".into(),
-            compression: "none".into(),
-            backend: manifest.backend.name().into(),
-        };
-        // Pool + compiled executables are rebuilt per Entrypoint; measure
-        // the steady-state round by running 2 rounds and keeping the
-        // second (first pays compile).
-        let s = bench(0, 3, || {
-            let mut ep =
-                Entrypoint::new(params.clone(), Arc::clone(&manifest)).unwrap();
-            let mut logger = NullLogger;
-            let res = ep.run(&mut logger).unwrap();
-            res.rounds[0].secs
-        });
-        report(&format!("round walltime, workers={workers}"), &s, "");
-    }
-
-    header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");
-    let params = FlParams {
-        experiment_name: "bench_steady".into(),
+fn params_for(workers: usize, rounds: usize, manifest: &Manifest) -> FlParams {
+    FlParams {
+        experiment_name: format!("bench_round_w{workers}"),
         model: "lenet5".into(),
         dataset: "synth-mnist".into(),
         num_agents: 100,
         sampling_ratio: 0.1,
-        global_epochs: 5,
+        global_epochs: rounds,
         local_epochs: 1,
         split: Scheme::Iid,
         sampler: "random".into(),
@@ -76,20 +37,69 @@ fn main() {
         use_pretrained: false,
         lr: 0.05,
         seed: 42,
-        workers: 4,
-        eval_every: 0,
+        workers,
+        eval_every: 1,
         max_local_steps: 0,
         log_dir: String::new(),
         dropout: 0.0,
         defense: "none".into(),
         compression: "none".into(),
         backend: manifest.backend.name().into(),
+    }
+}
+
+fn main() {
+    let manifest = Arc::new(Manifest::load_or_native("artifacts"));
+    let iters = if fast_mode() { 1 } else { 3 };
+    header("one FL round: lenet5, 100 agents, 10 sampled, 1 local epoch");
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        // One multi-round run per pool size; round 0 pays pool spin-up
+        // and cold per-worker executor caches, so the recorded stats are
+        // the per-round walltimes of the remaining (steady-state)
+        // rounds — eval included, construction/teardown excluded.
+        let params = params_for(workers, iters + 1, &manifest);
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let mut logger = NullLogger;
+        let res = ep.run(&mut logger).unwrap();
+        let mut times: Vec<f64> = res.rounds[1..].iter().map(|r| r.secs).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = BenchStats {
+            iters: times.len(),
+            min: times[0],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            p50: times[times.len() / 2],
+            max: times[times.len() - 1],
+        };
+        report(&format!("round walltime, workers={workers}"), &s, "");
+        rows.push((format!("workers_{workers}"), s.to_json(Some(1.0))));
+    }
+
+    header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");
+    let steady_rounds = if fast_mode() { 2 } else { 5 };
+    let params = FlParams {
+        experiment_name: "bench_steady".into(),
+        eval_every: 0,
+        ..params_for(4, steady_rounds, &manifest)
     };
     let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
     let mut logger = NullLogger;
     let res = ep.run(&mut logger).unwrap();
+    let mut steady: Vec<Json> = Vec::new();
     for r in &res.rounds {
         println!("  round {}: {:.3}s", r.round, r.secs);
+        steady.push(Json::num(r.secs));
     }
     println!("\nprofiler split:\n{}", res.profiler.report());
+
+    let walltime = Json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    merge_section(
+        "round_e2e",
+        Json::obj(vec![
+            ("backend", Json::str(manifest.backend.name())),
+            ("workload", Json::str("lenet5@synth-mnist 100 agents, 10 sampled")),
+            ("round_walltime", walltime),
+            ("steady_round_secs", Json::Arr(steady)),
+        ]),
+    );
 }

@@ -4,20 +4,30 @@
 //! pure-jnp reference ablation for mlp-s (kernel vs ref HLO) — the
 //! numbers behind Table 3's time column and EXPERIMENTS.md §Perf L1/L2.
 //! On the native backend the same discovery loop runs over the native
-//! zoo (no `_ref` entries: there is no kernel/ref split to ablate).
+//! zoo (no `_ref` entries: there is no kernel/ref split to ablate), and
+//! an extra section measures the blocked-GEMM engine against the
+//! retained naive reference **in the same run** on mlp-m@synth-mnist.
+//!
+//! Emits the `train_step` section of `BENCH_native.json` (steps/s,
+//! examples/s per case, plus the naive-vs-blocked speedup).
 //!
 //! Run: `cargo bench --bench train_step_latency`
+//! Fast mode (CI): `FERRISFL_BENCH_FAST=1 cargo bench --bench train_step_latency`
 
 use std::sync::Arc;
 
-use ferrisfl::benchutil::{bench, header, report};
+use ferrisfl::benchutil::{bench, header, merge_section, report, scaled_iters};
 use ferrisfl::datasets::{Dataset, Split};
 use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
-use ferrisfl::runtime::Manifest;
+use ferrisfl::runtime::native::hidden_layers;
+use ferrisfl::runtime::reference::NaiveMlp;
+use ferrisfl::runtime::{BackendKind, Manifest};
+use ferrisfl::util::Json;
 
 fn main() {
     let manifest = Arc::new(Manifest::load_or_native("artifacts"));
     let backend = manifest.backend;
+    let mut train_rows: Vec<(String, Json)> = Vec::new();
 
     header(&format!(
         "train_step latency (batch {}) on backend {backend}",
@@ -43,6 +53,7 @@ fn main() {
     cases.sort();
     cases.dedup();
 
+    let iters = scaled_iters(10);
     for (model, dataset, opt, mode_tag) in cases {
         let (mode, tag) = if let Some(m) = mode_tag.strip_suffix("_ref") {
             (m.to_string(), "_ref".to_string())
@@ -59,32 +70,45 @@ fn main() {
         };
         let ds = Dataset::load(&manifest, &dataset, 1).unwrap();
         with_runtime(&manifest, &key, |rt| {
-            let idx: Vec<usize> = (0..rt.train_batch_size()).collect();
+            let b = rt.train_batch_size();
+            let idx: Vec<usize> = (0..b).collect();
             let batch = ds.batch(Split::Train, &idx);
+            let mut scratch = rt.new_scratch();
             let mut params = if key.mode == "featext" {
                 rt.pretrained_params()?
             } else {
                 rt.init_params()?
             };
-            if opt == "adam" {
+            let s = if opt == "adam" {
                 let mut state = ferrisfl::runtime::AdamState::zeros(params.len());
-                let s = bench(2, 10, || {
-                    rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01)
-                        .unwrap()
-                });
-                report(&format!("{model} {opt} {mode_tag}"), &s, "");
+                bench(2, iters, || {
+                    rt.train_step_adam(
+                        &mut params,
+                        &mut state,
+                        &batch.x,
+                        &batch.y,
+                        0.01,
+                        &mut scratch,
+                    )
+                    .unwrap()
+                })
             } else {
-                let s = bench(2, 10, || {
-                    rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05).unwrap()
-                });
-                report(&format!("{model} {opt} {mode_tag}"), &s, "");
-            }
+                bench(2, iters, || {
+                    rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)
+                        .unwrap()
+                })
+            };
+            let name = format!("{model} {opt} {mode_tag}");
+            report(&name, &s, &format!("{:.0} ex/s", s.per_sec(b as f64)));
+            let case = format!("{model}@{dataset} {opt} {mode_tag}");
+            train_rows.push((case, s.to_json(Some(b as f64))));
             Ok(())
         })
         .unwrap();
     }
 
     header(&format!("eval_batch latency (batch {})", manifest.eval_batch));
+    let mut eval_rows: Vec<(String, Json)> = Vec::new();
     for art in &manifest.artifacts {
         let key = RuntimeKey {
             backend,
@@ -110,10 +134,12 @@ fn main() {
             let idx: Vec<usize> = (0..be).collect();
             let batch = ds.batch(Split::Test, &idx);
             let params = rt.init_params()?;
-            let s = bench(2, 10, || {
-                rt.eval_batch(&params, &batch.x, &batch.y, be).unwrap()
+            let mut scratch = rt.new_scratch();
+            let s = bench(2, iters, || {
+                rt.eval_batch(&params, &batch.x, &batch.y, be, &mut scratch).unwrap()
             });
             report(&art.id, &s, &format!("{:.0} ex/s", s.per_sec(be as f64)));
+            eval_rows.push((art.id.clone(), s.to_json(Some(be as f64))));
             Ok(())
         })
         .unwrap();
@@ -123,7 +149,63 @@ fn main() {
     for name in ["synth-mnist", "synth-cifar10", "synth-cifar100"] {
         let ds = Dataset::load(&manifest, name, 1).unwrap();
         let idx: Vec<usize> = (0..32).collect();
-        let s = bench(2, 20, || ds.batch(Split::Train, &idx));
+        let s = bench(2, scaled_iters(20), || ds.batch(Split::Train, &idx));
         report(name, &s, &format!("{:.0} ex/s", s.per_sec(32.0)));
     }
+
+    // Blocked engine vs the retained naive reference, same run, same
+    // batch — the acceptance number for the blocked-GEMM rewrite. Only
+    // meaningful on the native backend.
+    let case_obj = Json::obj(train_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    let eval_obj = Json::obj(eval_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    let mut sections = vec![
+        ("backend", Json::str(backend.name())),
+        ("train_batch", Json::num(manifest.train_batch as f64)),
+        ("cases", case_obj),
+        ("eval", eval_obj),
+    ];
+    if backend == BackendKind::Native {
+        header("naive vs blocked engine (mlp-m@synth-mnist, sgd full)");
+        let key = RuntimeKey::native("mlp-m", "synth-mnist", "sgd", "full");
+        let ds = Dataset::load(&manifest, "synth-mnist", 1).unwrap();
+        let info = manifest.dataset("synth-mnist").unwrap();
+        let hidden = hidden_layers("mlp-m").unwrap();
+        let naive = NaiveMlp::new(info.example_len(), hidden, info.num_classes);
+        let nb_iters = scaled_iters(40);
+        let section = with_runtime(&manifest, &key, |rt| {
+            let b = rt.train_batch_size();
+            let idx: Vec<usize> = (0..b).collect();
+            let batch = ds.batch(Split::Train, &idx);
+            let p0 = rt.init_params()?;
+
+            let mut pn = p0.clone();
+            let s_naive = bench(3, nb_iters, || {
+                naive.sgd_step(&mut pn, &batch.x, &batch.y, b, 0.05)
+            });
+            let naive_extra = format!("{:.0} ex/s", s_naive.per_sec(b as f64));
+            report("naive (pre-change loops)", &s_naive, &naive_extra);
+
+            let mut pb = p0.clone();
+            let mut scratch = rt.new_scratch();
+            let s_blocked = bench(3, nb_iters, || {
+                rt.train_step_sgd(&mut pb, &batch.x, &batch.y, 0.05, &mut scratch).unwrap()
+            });
+            let blocked_extra = format!("{:.0} ex/s", s_blocked.per_sec(b as f64));
+            report("blocked (zero-alloc GEMM)", &s_blocked, &blocked_extra);
+
+            let speedup = s_naive.mean / s_blocked.mean;
+            println!("speedup: {speedup:.2}x examples/s (blocked vs naive)");
+            Ok(Json::obj(vec![
+                ("case", Json::str("mlp-m@synth-mnist sgd full")),
+                ("examples_per_sec_naive", Json::num(s_naive.per_sec(b as f64))),
+                ("examples_per_sec_blocked", Json::num(s_blocked.per_sec(b as f64))),
+                ("steps_per_sec_naive", Json::num(s_naive.per_sec(1.0))),
+                ("steps_per_sec_blocked", Json::num(s_blocked.per_sec(1.0))),
+                ("speedup", Json::num(speedup)),
+            ]))
+        })
+        .unwrap();
+        sections.push(("naive_vs_blocked", section));
+    }
+    merge_section("train_step", Json::obj(sections));
 }

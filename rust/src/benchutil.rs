@@ -5,8 +5,19 @@
 //! iterations, reporting min/mean/p50/max. Deterministic workloads, wall
 //! clock, no statistics theatre — adequate for the before/after deltas
 //! EXPERIMENTS.md §Perf tracks.
+//!
+//! Benches additionally emit throughput counters (steps/s, examples/s,
+//! aggregation GB/s) into `BENCH_native.json` via [`merge_section`]:
+//! each bench target owns one top-level section and read-modify-writes
+//! the file, so running several benches accumulates one machine-readable
+//! perf snapshot per checkout. CI runs the two smoke benches in fast
+//! mode (`FERRISFL_BENCH_FAST=1`, see [`fast_mode`]) and uploads the
+//! file as an artifact — the measured-perf trajectory of the repo.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::Json;
 
 /// Timing summary over the measured iterations (seconds).
 #[derive(Clone, Copy, Debug)]
@@ -22,6 +33,79 @@ impl BenchStats {
     /// Throughput in items/sec given items processed per iteration.
     pub fn per_sec(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean
+    }
+
+    /// Throughput in GB/s given bytes touched per iteration.
+    pub fn gb_per_sec(&self, bytes_per_iter: f64) -> f64 {
+        bytes_per_iter / self.mean / 1e9
+    }
+
+    /// This measurement as a JSON object (times in ms, plus throughput
+    /// fields when `items_per_iter` is given).
+    pub fn to_json(&self, items_per_iter: Option<f64>) -> Json {
+        let mut pairs = vec![
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean * 1e3)),
+            ("p50_ms", Json::num(self.p50 * 1e3)),
+            ("min_ms", Json::num(self.min * 1e3)),
+            ("max_ms", Json::num(self.max * 1e3)),
+        ];
+        if let Some(items) = items_per_iter {
+            pairs.push(("items_per_iter", Json::num(items)));
+            pairs.push(("items_per_sec", Json::num(self.per_sec(items))));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// True when `FERRISFL_BENCH_FAST` is set (and not "0"): benches shrink
+/// workloads/iterations so CI can smoke-run them on every merge.
+pub fn fast_mode() -> bool {
+    std::env::var("FERRISFL_BENCH_FAST").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Scale an iteration count down in fast mode (≥1 always).
+pub fn scaled_iters(iters: usize) -> usize {
+    if fast_mode() {
+        (iters / 4).max(1)
+    } else {
+        iters
+    }
+}
+
+/// Where bench JSON goes: `$FERRISFL_BENCH_JSON`, else
+/// `BENCH_native.json` in the bench binary's working directory (the
+/// *package* dir, `rust/`, under `cargo bench` — CI pins the env var to
+/// the workspace root so the artifact upload finds it).
+pub fn bench_json_path() -> PathBuf {
+    std::env::var("FERRISFL_BENCH_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_native.json"))
+}
+
+/// Read-modify-write one top-level section of the bench JSON file, so
+/// each bench target contributes its own section and a sequence of
+/// bench runs accumulates a single perf snapshot.
+pub fn merge_section(section: &str, value: Json) {
+    merge_section_at(&bench_json_path(), section, value);
+}
+
+/// [`merge_section`] against an explicit path (tests use a temp file).
+pub fn merge_section_at(path: &std::path::Path, section: &str, value: Json) {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or_else(|| Json::obj(vec![]));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::obj(vec![]);
+    }
+    if let Json::Obj(map) = &mut root {
+        map.insert(section.to_string(), value);
+    }
+    if let Err(e) = std::fs::write(path, root.to_string()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("\n[bench] wrote section {section:?} to {}", path.display());
     }
 }
 
@@ -74,5 +158,37 @@ mod tests {
         assert!(s.min >= 0.001);
         assert!(s.mean >= s.min && s.max >= s.mean);
         assert!(s.per_sec(10.0) > 0.0);
+        assert!(s.gb_per_sec(1e9) > 0.0);
+    }
+
+    #[test]
+    fn stats_to_json_has_throughput_fields() {
+        let s = BenchStats {
+            iters: 4,
+            min: 0.001,
+            mean: 0.002,
+            p50: 0.002,
+            max: 0.003,
+        };
+        let j = s.to_json(Some(32.0));
+        assert_eq!(j.req("iters").unwrap().as_usize().unwrap(), 4);
+        let per_sec = j.req("items_per_sec").unwrap().as_f64().unwrap();
+        assert!((per_sec - 16_000.0).abs() < 1e-6, "{per_sec}");
+        assert!(s.to_json(None).get("items_per_sec").is_none());
+    }
+
+    #[test]
+    fn merge_section_accumulates_sections() {
+        let path = std::env::temp_dir().join(format!(
+            "ferrisfl_bench_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        merge_section_at(&path, "a", Json::num(1.0));
+        merge_section_at(&path, "b", Json::num(2.0));
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.req("a").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(root.req("b").unwrap().as_f64().unwrap(), 2.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

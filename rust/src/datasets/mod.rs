@@ -50,6 +50,42 @@ impl Batch {
     }
 }
 
+/// Reusable batch storage for the zero-allocation step path: hold one
+/// per training/eval loop and gather every batch into it with
+/// [`Dataset::gather_into`]. Buffers grow to the largest batch seen and
+/// are then reused — steady-state gathering allocates nothing.
+#[derive(Debug, Default)]
+pub struct BatchBuf {
+    x: Vec<f32>,
+    y: Vec<i32>,
+}
+
+impl BatchBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A zero-copy view of the batch most recently gathered into a
+/// [`BatchBuf`], laid out for the runtime ABI.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchView<'a> {
+    /// `f32[n * H * W * C]`, row-major NHWC.
+    pub x: &'a [f32],
+    /// `i32[n]` labels.
+    pub y: &'a [i32],
+}
+
+impl BatchView<'_> {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
 /// A synthetic dataset: templates + deterministic sample synthesis.
 pub struct Dataset {
     pub info: DatasetInfo,
@@ -164,33 +200,41 @@ impl Dataset {
         }
     }
 
-    /// Synthesize a batch for the given sample indices.
-    pub fn batch(&self, split: Split, indices: &[usize]) -> Batch {
+    /// Synthesize a batch for the given sample indices into `buf`,
+    /// reusing its storage, and return a borrowed view. The steady-state
+    /// path of `worker::run_local` and the trainers: no allocation once
+    /// `buf` has seen the loop's batch size.
+    pub fn gather_into<'a>(
+        &self,
+        split: Split,
+        indices: &[usize],
+        buf: &'a mut BatchBuf,
+    ) -> BatchView<'a> {
         let ex = self.info.example_len();
-        let mut x = vec![0.0f32; indices.len() * ex];
-        let mut y = Vec::with_capacity(indices.len());
-        for (i, &idx) in indices.iter().enumerate() {
-            self.synthesize_into(split, idx, &mut x[i * ex..(i + 1) * ex]);
-            y.push(self.label(split, idx) as i32);
+        let need = indices.len() * ex;
+        if buf.x.len() < need {
+            buf.x.resize(need, 0.0);
         }
-        Batch { x, y }
+        if buf.y.len() < indices.len() {
+            buf.y.resize(indices.len(), 0);
+        }
+        for (i, &idx) in indices.iter().enumerate() {
+            self.synthesize_into(split, idx, &mut buf.x[i * ex..(i + 1) * ex]);
+            buf.y[i] = self.label(split, idx) as i32;
+        }
+        BatchView {
+            x: &buf.x[..need],
+            y: &buf.y[..indices.len()],
+        }
     }
 
-    /// Iterate the test split in eval-batch-size chunks:
-    /// yields (batch, n_valid) with the final short chunk un-padded
-    /// (the runtime pads + masks).
-    pub fn test_batches(&self, batch_size: usize) -> Vec<(Batch, usize)> {
-        let n = self.info.test_n;
-        let mut out = Vec::new();
-        let mut start = 0;
-        while start < n {
-            let end = (start + batch_size).min(n);
-            let idx: Vec<usize> = (start..end).collect();
-            out.push((self.batch(Split::Test, &idx), end - start));
-            start = end;
-        }
-        out
+    /// Synthesize a batch for the given sample indices (owned storage).
+    pub fn batch(&self, split: Split, indices: &[usize]) -> Batch {
+        let mut buf = BatchBuf::new();
+        self.gather_into(split, indices, &mut buf);
+        Batch { x: buf.x, y: buf.y }
     }
+
 }
 
 #[cfg(test)]
@@ -263,22 +307,6 @@ mod tests {
     }
 
     #[test]
-    fn test_batches_cover_split_exactly() {
-        let d = tiny_dataset(11);
-        let chunks = d.test_batches(8);
-        let total: usize = chunks.iter().map(|(_, n)| n).sum();
-        assert_eq!(total, d.num_test());
-        // all but last are full
-        for (b, n) in &chunks[..chunks.len() - 1] {
-            assert_eq!(b.len(), 8);
-            assert_eq!(*n, 8);
-        }
-        let (last, n_last) = &chunks[chunks.len() - 1];
-        assert_eq!(last.len(), *n_last);
-        assert_eq!(*n_last, 30 % 8);
-    }
-
-    #[test]
     fn different_seeds_differ() {
         let a = tiny_dataset(1).batch(Split::Train, &[0]);
         let b = tiny_dataset(2).batch(Split::Train, &[0]);
@@ -296,6 +324,24 @@ mod tests {
         assert!(t1.iter().all(|&v| (0.0..=1.0).contains(&v)));
         let ex = info.example_len();
         assert_ne!(t1[..ex], t1[ex..2 * ex], "classes must differ");
+    }
+
+    #[test]
+    fn gather_into_reuses_storage_and_matches_batch() {
+        let d = tiny_dataset(21);
+        let mut buf = BatchBuf::new();
+        let owned = d.batch(Split::Train, &[1, 2, 3]);
+        let view = d.gather_into(Split::Train, &[1, 2, 3], &mut buf);
+        assert_eq!(view.x, &owned.x[..]);
+        assert_eq!(view.y, &owned.y[..]);
+        assert_eq!(view.len(), 3);
+        // A smaller follow-up batch reuses the same storage; the view is
+        // windowed to the new batch length.
+        let view = d.gather_into(Split::Train, &[7], &mut buf);
+        assert_eq!(view.len(), 1);
+        let single = d.batch(Split::Train, &[7]);
+        assert_eq!(view.x, &single.x[..]);
+        assert_eq!(view.y, &single.y[..]);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //!   1. sampler picks `A^t ⊆ A`
 //!   2. each sampled agent trains locally from `W^t` (worker pool)
 //!   3. the aggregator folds the deltas into `W^{t+1}` (Eq. 2)
-//!   4. the leader evaluates the global model on the test split
+//!   4. the global model is evaluated on the test split, sharded
+//!      across the same worker pool
 //!   5. loggers receive per-round + per-agent records
 
 pub mod trainer;
@@ -335,13 +336,18 @@ impl Entrypoint {
         })
     }
 
-    /// Evaluate the current global model over the full test split.
+    /// Evaluate the current global model over the full test split,
+    /// sharding eval batches across the experiment's worker pool (the
+    /// same pool local training fans out on).
     pub fn evaluate(&self) -> Result<EvalStats> {
-        let manifest = Arc::clone(&self.manifest);
-        worker::with_runtime(&manifest, &self.key, |rt| {
-            let eval = worker::evaluate(rt, &self.dataset);
-            eval(&self.global)
-        })
+        worker::evaluate_sharded(
+            &self.manifest,
+            &self.key,
+            &self.dataset,
+            &self.pool,
+            &self.global,
+            0,
+        )
     }
 }
 

@@ -9,10 +9,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::datasets::{Dataset, Split};
-use crate::runtime::{AdamState, BackendKind, Manifest, ModelExecutor};
+use crate::datasets::{BatchBuf, Dataset};
+use crate::runtime::{AdamState, BackendKind, Manifest};
 use crate::util::error::Result;
-use crate::util::Rng;
+use crate::util::{shared_pool, Rng};
 
 use super::worker::{self, RuntimeKey};
 
@@ -117,32 +117,13 @@ impl Default for TrainConfig {
     }
 }
 
-/// Evaluate on the first `n` test samples only (fixed subset).
-fn eval_subset(
-    rt: &dyn ModelExecutor,
-    dataset: &Dataset,
-    params: &[f32],
-    n: usize,
-) -> Result<crate::runtime::EvalStats> {
-    let n = n.min(dataset.num_test());
-    let mut total = crate::runtime::EvalStats::default();
-    let mut start = 0;
-    while start < n {
-        let end = (start + rt.eval_batch_size()).min(n);
-        let idx: Vec<usize> = (start..end).collect();
-        let batch = dataset.batch(Split::Test, &idx);
-        let s = rt.eval_batch(params, &batch.x, &batch.y, end - start)?;
-        total.loss_sum += s.loss_sum;
-        total.correct += s.correct;
-        total.count += s.count;
-        start = end;
-    }
-    Ok(total)
-}
-
 /// Train centrally; returns per-epoch metrics and parameter counts.
+///
+/// The epoch loop is a zero-allocation steady state (reused scratch
+/// arena, batch buffer, and index buffer); per-epoch validation shards
+/// test batches across the process-wide [`shared_pool`].
 pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult> {
-    let dataset = Dataset::load(manifest, &cfg.dataset, cfg.seed)?;
+    let dataset = Arc::new(Dataset::load(manifest, &cfg.dataset, cfg.seed)?);
     let key = RuntimeKey {
         backend: BackendKind::parse(&cfg.backend)?,
         model: cfg.model.clone(),
@@ -176,35 +157,35 @@ pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult>
         let b = rt.train_batch_size();
         let mut adam = (cfg.optimizer == "adam").then(|| AdamState::zeros(params.len()));
         let mut order: Vec<usize> = (0..n).collect();
+        let mut scratch = rt.new_scratch();
+        let mut buf = BatchBuf::new();
+        let mut idx: Vec<usize> = Vec::with_capacity(b);
         for epoch in 0..cfg.epochs {
             let t0 = Instant::now();
             rng.shuffle(&mut order);
-            let mut loss_sum = 0.0f64;
-            let mut hits = 0.0f64;
-            let mut seen = 0usize;
-            let mut start = 0usize;
-            while start < order.len() {
-                let mut idx = Vec::with_capacity(b);
-                for i in 0..b {
-                    idx.push(order[(start + i) % order.len()]);
-                }
-                let batch = dataset.batch(Split::Train, &idx);
-                let stats = match adam.as_mut() {
-                    Some(st) => {
-                        rt.train_step_adam(&mut params, st, &batch.x, &batch.y, cfg.lr)?
-                    }
-                    None => rt.train_step_sgd(&mut params, &batch.x, &batch.y, cfg.lr)?,
-                };
-                loss_sum += stats.loss as f64 * b as f64;
-                hits += stats.hits as f64;
-                seen += b;
-                start += b;
-            }
+            let (loss_sum, hits, seen) = worker::train_epoch(
+                rt,
+                &dataset,
+                &order,
+                cfg.lr,
+                0,
+                adam.as_mut(),
+                &mut params,
+                &mut scratch,
+                &mut buf,
+                &mut idx,
+            )?;
             let train_secs = t0.elapsed().as_secs_f64();
-            let eval = if cfg.eval_samples == 0 {
-                worker::evaluate(rt, &dataset)(&params)?
-            } else {
-                eval_subset(rt, &dataset, &params, cfg.eval_samples)?
+            let eval = {
+                let pool = shared_pool().lock().expect("shared pool poisoned");
+                worker::evaluate_sharded(
+                    manifest,
+                    &key,
+                    &dataset,
+                    &pool,
+                    &params,
+                    cfg.eval_samples,
+                )?
             };
             let rec = EpochRecord {
                 epoch,

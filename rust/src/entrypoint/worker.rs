@@ -3,8 +3,13 @@
 //! Each pool worker owns its own executor cache — PJRT executors wrap
 //! `Rc`-based `xla` handles and must not cross threads, and the native
 //! executors are cheap to build — so the runtime cache is thread-local,
-//! keyed by (backend, artifact, optimizer, mode, tag). Sequential
-//! experiments in one process reuse compilations.
+//! keyed directly by [`RuntimeKey`] (it derives `Hash`/`Eq`; no string
+//! key is formatted on lookup). Sequential experiments in one process
+//! reuse compilations.
+//!
+//! The local-training loop is a zero-allocation steady state: one
+//! [`crate::runtime::StepScratch`] arena, one [`BatchBuf`], and one
+//! index buffer are reused across every step of an agent's round.
 //!
 //! This module is the only place that knows which concrete backend
 //! implements [`ModelExecutor`]; everything above it (entrypoint,
@@ -12,19 +17,22 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
 use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::aggregators::Update;
-use crate::datasets::{Dataset, Split};
+use crate::datasets::{BatchBuf, Dataset, Split};
 use crate::metrics::AgentRecord;
-use crate::runtime::{AdamState, BackendKind, Manifest, ModelExecutor, NativeExecutor};
+use crate::runtime::{
+    AdamState, BackendKind, Manifest, ModelExecutor, NativeExecutor, StepScratch,
+};
 use crate::util::error::{bail, Result};
-use crate::util::Rng;
+use crate::util::{Rng, WorkerPool};
 
 thread_local! {
-    static RUNTIMES: RefCell<HashMap<String, Rc<dyn ModelExecutor>>> =
+    static RUNTIMES: RefCell<HashMap<RuntimeKey, Rc<dyn ModelExecutor>>> =
         RefCell::new(HashMap::new());
 }
 
@@ -58,9 +66,12 @@ impl RuntimeKey {
             entry_tag: String::new(),
         }
     }
+}
 
-    fn cache_key(&self) -> String {
-        format!(
+impl fmt::Display for RuntimeKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
             "{}:{}@{}:{}:{}:{}",
             self.backend, self.model, self.dataset, self.optimizer, self.mode, self.entry_tag
         )
@@ -75,11 +86,11 @@ pub fn with_runtime<T>(
 ) -> Result<T> {
     let rt = RUNTIMES.with(|r| -> Result<Rc<dyn ModelExecutor>> {
         let mut r = r.borrow_mut();
-        if let Some(rt) = r.get(&key.cache_key()) {
+        if let Some(rt) = r.get(key) {
             return Ok(Rc::clone(rt));
         }
         let rt = build_executor(manifest, key)?;
-        r.insert(key.cache_key(), Rc::clone(&rt));
+        r.insert(key.clone(), Rc::clone(&rt));
         Ok(rt)
     })?;
     f(&*rt)
@@ -129,7 +140,7 @@ fn build_pjrt(manifest: &Arc<Manifest>, key: &RuntimeKey) -> Result<Rc<dyn Model
         &key.mode,
         &key.entry_tag,
     )
-    .with_context(|| format!("loading PJRT runtime for {}", key.cache_key()))?;
+    .with_context(|| format!("loading PJRT runtime for {key}"))?;
     Ok(Rc::new(rt))
 }
 
@@ -160,8 +171,66 @@ pub struct LocalJob {
     pub seed: u64,
 }
 
+/// One training pass over `order` in fixed-shape batches, shared by the
+/// FL client loop ([`run_local`]) and the central trainer: the tail
+/// batch wraps around `order`, and the epoch metrics weight each batch
+/// by its *distinct* examples so the wrapped duplicates don't
+/// double-count. `max_steps == 0` means unlimited. Returns
+/// `(loss_sum, hit_sum, seen)` with the sums weighted by distinct
+/// examples — divide by `seen` for epoch means.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn train_epoch(
+    rt: &dyn ModelExecutor,
+    dataset: &Dataset,
+    order: &[usize],
+    lr: f32,
+    max_steps: usize,
+    mut adam: Option<&mut AdamState>,
+    params: &mut Vec<f32>,
+    scratch: &mut StepScratch,
+    buf: &mut BatchBuf,
+    idx: &mut Vec<usize>,
+) -> Result<(f64, f64, usize)> {
+    let b = rt.train_batch_size();
+    let mut loss_sum = 0.0f64;
+    let mut hit_sum = 0.0f64;
+    let mut seen = 0usize;
+    let mut steps = 0usize;
+    let mut start = 0usize;
+    while start < order.len() {
+        if max_steps > 0 && steps >= max_steps {
+            break;
+        }
+        // Fixed-shape batches: wrap around the shard for the tail.
+        idx.clear();
+        for i in 0..b {
+            idx.push(order[(start + i) % order.len()]);
+        }
+        let batch = dataset.gather_into(Split::Train, idx, buf);
+        let stats = match adam.as_deref_mut() {
+            Some(state) => rt.train_step_adam(params, state, batch.x, batch.y, lr, scratch)?,
+            None => rt.train_step_sgd(params, batch.x, batch.y, lr, scratch)?,
+        };
+        // The wrapped tail repeats examples already seen this epoch;
+        // weight the batch by its distinct examples so the epoch
+        // metrics don't double-count them.
+        let distinct = b.min(order.len() - start);
+        loss_sum += stats.loss as f64 * distinct as f64;
+        hit_sum += stats.hits as f64 * distinct as f64 / b as f64;
+        seen += distinct;
+        steps += 1;
+        start += b;
+    }
+    Ok((loss_sum, hit_sum, seen))
+}
+
 /// Run local training for one agent; returns its parameter delta (Eq. 1)
 /// and per-epoch metrics (the Fig 9 series).
+///
+/// The steady-state loop allocates nothing: batches gather into a
+/// reused [`BatchBuf`], steps run on a reused [`StepScratch`], the
+/// batch index buffer persists across steps, and the final delta is
+/// computed in place in the params buffer.
 pub fn run_local(
     rt: &dyn ModelExecutor,
     dataset: &Dataset,
@@ -171,6 +240,9 @@ pub fn run_local(
     let b = rt.train_batch_size();
     let mut params: Vec<f32> = (*job.global).clone();
     let mut adam = (rt.optimizer() == "adam").then(|| AdamState::zeros(params.len()));
+    let mut scratch = rt.new_scratch();
+    let mut buf = BatchBuf::new();
+    let mut idx: Vec<usize> = Vec::with_capacity(b);
 
     let mut epoch_losses = Vec::with_capacity(job.local_epochs);
     let mut epoch_accs = Vec::with_capacity(job.local_epochs);
@@ -181,45 +253,30 @@ pub fn run_local(
 
     for _epoch in 0..job.local_epochs {
         rng.shuffle(&mut order);
-        let mut loss_sum = 0.0f64;
-        let mut hit_sum = 0.0f64;
-        let mut seen = 0usize;
-        let mut steps = 0usize;
-        let mut start = 0usize;
-        while start < order.len() {
-            if job.max_steps_per_epoch > 0 && steps >= job.max_steps_per_epoch {
-                break;
-            }
-            // Fixed-shape batches: wrap around the shard for the tail.
-            let mut idx = Vec::with_capacity(b);
-            for i in 0..b {
-                idx.push(order[(start + i) % order.len()]);
-            }
-            let batch = dataset.batch(Split::Train, &idx);
-            let stats = match adam.as_mut() {
-                Some(state) => {
-                    rt.train_step_adam(&mut params, state, &batch.x, &batch.y, job.lr)?
-                }
-                None => rt.train_step_sgd(&mut params, &batch.x, &batch.y, job.lr)?,
-            };
-            loss_sum += stats.loss as f64 * b as f64;
-            hit_sum += stats.hits as f64;
-            seen += b;
-            steps += 1;
-            start += b;
-        }
+        let (loss_sum, hit_sum, seen) = train_epoch(
+            rt,
+            dataset,
+            &order,
+            job.lr,
+            job.max_steps_per_epoch,
+            adam.as_mut(),
+            &mut params,
+            &mut scratch,
+            &mut buf,
+            &mut idx,
+        )?;
         if seen > 0 {
             epoch_losses.push(loss_sum / seen as f64);
             epoch_accs.push(hit_sum / seen as f64);
         }
     }
 
-    // delta_i = W_i^{t+1} - W^t (Eq. 1)
-    let delta: Vec<f32> = params
-        .iter()
-        .zip(job.global.iter())
-        .map(|(p, g)| p - g)
-        .collect();
+    // delta_i = W_i^{t+1} - W^t (Eq. 1), computed in place: the params
+    // buffer becomes the delta instead of allocating a second P-vector.
+    let mut delta = params;
+    for (d, g) in delta.iter_mut().zip(job.global.iter()) {
+        *d -= *g;
+    }
 
     let record = AgentRecord {
         round: job.round,
@@ -239,22 +296,92 @@ pub fn run_local(
     ))
 }
 
-/// Evaluate `params` over the full test split (padding + masking the
-/// final short batch inside the executor).
+/// Evaluate a contiguous test-index range `[lo, hi)` in eval-batch
+/// chunks on this thread's executor, with reused scratch/batch buffers.
+fn eval_range(
+    rt: &dyn ModelExecutor,
+    dataset: &Dataset,
+    params: &[f32],
+    lo: usize,
+    hi: usize,
+) -> Result<crate::runtime::EvalStats> {
+    let eb = rt.eval_batch_size();
+    let mut scratch = rt.new_scratch();
+    let mut buf = BatchBuf::new();
+    let mut idx: Vec<usize> = Vec::with_capacity(eb);
+    let mut total = crate::runtime::EvalStats::default();
+    let mut start = lo;
+    while start < hi {
+        let end = (start + eb).min(hi);
+        idx.clear();
+        idx.extend(start..end);
+        let batch = dataset.gather_into(Split::Test, &idx, &mut buf);
+        let s = rt.eval_batch(params, batch.x, batch.y, end - start, &mut scratch)?;
+        total.loss_sum += s.loss_sum;
+        total.correct += s.correct;
+        total.count += s.count;
+        start = end;
+    }
+    Ok(total)
+}
+
+/// Evaluate `params` over the full test split on the calling thread.
 pub fn evaluate<'a>(
     rt: &'a dyn ModelExecutor,
     dataset: &'a Dataset,
 ) -> impl Fn(&[f32]) -> Result<crate::runtime::EvalStats> + 'a {
-    move |params: &[f32]| {
-        let mut total = crate::runtime::EvalStats::default();
-        for (batch, n_valid) in dataset.test_batches(rt.eval_batch_size()) {
-            let s = rt.eval_batch(params, &batch.x, &batch.y, n_valid)?;
-            total.loss_sum += s.loss_sum;
-            total.correct += s.correct;
-            total.count += s.count;
-        }
-        Ok(total)
+    move |params: &[f32]| eval_range(rt, dataset, params, 0, dataset.num_test())
+}
+
+/// Evaluate `params` over the test split (or its first `limit` samples
+/// when `limit > 0`), sharding eval batches across `pool`.
+///
+/// Each shard is a contiguous, batch-aligned index range evaluated on a
+/// pool worker's own executor (thread-local cache), so round evaluation
+/// scales with the pool instead of serialising on the leader. Results
+/// are summed in shard order — identical batching to the serial path.
+pub fn evaluate_sharded(
+    manifest: &Arc<Manifest>,
+    key: &RuntimeKey,
+    dataset: &Arc<Dataset>,
+    pool: &WorkerPool,
+    params: &[f32],
+    limit: usize,
+) -> Result<crate::runtime::EvalStats> {
+    let n = if limit == 0 {
+        dataset.num_test()
+    } else {
+        limit.min(dataset.num_test())
+    };
+    let eb = manifest.eval_batch.max(1);
+    let batches = n.div_ceil(eb);
+    let shards = pool.size().min(batches);
+    if shards <= 1 {
+        return with_runtime(manifest, key, |rt| eval_range(rt, dataset, params, 0, n));
     }
+    let per = batches.div_ceil(shards);
+    let params = Arc::new(params.to_vec());
+    let jobs: Vec<_> = (0..shards)
+        .map(|s| {
+            let lo = (s * per * eb).min(n);
+            let hi = ((s + 1) * per * eb).min(n);
+            let manifest = Arc::clone(manifest);
+            let key = key.clone();
+            let dataset = Arc::clone(dataset);
+            let params = Arc::clone(&params);
+            move |_wid: usize| -> Result<crate::runtime::EvalStats> {
+                with_runtime(&manifest, &key, |rt| eval_range(rt, &dataset, &params, lo, hi))
+            }
+        })
+        .collect();
+    let mut total = crate::runtime::EvalStats::default();
+    for res in pool.run(jobs) {
+        let s = res?;
+        total.loss_sum += s.loss_sum;
+        total.correct += s.correct;
+        total.count += s.count;
+    }
+    Ok(total)
 }
 
 #[cfg(test)]
@@ -274,6 +401,12 @@ mod tests {
         // Second lookup hits the thread-local cache and agrees.
         let p2 = with_runtime(&m, &key, |rt| rt.init_params()).unwrap();
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn runtime_key_displays_all_fields() {
+        let key = RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full");
+        assert_eq!(format!("{key}"), "native:mlp-s@synth-mnist:sgd:full:");
     }
 
     #[test]
@@ -297,5 +430,41 @@ mod tests {
         };
         let err = with_runtime(&m, &key, |_| Ok(())).unwrap_err();
         assert!(format!("{err}").contains("--features pjrt"), "{err}");
+    }
+
+    /// Sharded evaluation equals the serial path (same batching, summed
+    /// in shard order) regardless of the pool size.
+    #[test]
+    fn sharded_eval_matches_serial() {
+        let m = Arc::new(Manifest::native());
+        let key = RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full");
+        let dataset = Arc::new(Dataset::load(&m, "synth-mnist", 23).unwrap());
+        let params = with_runtime(&m, &key, |rt| rt.init_params()).unwrap();
+        let serial = with_runtime(&m, &key, |rt| evaluate(rt, &dataset)(&params)).unwrap();
+        for workers in [1usize, 3, 4] {
+            let pool = WorkerPool::new(workers);
+            let sharded =
+                evaluate_sharded(&m, &key, &dataset, &pool, &params, 0).unwrap();
+            assert_eq!(sharded.count, serial.count, "workers={workers}");
+            assert_eq!(sharded.correct, serial.correct, "workers={workers}");
+            assert!(
+                (sharded.loss_sum - serial.loss_sum).abs() < 1e-6,
+                "workers={workers}: {} vs {}",
+                sharded.loss_sum,
+                serial.loss_sum
+            );
+        }
+    }
+
+    /// `limit` caps the evaluated prefix, batch-aligned sharding intact.
+    #[test]
+    fn sharded_eval_respects_limit() {
+        let m = Arc::new(Manifest::native());
+        let key = RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full");
+        let dataset = Arc::new(Dataset::load(&m, "synth-mnist", 29).unwrap());
+        let params = with_runtime(&m, &key, |rt| rt.init_params()).unwrap();
+        let pool = WorkerPool::new(2);
+        let s = evaluate_sharded(&m, &key, &dataset, &pool, &params, 200).unwrap();
+        assert_eq!(s.count, 200.0);
     }
 }

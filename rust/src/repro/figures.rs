@@ -290,11 +290,12 @@ pub fn fig10(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
     crate::entrypoint::worker::with_runtime(manifest, &key, |rt| {
         let mut params = rt.init_params()?;
         let b = rt.train_batch_size();
+        let mut scratch = rt.new_scratch();
         let mut start = 0;
         while start + b <= n {
             let idx: Vec<usize> = (start..start + b).collect();
             let batch = dataset.batch(Split::Train, &idx);
-            rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)?;
+            rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)?;
             tracker.sample_batch();
             start += b;
         }

@@ -138,6 +138,7 @@ pub fn table4(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
     crate::entrypoint::worker::with_runtime(manifest, &key, |rt| {
         let mut params = rt.init_params()?;
         let b = rt.train_batch_size();
+        let mut scratch = rt.new_scratch();
         let mut start = 0;
         while start + b <= n {
             let idx: Vec<usize> = (start..start + b).collect();
@@ -145,7 +146,7 @@ pub fn table4(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
                 dataset.batch(Split::Train, &idx)
             });
             profiler.time("optimizer_step", || {
-                rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)
+                rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)
             })?;
             start += b;
         }

@@ -22,6 +22,8 @@
 
 use crate::util::error::{bail, Result};
 
+use super::stats;
+
 /// Which execution backend drives the five runtime operations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BackendKind {
@@ -91,6 +93,71 @@ impl EvalStats {
     }
 }
 
+/// Reusable scratch arenas for the train/eval hot path.
+///
+/// Every buffer the step path needs — activations, `dz`, `dprev`, the
+/// gradient, logits, per-example losses, the transposed-weight view, and
+/// (under PJRT) the eval padding buffers — lives here instead of being
+/// allocated per call. Buffers grow on first use and are never shrunk,
+/// so a training loop that holds one `StepScratch` performs **zero heap
+/// allocations** per step once warm (asserted by `tests/zero_alloc.rs`).
+///
+/// Callers create one via [`ModelExecutor::new_scratch`], keep it for
+/// the lifetime of their loop, and pass it to every
+/// [`ModelExecutor::train_step_sgd`] / [`ModelExecutor::train_step_adam`]
+/// / [`ModelExecutor::eval_batch`] call. A scratch may be reused across
+/// executors: each step re-derives its layout, growing buffers as
+/// needed. Reuse never changes results — steps are bit-identical with a
+/// fresh or a reused arena.
+#[derive(Default)]
+pub struct StepScratch {
+    /// Hidden post-relu activations, all layers concatenated.
+    pub(crate) acts: Vec<f32>,
+    /// Final-layer logits (`n × classes`).
+    pub(crate) logits: Vec<f32>,
+    /// Upstream gradient of the layer being processed (`n × width`).
+    pub(crate) dz: Vec<f32>,
+    /// Downstream gradient ping-pong buffer (`n × width`).
+    pub(crate) dprev: Vec<f32>,
+    /// Flat parameter gradient (`num_params`).
+    pub(crate) grad: Vec<f32>,
+    /// Per-example losses (`n`).
+    pub(crate) losses: Vec<f32>,
+    /// Transposed weight view of the current layer (`fan_in × fan_out`).
+    pub(crate) wt: Vec<f32>,
+    /// PJRT eval-batch padding buffers.
+    #[cfg(feature = "pjrt")]
+    pub(crate) xpad: Vec<f32>,
+    #[cfg(feature = "pjrt")]
+    pub(crate) ypad: Vec<i32>,
+    #[cfg(feature = "pjrt")]
+    pub(crate) mask: Vec<f32>,
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow `v` to at least `len` entries, charging real growth to the
+    /// runtime allocation counters. Steady-state steps grow nothing, so
+    /// `stats::add_allocated` stays flat once the loop is warm.
+    pub(crate) fn grow_f32(v: &mut Vec<f32>, len: usize) {
+        if v.len() < len {
+            stats::add_allocated(((len - v.len()) * std::mem::size_of::<f32>()) as u64);
+            v.resize(len, 0.0);
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub(crate) fn grow_i32(v: &mut Vec<i32>, len: usize) {
+        if v.len() < len {
+            stats::add_allocated(((len - v.len()) * std::mem::size_of::<i32>()) as u64);
+            v.resize(len, 0);
+        }
+    }
+}
+
 /// Adam optimizer state held by the coordinator between local epochs.
 #[derive(Clone, Debug)]
 pub struct AdamState {
@@ -141,6 +208,13 @@ pub trait ModelExecutor {
     /// Pretrained parameters for finetune/featext starts.
     fn pretrained_params(&self) -> Result<Vec<f32>>;
 
+    /// A scratch arena for this executor's step path. Hold one per
+    /// training/eval loop and pass it to every step — steady-state
+    /// steps then allocate nothing.
+    fn new_scratch(&self) -> StepScratch {
+        StepScratch::new()
+    }
+
     /// One SGD train step. `params` is updated in place.
     fn train_step_sgd(
         &self,
@@ -148,6 +222,7 @@ pub trait ModelExecutor {
         x: &[f32],
         y: &[i32],
         lr: f32,
+        scratch: &mut StepScratch,
     ) -> Result<StepStats>;
 
     /// One Adam train step. `params` and `state` update in place.
@@ -158,6 +233,7 @@ pub trait ModelExecutor {
         x: &[f32],
         y: &[i32],
         lr: f32,
+        scratch: &mut StepScratch,
     ) -> Result<StepStats>;
 
     /// Evaluate `params` on one (possibly short) batch; only the first
@@ -168,6 +244,7 @@ pub trait ModelExecutor {
         x: &[f32],
         y: &[i32],
         n_valid: usize,
+        scratch: &mut StepScratch,
     ) -> Result<EvalStats>;
 
     /// Weighted-delta FedAvg aggregation (Eq. 2):

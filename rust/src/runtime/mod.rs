@@ -5,6 +5,10 @@
 //!   loading) plus [`BackendKind`] and the shared stat types.
 //! - [`native`] — the default pure-rust CPU backend: hermetic, no
 //!   Python/XLA/artifacts, multithreaded aggregation on the worker pool.
+//! - [`gemm`] — the cache-blocked GEMM kernels the native step path
+//!   runs on (register-tiled axpy micro-kernels, zero-skip tiles).
+//! - [`reference`] — the pre-blocking naive MLP engine, retained as the
+//!   golden baseline for tests and the naive-vs-blocked bench.
 //! - [`pjrt`] — the PJRT/XLA path over AOT artifacts (the Pallas-kernel
 //!   route), behind the optional `pjrt` cargo feature.
 //! - [`manifest`] — the environment descriptor: parsed from
@@ -14,13 +18,15 @@
 //!   (paper Fig 10).
 
 pub mod backend;
+pub mod gemm;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod reference;
 pub mod stats;
 
-pub use backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepStats};
+pub use backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepScratch, StepStats};
 pub use manifest::{ArtifactInfo, DatasetInfo, Manifest, ZooInfo};
 pub use native::NativeExecutor;
 #[cfg(feature = "pjrt")]

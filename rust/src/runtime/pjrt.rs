@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use crate::util::error::{bail, err, Context, Result};
 
-use super::backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepStats};
+use super::backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepScratch, StepStats};
 use super::manifest::{ArtifactInfo, DatasetInfo, Manifest};
 use super::stats;
 
@@ -216,13 +216,16 @@ impl ModelExecutor for PjrtRuntime {
         self.manifest.read_f32(f)
     }
 
-    /// One SGD train step. `params` is updated in place.
+    /// One SGD train step. `params` is updated in place. The scratch
+    /// arena is unused: PJRT marshals through device literals, so the
+    /// step inherently allocates on the host side.
     fn train_step_sgd(
         &self,
         params: &mut Vec<f32>,
         x: &[f32],
         y: &[i32],
         lr: f32,
+        _scratch: &mut StepScratch,
     ) -> Result<StepStats> {
         debug_assert_eq!(params.len(), self.num_params);
         debug_assert_eq!(y.len(), self.train_batch);
@@ -251,6 +254,7 @@ impl ModelExecutor for PjrtRuntime {
         x: &[f32],
         y: &[i32],
         lr: f32,
+        _scratch: &mut StepScratch,
     ) -> Result<StepStats> {
         let p = self.num_params as i64;
         let args = [
@@ -278,30 +282,36 @@ impl ModelExecutor for PjrtRuntime {
 
     /// Evaluate `params` on one (possibly short) batch; `x`/`y` may hold
     /// fewer than `eval_batch` examples — the tail is zero-padded and
-    /// masked out inside the graph.
+    /// masked out inside the graph. Padding buffers live in the scratch
+    /// arena so repeated eval batches reuse their storage.
     fn eval_batch(
         &self,
         params: &[f32],
         x: &[f32],
         y: &[i32],
         n_valid: usize,
+        scratch: &mut StepScratch,
     ) -> Result<EvalStats> {
         let be = self.eval_batch;
         assert!(n_valid <= be);
         let ex_len: usize = self.input_dims.iter().product::<i64>() as usize;
-        let mut xp = vec![0.0f32; be * ex_len];
+        StepScratch::grow_f32(&mut scratch.xpad, be * ex_len);
+        let xp = &mut scratch.xpad[..be * ex_len];
         xp[..x.len()].copy_from_slice(x);
-        let mut yp = vec![0i32; be];
+        xp[x.len()..].fill(0.0);
+        StepScratch::grow_i32(&mut scratch.ypad, be);
+        let yp = &mut scratch.ypad[..be];
         yp[..y.len()].copy_from_slice(y);
-        let mut mask = vec![0.0f32; be];
-        for m in mask.iter_mut().take(n_valid) {
-            *m = 1.0;
-        }
+        yp[y.len()..].fill(0);
+        StepScratch::grow_f32(&mut scratch.mask, be);
+        let mask = &mut scratch.mask[..be];
+        mask[..n_valid].fill(1.0);
+        mask[n_valid..].fill(0.0);
         let args = [
             lit_f32(params, &[self.num_params as i64])?,
-            lit_f32(&xp, &self.x_dims(be))?,
-            lit_i32(&yp, &[be as i64])?,
-            lit_f32(&mask, &[be as i64])?,
+            lit_f32(xp, &self.x_dims(be))?,
+            lit_i32(yp, &[be as i64])?,
+            lit_f32(mask, &[be as i64])?,
         ];
         let outs = run(&self.eval_exe, &args)?;
         if outs.len() != 3 {

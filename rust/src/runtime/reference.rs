@@ -1,0 +1,257 @@
+//! The pre-blocking naive MLP engine, retained verbatim as the golden
+//! reference.
+//!
+//! This is the per-example dot-product implementation the native backend
+//! shipped with before the blocked-GEMM rewrite: fresh buffers for
+//! activations, `dz`, `dprev`, the gradient, and logits on every call,
+//! scalar inner loops, no tiling. It is deliberately **not** on any hot
+//! path — it exists so that
+//!
+//! 1. the golden tests can pin the blocked kernels to it within 1e-5
+//!    across every zoo shape, and
+//! 2. `cargo bench --bench train_step_latency` can measure the blocked
+//!    engine against the true pre-change baseline *in the same run* (the
+//!    `naive_vs_blocked` section of `BENCH_native.json`).
+
+use super::backend::StepStats;
+
+/// A naive MLP forward/backward engine over the flat parameter layout
+/// (`W_l` row-major `[o × i]` then `b_l [o]`, classifier head last).
+pub struct NaiveMlp {
+    /// (fan_in, fan_out) per layer; last layer is the classifier head.
+    dims: Vec<(usize, usize)>,
+    classes: usize,
+    num_params: usize,
+}
+
+impl NaiveMlp {
+    pub fn new(input_dim: usize, hidden: &[usize], classes: usize) -> Self {
+        let mut dims = Vec::with_capacity(hidden.len() + 1);
+        let mut fan_in = input_dim;
+        for &h in hidden {
+            dims.push((fan_in, h));
+            fan_in = h;
+        }
+        dims.push((fan_in, classes));
+        let num_params = dims.iter().map(|&(i, o)| (i + 1) * o).sum();
+        Self { dims, classes, num_params }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    /// Forward pass over `n` examples. Returns hidden post-relu
+    /// activations (one buffer per hidden layer) plus the logits.
+    pub fn forward(&self, params: &[f32], x: &[f32], n: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.dims.len() - 1);
+        let mut offset = 0usize;
+        let mut logits = Vec::new();
+        for (l, &(fan_in, fan_out)) in self.dims.iter().enumerate() {
+            let w = &params[offset..offset + fan_out * fan_in];
+            let b = &params[offset + fan_out * fan_in..offset + fan_out * (fan_in + 1)];
+            offset += fan_out * (fan_in + 1);
+            let last = l + 1 == self.dims.len();
+            let mut out = vec![0.0f32; n * fan_out];
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            for i in 0..n {
+                let xi = &input[i * fan_in..(i + 1) * fan_in];
+                let zi = &mut out[i * fan_out..(i + 1) * fan_out];
+                for (o, z) in zi.iter_mut().enumerate() {
+                    let row = &w[o * fan_in..(o + 1) * fan_in];
+                    let mut acc = b[o];
+                    for (rw, rx) in row.iter().zip(xi) {
+                        acc += rw * rx;
+                    }
+                    *z = if last { acc } else { acc.max(0.0) };
+                }
+            }
+            if last {
+                logits = out;
+            } else {
+                acts.push(out);
+            }
+        }
+        (acts, logits)
+    }
+
+    /// Softmax cross-entropy over `n` logits rows: per-example loss and
+    /// correctness, plus (optionally) `dz = (softmax - onehot) * scale`.
+    pub fn softmax_xent(
+        &self,
+        logits: &[f32],
+        y: &[i32],
+        n: usize,
+        dz_scale: Option<f32>,
+    ) -> (Vec<f32>, Vec<bool>, Vec<f32>) {
+        let c = self.classes;
+        let mut losses = vec![0.0f32; n];
+        let mut correct = vec![false; n];
+        let mut dz = if dz_scale.is_some() {
+            vec![0.0f32; n * c]
+        } else {
+            Vec::new()
+        };
+        for i in 0..n {
+            let z = &logits[i * c..(i + 1) * c];
+            let mut max = f32::NEG_INFINITY;
+            let mut argmax = 0usize;
+            for (j, &v) in z.iter().enumerate() {
+                if v > max {
+                    max = v;
+                    argmax = j;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &v in z {
+                sum += (v - max).exp();
+            }
+            let lse = max + sum.ln();
+            let label = y[i] as usize;
+            losses[i] = lse - z[label];
+            correct[i] = argmax == label;
+            if let Some(scale) = dz_scale {
+                let d = &mut dz[i * c..(i + 1) * c];
+                for (j, &v) in z.iter().enumerate() {
+                    d[j] = ((v - lse).exp() - if j == label { 1.0 } else { 0.0 }) * scale;
+                }
+            }
+        }
+        (losses, correct, dz)
+    }
+
+    /// Backward pass: gradient of the mean batch loss wrt `params`.
+    /// Under featext only the final (head) layer's gradient is produced;
+    /// frozen entries stay zero.
+    pub fn backward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        acts: &[Vec<f32>],
+        dz_last: Vec<f32>,
+        n: usize,
+        featext: bool,
+    ) -> Vec<f32> {
+        let mut grad = vec![0.0f32; self.num_params];
+        let mut offsets = Vec::with_capacity(self.dims.len());
+        let mut off = 0usize;
+        for &(fan_in, fan_out) in &self.dims {
+            offsets.push(off);
+            off += fan_out * (fan_in + 1);
+        }
+        let mut dz = dz_last;
+        for l in (0..self.dims.len()).rev() {
+            let (fan_in, fan_out) = self.dims[l];
+            let off = offsets[l];
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            {
+                let (gw, gb) =
+                    grad[off..off + fan_out * (fan_in + 1)].split_at_mut(fan_out * fan_in);
+                for i in 0..n {
+                    let xi = &input[i * fan_in..(i + 1) * fan_in];
+                    let di = &dz[i * fan_out..(i + 1) * fan_out];
+                    for (o, &d) in di.iter().enumerate() {
+                        if d != 0.0 {
+                            let row = &mut gw[o * fan_in..(o + 1) * fan_in];
+                            for (g, &v) in row.iter_mut().zip(xi) {
+                                *g += d * v;
+                            }
+                        }
+                        gb[o] += d;
+                    }
+                }
+            }
+            if l == 0 || (featext && l + 1 == self.dims.len()) {
+                break;
+            }
+            let w = &params[off..off + fan_out * fan_in];
+            let prev = &acts[l - 1];
+            let mut dprev = vec![0.0f32; n * fan_in];
+            for i in 0..n {
+                let di = &dz[i * fan_out..(i + 1) * fan_out];
+                let dpi = &mut dprev[i * fan_in..(i + 1) * fan_in];
+                for (o, &d) in di.iter().enumerate() {
+                    if d != 0.0 {
+                        let row = &w[o * fan_in..(o + 1) * fan_in];
+                        for (dp, &rw) in dpi.iter_mut().zip(row) {
+                            *dp += d * rw;
+                        }
+                    }
+                }
+                let ai = &prev[i * fan_in..(i + 1) * fan_in];
+                for (dp, &a) in dpi.iter_mut().zip(ai) {
+                    if a <= 0.0 {
+                        *dp = 0.0;
+                    }
+                }
+            }
+            dz = dprev;
+        }
+        grad
+    }
+
+    /// Forward + loss + backward: the batch gradient and step stats.
+    pub fn batch_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        n: usize,
+        featext: bool,
+    ) -> (Vec<f32>, StepStats) {
+        let (acts, logits) = self.forward(params, x, n);
+        let (losses, correct, dz) = self.softmax_xent(&logits, y, n, Some(1.0 / n as f32));
+        let grad = self.backward(params, x, &acts, dz, n, featext);
+        (
+            grad,
+            StepStats {
+                loss: losses.iter().sum::<f32>() / n as f32,
+                hits: correct.iter().filter(|&&c| c).count() as f32,
+            },
+        )
+    }
+
+    /// One naive full-allocation SGD step (the pre-change hot path).
+    pub fn sgd_step(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[i32],
+        n: usize,
+        lr: f32,
+    ) -> StepStats {
+        let (grad, stats) = self.batch_grad(params, x, y, n, false);
+        for (p, g) in params.iter_mut().zip(&grad) {
+            *p -= lr * g;
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_param_count_matches_layout() {
+        let m = NaiveMlp::new(784, &[16], 10);
+        assert_eq!(m.num_params(), (784 + 1) * 16 + (16 + 1) * 10);
+    }
+
+    #[test]
+    fn naive_step_reduces_loss_on_fixed_batch() {
+        let mut rng = crate::util::Rng::new(0x9a1);
+        let m = NaiveMlp::new(12, &[8], 3);
+        let n = 4;
+        let mut params: Vec<f32> =
+            (0..m.num_params()).map(|_| rng.next_gaussian() * 0.2).collect();
+        let x: Vec<f32> = (0..n * 12).map(|_| rng.next_gaussian()).collect();
+        let y = vec![0i32, 1, 2, 1];
+        let first = m.sgd_step(&mut params, &x, &y, n, 0.1);
+        let mut last = first;
+        for _ in 0..40 {
+            last = m.sgd_step(&mut params, &x, &y, n, 0.1);
+        }
+        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+    }
+}

@@ -13,4 +13,4 @@ pub mod threadpool;
 pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
-pub use threadpool::WorkerPool;
+pub use threadpool::{shared_pool, WorkerPool};

@@ -8,8 +8,22 @@
 //! first time a job runs on that worker.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+/// The process-wide shared pool: server-side FedAvg aggregation shards
+/// parameter ranges across it, and round evaluation shards test batches
+/// across it when the caller has no pool of its own (the central
+/// trainer). Guarded by a `Mutex` so one parallel region runs at a time;
+/// callers submit from the leader thread and jobs must never recursively
+/// submit to this pool (that would deadlock a full pool).
+pub fn shared_pool() -> &'static Mutex<WorkerPool> {
+    static POOL: OnceLock<Mutex<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Mutex::new(WorkerPool::new(n.clamp(2, 8)))
+    })
+}
 
 type Job = Box<dyn FnOnce(usize) + Send + 'static>;
 

@@ -46,12 +46,13 @@ fn train_step_reduces_loss() {
     let dataset = Dataset::load(&m, "synth-mnist", 1).unwrap();
     worker::with_runtime(&m, &mlp_key(), |rt| {
         let mut params = rt.init_params()?;
+        let mut scratch = rt.new_scratch();
         let idx: Vec<usize> = (0..rt.train_batch_size()).collect();
         let batch = dataset.batch(Split::Train, &idx);
-        let first = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)?;
+        let first = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)?;
         let mut last = first;
         for _ in 0..20 {
-            last = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)?;
+            last = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)?;
         }
         assert!(
             last.loss < first.loss * 0.8,
@@ -141,13 +142,17 @@ fn native_sgd_grad_matches_finite_difference() {
         let p0 = rt.init_params()?;
 
         // Analytic gradient of the mean batch loss: p1 = p0 - 1.0 * g.
+        let mut scratch = rt.new_scratch();
         let mut p1 = p0.clone();
-        rt.train_step_sgd(&mut p1, &batch.x, &batch.y, 1.0)?;
+        rt.train_step_sgd(&mut p1, &batch.x, &batch.y, 1.0, &mut scratch)?;
         let grad: Vec<f32> = p0.iter().zip(&p1).map(|(a, b)| a - b).collect();
 
         // The same loss, as a function of params, via the eval op.
-        let loss = |params: &[f32]| -> f64 {
-            rt.eval_batch(params, &batch.x, &batch.y, b).unwrap().loss_sum / b as f64
+        let mut loss = |params: &[f32]| -> f64 {
+            rt.eval_batch(params, &batch.x, &batch.y, b, &mut scratch)
+                .unwrap()
+                .loss_sum
+                / b as f64
         };
 
         // Central differences on coordinates with non-negligible gradient.
@@ -193,14 +198,15 @@ fn native_adam_step_matches_reference() {
         let batch = dataset.batch(Split::Train, &idx);
         let p0 = rt.init_params()?;
 
+        let mut scratch = rt.new_scratch();
         let mut p_sgd = p0.clone();
-        rt.train_step_sgd(&mut p_sgd, &batch.x, &batch.y, 1.0)?;
+        rt.train_step_sgd(&mut p_sgd, &batch.x, &batch.y, 1.0, &mut scratch)?;
         let grad: Vec<f32> = p0.iter().zip(&p_sgd).map(|(a, b)| a - b).collect();
 
         let mut p_adam = p0.clone();
         let mut state = ferrisfl::runtime::AdamState::zeros(p0.len());
         let lr = 0.01f32;
-        rt.train_step_adam(&mut p_adam, &mut state, &batch.x, &batch.y, lr)?;
+        rt.train_step_adam(&mut p_adam, &mut state, &batch.x, &batch.y, lr, &mut scratch)?;
         assert_eq!(state.t, 1.0);
 
         // Reference first step (t=1), identical f32 arithmetic.
@@ -235,15 +241,16 @@ fn eval_mask_ignores_padding() {
     let dataset = Dataset::load(&m, "synth-mnist", 3).unwrap();
     worker::with_runtime(&m, &mlp_key(), |rt| {
         let params = rt.init_params()?;
+        let mut scratch = rt.new_scratch();
         // Evaluate 40 examples as one short batch...
         let idx: Vec<usize> = (0..40).collect();
         let batch = dataset.batch(Split::Test, &idx);
-        let short = rt.eval_batch(&params, &batch.x, &batch.y, 40)?;
+        let short = rt.eval_batch(&params, &batch.x, &batch.y, 40, &mut scratch)?;
         assert_eq!(short.count, 40.0);
         // ...and as a full batch where the tail is garbage but masked.
         let idx_full: Vec<usize> = (0..rt.eval_batch_size()).collect();
         let full = dataset.batch(Split::Test, &idx_full);
-        let masked = rt.eval_batch(&params, &full.x, &full.y, 40)?;
+        let masked = rt.eval_batch(&params, &full.x, &full.y, 40, &mut scratch)?;
         assert!(
             (short.loss_sum - masked.loss_sum).abs() < 1e-2,
             "{} vs {}",
@@ -267,9 +274,10 @@ fn featext_keeps_backbone_frozen() {
     worker::with_runtime(&m, &key, |rt| {
         let pre = rt.pretrained_params()?;
         let mut params = pre.clone();
+        let mut scratch = rt.new_scratch();
         let idx: Vec<usize> = (0..rt.train_batch_size()).collect();
         let batch = dataset.batch(Split::Train, &idx);
-        rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.1)?;
+        rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.1, &mut scratch)?;
         let backbone = rt.num_params() - rt.head_size();
         assert!(
             params[..backbone] == pre[..backbone],
@@ -292,11 +300,14 @@ fn adam_state_round_trips() {
     worker::with_runtime(&m, &key, |rt| {
         let mut params = rt.init_params()?;
         let mut state = ferrisfl::runtime::AdamState::zeros(params.len());
+        let mut scratch = rt.new_scratch();
         let idx: Vec<usize> = (0..rt.train_batch_size()).collect();
         let batch = dataset.batch(Split::Train, &idx);
-        let s1 = rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01)?;
+        let s1 =
+            rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01, &mut scratch)?;
         assert_eq!(state.t, 1.0);
-        let s2 = rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01)?;
+        let s2 =
+            rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01, &mut scratch)?;
         assert_eq!(state.t, 2.0);
         assert!(s2.loss <= s1.loss * 1.5, "{} -> {}", s1.loss, s2.loss);
         assert!(state.m.iter().any(|&v| v != 0.0), "moment must update");
@@ -612,12 +623,13 @@ mod pjrt {
         let dataset = Dataset::load(&m, "synth-mnist", 1).unwrap();
         worker::with_runtime(&m, &pjrt_mlp_key(), |rt| {
             let mut params = rt.init_params()?;
+            let mut scratch = rt.new_scratch();
             let idx: Vec<usize> = (0..rt.train_batch_size()).collect();
             let batch = dataset.batch(Split::Train, &idx);
-            let first = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)?;
+            let first = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)?;
             let mut last = first;
             for _ in 0..20 {
-                last = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05)?;
+                last = rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch)?;
             }
             assert!(last.loss < first.loss * 0.8, "{} -> {}", first.loss, last.loss);
             Ok(())
@@ -687,7 +699,8 @@ mod pjrt {
             };
             worker::with_runtime(&m, &key, |rt| {
                 let mut p = rt.init_params()?;
-                let s = rt.train_step_sgd(&mut p, &batch.x, &batch.y, 0.05)?;
+                let mut scratch = rt.new_scratch();
+                let s = rt.train_step_sgd(&mut p, &batch.x, &batch.y, 0.05, &mut scratch)?;
                 Ok((p, s.loss))
             })
             .unwrap()

@@ -1,0 +1,133 @@
+//! Steady-state allocation accounting for the native step path.
+//!
+//! This integration-test binary installs a counting global allocator
+//! (per-thread counters, `System`-backed) and asserts that once a
+//! training loop is warm — scratch arena grown, batch buffers sized —
+//! `train_step_sgd`, `train_step_adam`, and `eval_batch` perform **zero
+//! heap allocations per step**. It lives in its own test target so the
+//! allocator hook and its counters see no traffic from unrelated tests.
+//!
+//! The same property is cross-checked through the runtime's own
+//! `stats::add_allocated` accounting, which now only charges scratch
+//! *growth*: a warm loop must leave the counter flat.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use ferrisfl::datasets::{BatchBuf, Dataset, Split};
+use ferrisfl::runtime::{snapshot, AdamState, Manifest, ModelExecutor, NativeExecutor};
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// `System`, with a per-thread allocation counter. Deallocations are
+/// not counted — the assertion is about acquiring memory in the loop.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_COUNT.with(|c| c.get())
+}
+
+#[test]
+fn steady_state_step_path_allocates_nothing() {
+    let m = Arc::new(Manifest::native());
+    let ds = Dataset::load(&m, "synth-mnist", 1).unwrap();
+    let rt = NativeExecutor::load(&m, "mlp-m", "synth-mnist", "sgd", "full").unwrap();
+    let b = rt.train_batch_size();
+    let idx: Vec<usize> = (0..b).collect();
+    let batch = ds.batch(Split::Train, &idx);
+
+    // --- SGD ---
+    let mut params = rt.init_params().unwrap();
+    let mut scratch = rt.new_scratch();
+    for _ in 0..3 {
+        rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch).unwrap();
+    }
+    let stats_before = snapshot();
+    let before = allocs();
+    for _ in 0..16 {
+        rt.train_step_sgd(&mut params, &batch.x, &batch.y, 0.05, &mut scratch).unwrap();
+    }
+    assert_eq!(allocs() - before, 0, "warm SGD steps must not allocate");
+    let stats_delta = snapshot().since(&stats_before);
+    assert_eq!(stats_delta.allocated, 0, "scratch must not grow once warm");
+    assert_eq!(stats_delta.executions, 16);
+
+    // --- Adam ---
+    let rt = NativeExecutor::load(&m, "mlp-m", "synth-mnist", "adam", "full").unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut state = AdamState::zeros(params.len());
+    let mut scratch = rt.new_scratch();
+    for _ in 0..3 {
+        rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01, &mut scratch)
+            .unwrap();
+    }
+    let before = allocs();
+    for _ in 0..16 {
+        rt.train_step_adam(&mut params, &mut state, &batch.x, &batch.y, 0.01, &mut scratch)
+            .unwrap();
+    }
+    assert_eq!(allocs() - before, 0, "warm Adam steps must not allocate");
+
+    // --- eval ---
+    let eb = rt.eval_batch_size();
+    let eidx: Vec<usize> = (0..eb).collect();
+    let ebatch = ds.batch(Split::Test, &eidx);
+    for _ in 0..2 {
+        rt.eval_batch(&params, &ebatch.x, &ebatch.y, eb, &mut scratch).unwrap();
+    }
+    let before = allocs();
+    for _ in 0..8 {
+        rt.eval_batch(&params, &ebatch.x, &ebatch.y, eb, &mut scratch).unwrap();
+    }
+    assert_eq!(allocs() - before, 0, "warm eval batches must not allocate");
+}
+
+#[test]
+fn steady_state_batch_gather_allocates_nothing() {
+    let m = Arc::new(Manifest::native());
+    let ds = Dataset::load(&m, "synth-mnist", 2).unwrap();
+    let mut buf = BatchBuf::new();
+    let mut idx: Vec<usize> = Vec::with_capacity(32);
+
+    // Warm the buffers.
+    idx.extend(0..32);
+    ds.gather_into(Split::Train, &idx, &mut buf);
+
+    let before = allocs();
+    for step in 0..16usize {
+        idx.clear();
+        for i in 0..32 {
+            idx.push((step * 32 + i) % ds.num_train());
+        }
+        let view = ds.gather_into(Split::Train, &idx, &mut buf);
+        assert_eq!(view.len(), 32);
+    }
+    assert_eq!(allocs() - before, 0, "warm batch gathering must not allocate");
+}
