@@ -11,7 +11,9 @@
 
 use std::sync::Arc;
 
-use ferrisfl::aggregators::{self, fedavg_host, sample_weights, Update};
+use ferrisfl::aggregators::{
+    self, fedavg_host, sample_weights, StreamingAccumulator, Update,
+};
 use ferrisfl::benchutil::{bench, header, merge_section, report, scaled_iters};
 use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
 use ferrisfl::runtime::Manifest;
@@ -84,6 +86,32 @@ fn main() {
             );
             rows.push((
                 format!("{model} K={k} host"),
+                Json::obj(vec![
+                    ("mean_ms", Json::num(s.mean * 1e3)),
+                    ("gb_per_sec", Json::num(s.gb_per_sec(bytes))),
+                ]),
+            ));
+
+            // The round pipeline's incremental reduce: K pushes into the
+            // lock-striped exact accumulator + the finalize/apply pass.
+            // (In a live round the pushes run on the worker threads and
+            // overlap local training; this measures the raw reduce.)
+            let acc = StreamingAccumulator::new(p);
+            let s = bench(2, iters, || {
+                acc.reset();
+                for u in &ups {
+                    acc.push(&u.delta, u.num_samples as u64).unwrap();
+                }
+                let mean = acc.finalize().unwrap();
+                global.iter().zip(&mean).map(|(g, m)| g + m).collect::<Vec<f32>>()
+            });
+            report(
+                &format!("streaming    K={k}"),
+                &s,
+                &format!("{:.2} GB/s", s.gb_per_sec(bytes)),
+            );
+            rows.push((
+                format!("{model} K={k} streaming"),
                 Json::obj(vec![
                     ("mean_ms", Json::num(s.mean * 1e3)),
                     ("gb_per_sec", Json::num(s.gb_per_sec(bytes))),

@@ -12,7 +12,9 @@
 
 use std::sync::Arc;
 
-use ferrisfl::benchutil::{fast_mode, header, merge_section, report, BenchStats};
+use ferrisfl::benchutil::{
+    self, fast_mode, header, merge_section, report, BenchStats,
+};
 use ferrisfl::config::FlParams;
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
@@ -93,13 +95,34 @@ fn main() {
     println!("\nprofiler split:\n{}", res.profiler.report());
 
     let walltime = Json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
-    merge_section(
-        "round_e2e",
-        Json::obj(vec![
-            ("backend", Json::str(manifest.backend.name())),
-            ("workload", Json::str("lenet5@synth-mnist 100 agents, 10 sampled")),
-            ("round_walltime", walltime),
-            ("steady_round_secs", Json::Arr(steady)),
-        ]),
-    );
+    let section = Json::obj(vec![
+        ("backend", Json::str(manifest.backend.name())),
+        ("workload", Json::str("lenet5@synth-mnist 100 agents, 10 sampled")),
+        ("round_walltime", walltime),
+        ("steady_round_secs", Json::Arr(steady)),
+    ]);
+    merge_section("round_e2e", section.clone());
+
+    // Before/after vs the committed baseline (the ROADMAP's rule:
+    // every perf PR reports its delta from the same bench sections).
+    let baseline_path = benchutil::workspace_root().join("BENCH_baseline.json");
+    if let Some(baseline) = std::fs::read_to_string(&baseline_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+    {
+        let current = Json::obj(vec![("round_e2e", section)]);
+        let (diff_rows, _) = benchutil::diff(&baseline, &current, 0.25);
+        let round_rows: Vec<_> = diff_rows
+            .into_iter()
+            .filter(|r| r.name.starts_with("round_e2e/"))
+            .collect();
+        header("round walltime vs committed baseline");
+        if benchutil::is_provisional(&baseline) {
+            println!(
+                "(baseline {} is provisional — no measured reference yet)",
+                baseline_path.display()
+            );
+        }
+        print!("{}", benchutil::render_console(&round_rows));
+    }
 }

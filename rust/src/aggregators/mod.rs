@@ -17,6 +17,10 @@
 //! - [`CoordinateMedian`] — coordinate-wise median of deltas.
 //! - [`TrimmedMean`] — coordinate-wise β-trimmed mean.
 
+pub mod streaming;
+
+pub use streaming::StreamingAccumulator;
+
 use crate::runtime::ModelExecutor;
 use crate::util::error::{bail, Result};
 
@@ -28,6 +32,17 @@ pub struct Update {
     pub delta: Vec<f32>,
     /// Local sample count (FedAvg weighting).
     pub num_samples: usize,
+}
+
+/// How a rule weights updates when reduced incrementally through a
+/// [`StreamingAccumulator`] (the integer weight numerator per update;
+/// the accumulator divides by the total at finalize).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKind {
+    /// Weight each update by its sample count (Eq. 2's Γ).
+    SampleWeighted,
+    /// Weight every update equally (the FedSGD limit).
+    Uniform,
 }
 
 /// Strategy interface for the server-side aggregation rule.
@@ -45,7 +60,43 @@ pub trait Aggregator: Send {
         rt: Option<&dyn ModelExecutor>,
     ) -> Result<Vec<f32>>;
 
+    /// `Some(kind)` when this rule is a function of the weighted mean
+    /// delta only, so the entrypoint may reduce updates incrementally
+    /// (workers push into a [`StreamingAccumulator`] as they finish):
+    /// the reduce overlaps local training, the leader's aggregation
+    /// collapses to one finalize pass, and no K×P copy is made for a
+    /// pool fan-out. (The entrypoint still *retains* each delta,
+    /// uncopied, until round end for incentive scoring.) Robust rules
+    /// (median/trimmed-mean) need every delta and return `None` — the
+    /// default — to keep the materialized path.
+    fn stream_kind(&self) -> Option<StreamKind> {
+        None
+    }
+
+    /// Fold a streamed weighted-mean delta `Δ̄` into the next global
+    /// vector. Only invoked when [`Self::stream_kind`] opted in; the
+    /// default is the plain FedAvg/FedSGD update `W^{t+1} = W^t + Δ̄`.
+    /// Server-optimizer rules override this with their state update
+    /// (and should [`check_streamed`] first).
+    fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
+        check_streamed(global, mean)?;
+        Ok(global.iter().zip(mean).map(|(g, m)| g + m).collect())
+    }
+
     fn name(&self) -> &'static str;
+}
+
+/// Shape validation shared by every [`Aggregator::apply_streamed`]
+/// implementation.
+pub fn check_streamed(global: &[f32], mean: &[f32]) -> Result<()> {
+    if mean.len() != global.len() {
+        bail!(
+            "streamed mean has {} params, global has {}",
+            mean.len(),
+            global.len()
+        );
+    }
+    Ok(())
 }
 
 fn check(global: &[f32], updates: &[Update]) -> Result<()> {
@@ -125,6 +176,12 @@ impl Aggregator for FedAvg {
         }
     }
 
+    fn stream_kind(&self) -> Option<StreamKind> {
+        // The offload variant exists to exercise the backend's
+        // aggregation op; keep it on the materialized path.
+        (!self.offload).then_some(StreamKind::SampleWeighted)
+    }
+
     fn name(&self) -> &'static str {
         "fedavg"
     }
@@ -154,6 +211,10 @@ impl Aggregator for FedSgd {
         }
     }
 
+    fn stream_kind(&self) -> Option<StreamKind> {
+        Some(StreamKind::Uniform)
+    }
+
     fn name(&self) -> &'static str {
         "fedsgd"
     }
@@ -174,6 +235,20 @@ impl FedAvgM {
             velocity: Vec::new(),
         }
     }
+
+    /// The momentum update over a mean pseudo-gradient, shared by the
+    /// materialized and streamed paths.
+    fn apply(&mut self, global: &[f32], mean: &[f32]) -> Vec<f32> {
+        if self.velocity.len() != global.len() {
+            self.velocity = vec![0.0; global.len()];
+        }
+        let mut out = global.to_vec();
+        for i in 0..global.len() {
+            self.velocity[i] = self.beta * self.velocity[i] + mean[i];
+            out[i] += self.server_lr * self.velocity[i];
+        }
+        out
+    }
 }
 
 impl Aggregator for FedAvgM {
@@ -193,15 +268,16 @@ impl Aggregator for FedAvgM {
                 *m += w * d;
             }
         }
-        if self.velocity.len() != global.len() {
-            self.velocity = vec![0.0; global.len()];
-        }
-        let mut out = global.to_vec();
-        for i in 0..global.len() {
-            self.velocity[i] = self.beta * self.velocity[i] + mean[i];
-            out[i] += self.server_lr * self.velocity[i];
-        }
-        Ok(out)
+        Ok(self.apply(global, &mean))
+    }
+
+    fn stream_kind(&self) -> Option<StreamKind> {
+        Some(StreamKind::SampleWeighted)
+    }
+
+    fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
+        check_streamed(global, mean)?;
+        Ok(self.apply(global, mean))
     }
 
     fn name(&self) -> &'static str {
@@ -232,6 +308,28 @@ impl FedAdam {
             t: 0,
         }
     }
+
+    /// The Adam update over a mean pseudo-gradient, shared by the
+    /// materialized and streamed paths.
+    fn apply(&mut self, global: &[f32], g: &[f32]) -> Vec<f32> {
+        if self.m.len() != global.len() {
+            self.m = vec![0.0; global.len()];
+            self.v = vec![0.0; global.len()];
+            self.t = 0;
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t);
+        let bc2 = 1.0 - self.b2.powi(self.t);
+        let mut out = global.to_vec();
+        for i in 0..global.len() {
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g[i];
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g[i] * g[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            out[i] += self.server_lr * mhat / (vhat.sqrt() + self.eps);
+        }
+        out
+    }
 }
 
 impl Aggregator for FedAdam {
@@ -249,23 +347,16 @@ impl Aggregator for FedAdam {
                 *gi += w * d;
             }
         }
-        if self.m.len() != global.len() {
-            self.m = vec![0.0; global.len()];
-            self.v = vec![0.0; global.len()];
-            self.t = 0;
-        }
-        self.t += 1;
-        let bc1 = 1.0 - self.b1.powi(self.t);
-        let bc2 = 1.0 - self.b2.powi(self.t);
-        let mut out = global.to_vec();
-        for i in 0..global.len() {
-            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g[i];
-            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g[i] * g[i];
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            out[i] += self.server_lr * mhat / (vhat.sqrt() + self.eps);
-        }
-        Ok(out)
+        Ok(self.apply(global, &g))
+    }
+
+    fn stream_kind(&self) -> Option<StreamKind> {
+        Some(StreamKind::SampleWeighted)
+    }
+
+    fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
+        check_streamed(global, mean)?;
+        Ok(self.apply(global, mean))
     }
 
     fn name(&self) -> &'static str {
@@ -536,5 +627,82 @@ mod tests {
     #[should_panic]
     fn trimmed_mean_rejects_bad_beta() {
         TrimmedMean::new(0.5);
+    }
+
+    // ------------------------------------------------ streaming parity
+
+    /// Reduce `ups` through a [`StreamingAccumulator`] the way the
+    /// entrypoint does for `agg`'s stream kind.
+    fn stream_through(agg: &mut dyn Aggregator, global: &[f32], ups: &[Update]) -> Vec<f32> {
+        let kind = agg.stream_kind().expect("rule must stream");
+        let acc = StreamingAccumulator::new(global.len());
+        let total: u64 = ups.iter().map(|u| u.num_samples as u64).sum();
+        for u in ups {
+            let w = match kind {
+                StreamKind::SampleWeighted if total > 0 => u.num_samples as u64,
+                _ => 1,
+            };
+            acc.push(&u.delta, w).unwrap();
+        }
+        agg.apply_streamed(global, &acc.finalize().unwrap()).unwrap()
+    }
+
+    /// Every FedAvg-family rule produces the same next global whether
+    /// the cohort is materialized or streamed (within float tolerance),
+    /// including across stateful rounds for the server optimizers.
+    #[test]
+    fn streamed_rules_match_materialized_across_rounds() {
+        let mut rng = crate::util::Rng::new(0x51ab);
+        let p = 400usize;
+        // Deltas bounded away from zero: FedAdam's t=1 update is
+        // ±lr·sign(ḡ), so a coordinate mean straddling zero would turn
+        // an O(1e-9) accumulation-order difference into a 2·lr one.
+        let make = |rng: &mut crate::util::Rng| -> Vec<Update> {
+            (0..5)
+                .map(|i| {
+                    let delta = (0..p)
+                        .map(|_| 0.005 + 0.02 * rng.next_gaussian().abs())
+                        .collect();
+                    upd(i, delta, 3 + i * 4)
+                })
+                .collect()
+        };
+        for name in ["fedavg", "fedsgd", "fedavgm", "fedadam"] {
+            let mut mat = from_name(name).unwrap();
+            let mut st = from_name(name).unwrap();
+            let mut g_mat: Vec<f32> = (0..p).map(|_| rng.next_gaussian() * 0.1).collect();
+            let mut g_st = g_mat.clone();
+            for round in 0..3 {
+                let ups = make(&mut rng);
+                g_mat = mat.aggregate(&g_mat, &ups, None).unwrap();
+                g_st = stream_through(st.as_mut(), &g_st, &ups);
+                for (j, (a, b)) in g_mat.iter().zip(&g_st).enumerate() {
+                    let tol = 2e-5 * a.abs().max(1.0);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "{name} round {round} coord {j}: materialized {a} vs streamed {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_kinds_are_as_designed() {
+        assert_eq!(FedAvg::default().stream_kind(), Some(StreamKind::SampleWeighted));
+        assert_eq!(FedAvg { offload: true }.stream_kind(), None);
+        assert_eq!(FedSgd.stream_kind(), Some(StreamKind::Uniform));
+        assert_eq!(FedAvgM::new(0.9, 1.0).stream_kind(), Some(StreamKind::SampleWeighted));
+        assert_eq!(FedAdam::new(0.01).stream_kind(), Some(StreamKind::SampleWeighted));
+        assert_eq!(CoordinateMedian.stream_kind(), None);
+        assert_eq!(TrimmedMean::new(0.1).stream_kind(), None);
+    }
+
+    #[test]
+    fn apply_streamed_checks_shape() {
+        let mut a = FedAvg::default();
+        assert!(a.apply_streamed(&[0.0; 3], &[0.0; 2]).is_err());
+        let out = a.apply_streamed(&[1.0, 2.0], &[0.5, -0.5]).unwrap();
+        assert_eq!(out, vec![1.5, 1.5]);
     }
 }

@@ -1,0 +1,295 @@
+//! Streaming delta aggregation — the lock-striped incremental reduce
+//! behind the round pipeline.
+//!
+//! The materialized path collects every agent's `delta_i` on the leader
+//! and only then runs the reduce (historically with an extra K×P copy
+//! into `'static` pool jobs). The streaming path inverts that: each
+//! worker pushes its finished delta into a shared
+//! [`StreamingAccumulator`] *as the agent completes*, so the server-side
+//! reduce overlaps the stragglers' local training, the leader's
+//! aggregation step shrinks to a single P-length finalize pass, and no
+//! cohort copy is ever made. (Deltas are still retained — uncopied —
+//! until round end for incentive scoring.)
+//!
+//! **Order invariance.** Pool workers finish in nondeterministic order,
+//! and float addition does not commute bitwise — a naive `f32`/`f64`
+//! running sum would make the global model depend on thread timing.
+//! Instead every contribution `w_i · delta_i[j]` is quantised to a
+//! fixed-point grid (a deterministic, per-term operation) and reduced in
+//! a 128-bit *integer* accumulator, where addition is exact and
+//! commutative. The finalized mean is therefore **bit-identical for
+//! every arrival order** — stronger than compensated (Kahan) summation,
+//! which shrinks but does not eliminate order dependence. The grid step
+//! is 2⁻⁴⁰ ≈ 9·10⁻¹³: since `w_i` is an integer and `delta_i[j]` an
+//! `f32` (24-bit mantissa), the product is exact in `f64` and the
+//! quantisation error per term is at most one grid step — far below the
+//! 1e-5 tolerance the golden tests pin against [`super::fedavg_host`].
+//!
+//! **Lock striping.** The parameter range is split into fixed-size
+//! stripes, each behind its own `Mutex`, and concurrent pushes start at
+//! rotated stripe offsets, so K workers drain into the accumulator with
+//! minimal contention instead of serialising on one lock.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::error::{bail, Result};
+
+/// Coordinates per lock stripe (64 KiB of `f32` delta per stripe).
+const STRIPE_COORDS: usize = 1 << 14;
+
+/// Fixed-point scale: contributions are quantised to multiples of
+/// 2⁻⁴⁰ before the exact integer reduce.
+const FX_SCALE: f64 = (1u64 << 40) as f64;
+
+/// Headroom clamp on |w·delta| per term (pre-scale): at 2⁶⁰ the scaled
+/// term fits in 100 bits, so the i128 accumulator holds ≥ 2²⁷ terms
+/// before it could wrap — far beyond any cohort.
+const FX_TERM_LIMIT: f64 = (1u64 << 60) as f64;
+
+/// A shared, lock-striped, order-invariant weighted-delta accumulator.
+///
+/// Usage per round: [`reset`](Self::reset) (or a fresh `new`), then any
+/// number of concurrent [`push`](Self::push) calls from worker threads,
+/// then [`finalize`](Self::finalize) on the leader once all pushes have
+/// completed (the entrypoint's pool join is that barrier). The result is
+/// the weighted mean delta `Δ̄ = Σ w_i·delta_i / Σ w_i`, bit-identical
+/// under any push order.
+pub struct StreamingAccumulator {
+    len: usize,
+    /// Fixed-point partial sums, `STRIPE_COORDS` coordinates per stripe.
+    stripes: Vec<Mutex<Vec<i128>>>,
+    total_weight: AtomicU64,
+    /// Updates pushed since the last reset; doubles as the rotation
+    /// counter that staggers concurrent pushes across stripes.
+    count: AtomicUsize,
+}
+
+impl StreamingAccumulator {
+    /// An accumulator for `len`-parameter deltas, zeroed.
+    pub fn new(len: usize) -> Self {
+        let nstripes = len.div_ceil(STRIPE_COORDS).max(1);
+        let stripes = (0..nstripes)
+            .map(|s| {
+                let lo = s * STRIPE_COORDS;
+                let hi = ((s + 1) * STRIPE_COORDS).min(len);
+                Mutex::new(vec![0i128; hi - lo])
+            })
+            .collect();
+        Self {
+            len,
+            stripes,
+            total_weight: AtomicU64::new(0),
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Parameter count this accumulator was built for.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Updates pushed since the last reset.
+    pub fn count(&self) -> usize {
+        self.count.load(Ordering::Acquire)
+    }
+
+    /// Zero the accumulator for reuse (the entrypoint keeps one across
+    /// rounds, so streaming adds no steady-state allocation).
+    pub fn reset(&self) {
+        for stripe in &self.stripes {
+            let mut acc = stripe.lock().expect("streaming stripe poisoned");
+            acc.fill(0);
+        }
+        self.total_weight.store(0, Ordering::Release);
+        self.count.store(0, Ordering::Release);
+    }
+
+    /// Fold one agent's delta in with integer weight `weight`
+    /// (sample count for FedAvg-family rules, 1 for uniform rules).
+    ///
+    /// Safe to call concurrently from many threads; the stripe locks
+    /// are held only for the corresponding coordinate range.
+    pub fn push(&self, delta: &[f32], weight: u64) -> Result<()> {
+        if delta.len() != self.len {
+            bail!(
+                "streaming push of {} params into accumulator of {}",
+                delta.len(),
+                self.len
+            );
+        }
+        // A non-finite contribution would quantise to 0 (Rust's
+        // saturating float→int cast maps NaN to 0), silently dropping a
+        // diverged client's coordinates while its weight still counts.
+        // The materialized path would propagate NaN into the global
+        // model; here we fail fast instead — both make the divergence
+        // visible, silence would not.
+        if let Some(pos) = delta.iter().position(|d| !d.is_finite()) {
+            bail!("streaming push rejected: delta[{pos}] is {}", delta[pos]);
+        }
+        let w = weight as f64;
+        let nstripes = self.stripes.len();
+        // Rotate the starting stripe per push so concurrent workers
+        // drain into different locks.
+        let start = self.count.fetch_add(1, Ordering::AcqRel) % nstripes;
+        for turn in 0..nstripes {
+            let s = (start + turn) % nstripes;
+            let lo = s * STRIPE_COORDS;
+            let mut acc = self.stripes[s].lock().expect("streaming stripe poisoned");
+            for (a, &d) in acc.iter_mut().zip(&delta[lo..]) {
+                // Exact product (integer × 24-bit mantissa), then a
+                // deterministic per-term quantisation: the i128 reduce
+                // commutes exactly, so arrival order cannot matter.
+                let term = (w * d as f64).clamp(-FX_TERM_LIMIT, FX_TERM_LIMIT);
+                *a += (term * FX_SCALE) as i128;
+            }
+        }
+        self.total_weight.fetch_add(weight, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// The weighted mean delta `Δ̄ = Σ w_i·delta_i / Σ w_i`.
+    ///
+    /// Call after all pushes have completed (e.g. after the worker-pool
+    /// join). Errors when nothing was pushed, or when every pushed
+    /// weight was zero — the entrypoint maps all-zero sample counts to
+    /// uniform weight 1 before pushing, mirroring
+    /// [`super::sample_weights`]'s fallback.
+    pub fn finalize(&self) -> Result<Vec<f32>> {
+        if self.count() == 0 {
+            bail!("streaming aggregation finalized with no updates");
+        }
+        let total = self.total_weight.load(Ordering::Acquire);
+        if total == 0 {
+            bail!("streaming aggregation finalized with zero total weight");
+        }
+        let inv = 1.0 / (FX_SCALE * total as f64);
+        let mut out = Vec::with_capacity(self.len);
+        for stripe in &self.stripes {
+            let acc = stripe.lock().expect("streaming stripe poisoned");
+            out.extend(acc.iter().map(|&a| (a as f64 * inv) as f32));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregators::{fedavg_host, sample_weights, Update};
+    use crate::util::Rng;
+
+    fn updates(rng: &mut Rng, k: usize, p: usize) -> Vec<Update> {
+        (0..k)
+            .map(|i| Update {
+                agent_id: i,
+                delta: (0..p).map(|_| rng.next_gaussian() * 0.01).collect(),
+                num_samples: 5 + i * 3,
+            })
+            .collect()
+    }
+
+    fn stream_mean(ups: &[Update], order: &[usize], p: usize) -> Vec<f32> {
+        let acc = StreamingAccumulator::new(p);
+        for &i in order {
+            acc.push(&ups[i].delta, ups[i].num_samples as u64).unwrap();
+        }
+        acc.finalize().unwrap()
+    }
+
+    #[test]
+    fn matches_fedavg_host_within_tolerance() {
+        let mut rng = Rng::new(0x57e4);
+        // Straddle several stripes and a non-multiple tail.
+        for (k, p) in [(1usize, 64usize), (4, 1000), (7, STRIPE_COORDS + 13), (16, 40_000)] {
+            let ups = updates(&mut rng, k, p);
+            let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian() * 0.1).collect();
+            let w = sample_weights(&ups);
+            let host = fedavg_host(&global, &ups, &w);
+            let mean = stream_mean(&ups, &(0..k).collect::<Vec<_>>(), p);
+            for (j, ((&m, &g), &h)) in mean.iter().zip(&global).zip(&host).enumerate() {
+                let got = g + m;
+                let tol = 1e-5 * h.abs().max(1.0);
+                assert!((got - h).abs() <= tol, "k={k} p={p} coord {j}: {got} vs {h}");
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_order_is_bit_invariant() {
+        let mut rng = Rng::new(0x0afe);
+        let (k, p) = (9usize, 2 * STRIPE_COORDS + 77);
+        let ups = updates(&mut rng, k, p);
+        let mut order: Vec<usize> = (0..k).collect();
+        let reference = stream_mean(&ups, &order, p);
+        for _ in 0..5 {
+            rng.shuffle(&mut order);
+            let shuffled = stream_mean(&ups, &order, p);
+            assert!(
+                reference == shuffled,
+                "streamed mean must be bit-identical under arrival order {order:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_pushes_match_serial() {
+        let mut rng = Rng::new(0xc0c0);
+        let (k, p) = (8usize, STRIPE_COORDS * 3 + 5);
+        let ups = updates(&mut rng, k, p);
+        let serial = stream_mean(&ups, &(0..k).collect::<Vec<_>>(), p);
+        let acc = StreamingAccumulator::new(p);
+        std::thread::scope(|s| {
+            for u in &ups {
+                let acc = &acc;
+                s.spawn(move || acc.push(&u.delta, u.num_samples as u64).unwrap());
+            }
+        });
+        assert_eq!(acc.count(), k);
+        let parallel = acc.finalize().unwrap();
+        assert!(serial == parallel, "threaded pushes must be bit-identical to serial");
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let acc = StreamingAccumulator::new(8);
+        acc.push(&[1.0; 8], 2).unwrap();
+        acc.reset();
+        assert_eq!(acc.count(), 0);
+        acc.push(&[2.0; 8], 1).unwrap();
+        let mean = acc.finalize().unwrap();
+        assert!(mean.iter().all(|&m| (m - 2.0).abs() < 1e-6), "{mean:?}");
+    }
+
+    #[test]
+    fn shape_mismatch_and_empty_are_errors() {
+        let acc = StreamingAccumulator::new(4);
+        assert!(acc.push(&[0.0; 3], 1).is_err());
+        assert!(acc.finalize().is_err(), "no pushes => error");
+        acc.push(&[0.0; 4], 0).unwrap();
+        assert!(acc.finalize().is_err(), "zero total weight => error");
+    }
+
+    /// A diverged client (NaN/inf delta) must fail loudly — the
+    /// saturating float→int cast would otherwise zero it silently.
+    #[test]
+    fn non_finite_deltas_are_rejected() {
+        let acc = StreamingAccumulator::new(3);
+        assert!(acc.push(&[0.0, f32::NAN, 0.0], 1).is_err());
+        assert!(acc.push(&[f32::INFINITY, 0.0, 0.0], 1).is_err());
+        assert_eq!(acc.count(), 0, "rejected pushes must not count");
+    }
+
+    #[test]
+    fn uniform_weights_average() {
+        let acc = StreamingAccumulator::new(2);
+        acc.push(&[1.0, -3.0], 1).unwrap();
+        acc.push(&[3.0, 1.0], 1).unwrap();
+        let mean = acc.finalize().unwrap();
+        assert!((mean[0] - 2.0).abs() < 1e-6 && (mean[1] + 1.0).abs() < 1e-6, "{mean:?}");
+    }
+}

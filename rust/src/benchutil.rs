@@ -73,14 +73,23 @@ pub fn scaled_iters(iters: usize) -> usize {
     }
 }
 
+/// The workspace root, resolved from the crate's own manifest dir at
+/// compile time — stable no matter which directory the bench binary is
+/// launched from.
+pub fn workspace_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().map(PathBuf::from).unwrap_or(manifest)
+}
+
 /// Where bench JSON goes: `$FERRISFL_BENCH_JSON`, else
-/// `BENCH_native.json` in the bench binary's working directory (the
-/// *package* dir, `rust/`, under `cargo bench` — CI pins the env var to
-/// the workspace root so the artifact upload finds it).
+/// `BENCH_native.json` in the **workspace root**. (It used to default
+/// to the process CWD, which under `cargo bench` is the package dir
+/// `rust/` — so local runs and CI scattered snapshots into different
+/// places depending on invocation.)
 pub fn bench_json_path() -> PathBuf {
     std::env::var("FERRISFL_BENCH_JSON")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("BENCH_native.json"))
+        .unwrap_or_else(|_| workspace_root().join("BENCH_native.json"))
 }
 
 /// Read-modify-write one top-level section of the bench JSON file, so
@@ -91,22 +100,276 @@ pub fn merge_section(section: &str, value: Json) {
 }
 
 /// [`merge_section`] against an explicit path (tests use a temp file).
+///
+/// Resilient to a corrupt or truncated existing file: the unreadable
+/// content is preserved next to the file as `<name>.corrupt` (instead
+/// of being silently clobbered) and the merge proceeds from an empty
+/// snapshot. The write itself goes through a temp file + rename, so an
+/// interrupted bench can never leave a half-written `BENCH_native.json`
+/// behind — the failure mode that used to abort the *next* bench run.
 pub fn merge_section_at(path: &std::path::Path, section: &str, value: Json) {
-    let mut root = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|text| Json::parse(&text).ok())
-        .unwrap_or_else(|| Json::obj(vec![]));
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                let backup = path.with_extension("json.corrupt");
+                let _ = std::fs::write(&backup, &text);
+                eprintln!(
+                    "warning: {} is not valid JSON ({e}); starting a fresh \
+                     snapshot (old content saved to {})",
+                    path.display(),
+                    backup.display()
+                );
+                Json::obj(vec![])
+            }
+        },
+        Err(_) => Json::obj(vec![]),
+    };
     if !matches!(root, Json::Obj(_)) {
+        eprintln!(
+            "warning: {} holds a non-object JSON value; starting a fresh snapshot",
+            path.display()
+        );
         root = Json::obj(vec![]);
     }
     if let Json::Obj(map) = &mut root {
         map.insert(section.to_string(), value);
     }
-    if let Err(e) = std::fs::write(path, root.to_string()) {
+    // Atomic replace: write the whole snapshot to a sibling temp file,
+    // then rename over the target.
+    let tmp = path.with_extension(format!("json.tmp.{}", std::process::id()));
+    let write = std::fs::write(&tmp, root.to_string())
+        .and_then(|()| std::fs::rename(&tmp, path));
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
         eprintln!("warning: could not write {}: {e}", path.display());
     } else {
         println!("\n[bench] wrote section {section:?} to {}", path.display());
     }
+}
+
+// ===================================================== regression diff
+//
+// The CI bench gate: extract comparable scalar metrics out of two bench
+// snapshots (the committed `BENCH_baseline.json` and a fresh
+// `BENCH_native.json`) and fail on any regression beyond a threshold.
+// Used by the `bench_diff` binary.
+
+/// One comparable scalar pulled out of a bench snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// Stable dotted name, e.g. `round_e2e/workers_4/mean_ms`.
+    pub name: String,
+    pub value: f64,
+    /// Throughputs are better high; walltimes are better low.
+    pub higher_is_better: bool,
+}
+
+/// One row of the baseline-vs-current comparison.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub name: String,
+    pub base: Option<f64>,
+    pub cur: Option<f64>,
+    pub higher_is_better: bool,
+    /// `cur/base - 1` (signed change), when both sides exist.
+    pub change: Option<f64>,
+    /// Worse than the threshold allows (only set when both sides exist).
+    pub regressed: bool,
+}
+
+fn push_metric(out: &mut Vec<Metric>, name: String, v: Option<&Json>, higher: bool) {
+    if let Some(Json::Num(n)) = v {
+        if n.is_finite() && *n > 0.0 {
+            out.push(Metric {
+                name,
+                value: *n,
+                higher_is_better: higher,
+            });
+        }
+    }
+}
+
+/// Extract the gated metrics from a bench snapshot: train-step and eval
+/// throughput (steps/s / examples/s), the naive-vs-blocked numbers,
+/// per-pool-size round walltime, and aggregation GB/s. Unknown sections
+/// are ignored, so old and new snapshots stay comparable.
+pub fn collect_metrics(root: &Json) -> Vec<Metric> {
+    let mut out = Vec::new();
+    // train_step.{cases,eval}.<case>.items_per_sec (examples/s, higher
+    // better)
+    for sub in ["cases", "eval"] {
+        if let Some(Json::Obj(cases)) = root.get("train_step").and_then(|s| s.get(sub)) {
+            for (case, v) in cases {
+                push_metric(
+                    &mut out,
+                    format!("train_step/{sub}/{case}/items_per_sec"),
+                    v.get("items_per_sec"),
+                    true,
+                );
+            }
+        }
+    }
+    // train_step.naive_vs_blocked: gate on blocked steps/s only. The
+    // speedup *ratio* is deliberately not gated — it also moves when
+    // the naive baseline measurement shifts (different runner CPU,
+    // cache warmth), which would fail CI without a real regression.
+    if let Some(nvb) = root.get("train_step").and_then(|s| s.get("naive_vs_blocked")) {
+        push_metric(
+            &mut out,
+            "train_step/naive_vs_blocked/steps_per_sec_blocked".into(),
+            nvb.get("steps_per_sec_blocked"),
+            true,
+        );
+    }
+    // round_e2e.round_walltime.workers_N.mean_ms (lower better)
+    if let Some(Json::Obj(ws)) = root.get("round_e2e").and_then(|s| s.get("round_walltime")) {
+        for (w, v) in ws {
+            push_metric(&mut out, format!("round_e2e/{w}/mean_ms"), v.get("mean_ms"), false);
+        }
+    }
+    // aggregation.fedavg.<row>.gb_per_sec (higher better)
+    if let Some(Json::Obj(rows)) = root.get("aggregation").and_then(|s| s.get("fedavg")) {
+        for (row, v) in rows {
+            push_metric(
+                &mut out,
+                format!("aggregation/fedavg/{row}/gb_per_sec"),
+                v.get("gb_per_sec"),
+                true,
+            );
+        }
+    }
+    out
+}
+
+/// A baseline is *provisional* when it carries `"provisional": true` at
+/// the top level: the diff table is still printed, but regressions do
+/// not gate (used to bootstrap the committed baseline before a real CI
+/// measurement is promoted into it).
+pub fn is_provisional(root: &Json) -> bool {
+    matches!(root.get("provisional"), Some(Json::Bool(true)))
+}
+
+/// Compare two snapshots. `max_regress` is the allowed fractional
+/// slowdown (0.25 = fail beyond 25% worse). Returns the per-metric rows
+/// (union of both sides, baseline order first) and whether any metric
+/// regressed beyond the threshold.
+pub fn diff(base: &Json, cur: &Json, max_regress: f64) -> (Vec<DiffRow>, bool) {
+    let base_metrics = collect_metrics(base);
+    let cur_metrics = collect_metrics(cur);
+    let cur_by_name: std::collections::BTreeMap<&str, &Metric> =
+        cur_metrics.iter().map(|m| (m.name.as_str(), m)).collect();
+    let base_names: std::collections::BTreeSet<&str> =
+        base_metrics.iter().map(|m| m.name.as_str()).collect();
+
+    let mut rows = Vec::new();
+    let mut any_regressed = false;
+    for bm in &base_metrics {
+        let cm = cur_by_name.get(bm.name.as_str());
+        let (change, regressed) = match cm {
+            Some(cm) => {
+                let change = cm.value / bm.value - 1.0;
+                // For higher-is-better metrics a *drop* is a regression;
+                // for lower-is-better a *rise* is.
+                let worse = if bm.higher_is_better { -change } else { change };
+                (Some(change), worse > max_regress)
+            }
+            None => (None, false),
+        };
+        any_regressed |= regressed;
+        rows.push(DiffRow {
+            name: bm.name.clone(),
+            base: Some(bm.value),
+            cur: cm.map(|m| m.value),
+            higher_is_better: bm.higher_is_better,
+            change,
+            regressed,
+        });
+    }
+    for cm in &cur_metrics {
+        if !base_names.contains(cm.name.as_str()) {
+            rows.push(DiffRow {
+                name: cm.name.clone(),
+                base: None,
+                cur: Some(cm.value),
+                higher_is_better: cm.higher_is_better,
+                change: None,
+                regressed: false,
+            });
+        }
+    }
+    (rows, any_regressed)
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(v) if v >= 100.0 => format!("{v:.1}"),
+        Some(v) => format!("{v:.4}"),
+        None => "—".into(),
+    }
+}
+
+fn fmt_change(r: &DiffRow) -> String {
+    match r.change {
+        Some(c) => format!("{:+.1}%", c * 100.0),
+        None => "—".into(),
+    }
+}
+
+/// The comparison as a GitHub-flavoured markdown table (for
+/// `$GITHUB_STEP_SUMMARY`).
+pub fn render_markdown(rows: &[DiffRow]) -> String {
+    let mut s = String::from("| metric | baseline | current | change | status |\n");
+    s.push_str("|---|---:|---:|---:|---|\n");
+    for r in rows {
+        let status = if r.regressed {
+            "❌ regressed"
+        } else if r.base.is_none() {
+            "new"
+        } else if r.cur.is_none() {
+            "missing"
+        } else {
+            "ok"
+        };
+        s.push_str(&format!(
+            "| `{}` {} | {} | {} | {} | {} |\n",
+            r.name,
+            if r.higher_is_better { "↑" } else { "↓" },
+            fmt_opt(r.base),
+            fmt_opt(r.cur),
+            fmt_change(r),
+            status
+        ));
+    }
+    s
+}
+
+/// The comparison as a plain console table.
+pub fn render_console(rows: &[DiffRow]) -> String {
+    let mut s = format!(
+        "{:<56} {:>12} {:>12} {:>8}  {}\n",
+        "metric", "baseline", "current", "change", "status"
+    );
+    for r in rows {
+        let status = if r.regressed {
+            "REGRESSED"
+        } else if r.base.is_none() {
+            "new"
+        } else if r.cur.is_none() {
+            "missing"
+        } else {
+            "ok"
+        };
+        s.push_str(&format!(
+            "{:<56} {:>12} {:>12} {:>8}  {}\n",
+            r.name,
+            fmt_opt(r.base),
+            fmt_opt(r.cur),
+            fmt_change(r),
+            status
+        ));
+    }
+    s
 }
 
 /// Run `f` with `warmup` unmeasured and `iters` measured iterations.
@@ -190,5 +453,131 @@ mod tests {
         assert_eq!(root.req("a").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(root.req("b").unwrap().as_f64().unwrap(), 2.0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_section_survives_truncated_file_and_backs_it_up() {
+        let path = std::env::temp_dir().join(format!(
+            "ferrisfl_bench_corrupt_{}.json",
+            std::process::id()
+        ));
+        let backup = path.with_extension("json.corrupt");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&backup);
+        // A truncated snapshot (interrupted writer).
+        std::fs::write(&path, "{\"train_step\": {\"cases\": {\"ml").unwrap();
+        merge_section_at(&path, "fresh", Json::num(7.0));
+        // The merge produced a valid snapshot with the new section...
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.req("fresh").unwrap().as_f64().unwrap(), 7.0);
+        // ...and preserved the corrupt content for inspection.
+        let saved = std::fs::read_to_string(&backup).unwrap();
+        assert!(saved.starts_with("{\"train_step\""));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&backup);
+    }
+
+    #[test]
+    fn merge_section_replaces_non_object_roots() {
+        let path = std::env::temp_dir().join(format!(
+            "ferrisfl_bench_nonobj_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, "[1, 2, 3]").unwrap();
+        merge_section_at(&path, "s", Json::num(1.0));
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.req("s").unwrap().as_f64().unwrap(), 1.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_json_default_is_workspace_rooted() {
+        // Only exercised when the env override is absent (the common
+        // local case); CI sets FERRISFL_BENCH_JSON explicitly.
+        if std::env::var("FERRISFL_BENCH_JSON").is_err() {
+            let p = bench_json_path();
+            assert!(p.ends_with("BENCH_native.json"));
+            assert!(p.is_absolute(), "default must not depend on CWD: {p:?}");
+            assert_eq!(p.parent().unwrap(), workspace_root());
+        }
+    }
+
+    // ------------------------------------------------- regression diff
+
+    fn snapshot(round_ms: f64, steps_per_sec: f64, gbs: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{
+              "train_step": {{
+                "cases": {{"mlp-s@synth-mnist sgd full": {{"items_per_sec": {steps_per_sec}}}}},
+                "naive_vs_blocked": {{"steps_per_sec_blocked": {steps_per_sec}, "speedup": 3.0}}
+              }},
+              "round_e2e": {{"round_walltime": {{"workers_4": {{"mean_ms": {round_ms}}}}}}},
+              "aggregation": {{"fedavg": {{"lenet5 K=8 offload": {{"gb_per_sec": {gbs}}}}}}}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn collect_metrics_extracts_all_sections() {
+        let m = collect_metrics(&snapshot(120.0, 5000.0, 2.5));
+        let names: Vec<&str> = m.iter().map(|x| x.name.as_str()).collect();
+        assert!(names.contains(&"round_e2e/workers_4/mean_ms"));
+        assert!(names.contains(&"aggregation/fedavg/lenet5 K=8 offload/gb_per_sec"));
+        assert!(names.contains(&"train_step/naive_vs_blocked/steps_per_sec_blocked"));
+        assert!(
+            !names.contains(&"train_step/naive_vs_blocked/speedup"),
+            "the naive-vs-blocked ratio must not gate (noisy on shared runners)"
+        );
+        assert!(names
+            .contains(&"train_step/cases/mlp-s@synth-mnist sgd full/items_per_sec"));
+        let round = m.iter().find(|x| x.name.contains("mean_ms")).unwrap();
+        assert!(!round.higher_is_better, "walltime gates on increases");
+    }
+
+    #[test]
+    fn diff_passes_within_threshold_and_fails_on_2x_slowdown() {
+        let base = snapshot(100.0, 5000.0, 2.0);
+        // 10% slower round, 10% fewer steps/s: inside a 25% gate.
+        let drift = snapshot(110.0, 4500.0, 1.9);
+        let (rows, regressed) = diff(&base, &drift, 0.25);
+        assert!(!regressed, "{}", render_console(&rows));
+        // An injected 2x slowdown must trip the gate.
+        let slow = snapshot(200.0, 2500.0, 2.0);
+        let (rows, regressed) = diff(&base, &slow, 0.25);
+        assert!(regressed);
+        let bad: Vec<&DiffRow> = rows.iter().filter(|r| r.regressed).collect();
+        assert!(bad.iter().any(|r| r.name == "round_e2e/workers_4/mean_ms"));
+        assert!(bad.iter().any(|r| r.name.contains("items_per_sec")));
+        // Improvements never gate, in either direction convention.
+        let fast = snapshot(50.0, 10_000.0, 4.0);
+        let (_, regressed) = diff(&base, &fast, 0.25);
+        assert!(!regressed);
+    }
+
+    #[test]
+    fn diff_tolerates_missing_and_new_metrics() {
+        let base = snapshot(100.0, 5000.0, 2.0);
+        let cur = Json::parse(
+            r#"{"round_e2e": {"round_walltime": {"workers_4": {"mean_ms": 90.0},
+                "workers_8": {"mean_ms": 60.0}}}}"#,
+        )
+        .unwrap();
+        let (rows, regressed) = diff(&base, &cur, 0.25);
+        assert!(!regressed, "absent metrics must not gate");
+        assert!(rows.iter().any(|r| r.base.is_some() && r.cur.is_none()));
+        assert!(rows.iter().any(|r| r.name == "round_e2e/workers_8/mean_ms" && r.base.is_none()));
+        let md = render_markdown(&rows);
+        assert!(md.contains("| metric |"));
+        assert!(md.contains("missing"));
+        assert!(md.contains("new"));
+    }
+
+    #[test]
+    fn provisional_baselines_are_flagged() {
+        assert!(is_provisional(
+            &Json::parse(r#"{"provisional": true}"#).unwrap()
+        ));
+        assert!(!is_provisional(&snapshot(1.0, 1.0, 1.0)));
     }
 }

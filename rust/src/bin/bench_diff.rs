@@ -1,0 +1,121 @@
+//! `bench_diff` — the CI perf-regression gate.
+//!
+//! Compares a fresh `BENCH_native.json` against the committed
+//! `BENCH_baseline.json` and exits non-zero when any gated metric
+//! (steps/s, examples/s, round walltime, aggregation GB/s — see
+//! `benchutil::collect_metrics`) regressed beyond the threshold.
+//!
+//! ```sh
+//! bench_diff <baseline.json> <current.json> [--max-regress 0.25]
+//! ```
+//!
+//! When `$GITHUB_STEP_SUMMARY` is set, the per-metric delta table is
+//! appended there as markdown (the job summary page). A baseline whose
+//! top level carries `"provisional": true` reports but never fails —
+//! the bootstrap state before a real CI measurement is promoted into
+//! the committed file.
+
+use std::process::ExitCode;
+
+use ferrisfl::benchutil::{diff, is_provisional, render_console, render_markdown};
+use ferrisfl::util::Json;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: bench_diff <baseline.json> <current.json> [--max-regress <frac>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths: Vec<&str> = Vec::new();
+    let mut max_regress = 0.25f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--max-regress" => {
+                i += 1;
+                let Some(v) = args.get(i).and_then(|v| v.parse::<f64>().ok()) else {
+                    return usage();
+                };
+                if !(v.is_finite() && v > 0.0) {
+                    return usage();
+                }
+                max_regress = v;
+            }
+            flag if flag.starts_with("--") => return usage(),
+            p => paths.push(p),
+        }
+        i += 1;
+    }
+    let &[base_path, cur_path] = paths.as_slice() else {
+        return usage();
+    };
+
+    let base_text = match std::fs::read_to_string(base_path) {
+        Ok(t) => t,
+        Err(e) => {
+            // No baseline committed yet (forks, fresh checkouts): report
+            // only, don't gate.
+            println!("bench_diff: no baseline at {base_path} ({e}); nothing to gate against");
+            return ExitCode::SUCCESS;
+        }
+    };
+    let base = match Json::parse(&base_text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench_diff: baseline {base_path} is not valid JSON: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cur_text = match std::fs::read_to_string(cur_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench_diff: cannot read current snapshot {cur_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cur = match Json::parse(&cur_text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench_diff: current snapshot {cur_path} is not valid JSON: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let provisional = is_provisional(&base);
+    let (rows, regressed) = diff(&base, &cur, max_regress);
+    println!(
+        "bench gate: {} metric(s), threshold {:.0}%{}\n",
+        rows.len(),
+        max_regress * 100.0,
+        if provisional { " (provisional baseline: report-only)" } else { "" }
+    );
+    print!("{}", render_console(&rows));
+
+    if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write as _;
+        let header = format!(
+            "## Bench gate ({} metrics, ≤{:.0}% regression{})\n\n",
+            rows.len(),
+            max_regress * 100.0,
+            if provisional { ", provisional baseline" } else { "" }
+        );
+        let table = render_markdown(&rows);
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&summary) {
+            let _ = f.write_all(header.as_bytes());
+            let _ = f.write_all(table.as_bytes());
+            let _ = f.write_all(b"\n");
+        }
+    }
+
+    if regressed && !provisional {
+        eprintln!("\nbench_diff: perf regression beyond {:.0}%", max_regress * 100.0);
+        return ExitCode::FAILURE;
+    }
+    if regressed {
+        println!("\nbench_diff: regressions detected but baseline is provisional; not gating");
+    } else {
+        println!("\nbench_diff: OK");
+    }
+    ExitCode::SUCCESS
+}

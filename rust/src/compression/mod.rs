@@ -72,6 +72,15 @@ impl CompressedDelta {
 /// Client-side compression strategy.
 pub trait Compressor: Send {
     fn compress(&mut self, delta: &[f32]) -> CompressedDelta;
+
+    /// True when compress→decompress reproduces the delta exactly and
+    /// costs nothing on the wire accounting beyond dense bytes — the
+    /// entrypoint may then skip the round-trip entirely (and stream
+    /// the round).
+    fn is_identity(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -82,6 +91,10 @@ pub struct NoCompression;
 impl Compressor for NoCompression {
     fn compress(&mut self, delta: &[f32]) -> CompressedDelta {
         CompressedDelta::Dense(delta.to_vec())
+    }
+
+    fn is_identity(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -297,5 +310,16 @@ mod tests {
             assert!(from_name(n, 0).is_ok(), "{n}");
         }
         assert!(from_name("zstd", 0).is_err());
+    }
+
+    /// Only the identity compressor may advertise exact round-tripping
+    /// — the round pipeline streams (skips the wire round-trip) based
+    /// on this probe.
+    #[test]
+    fn only_nocompression_is_identity() {
+        assert!(from_name("none", 0).unwrap().is_identity());
+        for n in ["topk:0.1", "randk:0.05", "int8"] {
+            assert!(!from_name(n, 0).unwrap().is_identity(), "{n}");
+        }
     }
 }

@@ -11,6 +11,8 @@
 //! any dataset can be regenerated on any worker without storing data —
 //! the whole "data pipeline" is O(templates) memory.
 
+use std::collections::HashMap;
+
 use crate::runtime::{DatasetInfo, Manifest};
 use crate::util::error::{bail, Result};
 use crate::util::Rng;
@@ -27,6 +29,13 @@ impl Split {
         match self {
             Split::Train => 0x7121,
             Split::Test => 0x7e57,
+        }
+    }
+
+    fn cache_tag(self) -> u8 {
+        match self {
+            Split::Train => 0,
+            Split::Test => 1,
         }
     }
 }
@@ -58,11 +67,26 @@ impl Batch {
 pub struct BatchBuf {
     x: Vec<f32>,
     y: Vec<i32>,
+    /// Examples and per-example length of the last gather, so the
+    /// filled window can be re-viewed after the buffer crossed a
+    /// thread boundary (the synthesis pipeline's helper fills it, the
+    /// training thread views it).
+    last_n: usize,
+    last_ex: usize,
 }
 
 impl BatchBuf {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// View of the most recent gather into this buffer (empty before
+    /// any gather).
+    pub fn view(&self) -> BatchView<'_> {
+        BatchView {
+            x: &self.x[..self.last_n * self.last_ex],
+            y: &self.y[..self.last_n],
+        }
     }
 }
 
@@ -86,12 +110,121 @@ impl BatchView<'_> {
     }
 }
 
+/// Default float budget of a [`SynthCache`]: 8M floats (32 MiB) per
+/// holder — enough to cache every train+test example of the largest
+/// built-in dataset (synth-cifar10/100: 2560 examples × 3072 floats).
+/// Set `FERRISFL_SYNTH_CACHE=0` to disable caching entirely.
+const SYNTH_CACHE_FLOATS: usize = 8 << 20;
+
+/// Worker-local cache of synthesized examples.
+///
+/// Sample synthesis is a pure function of `(dataset identity, split,
+/// index)`, yet the per-pixel RNG makes it a visible fraction of round
+/// walltime: every local epoch after the first re-synthesizes the same
+/// shard, and every round's evaluation re-synthesizes the same test
+/// split. Each worker thread holds one `SynthCache` keyed by the
+/// dataset identity (name ⊕ seed ⊕ templates, so a different dataset or
+/// epoch-seed self-invalidates); cached rows come back as a memcpy.
+///
+/// Insertion stops once the float budget is exhausted — shard indices
+/// are stable across rounds, so first-come retention keeps exactly the
+/// working set hot without eviction bookkeeping.
+pub struct SynthCache {
+    /// Identity of the dataset currently cached (None = empty).
+    identity: Option<u64>,
+    /// `(split, sample index)` → row slot.
+    slots: HashMap<(u8, usize), u32>,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    ex: usize,
+    max_floats: usize,
+}
+
+impl Default for SynthCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SynthCache {
+    pub fn new() -> Self {
+        let max_floats = match std::env::var("FERRISFL_SYNTH_CACHE") {
+            Ok(v) if v == "0" => 0,
+            _ => SYNTH_CACHE_FLOATS,
+        };
+        Self::with_budget(max_floats)
+    }
+
+    /// A cache bounded to `max_floats` stored floats (0 disables it).
+    pub fn with_budget(max_floats: usize) -> Self {
+        Self {
+            identity: None,
+            slots: HashMap::new(),
+            x: Vec::new(),
+            y: Vec::new(),
+            ex: 0,
+            max_floats,
+        }
+    }
+
+    /// Cached examples currently held.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Point the cache at a dataset identity, clearing it on change.
+    fn ensure(&mut self, identity: u64, ex: usize) {
+        if self.identity != Some(identity) || self.ex != ex {
+            self.identity = Some(identity);
+            self.ex = ex;
+            self.slots.clear();
+            self.x.clear();
+            self.y.clear();
+        }
+    }
+
+    fn slot_of(&self, split: Split, index: usize) -> Option<u32> {
+        self.slots.get(&(split.cache_tag(), index)).copied()
+    }
+
+    fn row(&self, slot: u32) -> (&[f32], i32) {
+        let lo = slot as usize * self.ex;
+        (&self.x[lo..lo + self.ex], self.y[slot as usize])
+    }
+
+    fn insert(&mut self, split: Split, index: usize, row: &[f32], label: i32) {
+        if self.x.len() + self.ex > self.max_floats {
+            return; // budget full: keep the resident working set
+        }
+        let slot = self.y.len() as u32;
+        self.x.extend_from_slice(row);
+        self.y.push(label);
+        self.slots.insert((split.cache_tag(), index), slot);
+    }
+}
+
 /// A synthetic dataset: templates + deterministic sample synthesis.
 pub struct Dataset {
     pub info: DatasetInfo,
     /// `f32[num_classes * H * W * C]` class templates.
     templates: Vec<f32>,
     seed: u64,
+    /// Hash of (name, seed, templates): the identity a [`SynthCache`]
+    /// is keyed by, so caches self-invalidate across datasets.
+    identity: u64,
+}
+
+fn dataset_identity(name: &str, seed: u64, templates: &[f32]) -> u64 {
+    let mut h = crate::runtime::native::fnv1a(name) ^ seed.rotate_left(17);
+    for &t in templates {
+        h ^= t.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Procedural class templates for manifests with no template files (the
@@ -130,19 +263,23 @@ impl Dataset {
                 templates.len()
             );
         }
+        let identity = dataset_identity(&info.name, seed, &templates);
         Ok(Self {
             info,
             templates,
             seed,
+            identity,
         })
     }
 
     /// Build a dataset from raw parts (tests / benches).
     pub fn from_parts(info: DatasetInfo, templates: Vec<f32>, seed: u64) -> Self {
+        let identity = dataset_identity(&info.name, seed, &templates);
         Self {
             info,
             templates,
             seed,
+            identity,
         }
     }
 
@@ -222,6 +359,53 @@ impl Dataset {
             self.synthesize_into(split, idx, &mut buf.x[i * ex..(i + 1) * ex]);
             buf.y[i] = self.label(split, idx) as i32;
         }
+        buf.last_n = indices.len();
+        buf.last_ex = ex;
+        BatchView {
+            x: &buf.x[..need],
+            y: &buf.y[..indices.len()],
+        }
+    }
+
+    /// [`Self::gather_into`] through a worker-local [`SynthCache`]:
+    /// indices already synthesized on this worker are copied out of the
+    /// cache (a memcpy) instead of re-running the per-pixel RNG; misses
+    /// are synthesized once and then cached (until the cache's float
+    /// budget fills). Results are identical to `gather_into` —
+    /// synthesis is a pure function of `(identity, split, index)`.
+    pub fn gather_cached<'a>(
+        &self,
+        split: Split,
+        indices: &[usize],
+        buf: &'a mut BatchBuf,
+        cache: &mut SynthCache,
+    ) -> BatchView<'a> {
+        let ex = self.info.example_len();
+        let need = indices.len() * ex;
+        if buf.x.len() < need {
+            buf.x.resize(need, 0.0);
+        }
+        if buf.y.len() < indices.len() {
+            buf.y.resize(indices.len(), 0);
+        }
+        cache.ensure(self.identity, ex);
+        for (i, &idx) in indices.iter().enumerate() {
+            let row = &mut buf.x[i * ex..(i + 1) * ex];
+            // Slot handle first (Copy), so the hit path's cache borrow
+            // never overlaps the miss path's insertion.
+            if let Some(slot) = cache.slot_of(split, idx) {
+                let (cx, cy) = cache.row(slot);
+                row.copy_from_slice(cx);
+                buf.y[i] = cy;
+            } else {
+                self.synthesize_into(split, idx, row);
+                let label = self.label(split, idx) as i32;
+                buf.y[i] = label;
+                cache.insert(split, idx, row, label);
+            }
+        }
+        buf.last_n = indices.len();
+        buf.last_ex = ex;
         BatchView {
             x: &buf.x[..need],
             y: &buf.y[..indices.len()],
@@ -342,6 +526,78 @@ mod tests {
         let single = d.batch(Split::Train, &[7]);
         assert_eq!(view.x, &single.x[..]);
         assert_eq!(view.y, &single.y[..]);
+    }
+
+    #[test]
+    fn gather_cached_matches_uncached_and_hits() {
+        let d = tiny_dataset(31);
+        let mut buf = BatchBuf::new();
+        let mut cache = SynthCache::with_budget(1 << 20);
+        let idx = [3usize, 7, 3, 11];
+        let want = d.batch(Split::Train, &idx);
+        // Cold pass fills the cache; warm pass must be identical.
+        for pass in 0..2 {
+            let view = d.gather_cached(Split::Train, &idx, &mut buf, &mut cache);
+            assert_eq!(view.x, &want.x[..], "pass {pass}");
+            assert_eq!(view.y, &want.y[..], "pass {pass}");
+        }
+        assert_eq!(cache.len(), 3, "three distinct indices cached");
+        // Train/test streams are distinct cache entries.
+        let t = d.gather_cached(Split::Test, &[3], &mut buf, &mut cache);
+        let t_want = d.batch(Split::Test, &[3]);
+        assert_eq!(t.x, &t_want.x[..]);
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn synth_cache_invalidates_on_dataset_change() {
+        let a = tiny_dataset(1);
+        let b = tiny_dataset(2);
+        let mut buf = BatchBuf::new();
+        let mut cache = SynthCache::with_budget(1 << 20);
+        a.gather_cached(Split::Train, &[0], &mut buf, &mut cache);
+        assert_eq!(cache.len(), 1);
+        // Different seed → different identity → cache resets, and the
+        // gathered row matches dataset b, not stale a.
+        let view = b.gather_cached(Split::Train, &[0], &mut buf, &mut cache);
+        let want = b.batch(Split::Train, &[0]);
+        assert_eq!(view.x, &want.x[..]);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn synth_cache_budget_caps_insertion_but_stays_correct() {
+        let d = tiny_dataset(5);
+        let ex = d.info.example_len();
+        let mut buf = BatchBuf::new();
+        // Room for exactly two rows.
+        let mut cache = SynthCache::with_budget(2 * ex);
+        let idx = [0usize, 1, 2, 3];
+        let want = d.batch(Split::Train, &idx);
+        let view = d.gather_cached(Split::Train, &idx, &mut buf, &mut cache);
+        assert_eq!(view.x, &want.x[..]);
+        assert_eq!(cache.len(), 2, "insertion stops at the budget");
+        let view = d.gather_cached(Split::Train, &idx, &mut buf, &mut cache);
+        assert_eq!(view.x, &want.x[..], "over-budget misses re-synthesize");
+        // A zero-budget cache is a pure pass-through.
+        let mut off = SynthCache::with_budget(0);
+        let view = d.gather_cached(Split::Train, &idx, &mut buf, &mut off);
+        assert_eq!(view.x, &want.x[..]);
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn batchbuf_view_returns_last_gather() {
+        let d = tiny_dataset(9);
+        let mut buf = BatchBuf::new();
+        let owned = d.batch(Split::Train, &[4, 5]);
+        d.gather_into(Split::Train, &[4, 5], &mut buf);
+        let view = buf.view();
+        assert_eq!(view.x, &owned.x[..]);
+        assert_eq!(view.y, &owned.y[..]);
+        // A smaller follow-up gather re-windows the view.
+        d.gather_into(Split::Train, &[6], &mut buf);
+        assert_eq!(buf.view().len(), 1);
     }
 
     #[test]

@@ -33,6 +33,14 @@ pub struct DefenseReport {
 pub trait Defense: Send {
     /// Filter/transform `updates` in place; return what happened.
     fn screen(&mut self, updates: &mut Vec<Update>) -> DefenseReport;
+
+    /// True when this defense never inspects or modifies updates, so
+    /// the round may reduce them incrementally (streaming) instead of
+    /// materializing the cohort for screening.
+    fn is_passthrough(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -47,6 +55,10 @@ pub struct NoDefense;
 impl Defense for NoDefense {
     fn screen(&mut self, _updates: &mut Vec<Update>) -> DefenseReport {
         DefenseReport::default()
+    }
+
+    fn is_passthrough(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -291,5 +303,15 @@ mod tests {
             assert!(from_name(n).is_ok(), "{n}");
         }
         assert!(from_name("krum").is_err());
+    }
+
+    /// Only the no-op defense may advertise passthrough — the round
+    /// pipeline streams (skips cohort screening) based on this probe.
+    #[test]
+    fn only_nodefense_is_passthrough() {
+        assert!(from_name("none").unwrap().is_passthrough());
+        for n in ["normclip:2.0", "normfilter:3", "cosine:0.2"] {
+            assert!(!from_name(n).unwrap().is_passthrough(), "{n}");
+        }
     }
 }

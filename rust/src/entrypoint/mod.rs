@@ -14,6 +14,15 @@
 //!   4. the global model is evaluated on the test split, sharded
 //!      across the same worker pool
 //!   5. loggers receive per-round + per-agent records
+//!
+//! Rounds are **streamed** whenever the aggregation rule is a function
+//! of the weighted mean delta (FedAvg/FedSGD/FedAvgM/FedAdam) and no
+//! stage needs the materialized cohort (defense and compression are
+//! no-ops): each worker pushes its finished delta into a shared
+//! [`StreamingAccumulator`] as the agent completes, so the server-side
+//! reduce overlaps local training and step 3 collapses to one finalize
+//! pass — order-invariant by construction (exact integer reduce).
+//! Robust rules, defenses, and compressors keep the materialized path.
 
 pub mod trainer;
 pub mod worker;
@@ -22,7 +31,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::agents::{self, Agent};
-use crate::aggregators::{self, Aggregator};
+use crate::aggregators::{self, Aggregator, StreamKind, StreamingAccumulator};
 use crate::compression::{self, Compressor};
 use crate::config::FlParams;
 use crate::datasets::{Dataset, Split};
@@ -88,6 +97,9 @@ pub struct Entrypoint {
     global: Vec<f32>,
     key: RuntimeKey,
     rng: Rng,
+    /// Streaming-round reduce state, allocated on the first streaming
+    /// round and reused (reset) every round after.
+    stream_acc: Option<Arc<StreamingAccumulator>>,
 }
 
 impl Entrypoint {
@@ -147,7 +159,21 @@ impl Entrypoint {
             global,
             key,
             rng,
+            stream_acc: None,
         })
+    }
+
+    /// Whether rounds of this run reduce updates incrementally: the
+    /// aggregation rule must be a function of the weighted mean delta,
+    /// and no stage may need the materialized cohort (defenses screen —
+    /// and may reject — whole deltas; compressors rewrite them on the
+    /// "wire" before aggregation). Gated on the traits' own
+    /// capability probes, not on config names.
+    fn stream_kind(&self) -> Option<StreamKind> {
+        if !self.defense.is_passthrough() || !self.compressor.is_identity() {
+            return None;
+        }
+        self.aggregator.stream_kind()
     }
 
     /// Current global parameters.
@@ -206,12 +232,50 @@ impl Entrypoint {
                 continue;
             }
 
-            // 2. local training on the worker pool
+            // 2. local training on the worker pool. On streaming rounds
+            // each worker also pushes its finished delta straight into
+            // the shared lock-striped accumulator, so the FedAvg-family
+            // reduce overlaps the stragglers' local training and the
+            // leader-side aggregation step collapses to one finalize
+            // pass. FedAvg weights depend only on shard sizes, which are
+            // known before dispatch (and the defense is a no-op on this
+            // path, so the cohort cannot shrink after pushing).
+            let stream_kind = self.stream_kind();
+            let stream_acc = if stream_kind.is_some() {
+                let p = self.global.len();
+                if self.stream_acc.as_ref().is_some_and(|acc| acc.len() == p) {
+                    let acc = self.stream_acc.as_ref().unwrap();
+                    acc.reset();
+                    Some(Arc::clone(acc))
+                } else {
+                    let acc = Arc::new(StreamingAccumulator::new(p));
+                    self.stream_acc = Some(Arc::clone(&acc));
+                    Some(acc)
+                }
+            } else {
+                None
+            };
+            let stream_weights: Vec<u64> = match stream_kind {
+                Some(StreamKind::SampleWeighted) => {
+                    let ws: Vec<u64> =
+                        sampled.iter().map(|&aid| self.agents[aid].shard.len() as u64).collect();
+                    if ws.iter().sum::<u64>() == 0 {
+                        // all-zero sample counts: uniform fallback,
+                        // mirroring aggregators::sample_weights.
+                        vec![1; ws.len()]
+                    } else {
+                        ws
+                    }
+                }
+                _ => vec![1; sampled.len()],
+            };
+
             let t_local = Instant::now();
             let global = Arc::new(self.global.clone());
             let jobs: Vec<_> = sampled
                 .iter()
-                .map(|&aid| {
+                .enumerate()
+                .map(|(i, &aid)| {
                     let job = LocalJob {
                         agent_id: aid,
                         round,
@@ -225,9 +289,15 @@ impl Entrypoint {
                     let manifest = Arc::clone(&self.manifest);
                     let dataset = Arc::clone(&self.dataset);
                     let key = self.key.clone();
+                    let stream =
+                        stream_acc.as_ref().map(|acc| (Arc::clone(acc), stream_weights[i]));
                     move |_wid: usize| -> Result<_> {
                         worker::with_runtime(&manifest, &key, |rt| {
-                            worker::run_local(rt, &dataset, &job)
+                            let (update, record) = worker::run_local(rt, &dataset, &job)?;
+                            if let Some((acc, w)) = &stream {
+                                acc.push(&update.delta, *w)?;
+                            }
+                            Ok((update, record))
                         })
                     }
                 })
@@ -246,13 +316,21 @@ impl Entrypoint {
                     .record_round(record.final_loss(), self.params.local_epochs);
                 logger.log_agent(&record)?;
                 agent_records.push(record);
-                // client-side compression: the update crosses the "wire"
-                // compressed; the server reconstructs before aggregation.
                 let dense = (update.delta.len() * 4) as u64;
-                let compressed = self.compressor.compress(&update.delta);
                 comm.dense_bytes += dense;
-                comm.wire_bytes += compressed.wire_bytes() as u64;
-                update.delta = compressed.decompress();
+                if stream_acc.is_some() {
+                    // Streaming rounds require the identity compressor;
+                    // the delta is already reduced, and is retained (no
+                    // copy) only for the contribution scoring below.
+                    comm.wire_bytes += dense;
+                } else {
+                    // client-side compression: the update crosses the
+                    // "wire" compressed; the server reconstructs before
+                    // aggregation.
+                    let compressed = self.compressor.compress(&update.delta);
+                    comm.wire_bytes += compressed.wire_bytes() as u64;
+                    update.delta = compressed.decompress();
+                }
                 updates.push(update);
             }
 
@@ -276,14 +354,25 @@ impl Entrypoint {
                 continue;
             }
 
-            // 3. aggregate (Eq. 2) — on the leader's executor
+            // 3. aggregate (Eq. 2). Streaming rounds finalize the
+            // already-reduced mean delta (one P pass) and fold it
+            // through the rule's state update; materialized rounds run
+            // the full rule on the leader's executor as before.
             let t_agg = Instant::now();
-            let manifest = Arc::clone(&self.manifest);
-            let key = self.key.clone();
-            let aggregator = &mut self.aggregator;
-            let new_global = worker::with_runtime(&manifest, &key, |rt| {
-                aggregator.aggregate(&self.global, &updates, Some(rt))
-            })?;
+            let new_global = match &stream_acc {
+                Some(acc) => {
+                    let mean = acc.finalize()?;
+                    self.aggregator.apply_streamed(&self.global, &mean)?
+                }
+                None => {
+                    let manifest = Arc::clone(&self.manifest);
+                    let key = self.key.clone();
+                    let aggregator = &mut self.aggregator;
+                    worker::with_runtime(&manifest, &key, |rt| {
+                        aggregator.aggregate(&self.global, &updates, Some(rt))
+                    })?
+                }
+            };
             // incentives: score the cohort's gradient alignment against
             // the realised round delta.
             let round_delta: Vec<f32> = new_global

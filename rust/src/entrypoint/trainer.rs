@@ -9,7 +9,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::datasets::{BatchBuf, Dataset};
+use crate::datasets::{Dataset, SynthCache};
 use crate::runtime::{AdamState, BackendKind, Manifest};
 use crate::util::error::Result;
 use crate::util::{shared_pool, Rng};
@@ -120,7 +120,8 @@ impl Default for TrainConfig {
 /// Train centrally; returns per-epoch metrics and parameter counts.
 ///
 /// The epoch loop is a zero-allocation steady state (reused scratch
-/// arena, batch buffer, and index buffer); per-epoch validation shards
+/// arena and epoch pipe) with batch synthesis double-buffered against
+/// the train step and cached across epochs; per-epoch validation shards
 /// test batches across the process-wide [`shared_pool`].
 pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult> {
     let dataset = Arc::new(Dataset::load(manifest, &cfg.dataset, cfg.seed)?);
@@ -154,12 +155,11 @@ pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult>
         } else {
             cfg.epoch_samples.min(dataset.num_train())
         };
-        let b = rt.train_batch_size();
         let mut adam = (cfg.optimizer == "adam").then(|| AdamState::zeros(params.len()));
         let mut order: Vec<usize> = (0..n).collect();
         let mut scratch = rt.new_scratch();
-        let mut buf = BatchBuf::new();
-        let mut idx: Vec<usize> = Vec::with_capacity(b);
+        let mut pipe = worker::EpochPipe::new();
+        let mut cache = SynthCache::new();
         for epoch in 0..cfg.epochs {
             let t0 = Instant::now();
             rng.shuffle(&mut order);
@@ -172,8 +172,8 @@ pub fn train(manifest: &Arc<Manifest>, cfg: &TrainConfig) -> Result<TrainResult>
                 adam.as_mut(),
                 &mut params,
                 &mut scratch,
-                &mut buf,
-                &mut idx,
+                &mut pipe,
+                &mut cache,
             )?;
             let train_secs = t0.elapsed().as_secs_f64();
             let eval = {

@@ -76,6 +76,13 @@ pub struct EvalStats {
 }
 
 impl EvalStats {
+    /// Fold another batch/shard's stats into this total.
+    pub fn merge(&mut self, other: &EvalStats) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.count += other.count;
+    }
+
     pub fn mean_loss(&self) -> f64 {
         if self.count > 0.0 {
             self.loss_sum / self.count

@@ -20,10 +20,12 @@
 //!
 //! Parallelism: local training fans out across agents on the
 //! entrypoint's `util::threadpool::WorkerPool` (one executor per worker
-//! thread); the server-side FedAvg aggregation here additionally shards
-//! the parameter range across the process-wide
-//! [`crate::util::shared_pool`] once `K × P` is large enough to amortise
-//! the fan-out.
+//! thread); the server-side FedAvg aggregation op here shards the
+//! parameter range across scoped threads writing disjoint output chunks
+//! in place (no cohort copies) once `K × P` is large enough to amortise
+//! the fan-out. The entrypoint's FedAvg-family rounds bypass this op
+//! entirely and reduce incrementally through
+//! [`crate::aggregators::StreamingAccumulator`].
 //!
 //! Parameter layout per layer `l` (fan_in `i`, fan_out `o`):
 //! `W_l` row-major `[o × i]`, then `b_l` `[o]`; the classifier head is
@@ -36,7 +38,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::util::error::{bail, Context, Result};
-use crate::util::{shared_pool, Rng};
+use crate::util::Rng;
 
 use super::backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepScratch, StepStats};
 use super::gemm;
@@ -586,59 +588,50 @@ impl ModelExecutor for NativeExecutor {
         if k == 0 {
             return Ok(global.to_vec());
         }
+        let mut out = vec![0.0f32; p];
         if k * p < PAR_MIN_ELEMS {
-            return Ok(weighted_sum_range(global, deltas, weights, 0, p));
+            weighted_sum_into(global, deltas, weights, 0, &mut out);
+            return Ok(out);
         }
-        // Shard the parameter range across the process-wide pool. The
-        // pool's jobs are 'static, so the borrowed inputs are copied
-        // into Arcs here — one extra pass over memory the f64-accumulate
-        // loop reads K times anyway (only paid above PAR_MIN_ELEMS).
-        let pool = shared_pool().lock().expect("aggregation pool poisoned");
-        let jobs_n = pool.size().min(p);
+        // Shard the parameter range across scoped threads writing
+        // disjoint chunks of `out` in place. Scoped borrows mean the
+        // K×P cohort is never copied for the fan-out (the old path
+        // cloned global + deltas + weights into Arcs to satisfy the
+        // worker pool's 'static jobs).
+        let jobs_n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 8)
+            .min(p);
         let chunk = p.div_ceil(jobs_n);
-        let global = Arc::new(global.to_vec());
-        let deltas = Arc::new(deltas.to_vec());
-        let weights = Arc::new(weights.to_vec());
-        let jobs: Vec<_> = (0..jobs_n)
-            .map(|j| {
-                let global = Arc::clone(&global);
-                let deltas = Arc::clone(&deltas);
-                let weights = Arc::clone(&weights);
-                move |_wid: usize| {
-                    let lo = (j * chunk).min(global.len());
-                    let hi = ((j + 1) * chunk).min(global.len());
-                    weighted_sum_range(&global, &deltas, &weights, lo, hi)
-                }
-            })
-            .collect();
-        let parts = pool.run(jobs);
-        let mut out = Vec::with_capacity(p);
-        for part in parts {
-            out.extend_from_slice(&part);
-        }
+        std::thread::scope(|s| {
+            for (j, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                let lo = j * chunk;
+                s.spawn(move || weighted_sum_into(global, deltas, weights, lo, out_chunk));
+            }
+        });
         Ok(out)
     }
 }
 
-/// `out[j] = global[j] + Σ_i w_i · delta_i[j]` over `[lo, hi)`,
-/// accumulated in f64 so the result agrees with `fedavg_host` to well
-/// under 1e-5 regardless of summation order.
-fn weighted_sum_range(
+/// `out[i] = global[lo+i] + Σ_k w_k · delta_k[lo+i]`, accumulated in f64
+/// so the result agrees with `fedavg_host` to well under 1e-5 regardless
+/// of summation order.
+fn weighted_sum_into(
     global: &[f32],
     deltas: &[Vec<f32>],
     weights: &[f32],
     lo: usize,
-    hi: usize,
-) -> Vec<f32> {
-    let mut out = Vec::with_capacity(hi - lo);
-    for j in lo..hi {
+    out: &mut [f32],
+) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let j = lo + i;
         let mut acc = global[j] as f64;
         for (d, &w) in deltas.iter().zip(weights) {
             acc += w as f64 * d[j] as f64;
         }
-        out.push(acc as f32);
+        *o = acc as f32;
     }
-    out
 }
 
 fn native_dataset(
@@ -896,7 +889,8 @@ mod tests {
             .collect();
         let weights = [0.4f32, 0.3, 0.2, 0.1];
         let par = e.aggregate(&global, &deltas, &weights).unwrap();
-        let serial = weighted_sum_range(&global, &deltas, &weights, 0, p);
+        let mut serial = vec![0.0f32; p];
+        weighted_sum_into(&global, &deltas, &weights, 0, &mut serial);
         assert_eq!(par.len(), p);
         for (a, b) in par.iter().zip(&serial) {
             assert!((a - b).abs() < 1e-6);

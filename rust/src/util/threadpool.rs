@@ -11,8 +11,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
-/// The process-wide shared pool: server-side FedAvg aggregation shards
-/// parameter ranges across it, and round evaluation shards test batches
+/// The process-wide shared pool: round evaluation shards test batches
 /// across it when the caller has no pool of its own (the central
 /// trainer). Guarded by a `Mutex` so one parallel region runs at a time;
 /// callers submit from the leader thread and jobs must never recursively
@@ -113,6 +112,81 @@ impl Drop for WorkerPool {
     }
 }
 
+/// A two-stage producer/consumer pipeline over a pool of reusable
+/// buffers: `produce` fills buffers on a scoped helper thread while
+/// `consume` drains them **in production order** on the calling thread,
+/// so stage t+1's production overlaps stage t's consumption (with two
+/// buffers this is classic double buffering). The training loop uses it
+/// to synthesize batch t+1 while batch t trains.
+///
+/// `produce` returns `false` when the stream is exhausted; `consume`
+/// may fail, which stops the pipeline and returns the error. On success
+/// all buffers are handed back for reuse (no steady-state allocation);
+/// on the error path surviving buffers are recovered best-effort.
+///
+/// `consume` runs on the caller's thread, so it may freely use
+/// non-`Send` state (thread-local executors); only `produce` and the
+/// buffers cross the thread boundary.
+pub fn pipeline<B, E>(
+    bufs: Vec<B>,
+    mut produce: impl FnMut(&mut B) -> bool + Send,
+    mut consume: impl FnMut(&mut B) -> std::result::Result<(), E>,
+) -> std::result::Result<Vec<B>, E>
+where
+    B: Send,
+    E: Send,
+{
+    assert!(!bufs.is_empty(), "pipeline needs at least one buffer");
+    let (free_tx, free_rx) = channel::<B>();
+    let (full_tx, full_rx) = channel::<B>();
+    for b in bufs {
+        free_tx.send(b).expect("pipeline free channel");
+    }
+    std::thread::scope(|s| {
+        let producer = s.spawn(move || {
+            // `Some` while still producing; dropped (None) to close the
+            // full channel once the stream ends, after which this side
+            // only drains returned buffers so the caller recovers them.
+            let mut full_tx = Some(full_tx);
+            let mut recovered = Vec::new();
+            while let Ok(mut b) = free_rx.recv() {
+                if full_tx.is_some() && produce(&mut b) {
+                    let sent = full_tx.as_ref().expect("checked is_some").send(b);
+                    if let Err(unsent) = sent {
+                        recovered.push(unsent.0); // consumer bailed early
+                        full_tx = None;
+                    }
+                } else {
+                    recovered.push(b);
+                    full_tx = None;
+                }
+            }
+            recovered
+        });
+        let mut result = Ok(());
+        while let Ok(mut b) = full_rx.recv() {
+            if let Err(e) = consume(&mut b) {
+                result = Err(e);
+                break;
+            }
+            if free_tx.send(b).is_err() {
+                break;
+            }
+        }
+        // Closing the free channel unblocks the producer's drain loop.
+        drop(free_tx);
+        let mut bufs = match producer.join() {
+            Ok(recovered) => recovered,
+            Err(panic) => std::panic::resume_unwind(panic),
+        };
+        // Error path: buffers may still sit in the full channel.
+        while let Ok(b) = full_rx.try_recv() {
+            bufs.push(b);
+        }
+        result.map(|()| bufs)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +249,82 @@ mod tests {
         assert_eq!(pool.size(), 1);
         let out = pool.run(vec![|_w: usize| 7]);
         assert_eq!(out, vec![7]);
+    }
+
+    // ------------------------------------------------------- pipeline
+
+    /// Items arrive at the consumer in production order, every item is
+    /// consumed exactly once, and all buffers come back for reuse.
+    #[test]
+    fn pipeline_preserves_order_and_returns_buffers() {
+        let mut next = 0usize;
+        let mut seen = Vec::new();
+        let bufs = pipeline::<usize, ()>(
+            vec![0usize, 0],
+            |b| {
+                if next < 20 {
+                    *b = next;
+                    next += 1;
+                    true
+                } else {
+                    false
+                }
+            },
+            |b| {
+                seen.push(*b);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+        assert_eq!(bufs.len(), 2, "both buffers must come back");
+    }
+
+    #[test]
+    fn pipeline_consume_error_stops_early() {
+        let mut next = 0usize;
+        let mut consumed = 0usize;
+        let res = pipeline::<usize, &'static str>(
+            vec![0usize, 0],
+            |b| {
+                *b = next;
+                next += 1;
+                next <= 100
+            },
+            |b| {
+                consumed += 1;
+                if *b == 5 {
+                    Err("boom")
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert_eq!(res.unwrap_err(), "boom");
+        assert_eq!(consumed, 6, "items 0..=5 consumed, then stop");
+    }
+
+    #[test]
+    fn pipeline_empty_stream_and_single_buffer() {
+        let bufs = pipeline::<u8, ()>(vec![9u8], |_| false, |_| panic!("nothing to consume"))
+            .unwrap();
+        assert_eq!(bufs, vec![9]);
+        // One buffer degenerates to strict alternation but still works.
+        let mut next = 0;
+        let mut seen = Vec::new();
+        pipeline::<usize, ()>(
+            vec![0usize],
+            |b| {
+                *b = next;
+                next += 1;
+                next <= 5
+            },
+            |b| {
+                seen.push(*b);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
     }
 }

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use ferrisfl::aggregators::{self, fedavg_host, sample_weights, Update};
+use ferrisfl::aggregators::{self, fedavg_host, sample_weights, StreamingAccumulator, Update};
 use ferrisfl::config::FlParams;
 use ferrisfl::datasets::{Dataset, Split};
 use ferrisfl::entrypoint::trainer::{self, TrainConfig, TrainMode};
@@ -125,6 +125,99 @@ fn prop_native_and_host_aggregation_agree() {
         for (i, (a, b)) in host.iter().zip(&native).enumerate() {
             assert!((a - b).abs() < 1e-5, "seed {seed}, coord {i}: {a} vs {b}");
         }
+    }
+}
+
+/// Golden check for the round pipeline's incremental reduce: streamed
+/// FedAvg (accumulator pushes + finalize) matches `fedavg_host` within
+/// 1e-5 across **every zoo shape**, including out-of-order arrival —
+/// and shuffled arrival orders finalize bit-identically.
+#[test]
+fn streaming_fedavg_matches_host_across_zoo_shapes() {
+    let m = native_manifest();
+    let mut rng = Rng::new(0x57e42);
+    for art in &m.artifacts {
+        let p = art.num_params;
+        let k = 10usize;
+        let updates: Vec<Update> = (0..k)
+            .map(|i| Update {
+                agent_id: i,
+                delta: (0..p).map(|_| rng.next_gaussian() * 0.01).collect(),
+                num_samples: 10 + i * 7,
+            })
+            .collect();
+        let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian() * 0.1).collect();
+        let weights = sample_weights(&updates);
+        let host = fedavg_host(&global, &updates, &weights);
+
+        let reduce = |order: &[usize]| -> Vec<f32> {
+            let acc = StreamingAccumulator::new(p);
+            for &i in order {
+                acc.push(&updates[i].delta, updates[i].num_samples as u64).unwrap();
+            }
+            acc.finalize().unwrap()
+        };
+        let mut order: Vec<usize> = (0..k).collect();
+        let in_order = reduce(&order);
+        // Out-of-order arrival (workers finish in any order).
+        rng.shuffle(&mut order);
+        let out_of_order = reduce(&order);
+        assert!(
+            in_order == out_of_order,
+            "{}: arrival order must not change the reduce bitwise",
+            art.id
+        );
+        for (j, ((&g, &mean), &h)) in global.iter().zip(&in_order).zip(&host).enumerate() {
+            let got = g + mean;
+            let tol = 1e-5 * h.abs().max(1.0);
+            assert!(
+                (got - h).abs() <= tol,
+                "{} (P={p}) coord {j}: streamed {got} vs host {h}",
+                art.id
+            );
+        }
+    }
+}
+
+/// A streamed round (default fedavg, no defense/compression) lands on
+/// the same global model as the materialized path (here forced by a
+/// defense that passes every honest update untouched) — on a healthy
+/// cohort the two reduces differ only in float rounding. (On a
+/// *diverged* cohort they intentionally differ in failure mode: the
+/// streaming push fails fast on non-finite deltas, the materialized
+/// path NaN-poisons the model.)
+#[test]
+fn streaming_round_matches_materialized_round() {
+    let m = native_manifest();
+    let base = FlParams {
+        num_agents: 6,
+        sampling_ratio: 1.0,
+        global_epochs: 1,
+        local_epochs: 1,
+        max_local_steps: 4,
+        eval_every: 0,
+        workers: 3,
+        ..native_fl_params("itest_stream_parity")
+    };
+    // Streaming path (defense "none" + compression "none" + fedavg).
+    let mut ep_s = Entrypoint::new(base.clone(), Arc::clone(&m)).unwrap();
+    ep_s.run(&mut NullLogger).unwrap();
+    // Materialized path: a pass-through-on-honest-cohorts defense keeps
+    // the cohort intact but disqualifies streaming.
+    let mut p = base;
+    p.defense = "normfilter:1000".into();
+    let mut ep_m = Entrypoint::new(p, Arc::clone(&m)).unwrap();
+    let res_m = ep_m.run(&mut NullLogger).unwrap();
+    assert!(res_m.defense_rejected.iter().all(|r| r.is_empty()));
+
+    let (gs, gm) = (ep_s.global_params(), ep_m.global_params());
+    assert_eq!(gs.len(), gm.len());
+    for (j, (a, b)) in gs.iter().zip(gm).enumerate() {
+        let tol = 1e-4 * a.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "coord {j}: streamed {a} vs materialized {b}"
+        );
     }
 }
 

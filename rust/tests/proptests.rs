@@ -456,3 +456,60 @@ fn prop_contribution_scores_normalised_per_round() {
         assert!(pay.values().all(|&v| v >= 0.0));
     });
 }
+
+// ------------------------------------------------- streaming aggregation
+
+/// The streaming accumulator is **order-invariant**: the same cohort
+/// pushed in any shuffled arrival order finalizes to bit-identical
+/// results (the exact fixed-point reduce commutes, unlike float sums).
+#[test]
+fn prop_streaming_accumulator_is_order_invariant() {
+    use ferrisfl::aggregators::StreamingAccumulator;
+    for_all("streaming_order_invariant", |rng| {
+        let k = 1 + rng.next_below(12) as usize;
+        let p = 1 + rng.next_below(3000) as usize;
+        let ups = random_updates(rng, k, p);
+        let reduce = |order: &[usize]| -> Vec<f32> {
+            let acc = StreamingAccumulator::new(p);
+            for &i in order {
+                acc.push(&ups[i].delta, ups[i].num_samples as u64).unwrap();
+            }
+            acc.finalize().unwrap()
+        };
+        let mut order: Vec<usize> = (0..k).collect();
+        let reference = reduce(&order);
+        for _ in 0..3 {
+            rng.shuffle(&mut order);
+            let shuffled = reduce(&order);
+            assert!(
+                reference == shuffled,
+                "finalize must be bit-identical under order {order:?}"
+            );
+        }
+    });
+}
+
+/// Streamed FedAvg (accumulator + apply) agrees with the host reference
+/// within 1e-5 over randomized shapes, weights, and magnitudes.
+#[test]
+fn prop_streaming_fedavg_matches_host() {
+    use ferrisfl::aggregators::StreamingAccumulator;
+    for_all("streaming_matches_host", |rng| {
+        let k = 1 + rng.next_below(12) as usize;
+        let p = 1 + rng.next_below(3000) as usize;
+        let ups = random_updates(rng, k, p);
+        let global: Vec<f32> = (0..p).map(|_| rng.next_gaussian()).collect();
+        let weights = sample_weights(&ups);
+        let host = fedavg_host(&global, &ups, &weights);
+        let acc = StreamingAccumulator::new(p);
+        for u in &ups {
+            acc.push(&u.delta, u.num_samples as u64).unwrap();
+        }
+        let mean = acc.finalize().unwrap();
+        for (i, ((&g, &m), &h)) in global.iter().zip(&mean).zip(&host).enumerate() {
+            let got = g + m;
+            let tol = 1e-5 * h.abs().max(1.0);
+            assert!((got - h).abs() <= tol, "coord {i}: streamed {got} vs host {h}");
+        }
+    });
+}
