@@ -132,6 +132,7 @@ fn main() {
         "aggregation",
         Json::obj(vec![
             ("backend", Json::str(backend.name())),
+            ("simd", Json::str(ferrisfl::runtime::simd::level().name())),
             ("fedavg", row_obj),
         ]),
     );

@@ -1,0 +1,244 @@
+//! Bench: micro-kernel throughput, scalar vs the runtime-dispatched
+//! SIMD implementation — the acceptance numbers for the SIMD layer.
+//!
+//! Measures, inside one process (via `simd::kernels_for`, no env
+//! round-trip needed):
+//!
+//! - the GEMM axpy micro-kernels in GFLOP/s (2×4, 2×8, 1×4 tiles over
+//!   an `NC`-wide panel, the shape the blocked drivers feed them),
+//! - a full blocked `gemm_nn_acc` on the two largest zoo shapes,
+//! - the streaming reduce's fixed-point quantise-accumulate in GB/s,
+//! - the synthesis noise pass in Melem/s,
+//! - the 8×8-blocked `transpose` in GB/s.
+//!
+//! Emits the `kernels` section of `BENCH_native.json` (absolute
+//! per-implementation throughput plus scalar→dispatch speedups).
+//!
+//! Run: `cargo bench --bench kernels`
+//! Fast mode (CI): `FERRISFL_BENCH_FAST=1 cargo bench --bench kernels`
+
+use ferrisfl::benchutil::{bench, header, merge_section, report, scaled_iters};
+use ferrisfl::runtime::gemm;
+use ferrisfl::runtime::simd::{self, Kernels, SimdLevel};
+use ferrisfl::util::{Json, Rng};
+
+/// Panel width the blocked drivers hand the micro-kernels (gemm::NC).
+const NN: usize = 512;
+/// Micro-kernel calls per timed iteration.
+const CALLS: usize = 2048;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+struct MicroBench {
+    rows: Vec<Vec<f32>>,
+    c0: Vec<f32>,
+    c1: Vec<f32>,
+    x0: [f32; 8],
+    x1: [f32; 8],
+}
+
+impl MicroBench {
+    fn new(rng: &mut Rng) -> Self {
+        Self {
+            rows: (0..8).map(|_| rand_vec(rng, NN)).collect(),
+            c0: rand_vec(rng, NN),
+            c1: rand_vec(rng, NN),
+            x0: std::array::from_fn(|i| 0.3 + 0.1 * i as f32),
+            x1: std::array::from_fn(|i| -0.2 - 0.05 * i as f32),
+        }
+    }
+}
+
+/// GFLOP/s of one micro-kernel under one implementation.
+fn gflops(stats: &ferrisfl::benchutil::BenchStats, flops_per_call: f64) -> f64 {
+    flops_per_call * CALLS as f64 / stats.mean / 1e9
+}
+
+fn speedup_row(label: &str, scalar: f64, dispatched: f64, unit: &str) -> (String, Json) {
+    println!(
+        "  {label:<20} scalar {scalar:>9.2} {unit}  dispatched {dispatched:>9.2} {unit}  \
+         ({:.2}x)",
+        dispatched / scalar
+    );
+    let scalar_key = format!("{unit}_scalar");
+    let simd_key = format!("{unit}_simd");
+    (
+        label.to_string(),
+        Json::obj(vec![
+            (scalar_key.as_str(), Json::num(scalar)),
+            (simd_key.as_str(), Json::num(dispatched)),
+            ("speedup", Json::num(dispatched / scalar)),
+        ]),
+    )
+}
+
+fn bench_axpy(name: &str, k: &Kernels, mb: &mut MicroBench, iters: usize) -> f64 {
+    let MicroBench { rows, c0, c1, x0, x1 } = mb;
+    let b8: [&[f32]; 8] = std::array::from_fn(|i| rows[i].as_slice());
+    let b4: [&[f32]; 4] = std::array::from_fn(|i| rows[i].as_slice());
+    let x04: [f32; 4] = x0[..4].try_into().unwrap();
+    let x14: [f32; 4] = x1[..4].try_into().unwrap();
+    let (x0, x1) = (*x0, *x1);
+    let s = match name {
+        "axpy4_2" => {
+            let f = k.axpy4_2;
+            bench(1, iters, || {
+                for _ in 0..CALLS {
+                    f(c0, c1, b4, x04, x14);
+                }
+            })
+        }
+        "axpy8_2" => {
+            let f = k.axpy8_2;
+            bench(1, iters, || {
+                for _ in 0..CALLS {
+                    f(c0, c1, b8, x0, x1);
+                }
+            })
+        }
+        "axpy4_1" => {
+            let f = k.axpy4_1;
+            bench(1, iters, || {
+                for _ in 0..CALLS {
+                    f(c0, b4, x04);
+                }
+            })
+        }
+        _ => unreachable!(),
+    };
+    // flops per call: (rows × terms) multiply-adds over the panel.
+    let flops = match name {
+        "axpy4_2" => 2.0 * 2.0 * 4.0 * NN as f64,
+        "axpy8_2" => 2.0 * 2.0 * 8.0 * NN as f64,
+        _ => 2.0 * 4.0 * NN as f64,
+    };
+    // Accumulators drift up over thousands of axpy calls; rescale so
+    // later measurements stay in a sane float range.
+    for v in c0.iter_mut().chain(c1.iter_mut()) {
+        *v = v.rem_euclid(1.0) - 0.5;
+    }
+    gflops(&s, flops)
+}
+
+fn main() {
+    let active = simd::kernels();
+    let scalar = simd::kernels_for(SimdLevel::Scalar).unwrap();
+    let mut rng = Rng::new(0x51D1);
+    let iters = scaled_iters(12);
+    header(&format!(
+        "micro-kernels: scalar vs dispatched ({}), panel width {NN}",
+        active.name
+    ));
+    let mut rows: Vec<(String, Json)> = Vec::new();
+
+    for name in ["axpy4_2", "axpy8_2", "axpy4_1"] {
+        let mut mb = MicroBench::new(&mut rng);
+        let g_scalar = bench_axpy(name, scalar, &mut mb, iters);
+        let g_simd = bench_axpy(name, active, &mut mb, iters);
+        rows.push(speedup_row(name, g_scalar, g_simd, "gflops"));
+    }
+
+    // Full blocked GEMM on the two largest zoo forward shapes
+    // (batch=32 rows, fan_in × fan_out panels).
+    header("blocked gemm_nn_acc (active dispatch)");
+    let gemm_shapes = [
+        ("cnn-m l0 32x3072x256", 32usize, 3072usize, 256usize),
+        ("mlp-m l0 32x784x128", 32, 784, 128),
+    ];
+    for (label, m, k, n) in gemm_shapes {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        let s = bench(1, iters, || {
+            c.fill(0.0);
+            gemm::gemm_nn_acc(&a, &b, &mut c, m, k, n);
+        });
+        let gf = 2.0 * (m * k * n) as f64 / s.mean / 1e9;
+        report(label, &s, &format!("{gf:.2} GFLOP/s ({})", active.name));
+        rows.push((
+            format!("gemm {label}"),
+            Json::obj(vec![
+                ("gflops_simd", Json::num(gf)),
+                ("dispatch", Json::str(active.name)),
+            ]),
+        ));
+    }
+
+    // Streaming reduce inner loop: GB/s of delta consumed.
+    header("fixed_accumulate (streaming reduce inner loop)");
+    {
+        let p = 1 << 14; // one lock stripe
+        let delta = rand_vec(&mut rng, p);
+        let limit = (1u64 << 60) as f64;
+        let scale = (1u64 << 40) as f64;
+        let reps = 64;
+        let bytes = (p * 4 * reps) as f64;
+        let run = |k: &Kernels| {
+            let mut acc = vec![0i128; p];
+            let f = k.fixed_accumulate;
+            let s = bench(1, iters, || {
+                for _ in 0..reps {
+                    f(&mut acc, &delta, 37.0, limit, scale);
+                }
+            });
+            s.gb_per_sec(bytes)
+        };
+        let g_scalar = run(scalar);
+        let g_simd = run(active);
+        rows.push(speedup_row("fixed_accumulate", g_scalar, g_simd, "gb_per_sec"));
+    }
+
+    // Synthesis noise pass: millions of output elements per second.
+    header("synth_noise (cold synthesis inner loop)");
+    {
+        let ex = 3072; // synth-cifar10 example
+        let base = rand_vec(&mut rng, ex);
+        let reps = 32;
+        let elems = (ex * reps) as f64;
+        let run = |k: &Kernels| {
+            let mut out = base.clone();
+            let f = k.synth_noise;
+            let s = bench(1, iters, || {
+                for r in 0..reps {
+                    f(&mut out, 0.2, 0x9e37 + r as u64);
+                }
+            });
+            elems / s.mean / 1e6
+        };
+        let m_scalar = run(scalar);
+        let m_simd = run(active);
+        rows.push(speedup_row("synth_noise", m_scalar, m_simd, "melems_per_sec"));
+    }
+
+    // Blocked transpose of the largest weight view.
+    header("transpose (pre-transposed weight view)");
+    {
+        let (r, c) = (256usize, 3072usize);
+        let src = rand_vec(&mut rng, r * c);
+        let mut dst = vec![0.0f32; r * c];
+        let reps = 16;
+        let bytes = (r * c * 4 * 2 * reps) as f64;
+        let s = bench(1, iters, || {
+            for _ in 0..reps {
+                gemm::transpose(&src, &mut dst, r, c);
+            }
+        });
+        let gbs = s.gb_per_sec(bytes);
+        report("transpose 256x3072", &s, &format!("{gbs:.2} GB/s ({})", active.name));
+        rows.push((
+            "transpose 256x3072".into(),
+            Json::obj(vec![
+                ("gb_per_sec_simd", Json::num(gbs)),
+                ("dispatch", Json::str(active.name)),
+            ]),
+        ));
+    }
+
+    let row_obj = Json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    merge_section(
+        "kernels",
+        Json::obj(vec![("dispatch", Json::str(active.name)), ("cases", row_obj)]),
+    );
+}

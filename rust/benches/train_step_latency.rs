@@ -30,8 +30,9 @@ fn main() {
     let mut train_rows: Vec<(String, Json)> = Vec::new();
 
     header(&format!(
-        "train_step latency (batch {}) on backend {backend}",
-        manifest.train_batch
+        "train_step latency (batch {}) on backend {backend}, simd {}",
+        manifest.train_batch,
+        ferrisfl::runtime::simd::level()
     ));
     let mut cases: Vec<(String, String, String, String)> = Vec::new();
     for art in &manifest.artifacts {
@@ -160,6 +161,7 @@ fn main() {
     let eval_obj = Json::obj(eval_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
     let mut sections = vec![
         ("backend", Json::str(backend.name())),
+        ("simd", Json::str(ferrisfl::runtime::simd::level().name())),
         ("train_batch", Json::num(manifest.train_batch as f64)),
         ("cases", case_obj),
         ("eval", eval_obj),

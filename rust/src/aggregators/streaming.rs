@@ -33,6 +33,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::runtime::simd;
 use crate::util::error::{bail, Result};
 
 /// Coordinates per lock stripe (64 KiB of `f32` delta per stripe).
@@ -133,6 +134,12 @@ impl StreamingAccumulator {
         }
         let w = weight as f64;
         let nstripes = self.stripes.len();
+        // The per-stripe inner loop — exact product (integer × 24-bit
+        // mantissa), deterministic per-term quantisation, exact i128
+        // reduce — runs on the dispatched SIMD kernel. Every dispatch
+        // level is bit-identical to scalar (pinned by `runtime::simd`
+        // tests), so arrival order *and* ISA cannot change the result.
+        let kernel = simd::kernels().fixed_accumulate;
         // Rotate the starting stripe per push so concurrent workers
         // drain into different locks.
         let start = self.count.fetch_add(1, Ordering::AcqRel) % nstripes;
@@ -140,13 +147,8 @@ impl StreamingAccumulator {
             let s = (start + turn) % nstripes;
             let lo = s * STRIPE_COORDS;
             let mut acc = self.stripes[s].lock().expect("streaming stripe poisoned");
-            for (a, &d) in acc.iter_mut().zip(&delta[lo..]) {
-                // Exact product (integer × 24-bit mantissa), then a
-                // deterministic per-term quantisation: the i128 reduce
-                // commutes exactly, so arrival order cannot matter.
-                let term = (w * d as f64).clamp(-FX_TERM_LIMIT, FX_TERM_LIMIT);
-                *a += (term * FX_SCALE) as i128;
-            }
+            let take = acc.len();
+            kernel(&mut acc, &delta[lo..lo + take], w, FX_TERM_LIMIT, FX_SCALE);
         }
         self.total_weight.fetch_add(weight, Ordering::AcqRel);
         Ok(())

@@ -192,7 +192,8 @@ fn push_metric(out: &mut Vec<Metric>, name: String, v: Option<&Json>, higher: bo
 
 /// Extract the gated metrics from a bench snapshot: train-step and eval
 /// throughput (steps/s / examples/s), the naive-vs-blocked numbers,
-/// per-pool-size round walltime, and aggregation GB/s. Unknown sections
+/// per-pool-size round walltime, aggregation GB/s, and the dispatched
+/// micro-kernel throughput from the `kernels` bench. Unknown sections
 /// are ignored, so old and new snapshots stay comparable.
 pub fn collect_metrics(root: &Json) -> Vec<Metric> {
     let mut out = Vec::new();
@@ -237,6 +238,17 @@ pub fn collect_metrics(root: &Json) -> Vec<Metric> {
                 v.get("gb_per_sec"),
                 true,
             );
+        }
+    }
+    // kernels.cases.<kernel>.*_simd: absolute dispatched-kernel
+    // throughput (higher better). The scalar side and the speedup
+    // *ratio* deliberately don't gate — like naive_vs_blocked, ratios
+    // double-count runner noise.
+    if let Some(Json::Obj(cases)) = root.get("kernels").and_then(|s| s.get("cases")) {
+        for (case, v) in cases {
+            for unit in ["gflops_simd", "gb_per_sec_simd", "melems_per_sec_simd"] {
+                push_metric(&mut out, format!("kernels/{case}/{unit}"), v.get(unit), true);
+            }
         }
     }
     out
@@ -512,7 +524,10 @@ mod tests {
                 "naive_vs_blocked": {{"steps_per_sec_blocked": {steps_per_sec}, "speedup": 3.0}}
               }},
               "round_e2e": {{"round_walltime": {{"workers_4": {{"mean_ms": {round_ms}}}}}}},
-              "aggregation": {{"fedavg": {{"lenet5 K=8 offload": {{"gb_per_sec": {gbs}}}}}}}
+              "aggregation": {{"fedavg": {{"lenet5 K=8 offload": {{"gb_per_sec": {gbs}}}}}}},
+              "kernels": {{"dispatch": "avx2", "cases": {{
+                "axpy8_2": {{"gflops_scalar": 9.0, "gflops_simd": {gbs}, "speedup": 2.0}}
+              }}}}
             }}"#
         ))
         .unwrap()
@@ -531,6 +546,12 @@ mod tests {
         );
         assert!(names
             .contains(&"train_step/cases/mlp-s@synth-mnist sgd full/items_per_sec"));
+        assert!(names.contains(&"kernels/axpy8_2/gflops_simd"));
+        assert!(
+            !names.contains(&"kernels/axpy8_2/speedup")
+                && !names.contains(&"kernels/axpy8_2/gflops_scalar"),
+            "kernel ratios and the scalar side must not gate"
+        );
         let round = m.iter().find(|x| x.name.contains("mean_ms")).unwrap();
         assert!(!round.higher_is_better, "walltime gates on increases");
     }

@@ -311,6 +311,21 @@ impl Dataset {
     }
 
     /// Synthesize sample `index` of `split` into `out` (len H*W*C).
+    ///
+    /// Two passes, restructured for the SIMD layer but **bit-identical**
+    /// to the original per-pixel loop (pinned by
+    /// `restructured_synthesis_matches_pixelwise_reference`):
+    ///
+    /// 1. the torus-rolled template is copied row-wise (two contiguous
+    ///    segments per row instead of a per-pixel `rem_euclid` gather);
+    /// 2. noise + clamp run as one linear pass over `out` through the
+    ///    dispatched `runtime::simd` noise kernel. The original
+    ///    loop drew one gaussian per output element in linear order from
+    ///    a sequential SplitMix64 stream; SplitMix64 is counter-based,
+    ///    so gaussian `k` is recomputed from counter draws `2k+1`/`2k+2`
+    ///    — lanes are independent, and every dispatch level reproduces
+    ///    the scalar stream bit-for-bit (so `SynthCache` contents never
+    ///    depend on the ISA).
     pub fn synthesize_into(&self, split: Split, index: usize, out: &mut [f32]) {
         let ex = self.info.example_len();
         debug_assert_eq!(out.len(), ex);
@@ -323,18 +338,21 @@ impl Dataset {
         let dy = if j > 0 { r.range_i64(-j, j) } else { 0 };
         let dx = if j > 0 { r.range_i64(-j, j) } else { 0 };
         let tpl = &self.templates[label * ex..(label + 1) * ex];
-        let noise = self.info.noise;
+        // torus roll, matching numpy.roll in python/compile/datagen.py:
+        // out row yy = template row (yy - dy) mod h, shifted right by
+        // s = dx mod w columns (with wraparound).
+        let rowf = w * c;
+        let s = dx.rem_euclid(w as i64) as usize;
         for yy in 0..h {
-            // torus roll, matching numpy.roll in python/compile/datagen.py
             let sy = (yy as i64 - dy).rem_euclid(h as i64) as usize;
-            for xx in 0..w {
-                let sx = (xx as i64 - dx).rem_euclid(w as i64) as usize;
-                for ch in 0..c {
-                    let v = tpl[(sy * w + sx) * c + ch] + noise * r.next_gaussian();
-                    out[(yy * w + xx) * c + ch] = v.clamp(-0.5, 1.5) - 0.5;
-                }
-            }
+            let srow = &tpl[sy * rowf..(sy + 1) * rowf];
+            let drow = &mut out[yy * rowf..(yy + 1) * rowf];
+            drow[..s * c].copy_from_slice(&srow[(w - s) * c..]);
+            drow[s * c..].copy_from_slice(&srow[..(w - s) * c]);
         }
+        // `r` now sits exactly where the old loop started drawing
+        // per-pixel gaussians; hand its state to the counter-mode pass.
+        (crate::runtime::simd::kernels().synth_noise)(out, self.info.noise, r.state());
     }
 
     /// Synthesize a batch for the given sample indices into `buf`,
@@ -450,6 +468,70 @@ mod tests {
             .map(|i| (i % 7) as f32 / 7.0)
             .collect();
         Dataset::from_parts(info, templates, seed)
+    }
+
+    /// The pre-SIMD synthesis loop, verbatim: one `rem_euclid` template
+    /// gather and one sequential `next_gaussian` per output element.
+    /// The restructured two-pass `synthesize_into` must reproduce it
+    /// bit-for-bit (same RNG stream via counter-mode draws), so cached
+    /// rows and golden values are unchanged by the rewrite.
+    fn synthesize_reference(d: &Dataset, split: Split, index: usize, out: &mut [f32]) {
+        let ex = d.info.example_len();
+        let label = d.label(split, index);
+        let mut r = Rng::new(d.seed ^ split.salt() ^ 0xC0FFEE).split(index as u64);
+        let (h, w, c) = (d.info.height, d.info.width, d.info.channels);
+        let j = d.info.jitter;
+        let dy = if j > 0 { r.range_i64(-j, j) } else { 0 };
+        let dx = if j > 0 { r.range_i64(-j, j) } else { 0 };
+        let tpl = &d.templates[label * ex..(label + 1) * ex];
+        let noise = d.info.noise;
+        for yy in 0..h {
+            let sy = (yy as i64 - dy).rem_euclid(h as i64) as usize;
+            for xx in 0..w {
+                let sx = (xx as i64 - dx).rem_euclid(w as i64) as usize;
+                for ch in 0..c {
+                    let v = tpl[(sy * w + sx) * c + ch] + noise * r.next_gaussian();
+                    out[(yy * w + xx) * c + ch] = v.clamp(-0.5, 1.5) - 0.5;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn restructured_synthesis_matches_pixelwise_reference() {
+        // Jittered, jitter-free, multi-channel, and non-square shapes;
+        // both splits; a spread of indices. Bit-identical everywhere.
+        let mut cases = vec![tiny_dataset(42)];
+        let mut no_jitter = tiny_info();
+        no_jitter.jitter = 0;
+        let ex = no_jitter.example_len();
+        let t: Vec<f32> = (0..no_jitter.num_classes * ex).map(|i| (i % 5) as f32 / 5.0).collect();
+        cases.push(Dataset::from_parts(no_jitter, t, 7));
+        let mut wide = tiny_info();
+        wide.width = 7;
+        wide.height = 3;
+        wide.channels = 2;
+        wide.jitter = 2;
+        let ex = wide.example_len();
+        let t: Vec<f32> = (0..wide.num_classes * ex).map(|i| (i % 9) as f32 / 9.0).collect();
+        cases.push(Dataset::from_parts(wide, t, 9));
+        let m = Manifest::native();
+        cases.push(Dataset::load(&m, "synth-cifar10", 3).unwrap());
+
+        for d in &cases {
+            let ex = d.info.example_len();
+            let mut got = vec![0.0f32; ex];
+            let mut want = vec![0.0f32; ex];
+            for split in [Split::Train, Split::Test] {
+                for index in [0usize, 1, 13, 57] {
+                    d.synthesize_into(split, index, &mut got);
+                    synthesize_reference(d, split, index, &mut want);
+                    let same =
+                        got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits());
+                    assert!(same, "{} {split:?} index {index}", d.info.name);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,33 +1,43 @@
-//! Cache-blocked, autovectorization-friendly GEMM kernels — the compute
-//! core of the native backend's train/eval hot path.
+//! Cache-blocked GEMM drivers — the compute core of the native
+//! backend's train/eval hot path.
 //!
-//! All matrices are row-major `f32` slices. The kernels are written in
-//! the *axpy form*: the innermost loop updates independent elements of a
-//! C row (`c[j] += x · b[j]`), which LLVM vectorizes without needing
-//! float-reassociation permission (a dot-product inner loop would be a
-//! reduction, which rustc will not vectorize). On top of that:
+//! All matrices are row-major `f32` slices. The drivers keep the
+//! blocking/tiling strategy of the original engine and delegate the
+//! innermost loops to the runtime-dispatched micro-kernels in
+//! [`super::simd`] (scalar, AVX2+FMA, or NEON — chosen once at
+//! startup):
 //!
+//! - **axpy form**: the innermost loop updates independent elements of a
+//!   C row (`c[j] += x · b[j]`) — vectorizable without
+//!   float-reassociation permission on the scalar path, and an FMA
+//!   stream on the SIMD paths;
 //! - **register tiling**: each micro step updates two C rows from four
 //!   rank-1 contributions at once (a 2×4 tile of scalar multipliers held
-//!   in registers), giving 8 independent FMA streams per lane;
+//!   in registers); where AVX2's sixteen 256-bit registers allow, the K
+//!   loop takes eight contributions per step (a 2×8 tile via
+//!   `axpy8_2`, one C load/store per 8 K-steps);
 //! - **cache blocking**: the N dimension is walked in [`NC`]-wide panels
 //!   so the active C rows and streamed B rows stay L1/L2-resident, and
 //!   the K dimension in [`KC`]-deep panels so a B panel is reused across
 //!   every C row before it is evicted;
-//! - **zero skipping**: a 2×4 tile whose eight multipliers are all zero
-//!   is skipped — ReLU-masked gradients are sparse row-wise, so entire
-//!   tiles of the backward pass vanish.
+//! - **zero skipping**: a micro tile whose multipliers are all zero is
+//!   skipped — ReLU-masked gradients are sparse row-wise, so entire
+//!   tiles of the backward pass vanish (the scalar 2×8 step preserves
+//!   the original per-2×4-half skip granularity).
 //!
-//! Summation order differs from a naive triple loop (blocking + 4-way
-//! fusion), so results agree with the reference to ~1e-6 relative, not
-//! bit-exactly; the golden tests in [`super::native`] pin the contract
-//! at 1e-5. Given the same shapes and inputs the kernels are themselves
-//! fully deterministic.
+//! Summation order differs from a naive triple loop (blocking + tile
+//! fusion, FMA on the SIMD paths), so results agree with the reference
+//! to ~1e-6 relative, not bit-exactly; the golden tests in
+//! [`super::native`] pin the contract at 1e-5. Given the same shapes,
+//! inputs, and dispatch level the kernels are fully deterministic.
+
+use super::simd;
 
 /// Width of one N panel (floats). Two C-row tiles of `NC` floats plus
 /// four streamed B rows fit comfortably in L1 (6 × 2 KiB = 12 KiB).
 const NC: usize = 512;
 /// Depth of one K panel: a `KC × NC` B panel is 256 KiB — L2-resident.
+/// A multiple of 8 so full panels run entirely on the 2×8 micro step.
 const KC: usize = 128;
 
 /// `c[M×N] += A[M×K] · B[K×N]` (all row-major).
@@ -40,6 +50,7 @@ pub fn gemm_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     assert!(a.len() >= m * k, "A is {} floats, want {}x{}", a.len(), m, k);
     assert!(b.len() >= k * n, "B is {} floats, want {}x{}", b.len(), k, n);
     assert!(c.len() >= m * n, "C is {} floats, want {}x{}", c.len(), m, n);
+    let kr = simd::kernels();
     let mut jc = 0;
     while jc < n {
         let nn = NC.min(n - jc);
@@ -55,16 +66,23 @@ pub fn gemm_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
                 let a0 = &a[i * k..(i + 1) * k];
                 let a1 = &a[(i + 1) * k..(i + 2) * k];
                 let mut t = kc;
+                while t + 8 <= kc + kk {
+                    let bt = brows8(b, t, n, jc, nn);
+                    let x0: [f32; 8] = a0[t..t + 8].try_into().unwrap();
+                    let x1: [f32; 8] = a1[t..t + 8].try_into().unwrap();
+                    (kr.axpy8_2)(c0, c1, bt, x0, x1);
+                    t += 8;
+                }
                 while t + 4 <= kc + kk {
                     let bt = brows(b, t, n, jc, nn);
                     let x0 = [a0[t], a0[t + 1], a0[t + 2], a0[t + 3]];
                     let x1 = [a1[t], a1[t + 1], a1[t + 2], a1[t + 3]];
-                    axpy4_2(c0, c1, bt, x0, x1);
+                    (kr.axpy4_2)(c0, c1, bt, x0, x1);
                     t += 4;
                 }
                 while t < kc + kk {
                     let b0 = &b[t * n + jc..t * n + jc + nn];
-                    axpy1_2(c0, c1, b0, a0[t], a1[t]);
+                    (kr.axpy1_2)(c0, c1, b0, a0[t], a1[t]);
                     t += 1;
                 }
                 i += 2;
@@ -75,12 +93,12 @@ pub fn gemm_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
                 let mut t = kc;
                 while t + 4 <= kc + kk {
                     let bt = brows(b, t, n, jc, nn);
-                    axpy4_1(c0, bt, [a0[t], a0[t + 1], a0[t + 2], a0[t + 3]]);
+                    (kr.axpy4_1)(c0, bt, [a0[t], a0[t + 1], a0[t + 2], a0[t + 3]]);
                     t += 4;
                 }
                 while t < kc + kk {
                     let b0 = &b[t * n + jc..t * n + jc + nn];
-                    axpy1_1(c0, b0, a0[t]);
+                    (kr.axpy1_1)(c0, b0, a0[t]);
                     t += 1;
                 }
             }
@@ -95,12 +113,13 @@ pub fn gemm_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 /// Used for the weight gradient `gW = dzᵀ·X`: `A` = dz `[batch ×
 /// fan_out]`, `B` = layer input `[batch × fan_in]`, `C` = gW
 /// `[fan_out × fan_in]`. `A` is read down its columns (stride `m`) —
-/// only 8 strided scalar loads per 2×4 tile, so no transposition of dz
+/// only 16 strided scalar loads per 2×8 tile, so no transposition of dz
 /// is worth the pass over memory.
 pub fn gemm_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
     assert!(a.len() >= k * m, "A is {} floats, want {}x{}", a.len(), k, m);
     assert!(b.len() >= k * n, "B is {} floats, want {}x{}", b.len(), k, n);
     assert!(c.len() >= m * n, "C is {} floats, want {}x{}", c.len(), m, n);
+    let kr = simd::kernels();
     let mut jc = 0;
     while jc < n {
         let nn = NC.min(n - jc);
@@ -110,16 +129,23 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: u
             let c0 = &mut r0[jc..jc + nn];
             let c1 = &mut r1[jc..jc + nn];
             let mut t = 0;
+            while t + 8 <= k {
+                let bt = brows8(b, t, n, jc, nn);
+                let x0 = acol8(a, t, m, i);
+                let x1 = acol8(a, t, m, i + 1);
+                (kr.axpy8_2)(c0, c1, bt, x0, x1);
+                t += 8;
+            }
             while t + 4 <= k {
                 let bt = brows(b, t, n, jc, nn);
                 let x0 = acol4(a, t, m, i);
                 let x1 = acol4(a, t, m, i + 1);
-                axpy4_2(c0, c1, bt, x0, x1);
+                (kr.axpy4_2)(c0, c1, bt, x0, x1);
                 t += 4;
             }
             while t < k {
                 let b0 = &b[t * n + jc..t * n + jc + nn];
-                axpy1_2(c0, c1, b0, a[t * m + i], a[t * m + i + 1]);
+                (kr.axpy1_2)(c0, c1, b0, a[t * m + i], a[t * m + i + 1]);
                 t += 1;
             }
             i += 2;
@@ -129,12 +155,12 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: u
             let mut t = 0;
             while t + 4 <= k {
                 let bt = brows(b, t, n, jc, nn);
-                axpy4_1(c0, bt, acol4(a, t, m, i));
+                (kr.axpy4_1)(c0, bt, acol4(a, t, m, i));
                 t += 4;
             }
             while t < k {
                 let b0 = &b[t * n + jc..t * n + jc + nn];
-                axpy1_1(c0, b0, a[t * m + i]);
+                (kr.axpy1_1)(c0, b0, a[t * m + i]);
                 t += 1;
             }
         }
@@ -142,26 +168,35 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: u
     }
 }
 
-/// `dst[cols×rows] = src[rows×cols]ᵀ`, in 32×32 cache tiles.
+/// `dst[cols×rows] = src[rows×cols]ᵀ`, blocked into 8×8 tiles that run
+/// on the dispatched [`simd::Kernels::transpose8`] micro-kernel (an
+/// in-register shuffle network under AVX2) with scalar edge strips.
+/// Runs once per layer per forward pass (the pre-transposed weight
+/// view), so it shares the hot path's dispatch.
 pub fn transpose(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
     assert!(src.len() >= rows * cols);
     assert!(dst.len() >= rows * cols);
-    const TB: usize = 32;
+    let kr = simd::kernels();
     let mut rb = 0;
-    while rb < rows {
-        let re = (rb + TB).min(rows);
+    while rb + 8 <= rows {
         let mut cb = 0;
-        while cb < cols {
-            let ce = (cb + TB).min(cols);
-            for r in rb..re {
-                let row = &src[r * cols..r * cols + cols];
-                for c in cb..ce {
-                    dst[c * rows + r] = row[c];
-                }
-            }
-            cb += TB;
+        while cb + 8 <= cols {
+            (kr.transpose8)(&src[rb * cols + cb..], cols, &mut dst[cb * rows + rb..], rows);
+            cb += 8;
         }
-        rb += TB;
+        for r in rb..rb + 8 {
+            let row = &src[r * cols..r * cols + cols];
+            for c in cb..cols {
+                dst[c * rows + r] = row[c];
+            }
+        }
+        rb += 8;
+    }
+    for r in rb..rows {
+        let row = &src[r * cols..r * cols + cols];
+        for c in 0..cols {
+            dst[c * rows + r] = row[c];
+        }
     }
 }
 
@@ -171,71 +206,22 @@ fn acol4(a: &[f32], t: usize, m: usize, i: usize) -> [f32; 4] {
     [a[t * m + i], a[(t + 1) * m + i], a[(t + 2) * m + i], a[(t + 3) * m + i]]
 }
 
+/// Eight consecutive values of column `i` of row-major `a[·×m]`.
+#[inline(always)]
+fn acol8(a: &[f32], t: usize, m: usize, i: usize) -> [f32; 8] {
+    std::array::from_fn(|s| a[(t + s) * m + i])
+}
+
 /// Four consecutive B rows, windowed to the current N panel.
 #[inline(always)]
 fn brows(b: &[f32], t: usize, n: usize, jc: usize, nn: usize) -> [&[f32]; 4] {
-    [
-        &b[t * n + jc..t * n + jc + nn],
-        &b[(t + 1) * n + jc..(t + 1) * n + jc + nn],
-        &b[(t + 2) * n + jc..(t + 2) * n + jc + nn],
-        &b[(t + 3) * n + jc..(t + 3) * n + jc + nn],
-    ]
+    std::array::from_fn(|s| &b[(t + s) * n + jc..(t + s) * n + jc + nn])
 }
 
-/// 2×4 micro step: two C rows, four rank-1 contributions each.
+/// Eight consecutive B rows, windowed to the current N panel.
 #[inline(always)]
-fn axpy4_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 4], x0: [f32; 4], x1: [f32; 4]) {
-    if x0 == [0.0; 4] && x1 == [0.0; 4] {
-        return;
-    }
-    let nn = c0.len();
-    let c1 = &mut c1[..nn];
-    let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
-    for j in 0..nn {
-        c0[j] += x0[0] * b0[j] + x0[1] * b1[j] + x0[2] * b2[j] + x0[3] * b3[j];
-        c1[j] += x1[0] * b0[j] + x1[1] * b1[j] + x1[2] * b2[j] + x1[3] * b3[j];
-    }
-}
-
-/// 1×4 micro step (M tail).
-#[inline(always)]
-fn axpy4_1(c0: &mut [f32], b: [&[f32]; 4], x: [f32; 4]) {
-    if x == [0.0; 4] {
-        return;
-    }
-    let nn = c0.len();
-    let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
-    for j in 0..nn {
-        c0[j] += x[0] * b0[j] + x[1] * b1[j] + x[2] * b2[j] + x[3] * b3[j];
-    }
-}
-
-/// 2×1 micro step (K tail).
-#[inline(always)]
-fn axpy1_2(c0: &mut [f32], c1: &mut [f32], b0: &[f32], x0: f32, x1: f32) {
-    if x0 == 0.0 && x1 == 0.0 {
-        return;
-    }
-    let nn = c0.len();
-    let c1 = &mut c1[..nn];
-    let b0 = &b0[..nn];
-    for j in 0..nn {
-        c0[j] += x0 * b0[j];
-        c1[j] += x1 * b0[j];
-    }
-}
-
-/// 1×1 micro step (M and K tails).
-#[inline(always)]
-fn axpy1_1(c0: &mut [f32], b0: &[f32], x: f32) {
-    if x == 0.0 {
-        return;
-    }
-    let nn = c0.len();
-    let b0 = &b0[..nn];
-    for j in 0..nn {
-        c0[j] += x * b0[j];
-    }
+fn brows8(b: &[f32], t: usize, n: usize, jc: usize, nn: usize) -> [&[f32]; 8] {
+    std::array::from_fn(|s| &b[(t + s) * n + jc..(t + s) * n + jc + nn])
 }
 
 #[cfg(test)]
@@ -278,7 +264,8 @@ mod tests {
         }
     }
 
-    /// Odd, non-multiple-of-tile shapes — exercise every tail path.
+    /// Odd, non-multiple-of-tile shapes — exercise every tail path
+    /// (including the 8-wide K stage and its 4/1-wide remainders).
     #[test]
     fn gemm_nn_matches_naive_on_odd_shapes() {
         let mut rng = Rng::new(0x6e);
@@ -333,7 +320,7 @@ mod tests {
     #[test]
     fn transpose_round_trips() {
         let mut rng = Rng::new(0x7171);
-        for &(r, c) in &[(1, 1), (3, 5), (33, 65), (128, 784)] {
+        for &(r, c) in &[(1, 1), (3, 5), (8, 8), (9, 17), (33, 65), (128, 784)] {
             let src = rand_mat(&mut rng, r * c);
             let mut t = vec![0.0f32; r * c];
             transpose(&src, &mut t, r, c);

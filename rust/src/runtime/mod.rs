@@ -5,8 +5,13 @@
 //!   loading) plus [`BackendKind`] and the shared stat types.
 //! - [`native`] — the default pure-rust CPU backend: hermetic, no
 //!   Python/XLA/artifacts, multithreaded aggregation on the worker pool.
-//! - [`gemm`] — the cache-blocked GEMM kernels the native step path
+//! - [`gemm`] — the cache-blocked GEMM drivers the native step path
 //!   runs on (register-tiled axpy micro-kernels, zero-skip tiles).
+//! - [`simd`] — the runtime-dispatched kernel layer under the hot
+//!   loops: scalar / AVX2+FMA / NEON implementations of the axpy
+//!   micro-kernels, the streaming fixed-point reduce, and the
+//!   counter-based synthesis noise pass, selected once at startup
+//!   (`FERRISFL_SIMD` overrides).
 //! - [`reference`] — the pre-blocking naive MLP engine, retained as the
 //!   golden baseline for tests and the naive-vs-blocked bench.
 //! - [`pjrt`] — the PJRT/XLA path over AOT artifacts (the Pallas-kernel
@@ -24,6 +29,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
+pub mod simd;
 pub mod stats;
 
 pub use backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepScratch, StepStats};

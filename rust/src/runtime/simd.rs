@@ -1,0 +1,1188 @@
+//! Runtime-dispatched SIMD kernels for the three hot inner loops: the
+//! GEMM axpy micro-kernels, the streaming aggregator's fixed-point
+//! quantise-and-accumulate, and the synthesis noise pass.
+//!
+//! The rest of the crate calls these through [`kernels`], a table of
+//! plain function pointers selected **once** per process:
+//!
+//! - **scalar** — safe Rust, the exact loops the blocked engine shipped
+//!   with (LLVM still autovectorizes them at baseline `x86-64`, i.e.
+//!   SSE2 without FMA). Always available; the reference all other
+//!   implementations are pinned against.
+//! - **avx2** — `x86_64` with AVX2+FMA, detected at startup via
+//!   `is_x86_feature_detected!`. 8-wide f32 FMA axpy tiles, 4-wide f64
+//!   quantisation, a counter-based 4-lane synthesis pass, and an 8×8
+//!   in-register transpose.
+//! - **neon** — `aarch64` (NEON is baseline there, so the choice is
+//!   compile-time). 4-wide FMA axpy tiles and a 2-wide quantisation
+//!   loop; synthesis and the transpose block stay scalar because NEON
+//!   has no packed 64-bit integer multiply for the SplitMix64 mix and
+//!   no cross-lane f32 shuffle network worth the surface.
+//!
+//! `FERRISFL_SIMD=0|scalar|avx2|neon|auto` overrides the detection (for
+//! the CI matrix legs and A/B tests). Requesting an ISA the CPU does not
+//! support warns and falls back to scalar — the table can never hand out
+//! instructions the host will fault on.
+//!
+//! **Parity contracts.** The streaming-reduce and synthesis kernels are
+//! **bit-identical** to scalar on every path: they use only exactly
+//! rounded IEEE ops (add/mul of exact values, `max`/`min` on non-NaN
+//! data, hardware sqrt, correctly rounded casts) plus per-lane calls to
+//! the very same `ln`/`cos` the scalar code uses, so dispatch can never
+//! change `SynthCache` contents or the order-invariant reduce. The GEMM
+//! micro-kernels fuse multiply-adds (FMA rounds once, scalar rounds
+//! twice), so they match scalar to ~1e-6 relative — inside the 1e-5
+//! contract the golden tests pin against the naive reference. Both
+//! contracts are enforced by unit tests here and by the parity
+//! proptests in `tests/proptests.rs`.
+
+use std::sync::OnceLock;
+
+use crate::util::rng::{splitmix64_mix, SPLITMIX64_GAMMA};
+
+/// Which kernel implementation is driving the hot loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Safe-Rust loops (autovectorized at whatever the build's baseline
+    /// target features allow).
+    Scalar,
+    /// `x86_64` AVX2 + FMA intrinsics, runtime-detected.
+    Avx2,
+    /// `aarch64` NEON intrinsics (baseline on that architecture).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// 2×4 micro step: two C rows, four rank-1 contributions each.
+pub type Axpy42 = fn(&mut [f32], &mut [f32], [&[f32]; 4], [f32; 4], [f32; 4]);
+/// 1×4 micro step (M tail).
+pub type Axpy41 = fn(&mut [f32], [&[f32]; 4], [f32; 4]);
+/// 2×1 micro step (K tail).
+pub type Axpy12 = fn(&mut [f32], &mut [f32], &[f32], f32, f32);
+/// 1×1 micro step (M and K tails).
+pub type Axpy11 = fn(&mut [f32], &[f32], f32);
+/// 2×8 micro step: two C rows, eight rank-1 contributions — one C
+/// load/store per 8 K-steps where registers allow.
+pub type Axpy82 = fn(&mut [f32], &mut [f32], [&[f32]; 8], [f32; 8], [f32; 8]);
+/// 8×8 block transpose: `dst[c*dst_stride + r] = src[r*src_stride + c]`
+/// for `r, c in 0..8`. Both slices must cover their 8th row.
+pub type Transpose8 = fn(&[f32], usize, &mut [f32], usize);
+/// Fixed-point quantise-accumulate: for each `i < acc.len()`,
+/// `acc[i] += ((w·delta[i] as f64).clamp(-limit, limit) * scale) as i128`.
+/// Bit-identical across implementations (exact products, non-NaN
+/// clamp, truncating cast).
+pub type FixedAccum = fn(&mut [i128], &[f32], f64, f64, f64);
+/// Synthesis noise pass: for each `k < out.len()`,
+/// `out[k] = (out[k] + noise·g_k).clamp(-0.5, 1.5) - 0.5`, where `g_k`
+/// is the Box–Muller gaussian built from SplitMix64 counter draws
+/// `2k+1` and `2k+2` off `state` — exactly the stream a sequential
+/// `Rng::new(state)` would produce via `next_gaussian()`. Bit-identical
+/// across implementations.
+pub type SynthNoise = fn(&mut [f32], f32, u64);
+
+/// The dispatch table: one function pointer per hot inner loop.
+pub struct Kernels {
+    pub name: &'static str,
+    pub axpy4_2: Axpy42,
+    pub axpy4_1: Axpy41,
+    pub axpy1_2: Axpy12,
+    pub axpy1_1: Axpy11,
+    pub axpy8_2: Axpy82,
+    pub transpose8: Transpose8,
+    pub fixed_accumulate: FixedAccum,
+    pub synth_noise: SynthNoise,
+}
+
+/// The best level this CPU supports.
+#[allow(unreachable_code)]
+pub fn detected() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+/// Resolve an optional `FERRISFL_SIMD` value against the detected
+/// level. Returns the level to use plus a warning when the request
+/// could not be honoured (unknown value, or an ISA this CPU lacks —
+/// which falls back to scalar rather than faulting).
+fn resolve(request: Option<&str>, detected: SimdLevel) -> (SimdLevel, Option<String>) {
+    let Some(req) = request else {
+        return (detected, None);
+    };
+    match req.trim().to_ascii_lowercase().as_str() {
+        "" | "1" | "auto" => (detected, None),
+        "0" | "off" | "scalar" => (SimdLevel::Scalar, None),
+        "avx2" if detected == SimdLevel::Avx2 => (SimdLevel::Avx2, None),
+        "neon" if detected == SimdLevel::Neon => (SimdLevel::Neon, None),
+        known @ ("avx2" | "neon") => (
+            SimdLevel::Scalar,
+            Some(format!(
+                "FERRISFL_SIMD={known} requested but this CPU/arch does not support it; \
+                 using scalar kernels"
+            )),
+        ),
+        other => (
+            detected,
+            Some(format!(
+                "unknown FERRISFL_SIMD value {other:?} (want 0|scalar|avx2|neon|auto); \
+                 using detected level {}",
+                detected.name()
+            )),
+        ),
+    }
+}
+
+/// The active dispatch level, chosen once per process: the detected
+/// level, overridden by `FERRISFL_SIMD` when set.
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let request = std::env::var("FERRISFL_SIMD").ok();
+        let (level, warning) = resolve(request.as_deref(), detected());
+        if let Some(w) = warning {
+            eprintln!("warning: {w}");
+        }
+        level
+    })
+}
+
+/// The kernel table for an explicit level, when this build/CPU can run
+/// it. `Scalar` always succeeds; `Avx2`/`Neon` return `None` off their
+/// architecture or when the CPU lacks the features (so handing out the
+/// table is always sound). Benches and parity tests use this to compare
+/// implementations inside one process.
+pub fn kernels_for(level: SimdLevel) -> Option<&'static Kernels> {
+    match level {
+        SimdLevel::Scalar => Some(&SCALAR),
+        SimdLevel::Avx2 => avx2_kernels(),
+        SimdLevel::Neon => neon_kernels(),
+    }
+}
+
+/// Every level runnable on this machine (scalar first).
+pub fn available_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Neon]
+        .into_iter()
+        .filter(|&l| kernels_for(l).is_some())
+        .collect()
+}
+
+/// The active kernel table — what the GEMM drivers, the streaming
+/// accumulator, and dataset synthesis call through.
+pub fn kernels() -> &'static Kernels {
+    kernels_for(level()).unwrap_or(&SCALAR)
+}
+
+fn avx2_kernels() -> Option<&'static Kernels> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if detected() == SimdLevel::Avx2 {
+            return Some(&x86::AVX2);
+        }
+    }
+    None
+}
+
+#[allow(unreachable_code)]
+fn neon_kernels() -> Option<&'static Kernels> {
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Some(&aarch64::NEON);
+    }
+    None
+}
+
+// ==================================================== shared helpers
+
+/// Counter-mode SplitMix64: the j-th upcoming draw of a generator whose
+/// state is `state` (1-indexed, matching sequential `next_u64` calls).
+#[inline]
+fn draw(state: u64, j: u64) -> u64 {
+    splitmix64_mix(state.wrapping_add(SPLITMIX64_GAMMA.wrapping_mul(j)))
+}
+
+/// Box–Muller gaussian from two raw draws — the exact expression of
+/// `Rng::next_gaussian` (`u = (d >> 11) / 2⁵³`, `u1` floored at 1e-12).
+#[inline]
+fn gauss_from(d1: u64, d2: u64) -> f32 {
+    let u1 = ((d1 >> 11) as f64 / (1u64 << 53) as f64).max(1e-12);
+    let u2 = (d2 >> 11) as f64 / (1u64 << 53) as f64;
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+/// Gaussian `k` (0-indexed) of the stream rooted at `state`: draws
+/// `2k+1` and `2k+2`, exactly what the k-th sequential
+/// `next_gaussian()` would consume.
+#[inline]
+fn gauss_at(state: u64, k: u64) -> f32 {
+    gauss_from(draw(state, 2 * k + 1), draw(state, 2 * k + 2))
+}
+
+/// One synthesis output element (shared by every scalar tail).
+#[inline]
+fn synth_one(v: f32, noise: f32, g: f32) -> f32 {
+    (v + noise * g).clamp(-0.5, 1.5) - 0.5
+}
+
+// ==================================================== scalar kernels
+
+/// The safe-Rust reference implementations (the pre-SIMD hot loops,
+/// verbatim). Always compiled; other tables are pinned against them.
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    axpy4_2: scalar::axpy4_2,
+    axpy4_1: scalar::axpy4_1,
+    axpy1_2: scalar::axpy1_2,
+    axpy1_1: scalar::axpy1_1,
+    axpy8_2: scalar::axpy8_2,
+    transpose8: scalar::transpose8,
+    fixed_accumulate: scalar::fixed_accumulate,
+    synth_noise: scalar::synth_noise,
+};
+
+mod scalar {
+    use super::{gauss_at, synth_one};
+
+    pub fn axpy4_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 4], x0: [f32; 4], x1: [f32; 4]) {
+        if x0 == [0.0; 4] && x1 == [0.0; 4] {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
+        for j in 0..nn {
+            c0[j] += x0[0] * b0[j] + x0[1] * b1[j] + x0[2] * b2[j] + x0[3] * b3[j];
+            c1[j] += x1[0] * b0[j] + x1[1] * b1[j] + x1[2] * b2[j] + x1[3] * b3[j];
+        }
+    }
+
+    pub fn axpy4_1(c0: &mut [f32], b: [&[f32]; 4], x: [f32; 4]) {
+        if x == [0.0; 4] {
+            return;
+        }
+        let nn = c0.len();
+        let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
+        for j in 0..nn {
+            c0[j] += x[0] * b0[j] + x[1] * b1[j] + x[2] * b2[j] + x[3] * b3[j];
+        }
+    }
+
+    pub fn axpy1_2(c0: &mut [f32], c1: &mut [f32], b0: &[f32], x0: f32, x1: f32) {
+        if x0 == 0.0 && x1 == 0.0 {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let b0 = &b0[..nn];
+        for j in 0..nn {
+            c0[j] += x0 * b0[j];
+            c1[j] += x1 * b0[j];
+        }
+    }
+
+    pub fn axpy1_1(c0: &mut [f32], b0: &[f32], x: f32) {
+        if x == 0.0 {
+            return;
+        }
+        let nn = c0.len();
+        let b0 = &b0[..nn];
+        for j in 0..nn {
+            c0[j] += x * b0[j];
+        }
+    }
+
+    /// Two 2×4 halves — identical results and zero-skips to stepping
+    /// the K loop by 4 twice.
+    pub fn axpy8_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 8], x0: [f32; 8], x1: [f32; 8]) {
+        axpy4_2(
+            c0,
+            c1,
+            [b[0], b[1], b[2], b[3]],
+            [x0[0], x0[1], x0[2], x0[3]],
+            [x1[0], x1[1], x1[2], x1[3]],
+        );
+        axpy4_2(
+            c0,
+            c1,
+            [b[4], b[5], b[6], b[7]],
+            [x0[4], x0[5], x0[6], x0[7]],
+            [x1[4], x1[5], x1[6], x1[7]],
+        );
+    }
+
+    pub fn transpose8(src: &[f32], src_stride: usize, dst: &mut [f32], dst_stride: usize) {
+        assert!(src.len() >= 7 * src_stride + 8);
+        assert!(dst.len() >= 7 * dst_stride + 8);
+        for r in 0..8 {
+            for c in 0..8 {
+                dst[c * dst_stride + r] = src[r * src_stride + c];
+            }
+        }
+    }
+
+    pub fn fixed_accumulate(acc: &mut [i128], delta: &[f32], w: f64, limit: f64, scale: f64) {
+        for (a, &d) in acc.iter_mut().zip(delta) {
+            let term = (w * d as f64).clamp(-limit, limit);
+            *a += (term * scale) as i128;
+        }
+    }
+
+    pub fn synth_noise(out: &mut [f32], noise: f32, state: u64) {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = synth_one(*o, noise, gauss_at(state, k as u64));
+        }
+    }
+}
+
+// ====================================================== AVX2 kernels
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::{gauss_at, synth_one, Kernels, SPLITMIX64_GAMMA};
+
+    /// Only handed out by `kernels_for` after `is_x86_feature_detected!`
+    /// confirmed AVX2+FMA, so the safe wrappers below are sound.
+    pub(super) static AVX2: Kernels = Kernels {
+        name: "avx2",
+        axpy4_2,
+        axpy4_1,
+        axpy1_2,
+        axpy1_1,
+        axpy8_2,
+        transpose8,
+        fixed_accumulate,
+        synth_noise,
+    };
+
+    fn axpy4_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 4], x0: [f32; 4], x1: [f32; 4]) {
+        // SAFETY: this table is only reachable once AVX2+FMA detection
+        // succeeded (see `AVX2` above); same for every wrapper below.
+        unsafe { axpy4_2_fma(c0, c1, b, x0, x1) }
+    }
+
+    fn axpy4_1(c0: &mut [f32], b: [&[f32]; 4], x: [f32; 4]) {
+        unsafe { axpy4_1_fma(c0, b, x) }
+    }
+
+    fn axpy1_2(c0: &mut [f32], c1: &mut [f32], b0: &[f32], x0: f32, x1: f32) {
+        unsafe { axpy1_2_fma(c0, c1, b0, x0, x1) }
+    }
+
+    fn axpy1_1(c0: &mut [f32], b0: &[f32], x: f32) {
+        unsafe { axpy1_1_fma(c0, b0, x) }
+    }
+
+    fn axpy8_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 8], x0: [f32; 8], x1: [f32; 8]) {
+        unsafe { axpy8_2_fma(c0, c1, b, x0, x1) }
+    }
+
+    fn transpose8(src: &[f32], src_stride: usize, dst: &mut [f32], dst_stride: usize) {
+        assert!(src.len() >= 7 * src_stride + 8);
+        assert!(dst.len() >= 7 * dst_stride + 8);
+        unsafe { transpose8_avx(src, src_stride, dst, dst_stride) }
+    }
+
+    fn fixed_accumulate(acc: &mut [i128], delta: &[f32], w: f64, limit: f64, scale: f64) {
+        unsafe { fixed_accumulate_avx(acc, delta, w, limit, scale) }
+    }
+
+    fn synth_noise(out: &mut [f32], noise: f32, state: u64) {
+        unsafe { synth_noise_avx(out, noise, state) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy4_2_fma(
+        c0: &mut [f32],
+        c1: &mut [f32],
+        b: [&[f32]; 4],
+        x0: [f32; 4],
+        x1: [f32; 4],
+    ) {
+        if x0 == [0.0; 4] && x1 == [0.0; 4] {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
+        let y00 = _mm256_set1_ps(x0[0]);
+        let y01 = _mm256_set1_ps(x0[1]);
+        let y02 = _mm256_set1_ps(x0[2]);
+        let y03 = _mm256_set1_ps(x0[3]);
+        let y10 = _mm256_set1_ps(x1[0]);
+        let y11 = _mm256_set1_ps(x1[1]);
+        let y12 = _mm256_set1_ps(x1[2]);
+        let y13 = _mm256_set1_ps(x1[3]);
+        let mut j = 0usize;
+        while j + 8 <= nn {
+            let v0 = _mm256_loadu_ps(b0.as_ptr().add(j));
+            let v1 = _mm256_loadu_ps(b1.as_ptr().add(j));
+            let v2 = _mm256_loadu_ps(b2.as_ptr().add(j));
+            let v3 = _mm256_loadu_ps(b3.as_ptr().add(j));
+            let mut a0 = _mm256_loadu_ps(c0.as_ptr().add(j));
+            a0 = _mm256_fmadd_ps(y00, v0, a0);
+            a0 = _mm256_fmadd_ps(y01, v1, a0);
+            a0 = _mm256_fmadd_ps(y02, v2, a0);
+            a0 = _mm256_fmadd_ps(y03, v3, a0);
+            _mm256_storeu_ps(c0.as_mut_ptr().add(j), a0);
+            let mut a1 = _mm256_loadu_ps(c1.as_ptr().add(j));
+            a1 = _mm256_fmadd_ps(y10, v0, a1);
+            a1 = _mm256_fmadd_ps(y11, v1, a1);
+            a1 = _mm256_fmadd_ps(y12, v2, a1);
+            a1 = _mm256_fmadd_ps(y13, v3, a1);
+            _mm256_storeu_ps(c1.as_mut_ptr().add(j), a1);
+            j += 8;
+        }
+        while j < nn {
+            c0[j] += x0[0] * b0[j] + x0[1] * b1[j] + x0[2] * b2[j] + x0[3] * b3[j];
+            c1[j] += x1[0] * b0[j] + x1[1] * b1[j] + x1[2] * b2[j] + x1[3] * b3[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy8_2_fma(
+        c0: &mut [f32],
+        c1: &mut [f32],
+        b: [&[f32]; 8],
+        x0: [f32; 8],
+        x1: [f32; 8],
+    ) {
+        if x0 == [0.0; 8] && x1 == [0.0; 8] {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let mut j = 0usize;
+        while j + 8 <= nn {
+            let mut a0 = _mm256_loadu_ps(c0.as_ptr().add(j));
+            let mut a1 = _mm256_loadu_ps(c1.as_ptr().add(j));
+            // Eight shared B rows against both accumulators; the
+            // broadcasts are loop-invariant and hoisted by the compiler
+            // (spilled ones reload as cheap 32-byte splats).
+            for t in 0..8 {
+                let v = _mm256_loadu_ps(b[t][..nn].as_ptr().add(j));
+                a0 = _mm256_fmadd_ps(_mm256_set1_ps(x0[t]), v, a0);
+                a1 = _mm256_fmadd_ps(_mm256_set1_ps(x1[t]), v, a1);
+            }
+            _mm256_storeu_ps(c0.as_mut_ptr().add(j), a0);
+            _mm256_storeu_ps(c1.as_mut_ptr().add(j), a1);
+            j += 8;
+        }
+        while j < nn {
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            for t in 0..8 {
+                s0 += x0[t] * b[t][j];
+                s1 += x1[t] * b[t][j];
+            }
+            c0[j] += s0;
+            c1[j] += s1;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy4_1_fma(c0: &mut [f32], b: [&[f32]; 4], x: [f32; 4]) {
+        if x == [0.0; 4] {
+            return;
+        }
+        let nn = c0.len();
+        let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
+        let y0 = _mm256_set1_ps(x[0]);
+        let y1 = _mm256_set1_ps(x[1]);
+        let y2 = _mm256_set1_ps(x[2]);
+        let y3 = _mm256_set1_ps(x[3]);
+        let mut j = 0usize;
+        while j + 8 <= nn {
+            let mut a = _mm256_loadu_ps(c0.as_ptr().add(j));
+            a = _mm256_fmadd_ps(y0, _mm256_loadu_ps(b0.as_ptr().add(j)), a);
+            a = _mm256_fmadd_ps(y1, _mm256_loadu_ps(b1.as_ptr().add(j)), a);
+            a = _mm256_fmadd_ps(y2, _mm256_loadu_ps(b2.as_ptr().add(j)), a);
+            a = _mm256_fmadd_ps(y3, _mm256_loadu_ps(b3.as_ptr().add(j)), a);
+            _mm256_storeu_ps(c0.as_mut_ptr().add(j), a);
+            j += 8;
+        }
+        while j < nn {
+            c0[j] += x[0] * b0[j] + x[1] * b1[j] + x[2] * b2[j] + x[3] * b3[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy1_2_fma(c0: &mut [f32], c1: &mut [f32], b: &[f32], x0: f32, x1: f32) {
+        if x0 == 0.0 && x1 == 0.0 {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let b = &b[..nn];
+        let y0 = _mm256_set1_ps(x0);
+        let y1 = _mm256_set1_ps(x1);
+        let mut j = 0usize;
+        while j + 8 <= nn {
+            let v = _mm256_loadu_ps(b.as_ptr().add(j));
+            let a0 = _mm256_fmadd_ps(y0, v, _mm256_loadu_ps(c0.as_ptr().add(j)));
+            _mm256_storeu_ps(c0.as_mut_ptr().add(j), a0);
+            let a1 = _mm256_fmadd_ps(y1, v, _mm256_loadu_ps(c1.as_ptr().add(j)));
+            _mm256_storeu_ps(c1.as_mut_ptr().add(j), a1);
+            j += 8;
+        }
+        while j < nn {
+            c0[j] += x0 * b[j];
+            c1[j] += x1 * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy1_1_fma(c0: &mut [f32], b: &[f32], x: f32) {
+        if x == 0.0 {
+            return;
+        }
+        let nn = c0.len();
+        let b = &b[..nn];
+        let y = _mm256_set1_ps(x);
+        let mut j = 0usize;
+        while j + 8 <= nn {
+            let acc = _mm256_loadu_ps(c0.as_ptr().add(j));
+            let a = _mm256_fmadd_ps(y, _mm256_loadu_ps(b.as_ptr().add(j)), acc);
+            _mm256_storeu_ps(c0.as_mut_ptr().add(j), a);
+            j += 8;
+        }
+        while j < nn {
+            c0[j] += x * b[j];
+            j += 1;
+        }
+    }
+
+    /// Canonical 8×8 f32 transpose: unpack pairs, shuffle quads, swap
+    /// 128-bit halves. Pure data movement — bit-identical to scalar.
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose8_avx(src: &[f32], ss: usize, dst: &mut [f32], ds: usize) {
+        let r0 = _mm256_loadu_ps(src.as_ptr());
+        let r1 = _mm256_loadu_ps(src.as_ptr().add(ss));
+        let r2 = _mm256_loadu_ps(src.as_ptr().add(2 * ss));
+        let r3 = _mm256_loadu_ps(src.as_ptr().add(3 * ss));
+        let r4 = _mm256_loadu_ps(src.as_ptr().add(4 * ss));
+        let r5 = _mm256_loadu_ps(src.as_ptr().add(5 * ss));
+        let r6 = _mm256_loadu_ps(src.as_ptr().add(6 * ss));
+        let r7 = _mm256_loadu_ps(src.as_ptr().add(7 * ss));
+        let t0 = _mm256_unpacklo_ps(r0, r1);
+        let t1 = _mm256_unpackhi_ps(r0, r1);
+        let t2 = _mm256_unpacklo_ps(r2, r3);
+        let t3 = _mm256_unpackhi_ps(r2, r3);
+        let t4 = _mm256_unpacklo_ps(r4, r5);
+        let t5 = _mm256_unpackhi_ps(r4, r5);
+        let t6 = _mm256_unpacklo_ps(r6, r7);
+        let t7 = _mm256_unpackhi_ps(r6, r7);
+        let s0 = _mm256_shuffle_ps::<0x44>(t0, t2);
+        let s1 = _mm256_shuffle_ps::<0xEE>(t0, t2);
+        let s2 = _mm256_shuffle_ps::<0x44>(t1, t3);
+        let s3 = _mm256_shuffle_ps::<0xEE>(t1, t3);
+        let s4 = _mm256_shuffle_ps::<0x44>(t4, t6);
+        let s5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+        let s6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+        let s7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+        let o0 = _mm256_permute2f128_ps::<0x20>(s0, s4);
+        let o1 = _mm256_permute2f128_ps::<0x20>(s1, s5);
+        let o2 = _mm256_permute2f128_ps::<0x20>(s2, s6);
+        let o3 = _mm256_permute2f128_ps::<0x20>(s3, s7);
+        let o4 = _mm256_permute2f128_ps::<0x31>(s0, s4);
+        let o5 = _mm256_permute2f128_ps::<0x31>(s1, s5);
+        let o6 = _mm256_permute2f128_ps::<0x31>(s2, s6);
+        let o7 = _mm256_permute2f128_ps::<0x31>(s3, s7);
+        _mm256_storeu_ps(dst.as_mut_ptr(), o0);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(ds), o1);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(2 * ds), o2);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(3 * ds), o3);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(4 * ds), o4);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(5 * ds), o5);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(6 * ds), o6);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(7 * ds), o7);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn fixed_accumulate_avx(
+        acc: &mut [i128],
+        delta: &[f32],
+        w: f64,
+        limit: f64,
+        scale: f64,
+    ) {
+        let n = acc.len();
+        assert!(delta.len() >= n);
+        let wv = _mm256_set1_pd(w);
+        let lo = _mm256_set1_pd(-limit);
+        let hi = _mm256_set1_pd(limit);
+        let sc = _mm256_set1_pd(scale);
+        let mut buf = [0.0f64; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // Exact f32→f64 widen and exact-per-op clamp/scale: every
+            // lane rounds exactly like the scalar expression, and the
+            // truncating i128 cast stays scalar — bit-identical reduce.
+            let d = _mm256_cvtps_pd(_mm_loadu_ps(delta.as_ptr().add(i)));
+            let t = _mm256_mul_pd(wv, d);
+            let t = _mm256_min_pd(_mm256_max_pd(t, lo), hi);
+            let t = _mm256_mul_pd(t, sc);
+            _mm256_storeu_pd(buf.as_mut_ptr(), t);
+            acc[i] += buf[0] as i128;
+            acc[i + 1] += buf[1] as i128;
+            acc[i + 2] += buf[2] as i128;
+            acc[i + 3] += buf[3] as i128;
+            i += 4;
+        }
+        while i < n {
+            let term = (w * delta[i] as f64).clamp(-limit, limit);
+            acc[i] += (term * scale) as i128;
+            i += 1;
+        }
+    }
+
+    /// `a·b mod 2⁶⁴` per 64-bit lane (AVX2 has no packed 64-bit
+    /// multiply): `lo(a)·lo(b) + ((lo(a)·hi(b) + hi(a)·lo(b)) << 32)`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mullo_epi64(a: __m256i, b: __m256i) -> __m256i {
+        let lo = _mm256_mul_epu32(a, b);
+        let ah = _mm256_srli_epi64::<32>(a);
+        let bh = _mm256_srli_epi64::<32>(b);
+        let cross = _mm256_add_epi64(_mm256_mul_epu32(ah, b), _mm256_mul_epu32(a, bh));
+        _mm256_add_epi64(lo, _mm256_slli_epi64::<32>(cross))
+    }
+
+    /// The SplitMix64 output mix on four lanes at once.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn splitmix4(z: __m256i) -> __m256i {
+        let m1 = _mm256_set1_epi64x(0xBF58_476D_1CE4_E5B9u64 as i64);
+        let m2 = _mm256_set1_epi64x(0x94D0_49BB_1331_11EBu64 as i64);
+        let z = mullo_epi64(_mm256_xor_si256(z, _mm256_srli_epi64::<30>(z)), m1);
+        let z = mullo_epi64(_mm256_xor_si256(z, _mm256_srli_epi64::<27>(z)), m2);
+        _mm256_xor_si256(z, _mm256_srli_epi64::<31>(z))
+    }
+
+    /// Exact u64→f64 for values < 2⁵³ (after the `>>11`): convert the
+    /// low/high 32-bit halves via the 2⁵² mantissa-injection trick and
+    /// recombine — both steps exact, so this equals the scalar
+    /// `as f64` conversion bit-for-bit.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn u53_to_f64(v: __m256i) -> __m256d {
+        let magic = _mm256_set1_epi64x(0x4330_0000_0000_0000u64 as i64); // 2^52 as bits
+        let two52 = _mm256_set1_pd((1u64 << 52) as f64);
+        let lo32 = _mm256_and_si256(v, _mm256_set1_epi64x(0xFFFF_FFFF));
+        let hi = _mm256_srli_epi64::<32>(v);
+        let lof = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(lo32, magic)), two52);
+        let hif = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(hi, magic)), two52);
+        _mm256_add_pd(_mm256_mul_pd(hif, _mm256_set1_pd((1u64 << 32) as f64)), lof)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn synth_noise_avx(out: &mut [f32], noise: f32, state: u64) {
+        let n = out.len();
+        let g = SPLITMIX64_GAMMA;
+        // Lane l of `odd`/`even` holds the counter of draw 2(k+l)+1 /
+        // 2(k+l)+2 for the current gaussian block k..k+4.
+        let mut odd = _mm256_set_epi64x(
+            state.wrapping_add(g.wrapping_mul(7)) as i64,
+            state.wrapping_add(g.wrapping_mul(5)) as i64,
+            state.wrapping_add(g.wrapping_mul(3)) as i64,
+            state.wrapping_add(g) as i64,
+        );
+        let mut even = _mm256_set_epi64x(
+            state.wrapping_add(g.wrapping_mul(8)) as i64,
+            state.wrapping_add(g.wrapping_mul(6)) as i64,
+            state.wrapping_add(g.wrapping_mul(4)) as i64,
+            state.wrapping_add(g.wrapping_mul(2)) as i64,
+        );
+        let step = _mm256_set1_epi64x(g.wrapping_mul(8) as i64);
+        // x·2⁻⁵³ is exact for integer x < 2⁵³, hence equal to the
+        // scalar division by 2⁵³ (also exact).
+        let inv53 = _mm256_set1_pd(1.0 / (1u64 << 53) as f64);
+        let eps = _mm256_set1_pd(1e-12);
+        let neg2 = _mm256_set1_pd(-2.0);
+        let two_pi = _mm256_set1_pd(2.0 * std::f64::consts::PI);
+        let noise4 = _mm_set1_ps(noise);
+        let clamp_lo = _mm_set1_ps(-0.5);
+        let clamp_hi = _mm_set1_ps(1.5);
+        let half = _mm_set1_ps(0.5);
+        let mut u1buf = [0.0f64; 4];
+        let mut u2buf = [0.0f64; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d1 = splitmix4(odd);
+            let d2 = splitmix4(even);
+            odd = _mm256_add_epi64(odd, step);
+            even = _mm256_add_epi64(even, step);
+            let u1 = _mm256_max_pd(
+                _mm256_mul_pd(u53_to_f64(_mm256_srli_epi64::<11>(d1)), inv53),
+                eps,
+            );
+            let u2 = _mm256_mul_pd(u53_to_f64(_mm256_srli_epi64::<11>(d2)), inv53);
+            // ln/cos stay per-lane calls into the same libm the scalar
+            // path uses — the price of bit-parity; everything around
+            // them (sqrt, muls, casts) is exactly rounded SIMD.
+            _mm256_storeu_pd(u1buf.as_mut_ptr(), u1);
+            for v in &mut u1buf {
+                *v = v.ln();
+            }
+            let r = _mm256_sqrt_pd(_mm256_mul_pd(neg2, _mm256_loadu_pd(u1buf.as_ptr())));
+            _mm256_storeu_pd(u2buf.as_mut_ptr(), _mm256_mul_pd(two_pi, u2));
+            for v in &mut u2buf {
+                *v = v.cos();
+            }
+            let gauss = _mm256_cvtpd_ps(_mm256_mul_pd(r, _mm256_loadu_pd(u2buf.as_ptr())));
+            let o = _mm_loadu_ps(out.as_ptr().add(i));
+            let t = _mm_add_ps(o, _mm_mul_ps(noise4, gauss));
+            let t = _mm_sub_ps(_mm_min_ps(_mm_max_ps(t, clamp_lo), clamp_hi), half);
+            _mm_storeu_ps(out.as_mut_ptr().add(i), t);
+            i += 4;
+        }
+        while i < n {
+            out[i] = synth_one(out[i], noise, gauss_at(state, i as u64));
+            i += 1;
+        }
+    }
+}
+
+// ====================================================== NEON kernels
+
+#[cfg(target_arch = "aarch64")]
+mod aarch64 {
+    use std::arch::aarch64::*;
+
+    use super::{scalar, Kernels};
+
+    /// NEON is baseline on aarch64, so these wrappers are always sound
+    /// there. Synthesis and the 8×8 transpose reuse the scalar fns: the
+    /// SplitMix64 mix needs packed 64-bit multiplies NEON lacks, and
+    /// the transpose is not hot enough to justify a zip network.
+    pub(super) static NEON: Kernels = Kernels {
+        name: "neon",
+        axpy4_2,
+        axpy4_1,
+        axpy1_2,
+        axpy1_1,
+        axpy8_2,
+        transpose8: scalar::transpose8,
+        fixed_accumulate,
+        synth_noise: scalar::synth_noise,
+    };
+
+    fn axpy4_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 4], x0: [f32; 4], x1: [f32; 4]) {
+        // SAFETY: NEON is a baseline aarch64 target feature.
+        unsafe { axpy4_2_neon(c0, c1, b, x0, x1) }
+    }
+
+    fn axpy4_1(c0: &mut [f32], b: [&[f32]; 4], x: [f32; 4]) {
+        unsafe { axpy4_1_neon(c0, b, x) }
+    }
+
+    fn axpy1_2(c0: &mut [f32], c1: &mut [f32], b0: &[f32], x0: f32, x1: f32) {
+        unsafe { axpy1_2_neon(c0, c1, b0, x0, x1) }
+    }
+
+    fn axpy1_1(c0: &mut [f32], b0: &[f32], x: f32) {
+        unsafe { axpy1_1_neon(c0, b0, x) }
+    }
+
+    fn axpy8_2(c0: &mut [f32], c1: &mut [f32], b: [&[f32]; 8], x0: [f32; 8], x1: [f32; 8]) {
+        unsafe { axpy8_2_neon(c0, c1, b, x0, x1) }
+    }
+
+    fn fixed_accumulate(acc: &mut [i128], delta: &[f32], w: f64, limit: f64, scale: f64) {
+        unsafe { fixed_accumulate_neon(acc, delta, w, limit, scale) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy4_2_neon(
+        c0: &mut [f32],
+        c1: &mut [f32],
+        b: [&[f32]; 4],
+        x0: [f32; 4],
+        x1: [f32; 4],
+    ) {
+        if x0 == [0.0; 4] && x1 == [0.0; 4] {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
+        let mut j = 0usize;
+        while j + 4 <= nn {
+            let v0 = vld1q_f32(b0.as_ptr().add(j));
+            let v1 = vld1q_f32(b1.as_ptr().add(j));
+            let v2 = vld1q_f32(b2.as_ptr().add(j));
+            let v3 = vld1q_f32(b3.as_ptr().add(j));
+            let mut a0 = vld1q_f32(c0.as_ptr().add(j));
+            a0 = vfmaq_n_f32(a0, v0, x0[0]);
+            a0 = vfmaq_n_f32(a0, v1, x0[1]);
+            a0 = vfmaq_n_f32(a0, v2, x0[2]);
+            a0 = vfmaq_n_f32(a0, v3, x0[3]);
+            vst1q_f32(c0.as_mut_ptr().add(j), a0);
+            let mut a1 = vld1q_f32(c1.as_ptr().add(j));
+            a1 = vfmaq_n_f32(a1, v0, x1[0]);
+            a1 = vfmaq_n_f32(a1, v1, x1[1]);
+            a1 = vfmaq_n_f32(a1, v2, x1[2]);
+            a1 = vfmaq_n_f32(a1, v3, x1[3]);
+            vst1q_f32(c1.as_mut_ptr().add(j), a1);
+            j += 4;
+        }
+        while j < nn {
+            c0[j] += x0[0] * b0[j] + x0[1] * b1[j] + x0[2] * b2[j] + x0[3] * b3[j];
+            c1[j] += x1[0] * b0[j] + x1[1] * b1[j] + x1[2] * b2[j] + x1[3] * b3[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy8_2_neon(
+        c0: &mut [f32],
+        c1: &mut [f32],
+        b: [&[f32]; 8],
+        x0: [f32; 8],
+        x1: [f32; 8],
+    ) {
+        if x0 == [0.0; 8] && x1 == [0.0; 8] {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let mut j = 0usize;
+        while j + 4 <= nn {
+            let mut a0 = vld1q_f32(c0.as_ptr().add(j));
+            let mut a1 = vld1q_f32(c1.as_ptr().add(j));
+            for t in 0..8 {
+                let v = vld1q_f32(b[t][..nn].as_ptr().add(j));
+                a0 = vfmaq_n_f32(a0, v, x0[t]);
+                a1 = vfmaq_n_f32(a1, v, x1[t]);
+            }
+            vst1q_f32(c0.as_mut_ptr().add(j), a0);
+            vst1q_f32(c1.as_mut_ptr().add(j), a1);
+            j += 4;
+        }
+        while j < nn {
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            for t in 0..8 {
+                s0 += x0[t] * b[t][j];
+                s1 += x1[t] * b[t][j];
+            }
+            c0[j] += s0;
+            c1[j] += s1;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy4_1_neon(c0: &mut [f32], b: [&[f32]; 4], x: [f32; 4]) {
+        if x == [0.0; 4] {
+            return;
+        }
+        let nn = c0.len();
+        let (b0, b1, b2, b3) = (&b[0][..nn], &b[1][..nn], &b[2][..nn], &b[3][..nn]);
+        let mut j = 0usize;
+        while j + 4 <= nn {
+            let mut a = vld1q_f32(c0.as_ptr().add(j));
+            a = vfmaq_n_f32(a, vld1q_f32(b0.as_ptr().add(j)), x[0]);
+            a = vfmaq_n_f32(a, vld1q_f32(b1.as_ptr().add(j)), x[1]);
+            a = vfmaq_n_f32(a, vld1q_f32(b2.as_ptr().add(j)), x[2]);
+            a = vfmaq_n_f32(a, vld1q_f32(b3.as_ptr().add(j)), x[3]);
+            vst1q_f32(c0.as_mut_ptr().add(j), a);
+            j += 4;
+        }
+        while j < nn {
+            c0[j] += x[0] * b0[j] + x[1] * b1[j] + x[2] * b2[j] + x[3] * b3[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy1_2_neon(c0: &mut [f32], c1: &mut [f32], b: &[f32], x0: f32, x1: f32) {
+        if x0 == 0.0 && x1 == 0.0 {
+            return;
+        }
+        let nn = c0.len();
+        let c1 = &mut c1[..nn];
+        let b = &b[..nn];
+        let mut j = 0usize;
+        while j + 4 <= nn {
+            let v = vld1q_f32(b.as_ptr().add(j));
+            vst1q_f32(c0.as_mut_ptr().add(j), vfmaq_n_f32(vld1q_f32(c0.as_ptr().add(j)), v, x0));
+            vst1q_f32(c1.as_mut_ptr().add(j), vfmaq_n_f32(vld1q_f32(c1.as_ptr().add(j)), v, x1));
+            j += 4;
+        }
+        while j < nn {
+            c0[j] += x0 * b[j];
+            c1[j] += x1 * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy1_1_neon(c0: &mut [f32], b: &[f32], x: f32) {
+        if x == 0.0 {
+            return;
+        }
+        let nn = c0.len();
+        let b = &b[..nn];
+        let mut j = 0usize;
+        while j + 4 <= nn {
+            let a = vfmaq_n_f32(vld1q_f32(c0.as_ptr().add(j)), vld1q_f32(b.as_ptr().add(j)), x);
+            vst1q_f32(c0.as_mut_ptr().add(j), a);
+            j += 4;
+        }
+        while j < nn {
+            c0[j] += x * b[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn fixed_accumulate_neon(
+        acc: &mut [i128],
+        delta: &[f32],
+        w: f64,
+        limit: f64,
+        scale: f64,
+    ) {
+        let n = acc.len();
+        assert!(delta.len() >= n);
+        let wv = vdupq_n_f64(w);
+        let lo = vdupq_n_f64(-limit);
+        let hi = vdupq_n_f64(limit);
+        let sc = vdupq_n_f64(scale);
+        let mut buf = [0.0f64; 2];
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let d = vcvt_f64_f32(vld1_f32(delta.as_ptr().add(i)));
+            let t = vmulq_f64(wv, d);
+            let t = vminq_f64(vmaxq_f64(t, lo), hi);
+            let t = vmulq_f64(t, sc);
+            vst1q_f64(buf.as_mut_ptr(), t);
+            acc[i] += buf[0] as i128;
+            acc[i + 1] += buf[1] as i128;
+            i += 2;
+        }
+        while i < n {
+            let term = (w * delta[i] as f64).clamp(-limit, limit);
+            acc[i] += (term * scale) as i128;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn resolve_honours_requests_and_falls_back_safely() {
+        use SimdLevel::*;
+        assert_eq!(resolve(None, Avx2), (Avx2, None));
+        assert_eq!(resolve(Some("auto"), Neon), (Neon, None));
+        assert_eq!(resolve(Some("1"), Scalar), (Scalar, None));
+        assert_eq!(resolve(Some("0"), Avx2), (Scalar, None));
+        assert_eq!(resolve(Some("scalar"), Avx2), (Scalar, None));
+        assert_eq!(resolve(Some("AVX2"), Avx2), (Avx2, None));
+        assert_eq!(resolve(Some(" neon "), Neon), (Neon, None));
+        // An ISA the CPU lacks degrades to scalar with a warning, never
+        // an unsupported table.
+        let (l, warn) = resolve(Some("avx2"), Scalar);
+        assert_eq!(l, SimdLevel::Scalar);
+        assert!(warn.unwrap().contains("does not support"));
+        let (l, warn) = resolve(Some("neon"), Avx2);
+        assert_eq!(l, SimdLevel::Scalar);
+        assert!(warn.is_some());
+        // Unknown values keep the detected level.
+        let (l, warn) = resolve(Some("sse9"), Avx2);
+        assert_eq!(l, SimdLevel::Avx2);
+        assert!(warn.unwrap().contains("unknown"));
+    }
+
+    #[test]
+    fn dispatch_is_always_available() {
+        let levels = available_levels();
+        assert!(levels.contains(&SimdLevel::Scalar));
+        assert!(levels.contains(&level()), "active level must be runnable");
+        assert!(kernels_for(level()).is_some());
+        // kernels() never fails, whatever the env said.
+        let _ = kernels();
+    }
+
+    #[test]
+    fn scalar_synth_noise_matches_sequential_rng_stream() {
+        // The counter-mode pin: the kernel must reproduce exactly what
+        // the old per-pixel loop drew from a sequential generator.
+        let mut r = Rng::new(0x5eed_cafe);
+        r.next_u64(); // mid-stream state, like after jitter draws
+        let state = r.state();
+        let base: Vec<f32> = (0..37).map(|i| (i % 11) as f32 * 0.09).collect();
+        let mut got = base.clone();
+        (SCALAR.synth_noise)(&mut got, 0.15, state);
+        let mut rr = Rng::new(state);
+        let want: Vec<f32> = base
+            .iter()
+            .map(|&t| (t + 0.15 * rr.next_gaussian()).clamp(-0.5, 1.5) - 0.5)
+            .collect();
+        assert!(
+            got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits()),
+            "scalar synth kernel diverged from the sequential RNG stream"
+        );
+    }
+
+    #[test]
+    fn every_available_dispatch_is_bit_identical_on_exact_kernels() {
+        let mut rng = Rng::new(0x51D0);
+        for lvl in available_levels() {
+            let k = kernels_for(lvl).unwrap();
+            for n in [0usize, 1, 3, 4, 5, 16, 63, 1024] {
+                // synth_noise: bit-identical, including clamp edges.
+                let base = rand_vec(&mut rng, n);
+                let state = rng.next_u64();
+                for noise in [0.0f32, 0.15, 3.0] {
+                    let mut want = base.clone();
+                    (SCALAR.synth_noise)(&mut want, noise, state);
+                    let mut got = base.clone();
+                    (k.synth_noise)(&mut got, noise, state);
+                    let same = got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits());
+                    assert!(same, "{} synth_noise n={n} noise={noise}", k.name);
+                }
+                // fixed_accumulate: exact i128 equality, clamp hit by
+                // the huge-weight case.
+                let delta = rand_vec(&mut rng, n);
+                for w in [1.0f64, 37.0, 1e18] {
+                    let limit = (1u64 << 60) as f64;
+                    let scale = (1u64 << 40) as f64;
+                    let mut want = vec![3i128; n];
+                    (SCALAR.fixed_accumulate)(&mut want, &delta, w, limit, scale);
+                    let mut got = vec![3i128; n];
+                    (k.fixed_accumulate)(&mut got, &delta, w, limit, scale);
+                    assert_eq!(want, got, "{} fixed_accumulate n={n} w={w}", k.name);
+                }
+            }
+            // transpose8: pure data movement, exact.
+            let src = rand_vec(&mut rng, 8 * 11);
+            let mut want = vec![0.0f32; 8 * 13];
+            scalar::transpose8(&src, 11, &mut want, 13);
+            let mut got = vec![0.0f32; 8 * 13];
+            (k.transpose8)(&src, 11, &mut got, 13);
+            assert_eq!(want, got, "{} transpose8", k.name);
+        }
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], label: &str) {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-5 * w.abs().max(1.0);
+            assert!((g - w).abs() <= tol, "{label}[{i}]: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn every_available_dispatch_matches_scalar_axpy_within_tolerance() {
+        let mut rng = Rng::new(0xA4B2);
+        for lvl in available_levels() {
+            let k = kernels_for(lvl).unwrap();
+            for nn in [1usize, 4, 7, 8, 9, 16, 129, 512] {
+                let rows8: Vec<Vec<f32>> = (0..8).map(|_| rand_vec(&mut rng, nn)).collect();
+                let b8: [&[f32]; 8] = std::array::from_fn(|i| rows8[i].as_slice());
+                let b4: [&[f32]; 4] = std::array::from_fn(|i| rows8[i].as_slice());
+                let x0: [f32; 8] = std::array::from_fn(|i| (i as f32 - 3.5) * 0.3);
+                let x1: [f32; 8] = std::array::from_fn(|i| (4.0 - i as f32) * 0.2);
+                let x04: [f32; 4] = x0[..4].try_into().unwrap();
+                let x14: [f32; 4] = x1[..4].try_into().unwrap();
+                let base0 = rand_vec(&mut rng, nn);
+                let base1 = rand_vec(&mut rng, nn);
+
+                let run2 = |f: &dyn Fn(&mut [f32], &mut [f32])| {
+                    let mut c0 = base0.clone();
+                    let mut c1 = base1.clone();
+                    f(&mut c0, &mut c1);
+                    (c0, c1)
+                };
+                let (w0, w1) = run2(&|c0, c1| (SCALAR.axpy4_2)(c0, c1, b4, x04, x14));
+                let (g0, g1) = run2(&|c0, c1| (k.axpy4_2)(c0, c1, b4, x04, x14));
+                assert_close(&g0, &w0, &format!("{} axpy4_2 nn={nn} c0", k.name));
+                assert_close(&g1, &w1, &format!("{} axpy4_2 nn={nn} c1", k.name));
+
+                let (w0, w1) = run2(&|c0, c1| (SCALAR.axpy8_2)(c0, c1, b8, x0, x1));
+                let (g0, g1) = run2(&|c0, c1| (k.axpy8_2)(c0, c1, b8, x0, x1));
+                assert_close(&g0, &w0, &format!("{} axpy8_2 nn={nn} c0", k.name));
+                assert_close(&g1, &w1, &format!("{} axpy8_2 nn={nn} c1", k.name));
+
+                let (w0, w1) = run2(&|c0, c1| (SCALAR.axpy1_2)(c0, c1, &rows8[0], 0.7, -1.3));
+                let (g0, g1) = run2(&|c0, c1| (k.axpy1_2)(c0, c1, &rows8[0], 0.7, -1.3));
+                assert_close(&g0, &w0, &format!("{} axpy1_2 nn={nn} c0", k.name));
+                assert_close(&g1, &w1, &format!("{} axpy1_2 nn={nn} c1", k.name));
+
+                let mut w = base0.clone();
+                (SCALAR.axpy4_1)(&mut w, b4, x04);
+                let mut g = base0.clone();
+                (k.axpy4_1)(&mut g, b4, x04);
+                assert_close(&g, &w, &format!("{} axpy4_1 nn={nn}", k.name));
+
+                let mut w = base0.clone();
+                (SCALAR.axpy1_1)(&mut w, &rows8[0], -0.4);
+                let mut g = base0.clone();
+                (k.axpy1_1)(&mut g, &rows8[0], -0.4);
+                assert_close(&g, &w, &format!("{} axpy1_1 nn={nn}", k.name));
+            }
+            // Zero multipliers skip — the accumulators must be
+            // untouched on every path.
+            let b0 = rand_vec(&mut rng, 16);
+            let b: [&[f32]; 4] = [&b0, &b0, &b0, &b0];
+            let before = rand_vec(&mut rng, 16);
+            let mut c0 = before.clone();
+            let mut c1 = before.clone();
+            (k.axpy4_2)(&mut c0, &mut c1, b, [0.0; 4], [0.0; 4]);
+            assert_eq!(c0, before, "{} zero-skip c0", k.name);
+            assert_eq!(c1, before, "{} zero-skip c1", k.name);
+        }
+    }
+
+    #[test]
+    fn fixed_accumulate_ignores_delta_tail_beyond_acc() {
+        // The striped reduce hands each stripe a delta slice that may
+        // be longer than the stripe; only acc.len() elements count.
+        for lvl in available_levels() {
+            let k = kernels_for(lvl).unwrap();
+            let delta = [0.5f32; 10];
+            let mut acc = vec![0i128; 6];
+            (k.fixed_accumulate)(&mut acc, &delta, 2.0, 1e18, 4.0);
+            assert!(acc.iter().all(|&a| a == 4), "{}: {acc:?}", k.name);
+        }
+    }
+}

@@ -6,6 +6,23 @@
 //! 64-bit state, and `split()` derives independent streams, which is how
 //! per-agent / per-sample generators are made without sharing state.
 
+/// The SplitMix64 increment ("golden gamma"). One `next_u64` adds this
+/// to the state and mixes, so the generator is *counter-based*: the
+/// j-th upcoming draw of a generator whose state is `s` is
+/// `splitmix64_mix(s + j·SPLITMIX64_GAMMA)` — independent lanes can
+/// compute arbitrary stream positions without sequencing through the
+/// state (see `runtime::simd`).
+pub const SPLITMIX64_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The SplitMix64 output mix (finalizer). Pure function of the counter;
+/// [`Rng::next_u64`] is `splitmix64_mix(state += GAMMA)`.
+#[inline]
+pub fn splitmix64_mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64 PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -18,12 +35,19 @@ impl Rng {
         Self { state: seed }
     }
 
+    /// Raw generator state. `Rng::new(r.state())` continues the stream:
+    /// it is the counter base for counter-mode draws (the j-th upcoming
+    /// `next_u64` is `splitmix64_mix(state + j·SPLITMIX64_GAMMA)`).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
     /// Derive an independent stream keyed by `salt` (e.g. an agent id or
     /// a sample index) without advancing `self`.
     pub fn split(&self, salt: u64) -> Rng {
         let mut r = Rng::new(
             self.state
-                .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(salt ^ 0xA5A5_5A5A)),
+                .wrapping_add(SPLITMIX64_GAMMA.wrapping_mul(salt ^ 0xA5A5_5A5A)),
         );
         r.next_u64(); // decorrelate
         Rng::new(r.next_u64())
@@ -31,11 +55,8 @@ impl Rng {
 
     /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(SPLITMIX64_GAMMA);
+        splitmix64_mix(self.state)
     }
 
     /// Uniform in `[0, n)`. Uses rejection sampling to avoid modulo bias.
@@ -151,6 +172,19 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The counter-mode identity the SIMD synthesis path relies on: the
+    /// j-th sequential draw equals the mix of `state + j·GAMMA`.
+    #[test]
+    fn counter_mode_matches_sequential_draws() {
+        let mut r = Rng::new(0xABCD_EF01);
+        r.next_u64(); // start mid-stream
+        let s = r.state();
+        for j in 1..=64u64 {
+            let counter = s.wrapping_add(SPLITMIX64_GAMMA.wrapping_mul(j));
+            assert_eq!(r.next_u64(), splitmix64_mix(counter), "draw {j}");
+        }
+    }
 
     #[test]
     fn deterministic() {

@@ -489,6 +489,153 @@ fn prop_streaming_accumulator_is_order_invariant() {
     });
 }
 
+// --------------------------------------------------------- SIMD dispatch
+//
+// Parity of every kernel implementation this machine can run against
+// the scalar reference, over randomized shapes. The whole suite also
+// runs under FERRISFL_SIMD={scalar,avx2} CI matrix legs, which forces
+// each dispatch through every *call site*; these properties force each
+// *implementation* inside one process via `kernels_for`.
+
+/// The streaming reduce and the synthesis noise pass are bit-identical
+/// on every available dispatch level — the contracts that keep the
+/// order-invariant reduce and `SynthCache` contents ISA-independent.
+#[test]
+fn prop_simd_exact_kernels_are_bit_identical_across_dispatch() {
+    use ferrisfl::runtime::simd::{self, SimdLevel};
+    let scalar = simd::kernels_for(SimdLevel::Scalar).unwrap();
+    let levels = simd::available_levels();
+    for_all("simd_exact_parity", |rng| {
+        let n = rng.next_below(600) as usize;
+        let base: Vec<f32> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let state = rng.next_u64();
+        let noise = rng.next_f32() * 0.5;
+        let w = 1.0 + rng.next_below(1_000_000) as f64;
+        let limit = (1u64 << 60) as f64;
+        let scale = (1u64 << 40) as f64;
+        let mut synth_want = base.clone();
+        (scalar.synth_noise)(&mut synth_want, noise, state);
+        let mut acc_want = vec![0i128; n];
+        (scalar.fixed_accumulate)(&mut acc_want, &base, w, limit, scale);
+        for &lvl in &levels {
+            let k = simd::kernels_for(lvl).unwrap();
+            let mut synth_got = base.clone();
+            (k.synth_noise)(&mut synth_got, noise, state);
+            let same = synth_got
+                .iter()
+                .zip(&synth_want)
+                .all(|(g, want)| g.to_bits() == want.to_bits());
+            assert!(same, "{}: synth_noise diverged at n={n}", k.name);
+            let mut acc_got = vec![0i128; n];
+            (k.fixed_accumulate)(&mut acc_got, &base, w, limit, scale);
+            assert!(acc_got == acc_want, "{}: fixed_accumulate diverged at n={n}", k.name);
+        }
+    });
+}
+
+/// The axpy micro-kernels (FMA on SIMD paths) agree with scalar within
+/// the 1e-5 GEMM contract over randomized panel widths and multipliers.
+#[test]
+fn prop_simd_axpy_kernels_match_scalar_within_tolerance() {
+    use ferrisfl::runtime::simd::{self, SimdLevel};
+    let scalar = simd::kernels_for(SimdLevel::Scalar).unwrap();
+    let levels = simd::available_levels();
+    for_all("simd_axpy_parity", |rng| {
+        let nn = 1 + rng.next_below(520) as usize;
+        let rows: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..nn).map(|_| rng.next_gaussian()).collect()).collect();
+        let b8: [&[f32]; 8] = std::array::from_fn(|i| rows[i].as_slice());
+        let b4: [&[f32]; 4] = std::array::from_fn(|i| rows[i].as_slice());
+        // Mix zeros in so the zero-skip paths are also exercised.
+        let mut x0 = [0.0f32; 8];
+        let mut x1 = [0.0f32; 8];
+        for t in 0..8 {
+            if rng.next_below(3) != 0 {
+                x0[t] = rng.next_gaussian();
+            }
+            if rng.next_below(3) != 0 {
+                x1[t] = rng.next_gaussian();
+            }
+        }
+        let x04: [f32; 4] = x0[..4].try_into().unwrap();
+        let x14: [f32; 4] = x1[..4].try_into().unwrap();
+        let base0: Vec<f32> = (0..nn).map(|_| rng.next_gaussian()).collect();
+        let base1: Vec<f32> = (0..nn).map(|_| rng.next_gaussian()).collect();
+        let check = |got: &[f32], want: &[f32], label: &str| {
+            for (i, (g, w)) in got.iter().zip(want).enumerate() {
+                let tol = 1e-5 * w.abs().max(1.0);
+                assert!((g - w).abs() <= tol, "{label}[{i}]: {g} vs {w}");
+            }
+        };
+        for &lvl in &levels {
+            let k = simd::kernels_for(lvl).unwrap();
+            let (mut w0, mut w1) = (base0.clone(), base1.clone());
+            (scalar.axpy8_2)(&mut w0, &mut w1, b8, x0, x1);
+            let (mut g0, mut g1) = (base0.clone(), base1.clone());
+            (k.axpy8_2)(&mut g0, &mut g1, b8, x0, x1);
+            check(&g0, &w0, &format!("{} axpy8_2 nn={nn} c0", k.name));
+            check(&g1, &w1, &format!("{} axpy8_2 nn={nn} c1", k.name));
+
+            let (mut w0, mut w1) = (base0.clone(), base1.clone());
+            (scalar.axpy4_2)(&mut w0, &mut w1, b4, x04, x14);
+            let (mut g0, mut g1) = (base0.clone(), base1.clone());
+            (k.axpy4_2)(&mut g0, &mut g1, b4, x04, x14);
+            check(&g0, &w0, &format!("{} axpy4_2 nn={nn} c0", k.name));
+            check(&g1, &w1, &format!("{} axpy4_2 nn={nn} c1", k.name));
+
+            let mut w = base0.clone();
+            (scalar.axpy4_1)(&mut w, b4, x04);
+            let mut g = base0.clone();
+            (k.axpy4_1)(&mut g, b4, x04);
+            check(&g, &w, &format!("{} axpy4_1 nn={nn}", k.name));
+
+            let (mut w0, mut w1) = (base0.clone(), base1.clone());
+            (scalar.axpy1_2)(&mut w0, &mut w1, &rows[0], x0[0], x1[0]);
+            let (mut g0, mut g1) = (base0.clone(), base1.clone());
+            (k.axpy1_2)(&mut g0, &mut g1, &rows[0], x0[0], x1[0]);
+            check(&g0, &w0, &format!("{} axpy1_2 nn={nn} c0", k.name));
+            check(&g1, &w1, &format!("{} axpy1_2 nn={nn} c1", k.name));
+
+            let mut w = base0.clone();
+            (scalar.axpy1_1)(&mut w, &rows[0], x0[1]);
+            let mut g = base0.clone();
+            (k.axpy1_1)(&mut g, &rows[0], x0[1]);
+            check(&g, &w, &format!("{} axpy1_1 nn={nn}", k.name));
+
+            // transpose8 is pure data movement: exact.
+            let src: Vec<f32> = (0..8 * 9).map(|_| rng.next_gaussian()).collect();
+            let mut tw = vec![0.0f32; 8 * 10];
+            (scalar.transpose8)(&src, 9, &mut tw, 10);
+            let mut tg = vec![0.0f32; 8 * 10];
+            (k.transpose8)(&src, 9, &mut tg, 10);
+            assert!(tw == tg, "{}: transpose8 diverged", k.name);
+        }
+    });
+}
+
+/// Public-API synthesis under the *active* dispatch stays deterministic
+/// and in range for arbitrary indices. (The cross-ISA bit-parity of
+/// synthesis is pinned elsewhere: kernel-level in `runtime::simd`'s
+/// units and `prop_simd_exact_kernels_are_bit_identical_across_dispatch`
+/// above, and end-to-end by the datasets test
+/// `restructured_synthesis_matches_pixelwise_reference`, which compares
+/// the dispatched `synthesize_into` against a sequential-RNG reference
+/// loop — under the CI avx2 leg that *is* the SIMD-vs-scalar pin.)
+#[test]
+fn prop_synthesis_is_deterministic_and_bounded() {
+    use ferrisfl::datasets::Dataset;
+    use ferrisfl::runtime::Manifest;
+    let m = Manifest::native();
+    let ds = Dataset::load(&m, "synth-mnist", 11).unwrap();
+    for_all("synthesis_deterministic", |rng| {
+        let idx = rng.next_below(60_000) as usize;
+        let a = ds.batch(ferrisfl::datasets::Split::Train, &[idx]);
+        let b = ds.batch(ferrisfl::datasets::Split::Train, &[idx]);
+        assert!(a.x == b.x && a.y == b.y, "index {idx} not deterministic");
+        assert!(a.x.iter().all(|v| v.is_finite() && (-1.0..=1.0).contains(v)));
+    });
+}
+
 /// Streamed FedAvg (accumulator + apply) agrees with the host reference
 /// within 1e-5 over randomized shapes, weights, and magnitudes.
 #[test]

@@ -15,8 +15,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::sync::Arc;
 
+use ferrisfl::aggregators::StreamingAccumulator;
 use ferrisfl::datasets::{BatchBuf, Dataset, Split};
-use ferrisfl::runtime::{snapshot, AdamState, Manifest, ModelExecutor, NativeExecutor};
+use ferrisfl::runtime::{simd, snapshot, AdamState, Manifest, ModelExecutor, NativeExecutor};
 
 thread_local! {
     static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
@@ -56,6 +57,12 @@ fn allocs() -> u64 {
 
 #[test]
 fn steady_state_step_path_allocates_nothing() {
+    // Resolve the SIMD dispatch up front (the one-time env read +
+    // OnceLock init may allocate); the counted steps below then run
+    // through whichever kernel table is active — the zero-alloc
+    // contract holds on the scalar, AVX2, and NEON paths alike (the CI
+    // matrix forces each via FERRISFL_SIMD).
+    let _ = simd::kernels();
     let m = Arc::new(Manifest::native());
     let ds = Dataset::load(&m, "synth-mnist", 1).unwrap();
     let rt = NativeExecutor::load(&m, "mlp-m", "synth-mnist", "sgd", "full").unwrap();
@@ -130,4 +137,41 @@ fn steady_state_batch_gather_allocates_nothing() {
         assert_eq!(view.len(), 32);
     }
     assert_eq!(allocs() - before, 0, "warm batch gathering must not allocate");
+}
+
+/// The SIMD synthesis kernel works lane-by-lane out of registers and
+/// the stack; a cold synthesis pass into pre-sized storage must not
+/// touch the heap regardless of the active dispatch.
+#[test]
+fn cold_synthesis_pass_allocates_nothing() {
+    let _ = simd::kernels();
+    let m = Arc::new(Manifest::native());
+    let ds = Dataset::load(&m, "synth-cifar10", 3).unwrap();
+    let ex = ds.info.example_len();
+    let mut out = vec![0.0f32; ex];
+    ds.synthesize_into(Split::Train, 0, &mut out);
+    let before = allocs();
+    for i in 1..64usize {
+        ds.synthesize_into(Split::Train, i, &mut out);
+    }
+    assert_eq!(allocs() - before, 0, "synthesize_into must not allocate");
+}
+
+/// The streaming reduce's push path (finite-scan + the dispatched
+/// fixed-point quantise-accumulate over the lock stripes) is in-place:
+/// once the accumulator exists, pushes and resets stay heap-free.
+#[test]
+fn steady_state_streaming_push_allocates_nothing() {
+    let _ = simd::kernels();
+    let p = 40_000usize;
+    let acc = StreamingAccumulator::new(p);
+    let delta = vec![0.01f32; p];
+    acc.push(&delta, 3).unwrap(); // warm
+    let before = allocs();
+    for _ in 0..8 {
+        acc.push(&delta, 5).unwrap();
+    }
+    acc.reset();
+    acc.push(&delta, 2).unwrap();
+    assert_eq!(allocs() - before, 0, "warm streaming pushes must not allocate");
 }
