@@ -41,6 +41,7 @@ fn main() -> Result<()> {
         lr: 0.05,
         seed: 42,
         workers: 4,
+        fuse: false,
         eval_every: 1,
         max_local_steps: 0,
         log_dir: String::new(),

@@ -40,6 +40,7 @@ fn params_for(workers: usize, rounds: usize, manifest: &Manifest) -> FlParams {
         lr: 0.05,
         seed: 42,
         workers,
+        fuse: false,
         eval_every: 1,
         max_local_steps: 0,
         log_dir: String::new(),
@@ -77,6 +78,30 @@ fn main() {
         rows.push((format!("workers_{workers}"), s.to_json(Some(1.0))));
     }
 
+    // Fused lockstep round (fuse = true): same workload, but the
+    // sampled cohort's steps run as one fused GEMM stream on the leader
+    // with the panel pool underneath, instead of per-agent pool jobs.
+    {
+        let params = FlParams {
+            fuse: true,
+            ..params_for(4, iters + 1, &manifest)
+        };
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let mut logger = NullLogger;
+        let res = ep.run(&mut logger).unwrap();
+        let mut times: Vec<f64> = res.rounds[1..].iter().map(|r| r.secs).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = BenchStats {
+            iters: times.len(),
+            min: times[0],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            p50: times[times.len() / 2],
+            max: times[times.len() - 1],
+        };
+        report("round walltime, workers=4 fused", &s, "");
+        rows.push(("workers_4_fused".to_string(), s.to_json(Some(1.0))));
+    }
+
     header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");
     let steady_rounds = if fast_mode() { 2 } else { 5 };
     let params = FlParams {
@@ -97,6 +122,8 @@ fn main() {
     let walltime = Json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
     let section = Json::obj(vec![
         ("backend", Json::str(manifest.backend.name())),
+        ("simd", Json::str(ferrisfl::runtime::simd::level().name())),
+        ("threads", Json::num(ferrisfl::util::gemm_threads() as f64)),
         ("workload", Json::str("lenet5@synth-mnist 100 agents, 10 sampled")),
         ("round_walltime", walltime),
         ("steady_round_secs", Json::Arr(steady)),

@@ -21,8 +21,8 @@ use ferrisfl::datasets::{Dataset, Split};
 use ferrisfl::entrypoint::worker::{with_runtime, RuntimeKey};
 use ferrisfl::runtime::native::hidden_layers;
 use ferrisfl::runtime::reference::NaiveMlp;
-use ferrisfl::runtime::{BackendKind, Manifest};
-use ferrisfl::util::Json;
+use ferrisfl::runtime::{gemm, BackendKind, FusedSlot, Manifest};
+use ferrisfl::util::{gemm_threads, Json};
 
 fn main() {
     let manifest = Arc::new(Manifest::load_or_native("artifacts"));
@@ -162,6 +162,7 @@ fn main() {
     let mut sections = vec![
         ("backend", Json::str(backend.name())),
         ("simd", Json::str(ferrisfl::runtime::simd::level().name())),
+        ("threads", Json::num(gemm_threads() as f64)),
         ("train_batch", Json::num(manifest.train_batch as f64)),
         ("cases", case_obj),
         ("eval", eval_obj),
@@ -208,6 +209,120 @@ fn main() {
         })
         .unwrap();
         sections.push(("naive_vs_blocked", section));
+
+        // Serial vs panel-parallel step on the largest zoo shape — the
+        // multi-core acceptance number (the step runs on this thread,
+        // so `gemm::with_serial` cleanly disables the fan-out for the
+        // baseline row).
+        header(&format!(
+            "serial vs panel-parallel step (cnn-m@synth-cifar10, sgd full, {} threads)",
+            gemm_threads()
+        ));
+        let key = RuntimeKey::native("cnn-m", "synth-cifar10", "sgd", "full");
+        let ds = Dataset::load(&manifest, "synth-cifar10", 1).unwrap();
+        let p_iters = scaled_iters(20);
+        let section = with_runtime(&manifest, &key, |rt| {
+            let b = rt.train_batch_size();
+            let idx: Vec<usize> = (0..b).collect();
+            let batch = ds.batch(Split::Train, &idx);
+            let p0 = rt.init_params()?;
+
+            let mut ps = p0.clone();
+            let mut scratch = rt.new_scratch();
+            let s_serial = bench(2, p_iters, || {
+                gemm::with_serial(|| {
+                    rt.train_step_sgd(&mut ps, &batch.x, &batch.y, 0.05, &mut scratch).unwrap()
+                })
+            });
+            report("serial driver", &s_serial, &format!("{:.1} steps/s", s_serial.per_sec(1.0)));
+
+            let mut pp = p0.clone();
+            let s_par = bench(2, p_iters, || {
+                rt.train_step_sgd(&mut pp, &batch.x, &batch.y, 0.05, &mut scratch).unwrap()
+            });
+            report(
+                "panel-parallel driver",
+                &s_par,
+                &format!("{:.1} steps/s", s_par.per_sec(1.0)),
+            );
+            let speedup = s_serial.mean / s_par.mean;
+            println!("speedup: {speedup:.2}x steps/s ({} threads)", gemm_threads());
+            Ok(Json::obj(vec![
+                ("case", Json::str("cnn-m@synth-cifar10 sgd full")),
+                ("threads", Json::num(gemm_threads() as f64)),
+                ("steps_per_sec_serial", Json::num(s_serial.per_sec(1.0))),
+                ("steps_per_sec_parallel", Json::num(s_par.per_sec(1.0))),
+                ("speedup", Json::num(speedup)),
+            ]))
+        })
+        .unwrap();
+        sections.push(("parallel", section));
+
+        // Fused lockstep cohort vs per-agent serial steps on a small
+        // model — the multi-agent batching acceptance number.
+        header("fused vs per-agent steps (mlp-s@synth-mnist, 4 slots)");
+        let key = RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full");
+        let ds = Dataset::load(&manifest, "synth-mnist", 1).unwrap();
+        let section = with_runtime(&manifest, &key, |rt| {
+            let b = rt.train_batch_size();
+            let slots_n = 4usize;
+            let batches: Vec<_> = (0..slots_n)
+                .map(|s| {
+                    let idx: Vec<usize> = (0..b).map(|i| (s * 13 + i) % ds.num_train()).collect();
+                    ds.batch(Split::Train, &idx)
+                })
+                .collect();
+            let p0 = rt.init_params()?;
+            let agent_steps = slots_n as f64;
+
+            let mut unfused: Vec<Vec<f32>> = (0..slots_n).map(|_| p0.clone()).collect();
+            let mut scratch = rt.new_scratch();
+            let s_unfused = bench(2, p_iters, || {
+                for s in 0..slots_n {
+                    rt.train_step_sgd(
+                        &mut unfused[s],
+                        &batches[s].x,
+                        &batches[s].y,
+                        0.05,
+                        &mut scratch,
+                    )
+                    .unwrap();
+                }
+            });
+            report(
+                "per-agent serial steps",
+                &s_unfused,
+                &format!("{:.1} agent-steps/s", s_unfused.per_sec(agent_steps)),
+            );
+
+            let mut fusedp: Vec<Vec<f32>> = (0..slots_n).map(|_| p0.clone()).collect();
+            let mut stats = Vec::new();
+            let s_fused = bench(2, p_iters, || {
+                let mut slots: Vec<FusedSlot> = fusedp
+                    .iter_mut()
+                    .zip(&batches)
+                    .map(|(p, bt)| FusedSlot { params: p, x: &bt.x, y: &bt.y })
+                    .collect();
+                rt.train_step_sgd_fused(&mut slots, 0.05, &mut scratch, &mut stats).unwrap();
+            });
+            report(
+                "fused lockstep step",
+                &s_fused,
+                &format!("{:.1} agent-steps/s", s_fused.per_sec(agent_steps)),
+            );
+            let speedup = s_unfused.mean / s_fused.mean;
+            println!("speedup: {speedup:.2}x agent-steps/s (fused vs unfused)");
+            Ok(Json::obj(vec![
+                ("case", Json::str("mlp-s@synth-mnist sgd full")),
+                ("slots", Json::num(slots_n as f64)),
+                ("threads", Json::num(gemm_threads() as f64)),
+                ("agent_steps_per_sec_unfused", Json::num(s_unfused.per_sec(agent_steps))),
+                ("agent_steps_per_sec_fused", Json::num(s_fused.per_sec(agent_steps))),
+                ("speedup", Json::num(speedup)),
+            ]))
+        })
+        .unwrap();
+        sections.push(("fused", section));
     }
     merge_section("train_step", Json::obj(sections));
 }

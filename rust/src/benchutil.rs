@@ -223,6 +223,26 @@ pub fn collect_metrics(root: &Json) -> Vec<Metric> {
             true,
         );
     }
+    // train_step.parallel / train_step.fused: gate on the absolute
+    // parallel/fused throughput only — the serial/unfused side and the
+    // speedup ratios are context (like naive_vs_blocked, ratios
+    // double-count runner noise).
+    if let Some(par) = root.get("train_step").and_then(|s| s.get("parallel")) {
+        push_metric(
+            &mut out,
+            "train_step/parallel/steps_per_sec_parallel".into(),
+            par.get("steps_per_sec_parallel"),
+            true,
+        );
+    }
+    if let Some(fu) = root.get("train_step").and_then(|s| s.get("fused")) {
+        push_metric(
+            &mut out,
+            "train_step/fused/agent_steps_per_sec_fused".into(),
+            fu.get("agent_steps_per_sec_fused"),
+            true,
+        );
+    }
     // round_e2e.round_walltime.workers_N.mean_ms (lower better)
     if let Some(Json::Obj(ws)) = root.get("round_e2e").and_then(|s| s.get("round_walltime")) {
         for (w, v) in ws {
@@ -248,6 +268,31 @@ pub fn collect_metrics(root: &Json) -> Vec<Metric> {
         for (case, v) in cases {
             for unit in ["gflops_simd", "gb_per_sec_simd", "melems_per_sec_simd"] {
                 push_metric(&mut out, format!("kernels/{case}/{unit}"), v.get(unit), true);
+            }
+        }
+    }
+    out
+}
+
+/// Per-section context recorded alongside the metrics: the SIMD
+/// dispatch level and panel-thread count each bench stamped into its
+/// section (`simd` / `dispatch` / `threads` fields). `bench_diff`
+/// prints these so a regression report always states which hardware
+/// mode produced a snapshot.
+pub fn section_meta(root: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Json::Obj(map) = root {
+        for (name, v) in map {
+            let mut bits = Vec::new();
+            for key in ["simd", "dispatch", "threads"] {
+                match v.get(key) {
+                    Some(Json::Str(s)) => bits.push(format!("{key}={s}")),
+                    Some(Json::Num(n)) => bits.push(format!("{key}={n}")),
+                    _ => {}
+                }
+            }
+            if !bits.is_empty() {
+                out.push(format!("{name} ({})", bits.join(", ")));
             }
         }
     }
@@ -520,8 +565,13 @@ mod tests {
         Json::parse(&format!(
             r#"{{
               "train_step": {{
+                "simd": "avx2", "threads": 4,
                 "cases": {{"mlp-s@synth-mnist sgd full": {{"items_per_sec": {steps_per_sec}}}}},
-                "naive_vs_blocked": {{"steps_per_sec_blocked": {steps_per_sec}, "speedup": 3.0}}
+                "naive_vs_blocked": {{"steps_per_sec_blocked": {steps_per_sec}, "speedup": 3.0}},
+                "parallel": {{"threads": 4, "steps_per_sec_serial": 50.0,
+                              "steps_per_sec_parallel": {steps_per_sec}, "speedup": 2.1}},
+                "fused": {{"slots": 4, "agent_steps_per_sec_unfused": 400.0,
+                           "agent_steps_per_sec_fused": {steps_per_sec}, "speedup": 1.4}}
               }},
               "round_e2e": {{"round_walltime": {{"workers_4": {{"mean_ms": {round_ms}}}}}}},
               "aggregation": {{"fedavg": {{"lenet5 K=8 offload": {{"gb_per_sec": {gbs}}}}}}},
@@ -554,6 +604,26 @@ mod tests {
         );
         let round = m.iter().find(|x| x.name.contains("mean_ms")).unwrap();
         assert!(!round.higher_is_better, "walltime gates on increases");
+        // New multi-core rows: only the parallel/fused absolutes gate.
+        assert!(names.contains(&"train_step/parallel/steps_per_sec_parallel"));
+        assert!(names.contains(&"train_step/fused/agent_steps_per_sec_fused"));
+        assert!(
+            !names.contains(&"train_step/parallel/steps_per_sec_serial")
+                && !names.contains(&"train_step/parallel/speedup")
+                && !names.contains(&"train_step/fused/agent_steps_per_sec_unfused"),
+            "serial/unfused sides and ratios must not gate"
+        );
+    }
+
+    #[test]
+    fn section_meta_reports_dispatch_and_threads() {
+        let meta = section_meta(&snapshot(100.0, 5000.0, 2.0));
+        let train = meta.iter().find(|s| s.starts_with("train_step")).unwrap();
+        assert!(train.contains("simd=avx2"), "{train}");
+        assert!(train.contains("threads=4"), "{train}");
+        let kernels = meta.iter().find(|s| s.starts_with("kernels")).unwrap();
+        assert!(kernels.contains("dispatch=avx2"), "{kernels}");
+        assert!(section_meta(&Json::num(3.0)).is_empty());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use std::process::ExitCode;
 
-use ferrisfl::benchutil::{diff, is_provisional, render_console, render_markdown};
+use ferrisfl::benchutil::{diff, is_provisional, render_console, render_markdown, section_meta};
 use ferrisfl::util::Json;
 
 fn usage() -> ExitCode {
@@ -85,11 +85,22 @@ fn main() -> ExitCode {
     let provisional = is_provisional(&base);
     let (rows, regressed) = diff(&base, &cur, max_regress);
     println!(
-        "bench gate: {} metric(s), threshold {:.0}%{}\n",
+        "bench gate: {} metric(s), threshold {:.0}%{}",
         rows.len(),
         max_regress * 100.0,
         if provisional { " (provisional baseline: report-only)" } else { "" }
     );
+    // The dispatch level and panel-thread count each bench stamped into
+    // its section — so a delta always states what mode produced it.
+    let meta = section_meta(&cur);
+    if !meta.is_empty() {
+        println!("current sections: {}", meta.join("; "));
+    }
+    let base_meta = section_meta(&base);
+    if !base_meta.is_empty() {
+        println!("baseline sections: {}", base_meta.join("; "));
+    }
+    println!();
     print!("{}", render_console(&rows));
 
     if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {

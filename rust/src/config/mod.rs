@@ -46,6 +46,11 @@ pub struct FlParams {
     pub seed: u64,
     /// Worker threads simulating parallel clients (0 = auto).
     pub workers: usize,
+    /// Run each round's sampled cohort as one fused lockstep step
+    /// stream on the leader (SGD only): every layer of every agent's
+    /// step becomes one fused panel-parallel GEMM instead of per-agent
+    /// pool jobs. Identical results; faster for small-model cohorts.
+    pub fuse: bool,
     /// Evaluate the global model every N rounds (0 = only at the end).
     pub eval_every: usize,
     /// Optional cap on per-agent local steps per epoch (0 = full shard).
@@ -83,6 +88,7 @@ impl Default for FlParams {
             lr: 0.05,
             seed: 42,
             workers: 0,
+            fuse: false,
             eval_every: 1,
             max_local_steps: 0,
             log_dir: String::new(),
@@ -129,6 +135,7 @@ impl FlParams {
             lr: doc.get_float("train.lr", d.lr as f64)? as f32,
             seed: doc.get_int("fl.seed", d.seed as i64)? as u64,
             workers: doc.get_int("run.workers", d.workers as i64)? as usize,
+            fuse: doc.get_bool("run.fuse", d.fuse)?,
             eval_every: doc.get_int("run.eval_every", d.eval_every as i64)? as usize,
             max_local_steps: doc.get_int("run.max_local_steps", 0)? as usize,
             log_dir: doc.get_str("run.log_dir", &d.log_dir)?,
@@ -171,6 +178,9 @@ impl FlParams {
         }
         if !self.lr.is_finite() || self.lr <= 0.0 {
             bail!("lr must be positive");
+        }
+        if self.fuse && self.optimizer != "sgd" {
+            bail!("fuse = true requires optimizer = sgd (the fused lockstep path is SGD-only)");
         }
         if !(0.0..1.0).contains(&self.dropout) {
             bail!("dropout must be in [0, 1)");
@@ -255,6 +265,27 @@ mod tests {
         let mut p = FlParams::default();
         p.backend = "tpu".into();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn fuse_parses_and_requires_sgd() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "f"
+            [run]
+            fuse = true
+            "#,
+        )
+        .unwrap();
+        assert!(p.fuse);
+        assert!(!FlParams::default().fuse);
+
+        let mut p = FlParams::default();
+        p.fuse = true;
+        p.optimizer = "adam".into();
+        assert!(p.validate().is_err(), "fuse is SGD-only");
+        p.optimizer = "sgd".into();
+        p.validate().unwrap();
     }
 
     #[test]

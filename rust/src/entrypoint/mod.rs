@@ -23,6 +23,13 @@
 //! reduce overlaps local training and step 3 collapses to one finalize
 //! pass — order-invariant by construction (exact integer reduce).
 //! Robust rules, defenses, and compressors keep the materialized path.
+//!
+//! With `fuse = true` (SGD only) step 2 runs as a **fused lockstep
+//! cohort** on the leader instead of per-agent pool jobs: every layer
+//! of every sampled agent's step goes through one fused panel-parallel
+//! GEMM (`worker::run_local_fused`), which keeps small-model cohorts
+//! from contending for cores — per-agent results are identical to the
+//! pooled path.
 
 pub mod trainer;
 pub mod worker;
@@ -272,37 +279,59 @@ impl Entrypoint {
 
             let t_local = Instant::now();
             let global = Arc::new(self.global.clone());
-            let jobs: Vec<_> = sampled
-                .iter()
-                .enumerate()
-                .map(|(i, &aid)| {
-                    let job = LocalJob {
-                        agent_id: aid,
-                        round,
-                        shard: self.agents[aid].shard.clone(),
-                        global: Arc::clone(&global),
-                        lr: self.params.lr,
-                        local_epochs: self.params.local_epochs,
-                        max_steps_per_epoch: self.params.max_local_steps,
-                        seed: self.params.seed,
-                    };
-                    let manifest = Arc::clone(&self.manifest);
-                    let dataset = Arc::clone(&self.dataset);
-                    let key = self.key.clone();
-                    let stream =
-                        stream_acc.as_ref().map(|acc| (Arc::clone(acc), stream_weights[i]));
-                    move |_wid: usize| -> Result<_> {
-                        worker::with_runtime(&manifest, &key, |rt| {
-                            let (update, record) = worker::run_local(rt, &dataset, &job)?;
-                            if let Some((acc, w)) = &stream {
-                                acc.push(&update.delta, *w)?;
-                            }
-                            Ok((update, record))
-                        })
+            let mk_job = |aid: usize| LocalJob {
+                agent_id: aid,
+                round,
+                shard: self.agents[aid].shard.clone(),
+                global: Arc::clone(&global),
+                lr: self.params.lr,
+                local_epochs: self.params.local_epochs,
+                max_steps_per_epoch: self.params.max_local_steps,
+                seed: self.params.seed,
+            };
+            let results: Vec<Result<(aggregators::Update, AgentRecord)>> = if self.params.fuse {
+                // Fused lockstep on the leader (`fuse = true`): the
+                // cohort's batches go through one fused panel-parallel
+                // GEMM per layer (`worker::run_local_fused`), so the
+                // cores are driven by the panel pool under a single
+                // step instead of contending per-agent worker jobs.
+                // Streaming rounds push the finished deltas afterwards
+                // — the reduce is order-invariant, so the result is
+                // identical to the workers pushing as they finish.
+                let jobs: Vec<LocalJob> = sampled.iter().map(|&aid| mk_job(aid)).collect();
+                let list = worker::with_runtime(&self.manifest, &self.key, |rt| {
+                    worker::run_local_fused(rt, &self.dataset, &jobs)
+                })?;
+                if let Some(acc) = &stream_acc {
+                    for (i, (update, _)) in list.iter().enumerate() {
+                        acc.push(&update.delta, stream_weights[i])?;
                     }
-                })
-                .collect();
-            let results = self.pool.run(jobs);
+                }
+                list.into_iter().map(Ok).collect()
+            } else {
+                let jobs: Vec<_> = sampled
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &aid)| {
+                        let job = mk_job(aid);
+                        let manifest = Arc::clone(&self.manifest);
+                        let dataset = Arc::clone(&self.dataset);
+                        let key = self.key.clone();
+                        let stream =
+                            stream_acc.as_ref().map(|acc| (Arc::clone(acc), stream_weights[i]));
+                        move |_wid: usize| -> Result<_> {
+                            worker::with_runtime(&manifest, &key, |rt| {
+                                let (update, record) = worker::run_local(rt, &dataset, &job)?;
+                                if let Some((acc, w)) = &stream {
+                                    acc.push(&update.delta, *w)?;
+                                }
+                                Ok((update, record))
+                            })
+                        }
+                    })
+                    .collect();
+                self.pool.run(jobs)
+            };
             profiler.record("local_training", t_local.elapsed().as_secs_f64());
 
             let mut updates = Vec::with_capacity(results.len());

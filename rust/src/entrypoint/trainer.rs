@@ -5,6 +5,12 @@
 //! experiments: train one model on the full train split for E epochs,
 //! recording per-epoch wall-clock, validation loss and accuracy.
 //! Backend-agnostic: runs on whichever executor `cfg.backend` selects.
+//!
+//! The trainer's single step stream is exactly the case the
+//! panel-parallel GEMM drivers target: with one model training at a
+//! time, each large layer's product (cnn-m's 3072-wide shapes) fans
+//! its panels across the otherwise-idle cores automatically —
+//! `FERRISFL_THREADS` caps it, no scheduling changes needed here.
 
 use std::sync::Arc;
 use std::time::Instant;

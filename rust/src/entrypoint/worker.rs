@@ -31,7 +31,8 @@ use crate::aggregators::Update;
 use crate::datasets::{BatchBuf, Dataset, Split, SynthCache};
 use crate::metrics::AgentRecord;
 use crate::runtime::{
-    AdamState, BackendKind, Manifest, ModelExecutor, NativeExecutor, StepScratch,
+    AdamState, BackendKind, FusedSlot, Manifest, ModelExecutor, NativeExecutor, StepScratch,
+    StepStats,
 };
 use crate::util::error::{bail, Result};
 use crate::util::{pipeline, Rng, WorkerPool};
@@ -410,6 +411,147 @@ pub fn run_local(
     ))
 }
 
+/// Run several sampled agents' local rounds **in lockstep** through the
+/// fused multi-batch step path
+/// ([`ModelExecutor::train_step_sgd_fused`]), on the calling thread: at
+/// every step the cohort's batches go through one fused panel-parallel
+/// GEMM per layer, instead of each agent contending for cores from its
+/// own pool worker. Per-agent semantics — RNG streams, batch schedule,
+/// wrapped-tail distinct-example weighting, the arithmetic itself — are
+/// identical to [`run_local`], so a fused round reproduces the pooled
+/// round's updates (the native fused step is bit-identical per slot;
+/// ≤1e-5 is the cross-backend contract). Agents whose epochs run out of
+/// batches before the cohort's longest sit out the remaining fused
+/// steps. Batches gather synchronously through this thread's
+/// [`SynthCache`] (steady state is memcpy-fed), so the per-agent
+/// synthesis pipeline thread is not spun up here.
+///
+/// All jobs must carry the same `lr`, `local_epochs`, and
+/// `max_steps_per_epoch` (the entrypoint builds them that way).
+pub fn run_local_fused(
+    rt: &dyn ModelExecutor,
+    dataset: &Dataset,
+    jobs: &[LocalJob],
+) -> Result<Vec<(Update, AgentRecord)>> {
+    if jobs.is_empty() {
+        return Ok(Vec::new());
+    }
+    if rt.optimizer() != "sgd" {
+        bail!(
+            "fused lockstep training is SGD-only, but the executor was built for {:?}",
+            rt.optimizer()
+        );
+    }
+    let t0 = Instant::now();
+    let b = rt.train_batch_size();
+    let lr = jobs[0].lr;
+    let local_epochs = jobs[0].local_epochs;
+    let max_steps = jobs[0].max_steps_per_epoch;
+    for j in jobs {
+        if j.lr != lr || j.local_epochs != local_epochs || j.max_steps_per_epoch != max_steps {
+            bail!("fused cohort requires uniform lr/local_epochs/max_steps across agents");
+        }
+    }
+    let s_count = jobs.len();
+    let mut params: Vec<Vec<f32>> = jobs.iter().map(|j| (*j.global).clone()).collect();
+    let mut orders: Vec<Vec<usize>> = jobs.iter().map(|j| j.shard.clone()).collect();
+    let mut rngs: Vec<Rng> = jobs
+        .iter()
+        .map(|j| Rng::new(j.seed).split(j.round as u64).split(j.agent_id as u64))
+        .collect();
+    let mut bufs: Vec<BatchBuf> = (0..s_count).map(|_| BatchBuf::new()).collect();
+    let mut idx: Vec<usize> = Vec::with_capacity(b);
+    let mut scratch = rt.new_scratch();
+    let mut stats: Vec<StepStats> = Vec::with_capacity(s_count);
+    let mut epoch_losses: Vec<Vec<f64>> =
+        (0..s_count).map(|_| Vec::with_capacity(local_epochs)).collect();
+    let mut epoch_accs: Vec<Vec<f64>> =
+        (0..s_count).map(|_| Vec::with_capacity(local_epochs)).collect();
+
+    SYNTH_CACHE.with(|c| -> Result<()> {
+        let cache = &mut *c.borrow_mut();
+        for _epoch in 0..local_epochs {
+            let mut sums = vec![(0.0f64, 0.0f64, 0usize); s_count];
+            let mut planned = vec![0usize; s_count];
+            for s in 0..s_count {
+                rngs[s].shuffle(&mut orders[s]);
+                let total = orders[s].len().div_ceil(b);
+                planned[s] = if max_steps > 0 { total.min(max_steps) } else { total };
+            }
+            let steps = planned.iter().copied().max().unwrap_or(0);
+            for step in 0..steps {
+                let start = step * b;
+                for s in 0..s_count {
+                    if step >= planned[s] {
+                        continue;
+                    }
+                    // Fixed-shape batches, tail wrapped around the
+                    // shard — exactly train_epoch's schedule.
+                    idx.clear();
+                    for i in 0..b {
+                        idx.push(orders[s][(start + i) % orders[s].len()]);
+                    }
+                    dataset.gather_cached(Split::Train, &idx, &mut bufs[s], cache);
+                }
+                let mut slots: Vec<FusedSlot> = Vec::with_capacity(s_count);
+                let mut active: Vec<usize> = Vec::with_capacity(s_count);
+                for (s, p) in params.iter_mut().enumerate() {
+                    if step >= planned[s] {
+                        continue;
+                    }
+                    let view = bufs[s].view();
+                    slots.push(FusedSlot { params: p, x: view.x, y: view.y });
+                    active.push(s);
+                }
+                rt.train_step_sgd_fused(&mut slots, lr, &mut scratch, &mut stats)?;
+                drop(slots);
+                for (i, &s) in active.iter().enumerate() {
+                    let distinct = b.min(orders[s].len() - start);
+                    sums[s].0 += stats[i].loss as f64 * distinct as f64;
+                    sums[s].1 += stats[i].hits as f64 * distinct as f64 / b as f64;
+                    sums[s].2 += distinct;
+                }
+            }
+            for s in 0..s_count {
+                if sums[s].2 > 0 {
+                    epoch_losses[s].push(sums[s].0 / sums[s].2 as f64);
+                    epoch_accs[s].push(sums[s].1 / sums[s].2 as f64);
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    let secs = t0.elapsed().as_secs_f64();
+    let mut out = Vec::with_capacity(s_count);
+    for (s, job) in jobs.iter().enumerate() {
+        // delta_i = W_i^{t+1} - W^t, in place like run_local.
+        let mut delta = std::mem::take(&mut params[s]);
+        for (d, g) in delta.iter_mut().zip(job.global.iter()) {
+            *d -= *g;
+        }
+        let record = AgentRecord {
+            round: job.round,
+            agent_id: job.agent_id,
+            epoch_losses: std::mem::take(&mut epoch_losses[s]),
+            epoch_accs: std::mem::take(&mut epoch_accs[s]),
+            num_samples: job.shard.len(),
+            // One cohort, one wall clock: every agent trained inside
+            // the same fused lockstep window.
+            secs,
+        };
+        out.push((
+            Update {
+                agent_id: job.agent_id,
+                delta,
+                num_samples: job.shard.len(),
+            },
+            record,
+        ));
+    }
+    Ok(out)
+}
+
 /// Evaluate a contiguous test-index range `[lo, hi)` in eval-batch
 /// chunks on this thread's executor, with reused scratch/batch buffers.
 /// Test batches gather through the worker's [`SynthCache`]: every round
@@ -644,6 +786,50 @@ mod tests {
                 &mut cache,
             )?;
             assert!(l2.is_finite() && s2 == seen_s);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    /// A fused lockstep cohort produces bit-identical deltas and epoch
+    /// metrics to running each agent through [`run_local`] — including
+    /// ragged shards (different step counts per agent) and multiple
+    /// local epochs.
+    #[test]
+    fn fused_cohort_matches_run_local_per_agent() {
+        let m = Arc::new(Manifest::native());
+        let key = RuntimeKey::native("mlp-s", "synth-mnist", "sgd", "full");
+        let dataset = Dataset::load(&m, "synth-mnist", 43).unwrap();
+        with_runtime(&m, &key, |rt| {
+            let global = Arc::new(rt.init_params()?);
+            let jobs: Vec<LocalJob> = [(0usize, 90usize), (1, 64), (2, 100)]
+                .iter()
+                .map(|&(aid, shard_len)| LocalJob {
+                    agent_id: aid,
+                    round: 2,
+                    shard: (aid * 10..aid * 10 + shard_len).collect(),
+                    global: Arc::clone(&global),
+                    lr: 0.05,
+                    local_epochs: 2,
+                    max_steps_per_epoch: 0,
+                    seed: 7,
+                })
+                .collect();
+
+            let serial: Vec<_> = jobs
+                .iter()
+                .map(|j| run_local(rt, &dataset, j))
+                .collect::<Result<_, _>>()?;
+            let fused = run_local_fused(rt, &dataset, &jobs)?;
+
+            assert_eq!(fused.len(), serial.len());
+            for ((fu, fr), (su, sr)) in fused.iter().zip(&serial) {
+                assert_eq!(fu.agent_id, su.agent_id);
+                assert_eq!(fu.num_samples, su.num_samples);
+                assert_eq!(fu.delta, su.delta, "agent {}: delta", fu.agent_id);
+                assert_eq!(fr.epoch_losses, sr.epoch_losses, "agent {}", fu.agent_id);
+                assert_eq!(fr.epoch_accs, sr.epoch_accs, "agent {}", fu.agent_id);
+            }
             Ok(())
         })
         .unwrap();

@@ -21,7 +21,7 @@ const USAGE: &str = "\
 ferrisfl — FerrisFL: bootstrap federated-learning experiments (TorchFL repro)
 
 USAGE:
-  ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>]
+  ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>] [--fuse]
   ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
   ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
   ferrisfl info [--backend native|pjrt] [--artifacts <dir>]
@@ -52,7 +52,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // Flags we know take no value.
-                if matches!(name, "quick" | "verbose" | "help") {
+                if matches!(name, "quick" | "verbose" | "help" | "fuse") {
                     flags.insert(name.to_string());
                 } else {
                     let v = argv
@@ -103,6 +103,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut params = FlParams::from_file(config)?;
     if let Some(w) = args.opt("workers") {
         params.workers = w.parse()?;
+    }
+    if args.flags.contains("fuse") {
+        params.fuse = true;
     }
     let backend = backend_of(args, &params.backend)?;
     params.backend = backend.name().into();

@@ -143,6 +143,7 @@ pub fn fig8i(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             lr: 0.05,
             seed: opts.seed,
             workers: opts.workers,
+            fuse: false,
             eval_every: opts.scale(2, 1),
             max_local_steps: 0,
             log_dir: String::new(),
@@ -191,6 +192,7 @@ pub fn fig8ii(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             lr: 0.001,
             seed: opts.seed,
             workers: opts.workers,
+            fuse: false,
             eval_every: 1,
             max_local_steps: 0,
             log_dir: String::new(),
@@ -232,6 +234,7 @@ pub fn fig9(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         lr: 0.05,
         seed: opts.seed,
         workers: opts.workers,
+        fuse: false,
         eval_every: 0,
         max_local_steps: 0,
         log_dir: String::new(),

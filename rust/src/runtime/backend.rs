@@ -22,6 +22,7 @@
 
 use crate::util::error::{bail, Result};
 
+use super::gemm;
 use super::stats;
 
 /// Which execution backend drives the five runtime operations.
@@ -132,6 +133,10 @@ pub struct StepScratch {
     pub(crate) losses: Vec<f32>,
     /// Transposed weight view of the current layer (`fan_in × fan_out`).
     pub(crate) wt: Vec<f32>,
+    /// Per-slot GEMM operand table of the fused multi-agent step path
+    /// (grow-only capacity; the raw pointers inside are rebuilt for —
+    /// and only valid within — each fused GEMM call).
+    pub(crate) fused_ptrs: Vec<gemm::GemmSlot>,
     /// PJRT eval-batch padding buffers.
     #[cfg(feature = "pjrt")]
     pub(crate) xpad: Vec<f32>,
@@ -163,6 +168,16 @@ impl StepScratch {
             v.resize(len, 0);
         }
     }
+}
+
+/// One agent's view of a fused lockstep SGD step: its own parameters
+/// and gathered batch. All slots of one
+/// [`ModelExecutor::train_step_sgd_fused`] call must come from
+/// executors of the same model shape (in practice: the same executor).
+pub struct FusedSlot<'a> {
+    pub params: &'a mut Vec<f32>,
+    pub x: &'a [f32],
+    pub y: &'a [i32],
 }
 
 /// Adam optimizer state held by the coordinator between local epochs.
@@ -242,6 +257,29 @@ pub trait ModelExecutor {
         lr: f32,
         scratch: &mut StepScratch,
     ) -> Result<StepStats>;
+
+    /// One SGD train step for several same-shape agents in lockstep —
+    /// the fused multi-agent batching path. Semantically one
+    /// [`ModelExecutor::train_step_sgd`] per slot (the golden contract
+    /// pins per-slot results within 1e-5 of the serial steps; the
+    /// native backend is bit-identical), but backends may override it
+    /// to batch the slots' compute — the native engine runs one fused
+    /// panel-parallel GEMM per layer across the whole cohort. `stats`
+    /// is cleared and refilled with one entry per slot (capacity is
+    /// reused, so warm fused steps stay allocation-free).
+    fn train_step_sgd_fused(
+        &self,
+        slots: &mut [FusedSlot<'_>],
+        lr: f32,
+        scratch: &mut StepScratch,
+        stats: &mut Vec<StepStats>,
+    ) -> Result<()> {
+        stats.clear();
+        for slot in slots.iter_mut() {
+            stats.push(self.train_step_sgd(slot.params, slot.x, slot.y, lr, scratch)?);
+        }
+        Ok(())
+    }
 
     /// Evaluate `params` on one (possibly short) batch; only the first
     /// `n_valid` examples count — the tail is masked out.

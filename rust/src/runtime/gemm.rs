@@ -30,8 +30,28 @@
 //! to ~1e-6 relative, not bit-exactly; the golden tests in
 //! [`super::native`] pin the contract at 1e-5. Given the same shapes,
 //! inputs, and dispatch level the kernels are fully deterministic.
+//!
+//! **Panel parallelism.** Large products additionally shard their
+//! output across the process-wide [`threadpool::PanelPool`]: the public
+//! drivers split C into disjoint row panels (plus `NC`-wide column
+//! panels for [`gemm_tn_acc`] when the row dimension alone cannot feed
+//! the pool) and workers claim panels from a shared counter —
+//! allocation-free waitable jobs, `FERRISFL_THREADS` caps the fan-out.
+//! Row panels start on even row indices and column panels on `NC`
+//! boundaries, so every output element sees *exactly* the serial
+//! driver's kernel sequence: the parallel result is **bit-identical**
+//! to [`gemm_nn_acc_serial`] / [`gemm_tn_acc_serial`], whatever the
+//! pool size (pinned by the tests below). Products under
+//! [`PAR_MIN_MACS`] multiply-accumulates stay serial — the dispatch
+//! latency would outweigh the panel work. The fused `*_fused` entry
+//! points batch several same-shape products (one per co-scheduled
+//! agent) into a single panel-job set, so small-model cohorts fill the
+//! pool without per-agent dispatch overhead.
+
+use std::cell::Cell;
 
 use super::simd;
+use crate::util::threadpool::{self, PanelPool};
 
 /// Width of one N panel (floats). Two C-row tiles of `NC` floats plus
 /// four streamed B rows fit comfortably in L1 (6 × 2 KiB = 12 KiB).
@@ -39,6 +59,46 @@ const NC: usize = 512;
 /// Depth of one K panel: a `KC × NC` B panel is 256 KiB — L2-resident.
 /// A multiple of 8 so full panels run entirely on the 2×8 micro step.
 const KC: usize = 128;
+/// Rows per parallel panel. Even, so panel boundaries never split a
+/// 2-row register tile — the pairing (and therefore the bit pattern)
+/// matches the serial driver exactly.
+const PAR_MR: usize = 4;
+/// Minimum multiply-accumulate count (`m·k·n`, summed over fused
+/// slots) before a product fans out across the panel pool. 2²² ≈ 4.2M:
+/// cnn-m's 3072-wide forward/weight-grad products (25M) parallelise,
+/// mlp-m's largest (3.2M) stays serial.
+pub const PAR_MIN_MACS: usize = 1 << 22;
+
+thread_local! {
+    static FORCE_SERIAL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with panel-parallel dispatch disabled on this thread — the
+/// serial-vs-parallel bench rows and the golden tests A/B the two
+/// drivers inside one process with this. Only the calling thread is
+/// affected (the auto drivers check the flag at entry, before any
+/// fan-out).
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    FORCE_SERIAL.with(|c| {
+        let prev = c.replace(true);
+        let r = f();
+        c.set(prev);
+        r
+    })
+}
+
+/// Whether a product of `macs` multiply-accumulates may fan out.
+fn par_allowed(macs: usize) -> bool {
+    macs >= PAR_MIN_MACS
+        && threadpool::gemm_threads() > 1
+        && !FORCE_SERIAL.with(|c| c.get())
+}
+
+/// A `*mut f32` the panel closures may share: every panel writes a
+/// disjoint region, which the borrow checker cannot see through a
+/// `Fn`-closure shared across threads.
+struct SendMutF32(*mut f32);
+unsafe impl Sync for SendMutF32 {}
 
 /// `c[M×N] += A[M×K] · B[K×N]` (all row-major).
 ///
@@ -46,7 +106,52 @@ const KC: usize = 128;
 /// weight view, see [`transpose`]) and the backward `dprev = dz·W` pass
 /// (where `W` is already `[fan_out × fan_in]` row-major, i.e. exactly
 /// the `[K×N]` operand — no transposition needed).
+///
+/// Large shapes shard M row panels across the process panel pool; the
+/// result is bit-identical to [`gemm_nn_acc_serial`] either way.
 pub fn gemm_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if par_allowed(m.saturating_mul(k).saturating_mul(n))
+        && gemm_nn_acc_on(threadpool::panel_pool(), a, b, c, m, k, n)
+    {
+        return;
+    }
+    gemm_nn_acc_serial(a, b, c, m, k, n)
+}
+
+/// Panel-parallel [`gemm_nn_acc`] against an explicit pool: M is split
+/// into [`PAR_MR`]-row panels (even boundaries, so the serial 2-row
+/// pairing — and the bit pattern — is preserved) claimed by the pool's
+/// workers and the calling thread. Returns `false` without touching
+/// `c` when another panel job is already in flight; the caller then
+/// runs the serial driver.
+pub fn gemm_nn_acc_on(
+    pool: &PanelPool,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    assert!(a.len() >= m * k, "A is {} floats, want {}x{}", a.len(), m, k);
+    assert!(b.len() >= k * n, "B is {} floats, want {}x{}", b.len(), k, n);
+    assert!(c.len() >= m * n, "C is {} floats, want {}x{}", c.len(), m, n);
+    let cptr = SendMutF32(c.as_mut_ptr());
+    pool.try_run(m.div_ceil(PAR_MR), &|p| {
+        let lo = p * PAR_MR;
+        let rows = PAR_MR.min(m - lo);
+        let ap = &a[lo * k..(lo + rows) * k];
+        // SAFETY: panel `p` owns rows [lo, lo+rows) of C — the row
+        // ranges of distinct panels are disjoint, and `c` outlives the
+        // blocking `try_run` call.
+        let cp = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(lo * n), rows * n) };
+        gemm_nn_acc_serial(ap, b, cp, rows, k, n);
+    })
+}
+
+/// The single-thread `c += A·B` driver — the golden reference the
+/// parallel path shards (and is pinned bit-identical to).
+pub fn gemm_nn_acc_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert!(a.len() >= m * k, "A is {} floats, want {}x{}", a.len(), m, k);
     assert!(b.len() >= k * n, "B is {} floats, want {}x{}", b.len(), k, n);
     assert!(c.len() >= m * n, "C is {} floats, want {}x{}", c.len(), m, n);
@@ -115,7 +220,141 @@ pub fn gemm_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 /// `[fan_out × fan_in]`. `A` is read down its columns (stride `m`) —
 /// only 16 strided scalar loads per 2×8 tile, so no transposition of dz
 /// is worth the pass over memory.
+///
+/// Large shapes shard M row panels — and, when M alone is too short to
+/// feed the pool, `NC`-wide N column panels — across the process panel
+/// pool; the result is bit-identical to [`gemm_tn_acc_serial`] either
+/// way.
 pub fn gemm_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    if par_allowed(k.saturating_mul(m).saturating_mul(n))
+        && gemm_tn_acc_on(threadpool::panel_pool(), a, b, c, k, m, n)
+    {
+        return;
+    }
+    gemm_tn_acc_serial(a, b, c, k, m, n)
+}
+
+/// Panel-parallel [`gemm_tn_acc`] against an explicit pool. M splits
+/// into [`PAR_MR`]-row panels; when those alone cannot keep the pool's
+/// threads busy (fewer than two per thread), each row panel further
+/// splits along N at the serial driver's own `NC` panel boundaries —
+/// both cuts preserve the serial kernel sequence per output element,
+/// so the result is bit-identical to [`gemm_tn_acc_serial`]. Returns
+/// `false` without touching `c` when the pool is busy.
+pub fn gemm_tn_acc_on(
+    pool: &PanelPool,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+) -> bool {
+    assert!(a.len() >= k * m, "A is {} floats, want {}x{}", a.len(), k, m);
+    assert!(b.len() >= k * n, "B is {} floats, want {}x{}", b.len(), k, n);
+    assert!(c.len() >= m * n, "C is {} floats, want {}x{}", c.len(), m, n);
+    if m == 0 || n == 0 {
+        return true;
+    }
+    let kr = simd::kernels();
+    let mchunks = m.div_ceil(PAR_MR);
+    let nchunks = if mchunks >= 2 * (pool.workers() + 1) {
+        1
+    } else {
+        n.div_ceil(NC)
+    };
+    let cptr = SendMutF32(c.as_mut_ptr());
+    pool.try_run(mchunks * nchunks, &|p| {
+        let (ri, ci) = (p / nchunks, p % nchunks);
+        let i0 = ri * PAR_MR;
+        let rows = PAR_MR.min(m - i0);
+        let (jlo, jhi) = if nchunks == 1 {
+            (0, n)
+        } else {
+            (ci * NC, (ci * NC + NC).min(n))
+        };
+        let mut jc = jlo;
+        while jc < jhi {
+            let nn = NC.min(jhi - jc);
+            // SAFETY: this panel owns the (rows [i0, i0+rows) ×
+            // columns [jc, jc+nn)) rectangle of C; rectangles of
+            // distinct panels are disjoint, and `c` outlives the
+            // blocking `try_run` call.
+            unsafe { tn_rect(a, b, cptr.0, k, m, n, i0, rows, jc, nn, kr) };
+            jc += nn;
+        }
+    })
+}
+
+/// One (row-range × one-N-panel) rectangle of the TN product, with the
+/// exact kernel sequence the serial driver uses for those elements:
+/// row pairs from the (even) `i0`, the full-K 8/4/1 stepping, and the
+/// same `jc`-anchored panel slices.
+///
+/// # Safety
+/// `c` must point to the full `[M×N]` output with at least `m·n` valid
+/// floats, and no other slice or rectangle may alias the
+/// `[i0, i0+rows) × [jc, jc+nn)` region for the duration of the call.
+#[allow(clippy::too_many_arguments)]
+unsafe fn tn_rect(
+    a: &[f32],
+    b: &[f32],
+    c: *mut f32,
+    k: usize,
+    m: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    jc: usize,
+    nn: usize,
+    kr: &simd::Kernels,
+) {
+    let mut i = i0;
+    let iend = i0 + rows;
+    while i + 2 <= iend {
+        let c0 = std::slice::from_raw_parts_mut(c.add(i * n + jc), nn);
+        let c1 = std::slice::from_raw_parts_mut(c.add((i + 1) * n + jc), nn);
+        let mut t = 0;
+        while t + 8 <= k {
+            let bt = brows8(b, t, n, jc, nn);
+            let x0 = acol8(a, t, m, i);
+            let x1 = acol8(a, t, m, i + 1);
+            (kr.axpy8_2)(c0, c1, bt, x0, x1);
+            t += 8;
+        }
+        while t + 4 <= k {
+            let bt = brows(b, t, n, jc, nn);
+            let x0 = acol4(a, t, m, i);
+            let x1 = acol4(a, t, m, i + 1);
+            (kr.axpy4_2)(c0, c1, bt, x0, x1);
+            t += 4;
+        }
+        while t < k {
+            let b0 = &b[t * n + jc..t * n + jc + nn];
+            (kr.axpy1_2)(c0, c1, b0, a[t * m + i], a[t * m + i + 1]);
+            t += 1;
+        }
+        i += 2;
+    }
+    if i < iend {
+        let c0 = std::slice::from_raw_parts_mut(c.add(i * n + jc), nn);
+        let mut t = 0;
+        while t + 4 <= k {
+            let bt = brows(b, t, n, jc, nn);
+            (kr.axpy4_1)(c0, bt, acol4(a, t, m, i));
+            t += 4;
+        }
+        while t < k {
+            let b0 = &b[t * n + jc..t * n + jc + nn];
+            (kr.axpy1_1)(c0, b0, a[t * m + i]);
+            t += 1;
+        }
+    }
+}
+
+/// The single-thread `c += Aᵀ·B` driver — the golden reference the
+/// parallel path shards (and is pinned bit-identical to).
+pub fn gemm_tn_acc_serial(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
     assert!(a.len() >= k * m, "A is {} floats, want {}x{}", a.len(), k, m);
     assert!(b.len() >= k * n, "B is {} floats, want {}x{}", b.len(), k, n);
     assert!(c.len() >= m * n, "C is {} floats, want {}x{}", c.len(), m, n);
@@ -165,6 +404,135 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: u
             }
         }
         jc += nn;
+    }
+}
+
+/// One slot of a fused multi-agent GEMM: raw operand pointers into
+/// caller-owned buffers, all slots sharing one `(m, k, n)` shape. The
+/// fused drivers schedule every slot's panels as **one** pool job set,
+/// so a cohort of small same-shape products fills the pool with a
+/// single dispatch instead of one per agent. Tables of these live in
+/// `StepScratch` (grow-only, rebuilt each call — the pointers are only
+/// valid inside the call that built them).
+#[derive(Clone, Copy)]
+pub struct GemmSlot {
+    pub a: *const f32,
+    pub b: *const f32,
+    pub c: *mut f32,
+}
+
+// SAFETY: the pointers are only dereferenced inside a fused driver
+// call, whose caller guarantees the referents outlive the call and the
+// `c` regions are pairwise disjoint (see the drivers' safety docs).
+unsafe impl Send for GemmSlot {}
+unsafe impl Sync for GemmSlot {}
+
+/// Fused [`gemm_nn_acc`] over several same-shape slots: per slot
+/// `c += A·B`, with every slot's row panels claimed from one pool job
+/// set (or a serial per-slot loop when the pool is busy, the total
+/// work is small, or parallelism is off). Per-slot results are
+/// bit-identical to [`gemm_nn_acc_serial`] on that slot.
+///
+/// # Safety
+/// For every slot: `a` must be valid for `m·k` reads, `b` for `k·n`
+/// reads, and `c` for `m·n` reads+writes, all for the duration of the
+/// call; the slots' `c` regions must be pairwise disjoint and not
+/// otherwise aliased.
+pub unsafe fn gemm_nn_acc_fused(slots: &[GemmSlot], m: usize, k: usize, n: usize) {
+    if slots.is_empty() || m == 0 {
+        return;
+    }
+    let macs = m.saturating_mul(k).saturating_mul(n).saturating_mul(slots.len());
+    if par_allowed(macs) {
+        let mchunks = m.div_ceil(PAR_MR);
+        let ok = threadpool::panel_pool().try_run(slots.len() * mchunks, &|p| {
+            let slot = slots[p / mchunks];
+            let lo = (p % mchunks) * PAR_MR;
+            let rows = PAR_MR.min(m - lo);
+            // SAFETY: panel `p` owns rows [lo, lo+rows) of its slot's
+            // C; with the caller's disjointness guarantee no two
+            // panels overlap.
+            let (ap, bp, cp) = unsafe {
+                (
+                    std::slice::from_raw_parts(slot.a.add(lo * k), rows * k),
+                    std::slice::from_raw_parts(slot.b, k * n),
+                    std::slice::from_raw_parts_mut(slot.c.add(lo * n), rows * n),
+                )
+            };
+            gemm_nn_acc_serial(ap, bp, cp, rows, k, n);
+        });
+        if ok {
+            return;
+        }
+    }
+    for slot in slots {
+        let ap = std::slice::from_raw_parts(slot.a, m * k);
+        let bp = std::slice::from_raw_parts(slot.b, k * n);
+        let cp = std::slice::from_raw_parts_mut(slot.c, m * n);
+        gemm_nn_acc_serial(ap, bp, cp, m, k, n);
+    }
+}
+
+/// Fused [`gemm_tn_acc`] over several same-shape slots: per slot
+/// `c += Aᵀ·B`, sharded like [`gemm_tn_acc_on`] (row panels, plus `NC`
+/// column panels when the cohort's rows alone cannot feed the pool)
+/// with every slot in one pool job set. Per-slot results are
+/// bit-identical to [`gemm_tn_acc_serial`] on that slot.
+///
+/// # Safety
+/// For every slot: `a` must be valid for `k·m` reads, `b` for `k·n`
+/// reads, and `c` for `m·n` reads+writes, all for the duration of the
+/// call; the slots' `c` regions must be pairwise disjoint and not
+/// otherwise aliased.
+pub unsafe fn gemm_tn_acc_fused(slots: &[GemmSlot], k: usize, m: usize, n: usize) {
+    if slots.is_empty() || m == 0 || n == 0 {
+        return;
+    }
+    let macs = k.saturating_mul(m).saturating_mul(n).saturating_mul(slots.len());
+    if par_allowed(macs) {
+        let kr = simd::kernels();
+        let pool = threadpool::panel_pool();
+        let mchunks = m.div_ceil(PAR_MR);
+        let nchunks = if slots.len() * mchunks >= 2 * (pool.workers() + 1) {
+            1
+        } else {
+            n.div_ceil(NC)
+        };
+        let per_slot = mchunks * nchunks;
+        let ok = pool.try_run(slots.len() * per_slot, &|p| {
+            let slot = slots[p / per_slot];
+            let r = p % per_slot;
+            let (ri, ci) = (r / nchunks, r % nchunks);
+            let i0 = ri * PAR_MR;
+            let rows = PAR_MR.min(m - i0);
+            let (jlo, jhi) = if nchunks == 1 {
+                (0, n)
+            } else {
+                (ci * NC, (ci * NC + NC).min(n))
+            };
+            // SAFETY: panel `p` owns this rectangle of its slot's C;
+            // with the caller's disjointness guarantee no two panels
+            // overlap, and `a`/`b` are valid shared reads.
+            unsafe {
+                let ap = std::slice::from_raw_parts(slot.a, k * m);
+                let bp = std::slice::from_raw_parts(slot.b, k * n);
+                let mut jc = jlo;
+                while jc < jhi {
+                    let nn = NC.min(jhi - jc);
+                    tn_rect(ap, bp, slot.c, k, m, n, i0, rows, jc, nn, kr);
+                    jc += nn;
+                }
+            }
+        });
+        if ok {
+            return;
+        }
+    }
+    for slot in slots {
+        let ap = std::slice::from_raw_parts(slot.a, k * m);
+        let bp = std::slice::from_raw_parts(slot.b, k * n);
+        let cp = std::slice::from_raw_parts_mut(slot.c, m * n);
+        gemm_tn_acc_serial(ap, bp, cp, k, m, n);
     }
 }
 
@@ -315,6 +683,163 @@ mod tests {
         let mut c = vec![0.0f32; m * n];
         gemm_nn_acc(&a, &b, &mut c, m, k, n);
         assert_close(&c, &naive_nn(&a, &b, m, k, n), "sparse nn");
+    }
+
+    /// Every zoo-relevant shape (plus odd non-tile-multiples), every
+    /// pool size including the 1-thread degenerate pool: the
+    /// panel-parallel NN driver is **bit-identical** to the serial one
+    /// (row panels start on even rows, so the 2-row pairing and the
+    /// kernel sequence per element never change).
+    #[test]
+    fn panel_parallel_nn_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(0x9a11);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (5, 13, 11),
+            (7, 130, 515),
+            (32, 784, 16),
+            (32, 784, 64),
+            (32, 784, 128),
+            (32, 256, 128),
+            (32, 3072, 256),
+            (33, 100, 600),
+        ];
+        for workers in [0usize, 1, 3] {
+            let pool = PanelPool::new(workers);
+            for &(m, k, n) in &shapes {
+                let a = rand_mat(&mut rng, m * k);
+                let b = rand_mat(&mut rng, k * n);
+                let base = rand_mat(&mut rng, m * n);
+                let mut serial = base.clone();
+                gemm_nn_acc_serial(&a, &b, &mut serial, m, k, n);
+                let mut par = base.clone();
+                assert!(gemm_nn_acc_on(&pool, &a, &b, &mut par, m, k, n));
+                assert!(
+                    par.iter().zip(&serial).all(|(p, s)| p.to_bits() == s.to_bits()),
+                    "nn {m}x{k}x{n} workers={workers}"
+                );
+            }
+        }
+    }
+
+    /// Same pin for the TN driver, including shapes short enough in M
+    /// to engage the NC column split.
+    #[test]
+    fn panel_parallel_tn_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(0x7b17);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (4, 2, 8),
+            (13, 5, 11),
+            (32, 130, 515),
+            (32, 256, 3072),
+            (32, 10, 784),
+            (32, 3, 1200), // mchunks=1: always column-split on any pool
+            (32, 120, 784),
+        ];
+        for workers in [0usize, 1, 3] {
+            let pool = PanelPool::new(workers);
+            for &(k, m, n) in &shapes {
+                let a = rand_mat(&mut rng, k * m);
+                let b = rand_mat(&mut rng, k * n);
+                let base = rand_mat(&mut rng, m * n);
+                let mut serial = base.clone();
+                gemm_tn_acc_serial(&a, &b, &mut serial, k, m, n);
+                let mut par = base.clone();
+                assert!(gemm_tn_acc_on(&pool, &a, &b, &mut par, k, m, n));
+                assert!(
+                    par.iter().zip(&serial).all(|(p, s)| p.to_bits() == s.to_bits()),
+                    "tn {k}x{m}x{n} workers={workers}"
+                );
+            }
+        }
+    }
+
+    /// The auto drivers (threshold + process pool + `with_serial`
+    /// override) agree bit-for-bit with the serial reference on the
+    /// largest zoo shape — whichever path they actually took.
+    #[test]
+    fn auto_dispatch_is_bit_identical_to_serial_on_large_shapes() {
+        let mut rng = Rng::new(0xA070);
+        let (m, k, n) = (32usize, 3072usize, 256usize);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_nn_acc_serial(&a, &b, &mut serial, m, k, n);
+        let mut auto = vec![0.0f32; m * n];
+        gemm_nn_acc(&a, &b, &mut auto, m, k, n);
+        assert!(auto.iter().zip(&serial).all(|(p, s)| p.to_bits() == s.to_bits()));
+        let mut forced = vec![0.0f32; m * n];
+        with_serial(|| gemm_nn_acc(&a, &b, &mut forced, m, k, n));
+        assert_eq!(forced, serial);
+
+        let at = rand_mat(&mut rng, 32 * 256);
+        let bt = rand_mat(&mut rng, 32 * 3072);
+        let mut serial_t = vec![0.0f32; 256 * 3072];
+        gemm_tn_acc_serial(&at, &bt, &mut serial_t, 32, 256, 3072);
+        let mut auto_t = vec![0.0f32; 256 * 3072];
+        gemm_tn_acc(&at, &bt, &mut auto_t, 32, 256, 3072);
+        assert!(auto_t.iter().zip(&serial_t).all(|(p, s)| p.to_bits() == s.to_bits()));
+    }
+
+    /// Fused multi-slot drivers: per-slot results are bit-identical to
+    /// the serial driver run on that slot alone.
+    #[test]
+    fn fused_slots_match_per_slot_serial() {
+        let mut rng = Rng::new(0xF0Fa);
+        let slots_n = 3usize;
+        for &(m, k, n) in &[(5usize, 9usize, 17usize), (32, 784, 64), (32, 100, 600)] {
+            let a: Vec<Vec<f32>> = (0..slots_n).map(|_| rand_mat(&mut rng, m * k)).collect();
+            let b: Vec<Vec<f32>> = (0..slots_n).map(|_| rand_mat(&mut rng, k * n)).collect();
+            let base: Vec<Vec<f32>> = (0..slots_n).map(|_| rand_mat(&mut rng, m * n)).collect();
+            let mut serial = base.clone();
+            for s in 0..slots_n {
+                gemm_nn_acc_serial(&a[s], &b[s], &mut serial[s], m, k, n);
+            }
+            let mut fused = base.clone();
+            let table: Vec<GemmSlot> = (0..slots_n)
+                .map(|s| GemmSlot {
+                    a: a[s].as_ptr(),
+                    b: b[s].as_ptr(),
+                    c: fused[s].as_mut_ptr(),
+                })
+                .collect();
+            // SAFETY: distinct Vec allocations per slot; the table does
+            // not outlive them.
+            unsafe { gemm_nn_acc_fused(&table, m, k, n) };
+            for s in 0..slots_n {
+                assert!(
+                    fused[s].iter().zip(&serial[s]).all(|(f, w)| f.to_bits() == w.to_bits()),
+                    "fused nn slot {s} {m}x{k}x{n}"
+                );
+            }
+        }
+        for &(k, m, n) in &[(4usize, 2usize, 8usize), (32, 64, 784), (32, 10, 784)] {
+            let a: Vec<Vec<f32>> = (0..slots_n).map(|_| rand_mat(&mut rng, k * m)).collect();
+            let b: Vec<Vec<f32>> = (0..slots_n).map(|_| rand_mat(&mut rng, k * n)).collect();
+            let base: Vec<Vec<f32>> = (0..slots_n).map(|_| rand_mat(&mut rng, m * n)).collect();
+            let mut serial = base.clone();
+            for s in 0..slots_n {
+                gemm_tn_acc_serial(&a[s], &b[s], &mut serial[s], k, m, n);
+            }
+            let mut fused = base.clone();
+            let table: Vec<GemmSlot> = (0..slots_n)
+                .map(|s| GemmSlot {
+                    a: a[s].as_ptr(),
+                    b: b[s].as_ptr(),
+                    c: fused[s].as_mut_ptr(),
+                })
+                .collect();
+            // SAFETY: as above.
+            unsafe { gemm_tn_acc_fused(&table, k, m, n) };
+            for s in 0..slots_n {
+                assert!(
+                    fused[s].iter().zip(&serial[s]).all(|(f, w)| f.to_bits() == w.to_bits()),
+                    "fused tn slot {s} {k}x{m}x{n}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -32,7 +32,9 @@ pub mod reference;
 pub mod simd;
 pub mod stats;
 
-pub use backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepScratch, StepStats};
+pub use backend::{
+    AdamState, BackendKind, EvalStats, FusedSlot, ModelExecutor, StepScratch, StepStats,
+};
 pub use manifest::{ArtifactInfo, DatasetInfo, Manifest, ZooInfo};
 pub use native::NativeExecutor;
 #[cfg(feature = "pjrt")]

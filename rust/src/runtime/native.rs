@@ -40,7 +40,9 @@ use std::sync::Arc;
 use crate::util::error::{bail, Context, Result};
 use crate::util::Rng;
 
-use super::backend::{AdamState, BackendKind, EvalStats, ModelExecutor, StepScratch, StepStats};
+use super::backend::{
+    AdamState, BackendKind, EvalStats, FusedSlot, ModelExecutor, StepScratch, StepStats,
+};
 use super::gemm;
 use super::manifest::{ArtifactInfo, DatasetInfo, Manifest, ZooInfo};
 use super::stats;
@@ -263,39 +265,7 @@ impl NativeExecutor {
         dz_scale: Option<f32>,
         s: &mut StepScratch,
     ) -> (f64, usize) {
-        let c = self.classes;
-        let logits = &s.logits[..n * c];
-        let losses = &mut s.losses[..n];
-        let mut hits = 0usize;
-        for i in 0..n {
-            let z = &logits[i * c..(i + 1) * c];
-            let mut max = f32::NEG_INFINITY;
-            let mut argmax = 0usize;
-            for (j, &v) in z.iter().enumerate() {
-                if v > max {
-                    max = v;
-                    argmax = j;
-                }
-            }
-            let mut sum = 0.0f32;
-            for &v in z {
-                sum += (v - max).exp();
-            }
-            let lse = max + sum.ln();
-            let label = y[i] as usize;
-            losses[i] = lse - z[label];
-            if argmax == label {
-                hits += 1;
-            }
-            if let Some(scale) = dz_scale {
-                let d = &mut s.dz[i * c..(i + 1) * c];
-                for (j, &v) in z.iter().enumerate() {
-                    d[j] = ((v - lse).exp() - if j == label { 1.0 } else { 0.0 }) * scale;
-                }
-            }
-        }
-        let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
-        (loss_sum, hits)
+        softmax_xent_slices(y, n, self.classes, dz_scale, &s.logits, &mut s.losses, &mut s.dz)
     }
 
     /// Backward pass through the blocked kernels, consuming the `dz` the
@@ -411,6 +381,34 @@ impl NativeExecutor {
             self.num_params - self.head_size
         } else {
             0
+        }
+    }
+
+    /// Largest per-layer parameter block `fan_out × (fan_in + 1)` — the
+    /// per-slot gradient arena of the fused step path (which updates
+    /// layer by layer instead of materialising a full flat gradient).
+    fn max_layer_params(&self) -> usize {
+        self.dims.iter().map(|&(i, o)| o * (i + 1)).max().unwrap_or(0)
+    }
+
+    /// Grow the scratch arenas for a fused step over `slots` agents ×
+    /// `n` examples. Steady state this is a handful of compare-and-skip
+    /// checks, like [`Self::prepare_scratch`].
+    fn prepare_fused_scratch(&self, s: &mut StepScratch, n: usize, slots: usize) {
+        StepScratch::grow_f32(&mut s.acts, slots * n * self.hidden_sum);
+        StepScratch::grow_f32(&mut s.logits, slots * n * self.classes);
+        StepScratch::grow_f32(&mut s.losses, n);
+        StepScratch::grow_f32(&mut s.wt, slots * self.max_wt);
+        StepScratch::grow_f32(&mut s.dz, slots * n * self.max_width);
+        StepScratch::grow_f32(&mut s.dprev, slots * n * self.max_width);
+        StepScratch::grow_f32(&mut s.grad, slots * self.max_layer_params());
+        s.fused_ptrs.clear();
+        if s.fused_ptrs.capacity() < slots {
+            stats::add_allocated(
+                ((slots - s.fused_ptrs.capacity()) * std::mem::size_of::<gemm::GemmSlot>())
+                    as u64,
+            );
+            s.fused_ptrs.reserve(slots);
         }
     }
 
@@ -544,6 +542,223 @@ impl ModelExecutor for NativeExecutor {
         Ok(step)
     }
 
+    /// The fused multi-agent SGD step: every layer's forward `X·Wᵀ`,
+    /// backward `dz·W`, and weight-gradient `dzᵀ·X` runs as **one**
+    /// fused panel-parallel GEMM across the whole cohort
+    /// ([`gemm::gemm_nn_acc_fused`] / [`gemm::gemm_tn_acc_fused`]), so
+    /// co-scheduled agents amortise kernel dispatch instead of
+    /// contending for cores. Per-slot arithmetic is exactly the serial
+    /// step's (the fused drivers are bit-identical per slot, and the
+    /// per-layer in-place update reads each `W_l` only before writing
+    /// it), so results are bit-identical to per-agent
+    /// [`Self::train_step_sgd`] calls — pinned by the tests below.
+    fn train_step_sgd_fused(
+        &self,
+        slots: &mut [FusedSlot<'_>],
+        lr: f32,
+        scratch: &mut StepScratch,
+        stats_out: &mut Vec<StepStats>,
+    ) -> Result<()> {
+        stats_out.clear();
+        if slots.is_empty() {
+            return Ok(());
+        }
+        if slots.len() == 1 {
+            let s0 = &mut slots[0];
+            stats_out.push(self.sgd_step(s0.params, s0.x, s0.y, lr, self.featext, scratch)?);
+            return Ok(());
+        }
+        let n = self.train_batch;
+        for slot in slots.iter() {
+            self.check_batch(slot.params, slot.x, slot.y, n)?;
+        }
+        let s_count = slots.len();
+        self.prepare_fused_scratch(scratch, n, s_count);
+        let nlayers = self.dims.len();
+        let acts_stride = n * self.hidden_sum;
+        let logit_stride = n * self.classes;
+        let dz_stride = n * self.max_width;
+        let max_layer = self.max_layer_params();
+
+        // ---- forward: one fused X·Wᵀ per layer across the cohort.
+        let mut offset = 0usize;
+        let mut apos = 0usize; // per-slot activation offset of layer l
+        for (l, &(fan_in, fan_out)) in self.dims.iter().enumerate() {
+            let last = l + 1 == nlayers;
+            let wsize = fan_out * fan_in;
+            for (s, slot) in slots.iter().enumerate() {
+                let w = &slot.params[offset..offset + wsize];
+                let bias = &slot.params[offset + wsize..offset + wsize + fan_out];
+                let wt = &mut scratch.wt[s * self.max_wt..s * self.max_wt + wsize];
+                gemm::transpose(w, wt, fan_out, fan_in);
+                let out = if last {
+                    &mut scratch.logits[s * logit_stride..s * logit_stride + n * fan_out]
+                } else {
+                    let base = s * acts_stride + apos;
+                    &mut scratch.acts[base..base + n * fan_out]
+                };
+                for row in out.chunks_exact_mut(fan_out) {
+                    row.copy_from_slice(bias);
+                }
+            }
+            let acts_ptr = scratch.acts.as_mut_ptr();
+            let logits_ptr = scratch.logits.as_mut_ptr();
+            let wt_ptr = scratch.wt.as_ptr();
+            scratch.fused_ptrs.clear();
+            for (s, slot) in slots.iter().enumerate() {
+                // SAFETY (pointer arithmetic only): all offsets are in
+                // bounds of the arenas grown above.
+                let (a, b, c) = unsafe {
+                    (
+                        if l == 0 {
+                            slot.x.as_ptr()
+                        } else {
+                            acts_ptr.add(s * acts_stride + apos - n * fan_in) as *const f32
+                        },
+                        wt_ptr.add(s * self.max_wt),
+                        if last {
+                            logits_ptr.add(s * logit_stride)
+                        } else {
+                            acts_ptr.add(s * acts_stride + apos)
+                        },
+                    )
+                };
+                scratch.fused_ptrs.push(gemm::GemmSlot { a, b, c });
+            }
+            // SAFETY: per slot, `a` reads the batch or the previous
+            // layer's activation region, `b` reads that slot's
+            // transposed weights, and `c` writes that slot's own
+            // output region — all disjoint regions of arenas that
+            // outlive the call.
+            unsafe { gemm::gemm_nn_acc_fused(&scratch.fused_ptrs, n, fan_in, fan_out) };
+            if !last {
+                for s in 0..s_count {
+                    let base = s * acts_stride + apos;
+                    for v in scratch.acts[base..base + n * fan_out].iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                apos += n * fan_out;
+            }
+            offset += fan_out * (fan_in + 1);
+        }
+
+        // ---- loss + dz per slot.
+        let scale = 1.0 / n as f32;
+        for (s, slot) in slots.iter().enumerate() {
+            let logits = &scratch.logits[s * logit_stride..(s + 1) * logit_stride];
+            let dz = &mut scratch.dz[s * dz_stride..s * dz_stride + n * self.classes];
+            let (loss_sum, hits) = softmax_xent_slices(
+                slot.y,
+                n,
+                self.classes,
+                Some(scale),
+                logits,
+                &mut scratch.losses,
+                dz,
+            );
+            stats_out.push(StepStats {
+                loss: (loss_sum / n as f64) as f32,
+                hits: hits as f32,
+            });
+            stats::add_execution();
+        }
+
+        // ---- backward: fused dz·W and dzᵀ·X per layer, with the SGD
+        // update applied in place per layer (each W_l is read for the
+        // input gradient before it is written).
+        for l in (0..nlayers).rev() {
+            let (fan_in, fan_out) = self.dims[l];
+            let off = self.offsets[l];
+            let stop = l == 0 || (self.featext && l + 1 == nlayers);
+            if !stop {
+                let astart = self.act_start(l - 1, n);
+                for s in 0..s_count {
+                    scratch.dprev[s * dz_stride..s * dz_stride + n * fan_in].fill(0.0);
+                }
+                let dz_ptr = scratch.dz.as_ptr();
+                let dp_ptr = scratch.dprev.as_mut_ptr();
+                scratch.fused_ptrs.clear();
+                for (s, slot) in slots.iter().enumerate() {
+                    // SAFETY: in-bounds offsets (see above).
+                    let (a, b, c) = unsafe {
+                        (
+                            dz_ptr.add(s * dz_stride),
+                            slot.params[off..].as_ptr(),
+                            dp_ptr.add(s * dz_stride),
+                        )
+                    };
+                    scratch.fused_ptrs.push(gemm::GemmSlot { a, b, c });
+                }
+                // SAFETY: reads each slot's dz region and its (not yet
+                // updated) layer weights, writes its disjoint dprev
+                // region.
+                unsafe { gemm::gemm_nn_acc_fused(&scratch.fused_ptrs, n, fan_out, fan_in) };
+                for s in 0..s_count {
+                    let base = s * acts_stride + astart;
+                    let prev = &scratch.acts[base..base + n * fan_in];
+                    let dp = &mut scratch.dprev[s * dz_stride..s * dz_stride + n * fan_in];
+                    for (d, &a) in dp.iter_mut().zip(prev) {
+                        if a <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                }
+            }
+            // Zero the whole per-slot layer block — weight part for the
+            // TN accumulate below, bias tail for the `+=` bias loop
+            // (the arena is reused across layers and steps, so a
+            // weight-only fill would leak stale bias gradients in).
+            let lsize = fan_out * (fan_in + 1);
+            for s in 0..s_count {
+                scratch.grad[s * max_layer..s * max_layer + lsize].fill(0.0);
+            }
+            let dz_ptr = scratch.dz.as_ptr();
+            let g_ptr = scratch.grad.as_mut_ptr();
+            let acts_ro = scratch.acts.as_ptr();
+            scratch.fused_ptrs.clear();
+            for (s, slot) in slots.iter().enumerate() {
+                // SAFETY: in-bounds offsets (see above).
+                let (a, b, c) = unsafe {
+                    (
+                        dz_ptr.add(s * dz_stride),
+                        if l == 0 {
+                            slot.x.as_ptr()
+                        } else {
+                            acts_ro.add(s * acts_stride + self.act_start(l - 1, n))
+                        },
+                        g_ptr.add(s * max_layer),
+                    )
+                };
+                scratch.fused_ptrs.push(gemm::GemmSlot { a, b, c });
+            }
+            // SAFETY: reads each slot's dz and layer-input regions,
+            // writes its disjoint layer-gradient region.
+            unsafe { gemm::gemm_tn_acc_fused(&scratch.fused_ptrs, n, fan_out, fan_in) };
+            for (s, slot) in slots.iter_mut().enumerate() {
+                let g = &mut scratch.grad[s * max_layer..s * max_layer + lsize];
+                {
+                    let (_, gb) = g.split_at_mut(fan_out * fan_in);
+                    let dzs = &scratch.dz[s * dz_stride..s * dz_stride + n * fan_out];
+                    for di in dzs.chunks_exact(fan_out) {
+                        for (gbj, &d) in gb.iter_mut().zip(di) {
+                            *gbj += d;
+                        }
+                    }
+                }
+                let pl = &mut slot.params[off..off + lsize];
+                for (p, &gv) in pl.iter_mut().zip(g.iter()) {
+                    *p -= lr * gv;
+                }
+            }
+            if stop {
+                break;
+            }
+            std::mem::swap(&mut scratch.dz, &mut scratch.dprev);
+        }
+        Ok(())
+    }
+
     fn eval_batch(
         &self,
         params: &[f32],
@@ -612,6 +827,55 @@ impl ModelExecutor for NativeExecutor {
         });
         Ok(out)
     }
+}
+
+/// Softmax cross-entropy over `logits[..n·classes]`: fills
+/// `losses[..n]` (and `dz[i·classes..][..classes] = (softmax − onehot)
+/// · scale` when a scale is given — `dz` may be empty otherwise),
+/// returning the f64 loss sum and the argmax hit count. Slice-level so
+/// the serial and fused step paths share one implementation.
+fn softmax_xent_slices(
+    y: &[i32],
+    n: usize,
+    classes: usize,
+    dz_scale: Option<f32>,
+    logits: &[f32],
+    losses: &mut [f32],
+    dz: &mut [f32],
+) -> (f64, usize) {
+    let c = classes;
+    let logits = &logits[..n * c];
+    let losses = &mut losses[..n];
+    let mut hits = 0usize;
+    for i in 0..n {
+        let z = &logits[i * c..(i + 1) * c];
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &v) in z.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = j;
+            }
+        }
+        let mut sum = 0.0f32;
+        for &v in z {
+            sum += (v - max).exp();
+        }
+        let lse = max + sum.ln();
+        let label = y[i] as usize;
+        losses[i] = lse - z[label];
+        if argmax == label {
+            hits += 1;
+        }
+        if let Some(scale) = dz_scale {
+            let d = &mut dz[i * c..(i + 1) * c];
+            for (j, &v) in z.iter().enumerate() {
+                d[j] = ((v - lse).exp() - if j == label { 1.0 } else { 0.0 }) * scale;
+            }
+        }
+    }
+    let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
+    (loss_sum, hits)
 }
 
 /// `out[i] = global[lo+i] + Σ_k w_k · delta_k[lo+i]`, accumulated in f64
@@ -1033,6 +1297,126 @@ mod tests {
             checked += 1;
         }
         assert!(checked > 50, "only {checked} coords had usable gradients");
+    }
+
+    /// The fused multi-agent step is bit-identical to per-agent serial
+    /// steps across every zoo shape — including the second lockstep
+    /// step, where the slots' weights have already diverged (the fused
+    /// path must handle per-slot weights, not just a shared W^t).
+    #[test]
+    fn fused_steps_match_per_agent_serial_steps_across_zoo() {
+        let m = Arc::new(native_manifest());
+        for art in &m.artifacts {
+            let e = NativeExecutor::load(&m, &art.model, &art.dataset, "sgd", "full").unwrap();
+            let ds = crate::datasets::Dataset::load(&m, &art.dataset, 19).unwrap();
+            let n = e.train_batch_size();
+            let s_count = 3usize;
+            let batches: Vec<_> = (0..s_count)
+                .map(|s| {
+                    let idx: Vec<usize> =
+                        (0..n).map(|i| (s * 7 + i * 3) % ds.num_train()).collect();
+                    ds.batch(Split::Train, &idx)
+                })
+                .collect();
+            let p0 = e.init_params().unwrap();
+
+            let mut serial: Vec<Vec<f32>> = (0..s_count).map(|_| p0.clone()).collect();
+            let mut sref = e.new_scratch();
+            let mut serial_stats = Vec::new();
+            for step in 0..2 {
+                for s in 0..s_count {
+                    let bt = &batches[s];
+                    let st = e
+                        .train_step_sgd(&mut serial[s], &bt.x, &bt.y, 0.1, &mut sref)
+                        .unwrap();
+                    if step == 1 {
+                        serial_stats.push(st);
+                    }
+                }
+            }
+
+            let mut fused: Vec<Vec<f32>> = (0..s_count).map(|_| p0.clone()).collect();
+            let mut scratch = e.new_scratch();
+            let mut stats = Vec::new();
+            for _ in 0..2 {
+                let mut slots: Vec<FusedSlot> = fused
+                    .iter_mut()
+                    .zip(&batches)
+                    .map(|(p, b)| FusedSlot { params: p, x: &b.x, y: &b.y })
+                    .collect();
+                e.train_step_sgd_fused(&mut slots, 0.1, &mut scratch, &mut stats).unwrap();
+            }
+            assert_eq!(stats.len(), s_count);
+            for s in 0..s_count {
+                assert_eq!(serial[s], fused[s], "{} slot {s}: params", art.id);
+                assert_eq!(stats[s].loss, serial_stats[s].loss, "{} slot {s}: loss", art.id);
+                assert_eq!(stats[s].hits, serial_stats[s].hits, "{} slot {s}: hits", art.id);
+            }
+        }
+    }
+
+    /// Fused featext: backbone frozen on every slot, head bit-identical
+    /// to the per-agent serial featext steps.
+    #[test]
+    fn fused_featext_matches_serial_and_freezes_backbone() {
+        let m = Arc::new(native_manifest());
+        let e = NativeExecutor::load(&m, "mlp-m", "synth-mnist", "sgd", "featext").unwrap();
+        let ds = crate::datasets::Dataset::load(&m, "synth-mnist", 23).unwrap();
+        let n = e.train_batch_size();
+        let pre = e.pretrained_params().unwrap();
+        let batches: Vec<_> = (0..2usize)
+            .map(|s| {
+                let idx: Vec<usize> = (0..n).map(|i| (s * 11 + i) % ds.num_train()).collect();
+                ds.batch(Split::Train, &idx)
+            })
+            .collect();
+
+        let mut serial: Vec<Vec<f32>> = (0..2).map(|_| pre.clone()).collect();
+        let mut sref = e.new_scratch();
+        for s in 0..2 {
+            e.train_step_sgd(&mut serial[s], &batches[s].x, &batches[s].y, 0.1, &mut sref)
+                .unwrap();
+        }
+
+        let mut fused: Vec<Vec<f32>> = (0..2).map(|_| pre.clone()).collect();
+        let mut scratch = e.new_scratch();
+        let mut stats = Vec::new();
+        let mut slots: Vec<FusedSlot> = fused
+            .iter_mut()
+            .zip(&batches)
+            .map(|(p, b)| FusedSlot { params: p, x: &b.x, y: &b.y })
+            .collect();
+        e.train_step_sgd_fused(&mut slots, 0.1, &mut scratch, &mut stats).unwrap();
+
+        let backbone = e.num_params() - e.head_size();
+        for s in 0..2 {
+            assert_eq!(fused[s][..backbone], pre[..backbone], "slot {s}: backbone frozen");
+            assert_eq!(serial[s], fused[s], "slot {s}: fused == serial");
+        }
+    }
+
+    /// A single-slot fused call degenerates to the plain serial step.
+    #[test]
+    fn fused_single_slot_equals_serial_step() {
+        let m = Arc::new(native_manifest());
+        let e = NativeExecutor::load(&m, "mlp-s", "synth-mnist", "sgd", "full").unwrap();
+        let ds = crate::datasets::Dataset::load(&m, "synth-mnist", 29).unwrap();
+        let idx: Vec<usize> = (0..e.train_batch_size()).collect();
+        let batch = ds.batch(Split::Train, &idx);
+        let p0 = e.init_params().unwrap();
+
+        let mut ps = p0.clone();
+        let mut sref = e.new_scratch();
+        let want = e.train_step_sgd(&mut ps, &batch.x, &batch.y, 0.05, &mut sref).unwrap();
+
+        let mut pf = p0.clone();
+        let mut scratch = e.new_scratch();
+        let mut stats = Vec::new();
+        let mut slots = [FusedSlot { params: &mut pf, x: &batch.x, y: &batch.y }];
+        e.train_step_sgd_fused(&mut slots, 0.05, &mut scratch, &mut stats).unwrap();
+        assert_eq!(ps, pf);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].loss, want.loss);
     }
 
     /// A reused scratch arena produces bit-identical results to a fresh

@@ -96,6 +96,13 @@ pub type FixedAccum = fn(&mut [i128], &[f32], f64, f64, f64);
 pub type SynthNoise = fn(&mut [f32], f32, u64);
 
 /// The dispatch table: one function pointer per hot inner loop.
+///
+/// Tables are `'static` and hold plain `fn` pointers, so a resolved
+/// `&'static Kernels` is freely shared across threads — the
+/// panel-parallel GEMM drivers resolve the table once on the
+/// submitting thread and hand the same reference to every panel job,
+/// keeping the dispatch level (and therefore the bit pattern)
+/// identical across the panels of one product.
 pub struct Kernels {
     pub name: &'static str,
     pub axpy4_2: Axpy42,

@@ -13,4 +13,4 @@ pub mod threadpool;
 pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;
-pub use threadpool::{pipeline, shared_pool, WorkerPool};
+pub use threadpool::{gemm_threads, panel_pool, pipeline, shared_pool, PanelPool, WorkerPool};

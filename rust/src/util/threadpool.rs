@@ -1,14 +1,23 @@
-//! A small fixed-size worker pool over std threads.
+//! Worker pools over std threads: the agent-level [`WorkerPool`] and
+//! the panel-level [`PanelPool`].
 //!
 //! The FL entrypoint dispatches each sampled agent's local training round
-//! onto this pool — the simulated analogue of clients training in
-//! parallel on their own devices. Workers own thread-local state (their
-//! own PJRT client + compiled executables, since the `xla` wrappers are
-//! `Rc`-based and not `Send`), created lazily by an `init` closure the
-//! first time a job runs on that worker.
+//! onto the [`WorkerPool`] — the simulated analogue of clients training
+//! in parallel on their own devices. Workers own thread-local state
+//! (their own PJRT client + compiled executables, since the `xla`
+//! wrappers are `Rc`-based and not `Send`), created lazily by an `init`
+//! closure the first time a job runs on that worker.
+//!
+//! The [`PanelPool`] sits *under* that layer: the GEMM drivers in
+//! `runtime::gemm` split one large matrix product into disjoint output
+//! panels and fan them across it (claim-based, allocation-free waitable
+//! jobs — see the panel-pool section below). `FERRISFL_THREADS` (via
+//! [`gemm_threads`]) caps only this panel fan-out; the agent-level pool
+//! is sized by `FlParams::workers`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 /// The process-wide shared pool: round evaluation shards test batches
@@ -187,6 +196,266 @@ where
     })
 }
 
+// ==================================================== panel pool
+//
+// The GEMM drivers split one matrix product into independent output
+// panels and run them across this pool. Unlike [`WorkerPool::run`] —
+// which boxes each job and collects results through channels — a panel
+// job is published as a single type-erased `(fn, ctx)` pair and workers
+// *claim* panel indices from a shared counter, so a warm hot-path
+// dispatch performs **zero heap allocations** (pinned by
+// `tests/zero_alloc.rs`). The submitting thread participates in the
+// claim loop, so a pool with zero helper threads degenerates to the
+// serial loop.
+
+/// Hard cap on panel helper threads (the leader is the +1).
+const MAX_PANEL_WORKERS: usize = 15;
+
+/// Threads the panel-parallel GEMM drivers may use, including the
+/// calling thread: `FERRISFL_THREADS` when set (clamped to
+/// `[1, MAX_PANEL_WORKERS + 1]`; `0`/`auto` mean auto-detect, `1`
+/// forces every GEMM serial), else `available_parallelism` clamped to
+/// 8. Resolved once per process.
+pub fn gemm_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 8);
+        let req = std::env::var("FERRISFL_THREADS").ok();
+        match req.as_deref().map(str::trim) {
+            None | Some("") | Some("0") | Some("auto") => auto,
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) => n.clamp(1, MAX_PANEL_WORKERS + 1),
+                Err(_) => {
+                    eprintln!(
+                        "warning: unknown FERRISFL_THREADS value {s:?} \
+                         (want a thread count, 0, or auto); using {auto}"
+                    );
+                    auto
+                }
+            },
+        }
+    })
+}
+
+/// The process-wide panel pool the GEMM drivers fan panels out on:
+/// `gemm_threads() - 1` helper threads (the calling thread is the
+/// extra one). With `FERRISFL_THREADS=1` the pool has no helpers and
+/// the auto drivers never engage it.
+pub fn panel_pool() -> &'static PanelPool {
+    static POOL: OnceLock<PanelPool> = OnceLock::new();
+    POOL.get_or_init(|| PanelPool::new(gemm_threads().saturating_sub(1)))
+}
+
+/// A published panel job: a monomorphized trampoline plus a pointer to
+/// the leader's closure. The leader keeps the closure alive until every
+/// claimed panel has finished, so the pointer never dangles while a
+/// worker can still dereference it.
+#[derive(Clone, Copy)]
+struct RawPanelJob {
+    call: unsafe fn(*const (), usize),
+    ctx: *const (),
+}
+
+// SAFETY: the pointer is only dereferenced through `call` while the
+// submitting `try_run` frame (which owns the referent) is blocked
+// waiting for the job to finish; the referent is `Sync`.
+unsafe impl Send for RawPanelJob {}
+
+struct PanelState {
+    /// Bumped per published job so sleeping workers can tell a new job
+    /// from the one they already drained.
+    epoch: u64,
+    /// Panels in the current job.
+    panels: usize,
+    /// Next unclaimed panel index.
+    next: usize,
+    /// Panels claimed or unclaimed but not yet finished.
+    remaining: usize,
+    job: Option<RawPanelJob>,
+    shutdown: bool,
+}
+
+struct PanelShared {
+    state: Mutex<PanelState>,
+    /// Workers sleep here between jobs.
+    work: Condvar,
+    /// The leader sleeps here while workers finish their claims.
+    done: Condvar,
+}
+
+/// Fixed pool of helper threads executing claim-based panel jobs — see
+/// the module-level notes above. One job runs at a time; a second
+/// submitter is refused ([`PanelPool::try_run`] returns `false`) rather
+/// than queued, because a busy pool means the cores are already doing
+/// panel work and the refused caller's serial path is the better use of
+/// its own core.
+pub struct PanelPool {
+    shared: Arc<PanelShared>,
+    busy: AtomicBool,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl PanelPool {
+    /// Spawn `workers` helper threads (0 is valid: `try_run` then runs
+    /// every panel on the calling thread — the degenerate 1-thread
+    /// pool).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.min(MAX_PANEL_WORKERS);
+        let shared = Arc::new(PanelShared {
+            state: Mutex::new(PanelState {
+                epoch: 0,
+                panels: 0,
+                next: 0,
+                remaining: 0,
+                job: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ferrisfl-panel-{wid}"))
+                    .spawn(move || panel_worker(&shared))
+                    .expect("spawn panel worker")
+            })
+            .collect();
+        Self {
+            shared,
+            busy: AtomicBool::new(false),
+            handles,
+        }
+    }
+
+    /// Helper threads (the calling thread adds one more).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(0..panels)` across the pool, the calling thread included,
+    /// blocking until every panel has finished. Panels may run in any
+    /// order and concurrently — `f` must only touch disjoint state per
+    /// index. Returns `false` without calling `f` when another job is
+    /// already in flight (the caller should run its serial path).
+    pub fn try_run<F>(&self, panels: usize, f: &F) -> bool
+    where
+        F: Fn(usize) + Sync,
+    {
+        if panels == 0 {
+            return true;
+        }
+        if self
+            .busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return false;
+        }
+        unsafe fn trampoline<F: Fn(usize)>(ctx: *const (), i: usize) {
+            (*(ctx as *const F))(i)
+        }
+        let job = RawPanelJob {
+            call: trampoline::<F>,
+            ctx: f as *const F as *const (),
+        };
+        {
+            let mut st = self.shared.state.lock().expect("panel pool poisoned");
+            st.epoch = st.epoch.wrapping_add(1);
+            st.panels = panels;
+            st.next = 0;
+            st.remaining = panels;
+            st.job = Some(job);
+            self.shared.work.notify_all();
+        }
+        // The leader claims panels alongside the workers.
+        loop {
+            let i = {
+                let mut st = self.shared.state.lock().expect("panel pool poisoned");
+                if st.next >= st.panels {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                i
+            };
+            f(i);
+            let mut st = self.shared.state.lock().expect("panel pool poisoned");
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                self.shared.done.notify_all();
+            }
+        }
+        // Wait out panels claimed by workers, then retire the job so the
+        // closure pointer cannot outlive this frame.
+        let mut st = self.shared.state.lock().expect("panel pool poisoned");
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).expect("panel pool poisoned");
+        }
+        st.job = None;
+        drop(st);
+        self.busy.store(false, Ordering::Release);
+        true
+    }
+}
+
+impl Drop for PanelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("panel pool poisoned");
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panel_worker(shared: &PanelShared) {
+    let mut seen = 0u64;
+    let mut st = shared.state.lock().expect("panel pool poisoned");
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let fresh = st.job.is_some() && st.epoch != seen;
+        let claimable = fresh && st.next < st.panels;
+        if !claimable {
+            if fresh {
+                // Fully claimed before this worker woke: nothing to do
+                // for this epoch.
+                seen = st.epoch;
+            }
+            st = shared.work.wait(st).expect("panel pool poisoned");
+            continue;
+        }
+        let job = st.job.expect("claimable job present");
+        loop {
+            let i = st.next;
+            st.next += 1;
+            drop(st);
+            // SAFETY: the leader blocks in `try_run` until `remaining`
+            // reaches zero, which cannot happen before the decrement
+            // below — so the closure behind `ctx` is alive here.
+            unsafe { (job.call)(job.ctx, i) };
+            st = shared.state.lock().expect("panel pool poisoned");
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_all();
+            }
+            if st.next >= st.panels {
+                break;
+            }
+        }
+        seen = st.epoch;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +571,95 @@ mod tests {
         );
         assert_eq!(res.unwrap_err(), "boom");
         assert_eq!(consumed, 6, "items 0..=5 consumed, then stop");
+    }
+
+    // ----------------------------------------------------- panel pool
+
+    /// Every panel index runs exactly once, whatever the pool size —
+    /// including the degenerate 0-helper pool (leader-only claims).
+    #[test]
+    fn panel_pool_runs_every_panel_once() {
+        for workers in [0usize, 1, 3] {
+            let pool = PanelPool::new(workers);
+            assert_eq!(pool.workers(), workers);
+            let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            let ran = pool.try_run(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(ran, "workers={workers}");
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "workers={workers}"
+            );
+        }
+    }
+
+    /// Sequential jobs reuse the pool; zero-panel jobs are a no-op.
+    #[test]
+    fn panel_pool_reuses_across_jobs() {
+        let pool = PanelPool::new(2);
+        assert!(pool.try_run(0, &|_| panic!("no panels to run")));
+        for round in 1..=5usize {
+            let sum = AtomicUsize::new(0);
+            assert!(pool.try_run(round * 4, &|i| {
+                sum.fetch_add(i + 1, Ordering::SeqCst);
+            }));
+            let n = round * 4;
+            assert_eq!(sum.load(Ordering::SeqCst), n * (n + 1) / 2, "round {round}");
+        }
+    }
+
+    /// Disjoint-slice panel writes — the exact shape the GEMM drivers
+    /// use — land in the right places.
+    #[test]
+    fn panel_pool_disjoint_writes() {
+        struct SendMut(*mut usize);
+        unsafe impl Sync for SendMut {}
+        let pool = PanelPool::new(3);
+        let mut out = vec![0usize; 64];
+        let ptr = SendMut(out.as_mut_ptr());
+        let chunk = 8;
+        pool.try_run(out.len() / chunk, &|p| {
+            // SAFETY: each panel writes its own disjoint chunk.
+            let s = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(p * chunk), chunk) };
+            for (j, v) in s.iter_mut().enumerate() {
+                *v = p * chunk + j;
+            }
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    /// A second submission while a job is in flight is refused (the
+    /// caller then runs its serial path) instead of deadlocking.
+    #[test]
+    fn panel_pool_refuses_nested_submission() {
+        let pool = PanelPool::new(1);
+        let nested_ran = AtomicUsize::new(0);
+        let refused = AtomicUsize::new(0);
+        let ran = pool.try_run(4, &|_| {
+            if pool.try_run(2, &|_| {
+                nested_ran.fetch_add(1, Ordering::SeqCst);
+            }) {
+                nested_ran.fetch_add(100, Ordering::SeqCst);
+            } else {
+                refused.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(ran);
+        assert_eq!(nested_ran.load(Ordering::SeqCst), 0);
+        assert_eq!(refused.load(Ordering::SeqCst), 4);
+        // The pool is usable again after the refusals.
+        let count = AtomicUsize::new(0);
+        assert!(pool.try_run(3, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn gemm_threads_is_at_least_one() {
+        assert!(gemm_threads() >= 1);
+        assert!(panel_pool().workers() + 1 >= 1);
     }
 
     #[test]

@@ -221,6 +221,59 @@ fn streaming_round_matches_materialized_round() {
     }
 }
 
+/// A fused lockstep round (`fuse = true`) reproduces the pooled round:
+/// the fused step is bit-identical to the per-agent serial steps and
+/// the streaming reduce is order-invariant, so the global model, the
+/// sampled cohorts, and the round metrics must all agree within the
+/// golden contract.
+#[test]
+fn fused_round_matches_pooled_round() {
+    let m = native_manifest();
+    let base = FlParams {
+        model: "mlp-s".into(),
+        num_agents: 8,
+        sampling_ratio: 0.5,
+        global_epochs: 3,
+        local_epochs: 2,
+        workers: 2,
+        seed: 11,
+        ..native_fl_params("itest_fuse_parity")
+    };
+
+    let mut pooled = Entrypoint::new(base.clone(), Arc::clone(&m)).unwrap();
+    let res_pooled = pooled.run(&mut NullLogger).unwrap();
+
+    let mut fused = Entrypoint::new(
+        FlParams {
+            fuse: true,
+            ..base
+        },
+        Arc::clone(&m),
+    )
+    .unwrap();
+    let res_fused = fused.run(&mut NullLogger).unwrap();
+
+    let (gp, gf) = (pooled.global_params(), fused.global_params());
+    assert_eq!(gp.len(), gf.len());
+    for (j, (a, b)) in gp.iter().zip(gf).enumerate() {
+        let tol = 1e-5 * a.abs().max(1.0);
+        assert!((a - b).abs() <= tol, "coord {j}: pooled {a} vs fused {b}");
+    }
+    assert_eq!(res_pooled.rounds.len(), res_fused.rounds.len());
+    for (rp, rf) in res_pooled.rounds.iter().zip(&res_fused.rounds) {
+        assert_eq!(rp.sampled, rf.sampled, "round {}", rp.round);
+        assert!(
+            (rp.train_loss - rf.train_loss).abs() < 1e-6,
+            "round {}: {} vs {}",
+            rp.round,
+            rp.train_loss,
+            rf.train_loss
+        );
+    }
+    let (ap, af) = (res_pooled.final_eval.accuracy(), res_fused.final_eval.accuracy());
+    assert!((ap - af).abs() < 1e-6, "final accuracy {ap} vs {af}");
+}
+
 /// Golden check for the SGD step: the analytic gradient (recovered from
 /// an lr=1 step) matches central finite differences of the eval loss.
 #[test]

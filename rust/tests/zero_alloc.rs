@@ -17,7 +17,10 @@ use std::sync::Arc;
 
 use ferrisfl::aggregators::StreamingAccumulator;
 use ferrisfl::datasets::{BatchBuf, Dataset, Split};
-use ferrisfl::runtime::{simd, snapshot, AdamState, Manifest, ModelExecutor, NativeExecutor};
+use ferrisfl::runtime::{
+    gemm, simd, snapshot, AdamState, FusedSlot, Manifest, ModelExecutor, NativeExecutor,
+};
+use ferrisfl::util::PanelPool;
 
 thread_local! {
     static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
@@ -55,8 +58,15 @@ fn allocs() -> u64 {
     ALLOC_COUNT.with(|c| c.get())
 }
 
+/// Tests that drive executor steps serialize on this lock: the
+/// runtime's stats counters are process-global and the SGD test
+/// asserts an exact execution delta, so concurrent step-running tests
+/// would race it.
+static STEP_TESTS: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 #[test]
 fn steady_state_step_path_allocates_nothing() {
+    let _step_guard = STEP_TESTS.lock().unwrap_or_else(|e| e.into_inner());
     // Resolve the SIMD dispatch up front (the one-time env read +
     // OnceLock init may allocate); the counted steps below then run
     // through whichever kernel table is active — the zero-alloc
@@ -155,6 +165,79 @@ fn cold_synthesis_pass_allocates_nothing() {
         ds.synthesize_into(Split::Train, i, &mut out);
     }
     assert_eq!(allocs() - before, 0, "synthesize_into must not allocate");
+}
+
+/// Warm panel-parallel GEMMs allocate nothing on the submitting
+/// thread: the claim-based panel pool publishes each job in place (no
+/// boxed closures, no result channels — unlike the agent-level
+/// `WorkerPool`), and the drivers slice preallocated buffers. (The
+/// allocation counter is thread-local, so this pins the leader's
+/// dispatch/claim/wait path; the helper threads run the same
+/// allocation-free claim loop.)
+#[test]
+fn steady_state_panel_parallel_gemm_allocates_nothing() {
+    let _ = simd::kernels();
+    let pool = PanelPool::new(3);
+    let (m, k, n) = (32usize, 1024usize, 256usize);
+    let a = vec![0.5f32; m * k];
+    let b = vec![0.25f32; k * n];
+    let mut c = vec![0.0f32; m * n];
+    let at = vec![0.5f32; k * m];
+    let mut ct = vec![0.0f32; m * n];
+    // Warm both drivers (lazy pool/TLS init happens here).
+    assert!(gemm::gemm_nn_acc_on(&pool, &a, &b, &mut c, m, k, n));
+    assert!(gemm::gemm_tn_acc_on(&pool, &at, &b, &mut ct, k, m, n));
+    let before = allocs();
+    for _ in 0..8 {
+        assert!(gemm::gemm_nn_acc_on(&pool, &a, &b, &mut c, m, k, n));
+        assert!(gemm::gemm_tn_acc_on(&pool, &at, &b, &mut ct, k, m, n));
+    }
+    assert_eq!(allocs() - before, 0, "warm panel-parallel GEMMs must not allocate");
+}
+
+/// Warm fused lockstep steps allocate nothing: the per-slot arenas,
+/// the raw-pointer slot table, and the stats vector are all grow-once,
+/// and the fused GEMMs dispatch through the allocation-free panel
+/// pool.
+#[test]
+fn steady_state_fused_steps_allocate_nothing() {
+    let _step_guard = STEP_TESTS.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = simd::kernels();
+    let m = Arc::new(Manifest::native());
+    let ds = Dataset::load(&m, "synth-mnist", 4).unwrap();
+    let rt = NativeExecutor::load(&m, "mlp-m", "synth-mnist", "sgd", "full").unwrap();
+    let b = rt.train_batch_size();
+    let batches: Vec<_> = (0..3usize)
+        .map(|s| {
+            let idx: Vec<usize> = (0..b).map(|i| (s * 5 + i) % ds.num_train()).collect();
+            ds.batch(Split::Train, &idx)
+        })
+        .collect();
+    let mut params: Vec<Vec<f32>> = (0..3).map(|_| rt.init_params().unwrap()).collect();
+    let mut scratch = rt.new_scratch();
+    let mut stats = Vec::new();
+    let mut run_step = |params: &mut [Vec<f32>], scratch: &mut _, stats: &mut Vec<_>| {
+        let [p0, p1, p2] = params else { unreachable!() };
+        let mut slots = [
+            FusedSlot { params: p0, x: &batches[0].x, y: &batches[0].y },
+            FusedSlot { params: p1, x: &batches[1].x, y: &batches[1].y },
+            FusedSlot { params: p2, x: &batches[2].x, y: &batches[2].y },
+        ];
+        rt.train_step_sgd_fused(&mut slots, 0.05, scratch, stats).unwrap();
+    };
+    for _ in 0..3 {
+        run_step(&mut params, &mut scratch, &mut stats);
+    }
+    // Only the thread-local allocation counter is asserted here: the
+    // runtime's own stats counters are process-global and other tests
+    // in this binary run concurrently (the SGD test already pins the
+    // stats-growth accounting).
+    let before = allocs();
+    for _ in 0..16 {
+        run_step(&mut params, &mut scratch, &mut stats);
+    }
+    assert_eq!(allocs() - before, 0, "warm fused steps must not allocate");
+    assert_eq!(stats.len(), 3, "one stat per slot");
 }
 
 /// The streaming reduce's push path (finite-scan + the dispatched
