@@ -3,18 +3,14 @@
 //! Trains LeNet-5 on synth-mnist with FedAvg across 100 agents (10%
 //! sampled per round, 5 local epochs), comparing IID against non-IID
 //! sharding — the paper's flagship FL demonstration, scaled for a CPU
-//! PJRT testbed via --rounds.
+//! PJRT testbed via --rounds. Built with `Experiment::builder()`, the
+//! typed replacement for hand-rolled `FlParams` literals.
 //!
 //! Run: `cargo run --release --example federated_mnist [-- --rounds N]`
 
 use std::sync::Arc;
 
-use ferrisfl::config::FlParams;
-use ferrisfl::entrypoint::Entrypoint;
-use ferrisfl::federation::Scheme;
-use ferrisfl::loggers::ConsoleLogger;
-use ferrisfl::runtime::Manifest;
-use ferrisfl::util::error::Result;
+use ferrisfl::prelude::*;
 
 fn main() -> Result<()> {
     let rounds: usize = std::env::args()
@@ -28,35 +24,23 @@ fn main() -> Result<()> {
     let mut finals = Vec::new();
     for split in [Scheme::Iid, Scheme::NonIid { niid_factor: 3 }] {
         println!("\n=== LeNet-5 FedAvg, 100 agents, 10% sampled, split {split} ===");
-        let params = FlParams {
-            experiment_name: format!("federated_mnist_{split}"),
-            model: "lenet5".into(),
-            dataset: "synth-mnist".into(),
-            num_agents: 100,
-            sampling_ratio: 0.1,
-            global_epochs: rounds,
-            local_epochs: 5,
-            split,
-            sampler: "random".into(),
-            aggregator: "fedavg".into(),
-            optimizer: "sgd".into(),
-            mode: "full".into(),
-            use_pretrained: false,
-            lr: 0.05,
-            seed: 42,
-            workers: 0, // auto
-            fuse: false,
-            eval_every: 1,
-            max_local_steps: 0,
-            log_dir: "results/logs".into(),
-            dropout: 0.0,
-            defense: "none".into(),
-            compression: "none".into(),
-            backend: manifest.backend.name().into(),
-        };
-        let mut ep = Entrypoint::new(params, Arc::clone(&manifest))?;
+        let mut experiment = Experiment::builder()
+            .backend(manifest.backend)
+            .manifest(Arc::clone(&manifest))
+            .name(format!("federated_mnist_{split}"))
+            .model("lenet5")
+            .dataset("synth-mnist")
+            .num_agents(100)
+            .sampling_ratio(0.1)
+            .rounds(rounds)
+            .local_epochs(5)
+            .split(split)
+            .lr(0.05)
+            .seed(42)
+            .log_dir("results/logs")
+            .build()?;
         let mut logger = ConsoleLogger::default();
-        let res = ep.run(&mut logger)?;
+        let res = experiment.run(&mut logger)?;
         println!(
             "{split}: final eval loss {:.4}, accuracy {:.3}",
             res.final_eval.mean_loss(),

@@ -1,67 +1,51 @@
 //! Quickstart — the minimal end-to-end FerrisFL experiment.
 //!
-//! Mirrors the paper's Appendix A flow: build `FLParams`, shard a
-//! dataset, initialise agents, pick a sampler + aggregator, hand it all
-//! to the `Entrypoint`, and run. Everything below the `Entrypoint` is
-//! a `ModelExecutor` backend — the pure-rust native executor by
-//! default, or AOT-compiled HLO through PJRT — no python anywhere.
+//! Mirrors the paper's Appendix A flow: describe the experiment with
+//! the builder, shard a dataset, initialise agents, pick a sampler +
+//! aggregator, and run. Everything below the `Entrypoint` is a
+//! `ModelExecutor` backend — the pure-rust native executor by default,
+//! or AOT-compiled HLO through PJRT — no python anywhere.
+//!
+//! (Pre-builder code constructed an `FlParams` struct literal and an
+//! `Entrypoint` by hand; that path still exists, but
+//! `Experiment::builder()` is the supported surface.)
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
-use ferrisfl::config::FlParams;
-use ferrisfl::entrypoint::Entrypoint;
-use ferrisfl::federation::Scheme;
-use ferrisfl::loggers::ConsoleLogger;
-use ferrisfl::runtime::Manifest;
-use ferrisfl::util::error::Result;
+use ferrisfl::prelude::*;
 
 fn main() -> Result<()> {
     // 1. Load the environment: the AOT manifest when artifacts are
     //    built (PJRT feature), else the hermetic native backend.
     let manifest = Arc::new(Manifest::load_or_native("artifacts"));
 
-    // 2. FLParams — the same hyperparameter surface as the paper's
-    //    FLParams object (Fig 16 of the paper).
-    let params = FlParams {
-        experiment_name: "quickstart".into(),
-        model: "mlp-s".into(),
-        dataset: "synth-mnist".into(),
-        num_agents: 10,
-        sampling_ratio: 0.5,
-        global_epochs: 5,
-        local_epochs: 2,
-        split: Scheme::NonIid { niid_factor: 3 },
-        sampler: "random".into(),
-        aggregator: "fedavg".into(),
-        optimizer: "sgd".into(),
-        mode: "full".into(),
-        use_pretrained: false,
-        lr: 0.05,
-        seed: 42,
-        workers: 4,
-        fuse: false,
-        eval_every: 1,
-        max_local_steps: 0,
-        log_dir: String::new(),
-        dropout: 0.0,
-        defense: "none".into(),
-        compression: "none".into(),
-        backend: manifest.backend.name().into(),
-    };
+    // 2. Describe the experiment — the same hyperparameter surface as
+    //    the paper's FLParams object (Fig 16), as typed setters over
+    //    defaults. `build()` validates the whole config, shards the
+    //    dataset, and initialises the agents.
+    let mut experiment = Experiment::builder()
+        .backend(manifest.backend)
+        .manifest(manifest)
+        .name("quickstart")
+        .model("mlp-s")
+        .dataset("synth-mnist")
+        .num_agents(10)
+        .sampling_ratio(0.5)
+        .rounds(5)
+        .local_epochs(2)
+        .split(Scheme::NonIid { niid_factor: 3 })
+        .sampler("random")
+        .aggregator("fedavg")
+        .lr(0.05)
+        .seed(42)
+        .workers(4)
+        .build()?;
 
-    // 3. Entrypoint wires dataset -> sharding -> agents -> runtime.
-    let mut entrypoint = Entrypoint::new(params, manifest)?;
-    println!(
-        "agents hold between {} and {} samples each",
-        entrypoint.agents.iter().map(|a| a.num_samples()).min().unwrap(),
-        entrypoint.agents.iter().map(|a| a.num_samples()).max().unwrap(),
-    );
-
-    // 4. Run, streaming per-round metrics to the console.
+    // 3. Run, streaming per-round metrics to the console.
     let mut logger = ConsoleLogger::default();
-    let result = entrypoint.run(&mut logger)?;
+    let result = experiment.run(&mut logger)?;
 
     println!(
         "\nquickstart done: final accuracy {:.1}% over {} test examples",

@@ -27,7 +27,7 @@ fn main() -> Result<()> {
     let params = FlParams {
         model: "mlp-s".into(),
         dataset: "synth-mnist".into(),
-        backend: manifest.backend.name().into(),
+        backend: manifest.backend,
         ..FlParams::default()
     };
     let dataset = Arc::new(Dataset::load(&manifest, &params.dataset, params.seed)?);

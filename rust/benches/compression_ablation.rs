@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use ferrisfl::benchutil::header;
-use ferrisfl::config::FlParams;
+use ferrisfl::config::{FlParams, Optimizer};
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::NullLogger;
@@ -33,14 +33,14 @@ fn main() {
             global_epochs: 6,
             local_epochs: 1,
             split: Scheme::Iid,
-            optimizer: "sgd".into(),
+            optimizer: Optimizer::Sgd,
             lr: 0.05,
             seed: 42,
             workers: 4,
             eval_every: 0,
             max_local_steps: 10,
             compression: comp.into(),
-            backend: manifest.backend.name().into(),
+            backend: manifest.backend,
             ..FlParams::default()
         };
         let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();

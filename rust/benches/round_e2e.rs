@@ -15,7 +15,7 @@ use std::sync::Arc;
 use ferrisfl::benchutil::{
     self, fast_mode, header, merge_section, report, BenchStats,
 };
-use ferrisfl::config::FlParams;
+use ferrisfl::config::{FlParams, Mode, Optimizer};
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::NullLogger;
@@ -34,8 +34,8 @@ fn params_for(workers: usize, rounds: usize, manifest: &Manifest) -> FlParams {
         split: Scheme::Iid,
         sampler: "random".into(),
         aggregator: "fedavg".into(),
-        optimizer: "sgd".into(),
-        mode: "full".into(),
+        optimizer: Optimizer::Sgd,
+        mode: Mode::Full,
         use_pretrained: false,
         lr: 0.05,
         seed: 42,
@@ -47,7 +47,8 @@ fn params_for(workers: usize, rounds: usize, manifest: &Manifest) -> FlParams {
         dropout: 0.0,
         defense: "none".into(),
         compression: "none".into(),
-        backend: manifest.backend.name().into(),
+        backend: manifest.backend,
+        ..FlParams::default()
     }
 }
 
@@ -100,6 +101,35 @@ fn main() {
         };
         report("round walltime, workers=4 fused", &s, "");
         rows.push(("workers_4_fused".to_string(), s.to_json(Some(1.0))));
+    }
+
+    // Async round (FedBuff policy): same workload on the event engine —
+    // lognormal client latency, a 1.5-sim-second round deadline, and
+    // goal-count finalize at 8 updates. Virtual time, so the policy
+    // costs only event-queue scheduling; this row tracks that overhead
+    // against the lockstep rows above.
+    {
+        let params = FlParams {
+            experiment_name: "bench_round_fedbuff".into(),
+            latency: "lognormal:0.5,0.8".parse().unwrap(),
+            deadline_secs: 1.5,
+            agg_goal: 8,
+            ..params_for(4, iters + 1, &manifest)
+        };
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let mut logger = NullLogger;
+        let res = ep.run(&mut logger).unwrap();
+        let mut times: Vec<f64> = res.rounds[1..].iter().map(|r| r.secs).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = BenchStats {
+            iters: times.len(),
+            min: times[0],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            p50: times[times.len() / 2],
+            max: times[times.len() - 1],
+        };
+        report("round walltime, workers=4 fedbuff", &s, "");
+        rows.push(("workers_4_fedbuff".to_string(), s.to_json(Some(1.0))));
     }
 
     header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");

@@ -61,7 +61,7 @@ impl BenchStats {
 /// True when `FERRISFL_BENCH_FAST` is set (and not "0"): benches shrink
 /// workloads/iterations so CI can smoke-run them on every merge.
 pub fn fast_mode() -> bool {
-    std::env::var("FERRISFL_BENCH_FAST").map(|v| v != "0").unwrap_or(false)
+    crate::util::env::bench_fast()
 }
 
 /// Scale an iteration count down in fast mode (≥1 always).
@@ -87,9 +87,7 @@ pub fn workspace_root() -> PathBuf {
 /// `rust/` — so local runs and CI scattered snapshots into different
 /// places depending on invocation.)
 pub fn bench_json_path() -> PathBuf {
-    std::env::var("FERRISFL_BENCH_JSON")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| workspace_root().join("BENCH_native.json"))
+    crate::util::env::bench_json().unwrap_or_else(|| workspace_root().join("BENCH_native.json"))
 }
 
 /// Read-modify-write one top-level section of the bench JSON file, so
@@ -551,7 +549,7 @@ mod tests {
     fn bench_json_default_is_workspace_rooted() {
         // Only exercised when the env override is absent (the common
         // local case); CI sets FERRISFL_BENCH_JSON explicitly.
-        if std::env::var("FERRISFL_BENCH_JSON").is_err() {
+        if crate::util::env::bench_json().is_none() {
             let p = bench_json_path();
             assert!(p.ends_with("BENCH_native.json"));
             assert!(p.is_absolute(), "default must not depend on CWD: {p:?}");

@@ -6,10 +6,92 @@
 
 pub mod toml;
 
+use std::str::FromStr;
+
+use crate::engine::{ClockKind, LatencyModel, RoundPolicy, SimTime};
 use crate::federation::Scheme;
 use crate::runtime::BackendKind;
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, Context, Error, Result};
 pub use toml::{TomlDoc, TomlValue};
+
+/// The local optimizer every sampled agent runs (paper §3.2.2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Optimizer {
+    /// Plain SGD; the default (and the only optimizer the fused
+    /// lockstep path supports).
+    #[default]
+    Sgd,
+    /// Adam with the runtime's built-in moment state.
+    Adam,
+}
+
+impl Optimizer {
+    /// Canonical config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Optimizer::Sgd => "sgd",
+            Optimizer::Adam => "adam",
+        }
+    }
+}
+
+impl FromStr for Optimizer {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sgd" => Ok(Optimizer::Sgd),
+            "adam" => Ok(Optimizer::Adam),
+            other => bail!("unknown optimizer {other:?} (sgd | adam)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Optimizer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which parameters local training updates (paper §3.2.2's model modes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Train the full model (from scratch, or finetune when
+    /// `use_pretrained` is set); the default.
+    #[default]
+    Full,
+    /// Feature extraction: freeze the backbone, train the head
+    /// (requires `use_pretrained`).
+    Featext,
+}
+
+impl Mode {
+    /// Canonical config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Full => "full",
+            Mode::Featext => "featext",
+        }
+    }
+}
+
+impl FromStr for Mode {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "full" => Ok(Mode::Full),
+            "featext" => Ok(Mode::Featext),
+            other => bail!("unknown mode {other:?} (full | featext)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// All hyperparameters of one FL experiment — the paper's `FLParams`.
 #[derive(Clone, Debug)]
@@ -34,10 +116,10 @@ pub struct FlParams {
     pub sampler: String,
     /// Aggregator name (see aggregators::from_name).
     pub aggregator: String,
-    /// Local optimizer: "sgd" or "adam".
-    pub optimizer: String,
-    /// Training mode: "full" (scratch/finetune) or "featext".
-    pub mode: String,
+    /// Local optimizer.
+    pub optimizer: Optimizer,
+    /// Training mode.
+    pub mode: Mode,
     /// Start from the pretrained weights (finetune / featext)?
     pub use_pretrained: bool,
     /// Local learning rate.
@@ -64,9 +146,25 @@ pub struct FlParams {
     pub defense: String,
     /// Client update compression (see compression::from_name).
     pub compression: String,
-    /// Execution backend: "native" (pure rust, default) or "pjrt"
+    /// Execution backend: native (pure rust, default) or pjrt
     /// (AOT artifacts; requires the `pjrt` cargo feature).
-    pub backend: String,
+    pub backend: BackendKind,
+    /// Per-client latency model driving the round engine (config
+    /// `engine.latency`; `none` = the lockstep degenerate policy).
+    pub latency: LatencyModel,
+    /// Round collection window in simulated seconds (`engine.deadline_secs`;
+    /// 0 = no deadline, wait for every arrival).
+    pub deadline_secs: f64,
+    /// Buffered-aggregation goal count (`engine.agg_goal`; 0 = wait for
+    /// the whole cohort): finalize the round once this many updates —
+    /// fresh or stale — have arrived, FedBuff's buffer size K.
+    pub agg_goal: usize,
+    /// Staleness discount exponent for buffered updates
+    /// (`engine.staleness_alpha`): weight ∝ `(1 + staleness)^-alpha`.
+    pub staleness_alpha: f64,
+    /// Engine clock (`engine.clock`): deterministic virtual time
+    /// (default) or measured wall time.
+    pub clock: ClockKind,
 }
 
 impl Default for FlParams {
@@ -82,8 +180,8 @@ impl Default for FlParams {
             split: Scheme::Iid,
             sampler: "random".into(),
             aggregator: "fedavg".into(),
-            optimizer: "sgd".into(),
-            mode: "full".into(),
+            optimizer: Optimizer::Sgd,
+            mode: Mode::Full,
             use_pretrained: false,
             lr: 0.05,
             seed: 42,
@@ -95,7 +193,12 @@ impl Default for FlParams {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
-            backend: "native".into(),
+            backend: BackendKind::Native,
+            latency: LatencyModel::None,
+            deadline_secs: 0.0,
+            agg_goal: 0,
+            staleness_alpha: 0.5,
+            clock: ClockKind::Virtual,
         }
     }
 }
@@ -129,8 +232,8 @@ impl FlParams {
             split: Scheme::parse(&doc.get_str("fl.split", "iid")?)?,
             sampler: doc.get_str("fl.sampler", &d.sampler)?,
             aggregator: doc.get_str("fl.aggregator", &d.aggregator)?,
-            optimizer: doc.get_str("train.optimizer", &d.optimizer)?,
-            mode: doc.get_str("train.mode", &d.mode)?,
+            optimizer: doc.get_str("train.optimizer", d.optimizer.name())?.parse()?,
+            mode: doc.get_str("train.mode", d.mode.name())?.parse()?,
             use_pretrained: doc.get_bool("train.use_pretrained", d.use_pretrained)?,
             lr: doc.get_float("train.lr", d.lr as f64)? as f32,
             seed: doc.get_int("fl.seed", d.seed as i64)? as u64,
@@ -142,7 +245,13 @@ impl FlParams {
             dropout: doc.get_float("fl.dropout", 0.0)?,
             defense: doc.get_str("fl.defense", "none")?,
             compression: doc.get_str("fl.compression", "none")?,
-            backend: doc.get_str("run.backend", &d.backend)?,
+            backend: doc.get_str("run.backend", d.backend.name())?.parse()?,
+            latency: doc.get_str("engine.latency", &d.latency.to_string())?.parse()?,
+            deadline_secs: doc.get_float("engine.deadline_secs", d.deadline_secs)?,
+            agg_goal: doc.get_int("engine.agg_goal", d.agg_goal as i64)? as usize,
+            staleness_alpha: doc
+                .get_float("engine.staleness_alpha", d.staleness_alpha)?,
+            clock: doc.get_str("engine.clock", d.clock.name())?.parse()?,
         };
         p.validate()?;
         Ok(p)
@@ -167,28 +276,40 @@ impl FlParams {
         if self.global_epochs == 0 || self.local_epochs == 0 {
             bail!("global_epochs and local_epochs must be >= 1");
         }
-        if !matches!(self.optimizer.as_str(), "sgd" | "adam") {
-            bail!("optimizer must be sgd or adam, got {:?}", self.optimizer);
-        }
-        if !matches!(self.mode.as_str(), "full" | "featext") {
-            bail!("mode must be full or featext, got {:?}", self.mode);
-        }
-        if self.mode == "featext" && !self.use_pretrained {
+        if self.mode == Mode::Featext && !self.use_pretrained {
             bail!("featext mode requires use_pretrained = true");
         }
         if !self.lr.is_finite() || self.lr <= 0.0 {
             bail!("lr must be positive");
         }
-        if self.fuse && self.optimizer != "sgd" {
+        if self.fuse && self.optimizer != Optimizer::Sgd {
             bail!("fuse = true requires optimizer = sgd (the fused lockstep path is SGD-only)");
         }
         if !(0.0..1.0).contains(&self.dropout) {
             bail!("dropout must be in [0, 1)");
         }
-        // Fails fast on unknown backends (whether the build can actually
-        // serve "pjrt" is decided at executor-construction time).
-        BackendKind::parse(&self.backend)?;
+        self.latency.validate()?;
+        if !self.deadline_secs.is_finite() || self.deadline_secs < 0.0 {
+            bail!("deadline_secs must be finite and >= 0 (0 = no deadline)");
+        }
+        if !self.staleness_alpha.is_finite() || self.staleness_alpha < 0.0 {
+            bail!("staleness_alpha must be finite and >= 0");
+        }
         Ok(())
+    }
+
+    /// The engine scheduling policy this config asks for (with the
+    /// defaults — zero latency, no deadline, no goal — this is the
+    /// degenerate policy, i.e. the bit-exact lockstep loop).
+    pub fn round_policy(&self) -> RoundPolicy {
+        RoundPolicy {
+            latency: self.latency.clone(),
+            deadline: (self.deadline_secs > 0.0)
+                .then(|| SimTime::from_secs_f64(self.deadline_secs)),
+            goal: (self.agg_goal > 0).then_some(self.agg_goal),
+            staleness_alpha: self.staleness_alpha,
+            clock: self.clock,
+        }
     }
 }
 
@@ -254,17 +375,80 @@ mod tests {
         assert!(p.validate().is_err());
 
         let mut p = FlParams::default();
-        p.optimizer = "rmsprop".into();
-        assert!(p.validate().is_err());
-
-        let mut p = FlParams::default();
-        p.mode = "featext".into();
+        p.mode = Mode::Featext;
         p.use_pretrained = false;
         assert!(p.validate().is_err());
 
         let mut p = FlParams::default();
-        p.backend = "tpu".into();
+        p.deadline_secs = -1.0;
         assert!(p.validate().is_err());
+
+        let mut p = FlParams::default();
+        p.staleness_alpha = f64::NAN;
+        assert!(p.validate().is_err());
+
+        let mut p = FlParams::default();
+        p.latency = LatencyModel::Constant(f64::INFINITY);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn enums_parse_and_display() {
+        // Stringly-typed fields became enums; TOML/CLI names round-trip.
+        assert_eq!("sgd".parse::<Optimizer>().unwrap(), Optimizer::Sgd);
+        assert_eq!(" Adam ".parse::<Optimizer>().unwrap(), Optimizer::Adam);
+        assert!("rmsprop".parse::<Optimizer>().is_err());
+        assert_eq!(Optimizer::Adam.to_string(), "adam");
+
+        assert_eq!("full".parse::<Mode>().unwrap(), Mode::Full);
+        assert_eq!("featext".parse::<Mode>().unwrap(), Mode::Featext);
+        assert!("partial".parse::<Mode>().is_err());
+        assert_eq!(Mode::Featext.to_string(), "featext");
+
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn bad_enum_values_fail_toml_parse() {
+        for toml in [
+            "name = \"x\"\n[train]\noptimizer = \"rmsprop\"\n",
+            "name = \"x\"\n[train]\nmode = \"partial\"\n",
+            "name = \"x\"\n[run]\nbackend = \"tpu\"\n",
+            "name = \"x\"\n[engine]\nclock = \"cuckoo\"\n",
+            "name = \"x\"\n[engine]\nlatency = \"warp:9\"\n",
+        ] {
+            assert!(FlParams::from_toml(toml).is_err(), "{toml}");
+        }
+    }
+
+    #[test]
+    fn engine_section_parses_and_maps_to_policy() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "fedbuff"
+            [engine]
+            latency = "lognormal:0.5,0.8"
+            deadline_secs = 1.5
+            agg_goal = 8
+            staleness_alpha = 0.25
+            clock = "virtual"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.latency, LatencyModel::Lognormal { median: 0.5, sigma: 0.8 });
+        assert_eq!(p.deadline_secs, 1.5);
+        assert_eq!(p.agg_goal, 8);
+        let pol = p.round_policy();
+        assert!(!pol.is_degenerate());
+        assert!(pol.buffered());
+        assert_eq!(pol.deadline.unwrap(), SimTime::from_secs_f64(1.5));
+        assert_eq!(pol.goal, Some(8));
+        // The defaults are the degenerate (lockstep) policy.
+        let d = FlParams::default().round_policy();
+        assert!(d.is_degenerate());
+        assert_eq!(d, RoundPolicy::lockstep());
     }
 
     #[test]
@@ -282,9 +466,9 @@ mod tests {
 
         let mut p = FlParams::default();
         p.fuse = true;
-        p.optimizer = "adam".into();
+        p.optimizer = Optimizer::Adam;
         assert!(p.validate().is_err(), "fuse is SGD-only");
-        p.optimizer = "sgd".into();
+        p.optimizer = Optimizer::Sgd;
         p.validate().unwrap();
     }
 
@@ -298,7 +482,7 @@ mod tests {
             "#,
         )
         .unwrap();
-        assert_eq!(p.backend, "native");
-        assert_eq!(FlParams::default().backend, "native");
+        assert_eq!(p.backend, BackendKind::Native);
+        assert_eq!(FlParams::default().backend, BackendKind::Native);
     }
 }

@@ -148,9 +148,10 @@ impl Default for SynthCache {
 
 impl SynthCache {
     pub fn new() -> Self {
-        let max_floats = match std::env::var("FERRISFL_SYNTH_CACHE") {
-            Ok(v) if v == "0" => 0,
-            _ => SYNTH_CACHE_FLOATS,
+        let max_floats = if crate::util::env::synth_cache_enabled() {
+            SYNTH_CACHE_FLOATS
+        } else {
+            0
         };
         Self::with_budget(max_floats)
     }

@@ -1,0 +1,227 @@
+//! Simulated time: [`SimTime`] instants and the [`Clock`] trait.
+//!
+//! The engine orders events on an integer-microsecond timeline so the
+//! total order of any event set is exact (no float-comparison ties).
+//! Two clocks drive it:
+//!
+//! - [`VirtualClock`] — pure simulation: `advance_to` jumps straight to
+//!   the next event, so a "30 s round deadline" costs no walltime and a
+//!   run is a deterministic function of config + seed.
+//! - [`WallClock`] — real runs: `now` is measured elapsed time and
+//!   `advance_to` is a no-op (real time cannot be steered); event
+//!   timestamps reflect what actually happened.
+
+use std::str::FromStr;
+use std::time::Instant;
+
+use crate::util::error::{bail, Error, Result};
+
+/// A point on the engine's timeline: integer microseconds since the
+/// start of the run. Integer so that event ordering is a total order
+/// with exact ties (see `EventQueue`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(u64);
+
+impl SimTime {
+    /// The start of the run.
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// From a microsecond count.
+    pub fn from_micros(us: u64) -> Self {
+        SimTime(us)
+    }
+
+    /// From seconds, rounded to the nearest microsecond. Non-finite or
+    /// negative inputs clamp to zero.
+    pub fn from_secs_f64(secs: f64) -> Self {
+        if !secs.is_finite() || secs <= 0.0 {
+            return SimTime::ZERO;
+        }
+        SimTime((secs * 1e6).round().min(u64::MAX as f64) as u64)
+    }
+
+    /// Microseconds since the start of the run.
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    /// Seconds since the start of the run.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    /// `self + rhs`, saturating at the end of time.
+    pub fn saturating_add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_add(rhs.0))
+    }
+
+    /// `self - rhs`, saturating at zero.
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+/// Which clock drives the engine (config: `engine.clock`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ClockKind {
+    /// Deterministic simulation; the default.
+    #[default]
+    Virtual,
+    /// Measured walltime; per-client latency is the measured local
+    /// training time (plus any configured latency model on top).
+    Wall,
+}
+
+impl ClockKind {
+    /// Canonical config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ClockKind::Virtual => "virtual",
+            ClockKind::Wall => "wall",
+        }
+    }
+}
+
+impl FromStr for ClockKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "virtual" => Ok(ClockKind::Virtual),
+            "wall" => Ok(ClockKind::Wall),
+            other => bail!("unknown clock {other:?} (virtual | wall)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ClockKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The engine's source of time.
+pub trait Clock: Send {
+    /// Current time on this clock's timeline.
+    fn now(&self) -> SimTime;
+
+    /// Move the timeline forward to `t` (never backward). Virtual
+    /// clocks jump; wall clocks ignore it — elapsed time is what it is.
+    fn advance_to(&mut self, t: SimTime);
+
+    /// Which kind of clock this is.
+    fn kind(&self) -> ClockKind;
+}
+
+/// Deterministic simulated clock: time is exactly the latest event
+/// timestamp it was advanced to.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: SimTime,
+}
+
+impl VirtualClock {
+    /// A clock at [`SimTime::ZERO`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> SimTime {
+        self.now
+    }
+
+    fn advance_to(&mut self, t: SimTime) {
+        self.now = self.now.max(t);
+    }
+
+    fn kind(&self) -> ClockKind {
+        ClockKind::Virtual
+    }
+}
+
+/// Real elapsed time since construction.
+#[derive(Debug)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    /// A clock whose zero is "now".
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> SimTime {
+        SimTime::from_secs_f64(self.origin.elapsed().as_secs_f64())
+    }
+
+    fn advance_to(&mut self, _t: SimTime) {}
+
+    fn kind(&self) -> ClockKind {
+        ClockKind::Wall
+    }
+}
+
+/// Construct the clock for `kind`.
+pub fn from_kind(kind: ClockKind) -> Box<dyn Clock> {
+    match kind {
+        ClockKind::Virtual => Box::new(VirtualClock::new()),
+        ClockKind::Wall => Box::new(WallClock::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_roundtrips_and_clamps() {
+        assert_eq!(SimTime::from_secs_f64(1.5).as_micros(), 1_500_000);
+        assert!((SimTime::from_micros(250_000).as_secs_f64() - 0.25).abs() < 1e-12);
+        assert_eq!(SimTime::from_secs_f64(-3.0), SimTime::ZERO);
+        assert_eq!(SimTime::from_secs_f64(f64::NAN), SimTime::ZERO);
+        assert_eq!(SimTime::from_secs_f64(f64::INFINITY), SimTime::ZERO);
+        let big = SimTime::from_micros(u64::MAX);
+        assert_eq!(big.saturating_add(big), big);
+        assert_eq!(SimTime::ZERO.saturating_sub(big), SimTime::ZERO);
+    }
+
+    #[test]
+    fn virtual_clock_jumps_and_never_rewinds() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), SimTime::ZERO);
+        c.advance_to(SimTime::from_micros(500));
+        assert_eq!(c.now().as_micros(), 500);
+        c.advance_to(SimTime::from_micros(100)); // stale event time
+        assert_eq!(c.now().as_micros(), 500);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_ignores_advance() {
+        let mut c = WallClock::new();
+        let a = c.now();
+        c.advance_to(SimTime::from_secs_f64(3600.0));
+        let b = c.now();
+        assert!(b >= a);
+        assert!(b.as_secs_f64() < 60.0, "advance_to must not steer a wall clock");
+    }
+
+    #[test]
+    fn clock_kind_parses_and_displays() {
+        assert_eq!("virtual".parse::<ClockKind>().unwrap(), ClockKind::Virtual);
+        assert_eq!(" WALL ".parse::<ClockKind>().unwrap(), ClockKind::Wall);
+        assert!("cuckoo".parse::<ClockKind>().is_err());
+        assert_eq!(ClockKind::Virtual.to_string(), "virtual");
+        assert_eq!(ClockKind::default(), ClockKind::Virtual);
+    }
+}

@@ -1,0 +1,403 @@
+//! The engine's run loop: dispatch cohorts, drain events, finalize
+//! rounds.
+//!
+//! This is `Entrypoint::run` — the lockstep loop of
+//! `Entrypoint::run_lockstep` re-expressed as event scheduling. Under
+//! the degenerate [`RoundPolicy`] every step below reduces to the exact
+//! lockstep behaviour (same RNG draw sequence, same dispatch order,
+//! same f64 accumulation order, same integer stream weights), which the
+//! parity test in `tests/engine_e2e.rs` pins bit-identically.
+//!
+//! Per round:
+//!
+//! 1. sample the cohort (identical sampler + dropout draws to the
+//!    reference), minus agents still busy with an earlier round,
+//! 2. run local training on the worker pool / fused path (compute is
+//!    synchronous — the *simulated* timeline is what reorders),
+//! 3. schedule [`Event::ClientFinished`] + [`Event::DeltaArrived`] at
+//!    `dispatch_time + latency` per client, and [`Event::RoundDeadline`]
+//!    if the policy has a collection window,
+//! 4. drain events in `(time, seq)` order until the round closes: at
+//!    goal-count, at the deadline, or when everything in flight arrived,
+//! 5. screen, aggregate (stale deltas are pushed staleness-weighted),
+//!    evaluate, log — identical to the reference.
+//!
+//! Updates still in flight when the run's last round closes are
+//! discarded (the experiment is over); their devices simply never
+//! report back.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::aggregators::{StreamKind, Update};
+use crate::entrypoint::worker::{self, LocalJob};
+use crate::entrypoint::{CommStats, Entrypoint, RunResult};
+use crate::incentives::ContributionTracker;
+use crate::loggers::Logger;
+use crate::metrics::{Accumulator, AgentRecord, RoundRecord};
+use crate::profiler::SimpleProfiler;
+use crate::util::error::{bail, Result};
+
+use super::clock::{self, ClockKind, SimTime};
+use super::{Event, EventQueue};
+
+/// A computed update waiting for its arrival event.
+struct Pending {
+    update: Update,
+    record: AgentRecord,
+    /// The round the update was dispatched in (staleness base).
+    origin_round: usize,
+    /// Raw stream weight (shard sample count or 1), before any
+    /// staleness discount.
+    base_weight: u64,
+}
+
+/// Run the full experiment through the event engine.
+pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result<RunResult> {
+    let policy = ep.params.round_policy();
+    let stream_kind = ep.stream_kind();
+    if policy.buffered() && stream_kind.is_none() {
+        bail!(
+            "a deadline/goal round policy buffers updates across rounds, which requires a \
+             streaming-capable run: a FedAvg-family aggregator with defense = \"none\" and \
+             compression = \"none\" (got aggregator {:?}, defense {:?}, compression {:?})",
+            ep.params.aggregator,
+            ep.params.defense,
+            ep.params.compression
+        );
+    }
+
+    let mut clock = clock::from_kind(policy.clock);
+    let mut queue = EventQueue::new();
+    // Agents with an update in flight, keyed by agent id. An agent has
+    // at most one: it cannot be re-sampled until its delta arrives.
+    let mut flying: BTreeMap<usize, Pending> = BTreeMap::new();
+
+    let mut profiler = SimpleProfiler::new();
+    let mut rounds = Vec::new();
+    let mut agent_records = Vec::new();
+    let mut comm = CommStats::default();
+    let mut contributions = ContributionTracker::new();
+    let mut dropped_log = Vec::new();
+    let mut rejected_log = Vec::new();
+    let k = ep.params.sampled_per_round();
+
+    for round in 0..ep.params.global_epochs {
+        let t_round = Instant::now();
+        let round_start = clock.now();
+
+        // 1. sample A^t — the same sampler and RNG draw sequence as the
+        // lockstep reference.
+        let mut sampled =
+            profiler.time("sampling", || ep.sampler.sample(&ep.agents, k, &mut ep.rng));
+
+        // 1b. straggler/failure injection, identical draws to the
+        // reference.
+        let mut dropped = Vec::new();
+        if ep.params.dropout > 0.0 {
+            sampled.retain(|&aid| {
+                if ep.rng.next_f64() < ep.params.dropout {
+                    dropped.push(aid);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        // 1c. devices still training an earlier round's job sit this
+        // round out (only possible under non-degenerate policies; the
+        // lockstep reference never leaves one in flight).
+        if !flying.is_empty() {
+            sampled.retain(|aid| !flying.contains_key(aid));
+        }
+
+        if sampled.is_empty() && flying.is_empty() {
+            // whole cohort offline and nothing in flight: skip the round
+            dropped_log.push(dropped.clone());
+            rejected_log.push(Vec::new());
+            let rec = RoundRecord {
+                round,
+                train_loss: f64::NAN,
+                train_acc: f64::NAN,
+                eval_loss: f64::NAN,
+                eval_acc: f64::NAN,
+                sampled,
+                dropped,
+                rejected: Vec::new(),
+                secs: t_round.elapsed().as_secs_f64(),
+                sim_secs: 0.0,
+            };
+            logger.log_round(&rec)?;
+            rounds.push(rec);
+            continue;
+        }
+
+        // 2. reduce state + weights — identical to the reference: the
+        // streaming accumulator is reused (reset) across rounds, and
+        // FedAvg weights are the cohort's shard sizes with the all-zero
+        // uniform fallback.
+        let stream_acc = if stream_kind.is_some() {
+            let p = ep.global.len();
+            if ep.stream_acc.as_ref().is_some_and(|acc| acc.len() == p) {
+                let acc = ep.stream_acc.as_ref().unwrap();
+                acc.reset();
+                Some(Arc::clone(acc))
+            } else {
+                let acc = Arc::new(crate::aggregators::StreamingAccumulator::new(p));
+                ep.stream_acc = Some(Arc::clone(&acc));
+                Some(acc)
+            }
+        } else {
+            None
+        };
+        let stream_weights: Vec<u64> = match stream_kind {
+            Some(StreamKind::SampleWeighted) => {
+                let ws: Vec<u64> =
+                    sampled.iter().map(|&aid| ep.agents[aid].shard.len() as u64).collect();
+                if ws.iter().sum::<u64>() == 0 {
+                    vec![1; ws.len()]
+                } else {
+                    ws
+                }
+            }
+            _ => vec![1; sampled.len()],
+        };
+
+        // 3. local training — synchronous compute on the pool or the
+        // fused lockstep path, exactly as the reference, except the
+        // workers do NOT push into the accumulator: arrival events do,
+        // in (time, seq) order. The streaming reduce is order-invariant
+        // (exact integer fixed-point), so the finalize is bit-identical
+        // either way.
+        let t_local = Instant::now();
+        let global = Arc::new(ep.global.clone());
+        let mk_job = |aid: usize| LocalJob {
+            agent_id: aid,
+            round,
+            shard: ep.agents[aid].shard.clone(),
+            global: Arc::clone(&global),
+            lr: ep.params.lr,
+            local_epochs: ep.params.local_epochs,
+            max_steps_per_epoch: ep.params.max_local_steps,
+            seed: ep.params.seed,
+        };
+        let results: Vec<Result<(Update, AgentRecord)>> = if ep.params.fuse {
+            let jobs: Vec<LocalJob> = sampled.iter().map(|&aid| mk_job(aid)).collect();
+            let list = worker::with_runtime(&ep.manifest, &ep.key, |rt| {
+                worker::run_local_fused(rt, &ep.dataset, &jobs)
+            })?;
+            list.into_iter().map(Ok).collect()
+        } else {
+            let jobs: Vec<_> = sampled
+                .iter()
+                .map(|&aid| {
+                    let job = mk_job(aid);
+                    let manifest = Arc::clone(&ep.manifest);
+                    let dataset = Arc::clone(&ep.dataset);
+                    let key = ep.key.clone();
+                    move |_wid: usize| -> Result<_> {
+                        worker::with_runtime(&manifest, &key, |rt| {
+                            worker::run_local(rt, &dataset, &job)
+                        })
+                    }
+                })
+                .collect();
+            ep.pool.run(jobs)
+        };
+        profiler.record("local_training", t_local.elapsed().as_secs_f64());
+
+        // 4. schedule this cohort's events at dispatch + latency. Under
+        // a wall clock the measured local-training time is the compute
+        // latency, with the configured model on top as network latency;
+        // under the virtual clock the model is the whole latency.
+        let dispatched = sampled.len();
+        for (i, res) in results.into_iter().enumerate() {
+            let (update, record) = res?;
+            let aid = record.agent_id;
+            let mut latency = policy.latency.sample(ep.params.seed, aid, round);
+            if policy.clock == ClockKind::Wall {
+                latency += record.secs;
+            }
+            let at = round_start.saturating_add(SimTime::from_secs_f64(latency));
+            queue.push(at, Event::ClientFinished { agent_id: aid, round });
+            queue.push(at, Event::DeltaArrived { agent_id: aid, round });
+            flying.insert(
+                aid,
+                Pending { update, record, origin_round: round, base_weight: stream_weights[i] },
+            );
+        }
+        if let Some(window) = policy.deadline {
+            queue.push(round_start.saturating_add(window), Event::RoundDeadline { round });
+        }
+
+        // 5. drain events until the round closes: goal-count reached,
+        // deadline fired, or everything in flight has arrived.
+        let goal = policy.goal.unwrap_or(usize::MAX);
+        let mut updates: Vec<Update> = Vec::new();
+        let mut train_loss = Accumulator::default();
+        let mut train_acc = Accumulator::default();
+        let mut fresh = 0usize;
+        let mut close_time: Option<SimTime> = None;
+        while close_time.is_none() {
+            let Some(sch) = queue.pop() else {
+                // Nothing left in flight and no deadline pending: the
+                // round closes at the current time (goal not reachable).
+                close_time = Some(clock.now());
+                break;
+            };
+            clock.advance_to(sch.time);
+            match sch.event {
+                Event::ClientFinished { agent_id, .. } => {
+                    logger.log_event(&sch.event.to_record(sch.time, round, None))?;
+                    // Fold the client's local metrics into the round it
+                    // finished in — for the degenerate policy this is
+                    // the dispatch round, in the reference's order.
+                    let record = flying
+                        .get(&agent_id)
+                        .expect("ClientFinished without a pending update")
+                        .record
+                        .clone();
+                    train_loss.add(record.final_loss());
+                    train_acc.add(record.final_acc());
+                    ep.agents[agent_id].record_round(record.final_loss(), ep.params.local_epochs);
+                    logger.log_agent(&record)?;
+                    agent_records.push(record);
+                }
+                Event::DeltaArrived { agent_id, round: origin } => {
+                    let staleness = (round - origin) as u64;
+                    logger.log_event(&sch.event.to_record(sch.time, round, Some(staleness)))?;
+                    let pending =
+                        flying.remove(&agent_id).expect("DeltaArrived without a pending update");
+                    let mut update = pending.update;
+                    let dense = (update.delta.len() * 4) as u64;
+                    comm.dense_bytes += dense;
+                    if let Some(acc) = &stream_acc {
+                        // Streaming rounds require the identity
+                        // compressor; stale deltas are discounted by
+                        // the policy's staleness weight.
+                        comm.wire_bytes += dense;
+                        let w = policy.stream_weight(pending.base_weight, staleness);
+                        acc.push(&update.delta, w)?;
+                    } else {
+                        let compressed = ep.compressor.compress(&update.delta);
+                        comm.wire_bytes += compressed.wire_bytes() as u64;
+                        update.delta = compressed.decompress();
+                    }
+                    updates.push(update);
+                    if staleness == 0 {
+                        fresh += 1;
+                    }
+                    if updates.len() >= goal || (fresh == dispatched && flying.is_empty()) {
+                        close_time = Some(sch.time);
+                    }
+                }
+                Event::RoundDeadline { round: r } if r == round => {
+                    logger.log_event(&sch.event.to_record(sch.time, round, None))?;
+                    close_time = Some(sch.time);
+                }
+                // A deadline for a round that already closed early (at
+                // its goal-count or with a full buffer) is superseded.
+                Event::RoundDeadline { .. } => {}
+                Event::EvalDue { .. } => {
+                    unreachable!("EvalDue is emitted at round close, never queued")
+                }
+            }
+        }
+        let close = close_time.unwrap_or(round_start);
+        let sim_secs = close.saturating_sub(round_start).as_secs_f64();
+
+        // 6. server-side defense + per-round bookkeeping — identical to
+        // the reference (dropped/rejected are logged for every round).
+        let report = profiler.time("defense", || ep.defense.screen(&mut updates));
+        rejected_log.push(report.rejected.clone());
+        dropped_log.push(dropped.clone());
+        if updates.is_empty() {
+            // nothing arrived (deadline with zero arrivals) or the
+            // defense rejected everything: keep the old global model
+            let rec = RoundRecord {
+                round,
+                train_loss: train_loss.mean(),
+                train_acc: train_acc.mean(),
+                eval_loss: f64::NAN,
+                eval_acc: f64::NAN,
+                sampled,
+                dropped,
+                rejected: report.rejected,
+                secs: t_round.elapsed().as_secs_f64(),
+                sim_secs,
+            };
+            logger.log_round(&rec)?;
+            rounds.push(rec);
+            continue;
+        }
+
+        // 7. aggregate (Eq. 2) — identical to the reference.
+        let t_agg = Instant::now();
+        let new_global = match &stream_acc {
+            Some(acc) => {
+                let mean = acc.finalize()?;
+                ep.aggregator.apply_streamed(&ep.global, &mean)?
+            }
+            None => {
+                let manifest = Arc::clone(&ep.manifest);
+                let key = ep.key.clone();
+                let aggregator = &mut ep.aggregator;
+                let global = &ep.global;
+                worker::with_runtime(&manifest, &key, |rt| {
+                    aggregator.aggregate(global, &updates, Some(rt))
+                })?
+            }
+        };
+        let round_delta: Vec<f32> =
+            new_global.iter().zip(&ep.global).map(|(n, g)| n - g).collect();
+        contributions.record_round(&updates, &round_delta);
+        ep.global = new_global;
+        profiler.record("aggregation", t_agg.elapsed().as_secs_f64());
+
+        // 8. evaluate — an EvalDue event at the round's close time.
+        let do_eval = ep.params.eval_every > 0 && (round + 1) % ep.params.eval_every == 0;
+        let eval = if do_eval {
+            let ev = Event::EvalDue { round };
+            logger.log_event(&ev.to_record(close, round, None))?;
+            let t_eval = Instant::now();
+            let stats = ep.evaluate()?;
+            profiler.record("evaluation", t_eval.elapsed().as_secs_f64());
+            Some(stats)
+        } else {
+            None
+        };
+
+        // 9. log
+        let rec = RoundRecord {
+            round,
+            train_loss: train_loss.mean(),
+            train_acc: train_acc.mean(),
+            eval_loss: eval.map_or(f64::NAN, |e| e.mean_loss()),
+            eval_acc: eval.map_or(f64::NAN, |e| e.accuracy()),
+            sampled,
+            dropped,
+            rejected: report.rejected,
+            secs: t_round.elapsed().as_secs_f64(),
+            sim_secs,
+        };
+        logger.log_round(&rec)?;
+        rounds.push(rec);
+    }
+
+    let final_eval = ep.evaluate()?;
+    profiler.stop();
+    logger.finish()?;
+    Ok(RunResult {
+        rounds,
+        agent_records,
+        final_eval,
+        profiler,
+        comm,
+        contributions,
+        dropped: dropped_log,
+        defense_rejected: rejected_log,
+        sim_secs: clock.now().as_secs_f64(),
+    })
+}

@@ -1,0 +1,192 @@
+//! Per-client latency models (config: `engine.latency`).
+//!
+//! How long a sampled client takes between dispatch and its delta
+//! arriving at the server — compute plus upload, as one number. Samples
+//! are drawn from an independent SplitMix64 stream keyed by
+//! `(seed, agent_id, round)`, so a given client's latency in a given
+//! round is a pure function of the experiment seed: straggler patterns
+//! are bit-reproducible and independent of the training RNG streams.
+
+use std::str::FromStr;
+
+use crate::util::error::{bail, Context, Error, Result};
+use crate::util::Rng;
+
+/// Salt decorrelating latency streams from every other use of the seed.
+const LATENCY_SALT: u64 = 0x4C41_5445_4E43_59; // "LATENCY"
+
+/// A per-client latency distribution, in seconds.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum LatencyModel {
+    /// Zero latency — every client "arrives" the instant it is
+    /// dispatched. The degenerate (lockstep) model; the default.
+    #[default]
+    None,
+    /// Every client takes exactly this many seconds.
+    Constant(f64),
+    /// Lognormal: `median * exp(sigma * Z)`, `Z ~ N(0,1)`. The classic
+    /// heavy-tailed straggler model (a few clients are much slower).
+    Lognormal {
+        /// Median latency in seconds (the `exp(mu)` of the lognormal).
+        median: f64,
+        /// Log-scale spread (0 = constant at the median).
+        sigma: f64,
+    },
+    /// Each sample is drawn uniformly from this list — replay measured
+    /// device latencies.
+    Trace(Vec<f64>),
+}
+
+impl LatencyModel {
+    /// True for the zero-latency (lockstep) model.
+    pub fn is_none(&self) -> bool {
+        matches!(self, LatencyModel::None)
+    }
+
+    /// The latency of `agent_id` in `round`, in seconds. Deterministic:
+    /// a pure function of `(seed, agent_id, round)`.
+    pub fn sample(&self, seed: u64, agent_id: usize, round: usize) -> f64 {
+        let mut rng = || Rng::new(seed ^ LATENCY_SALT).split(agent_id as u64).split(round as u64);
+        match self {
+            LatencyModel::None => 0.0,
+            LatencyModel::Constant(secs) => *secs,
+            LatencyModel::Lognormal { median, sigma } => {
+                let z = rng().next_gaussian() as f64;
+                (median.max(1e-12).ln() + sigma * z).exp()
+            }
+            LatencyModel::Trace(samples) => {
+                samples[rng().next_below(samples.len() as u64) as usize]
+            }
+        }
+    }
+
+    /// Reject models a struct literal could build but parsing would not:
+    /// negative/non-finite parameters or an empty trace.
+    pub fn validate(&self) -> Result<()> {
+        let ok = |v: f64| v.is_finite() && v >= 0.0;
+        match self {
+            LatencyModel::None => Ok(()),
+            LatencyModel::Constant(secs) if ok(*secs) => Ok(()),
+            LatencyModel::Lognormal { median, sigma } if ok(*median) && ok(*sigma) => Ok(()),
+            LatencyModel::Trace(s) if !s.is_empty() && s.iter().all(|&v| ok(v)) => Ok(()),
+            other => bail!("invalid latency model {other:?} (negative, non-finite, or empty)"),
+        }
+    }
+}
+
+impl FromStr for LatencyModel {
+    type Err = Error;
+
+    /// `none` | `constant:SECS` | `lognormal:MEDIAN,SIGMA` |
+    /// `trace:S1,S2,...` — the config/CLI syntax.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let model = match s.split_once(':') {
+            None => match s.to_ascii_lowercase().as_str() {
+                "" | "none" | "0" => LatencyModel::None,
+                other => bail!(
+                    "unknown latency model {other:?} \
+                     (none | constant:SECS | lognormal:MEDIAN,SIGMA | trace:S1,S2,...)"
+                ),
+            },
+            Some((name, args)) => match name.trim().to_ascii_lowercase().as_str() {
+                "constant" => LatencyModel::Constant(
+                    args.trim().parse::<f64>().with_context(|| format!("constant:{args}"))?,
+                ),
+                "lognormal" => {
+                    let (median, sigma) = args
+                        .split_once(',')
+                        .with_context(|| format!("lognormal needs MEDIAN,SIGMA, got {args:?}"))?;
+                    let median = median.trim().parse::<f64>().context("lognormal MEDIAN")?;
+                    let sigma = sigma.trim().parse::<f64>().context("lognormal SIGMA")?;
+                    LatencyModel::Lognormal { median, sigma }
+                }
+                "trace" => LatencyModel::Trace(
+                    args.split(',')
+                        .map(|v| v.trim().parse::<f64>().with_context(|| format!("trace {v:?}")))
+                        .collect::<Result<Vec<f64>>>()?,
+                ),
+                other => bail!("unknown latency model {other:?}"),
+            },
+        };
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+impl std::fmt::Display for LatencyModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LatencyModel::None => f.write_str("none"),
+            LatencyModel::Constant(secs) => write!(f, "constant:{secs}"),
+            LatencyModel::Lognormal { median, sigma } => write!(f, "lognormal:{median},{sigma}"),
+            LatencyModel::Trace(samples) => {
+                f.write_str("trace:")?;
+                for (i, s) in samples.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{s}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_roundtrips() {
+        for spec in ["none", "constant:0.5", "lognormal:1,0.5", "trace:0.1,0.5,2"] {
+            let m: LatencyModel = spec.parse().unwrap();
+            assert_eq!(m.to_string().parse::<LatencyModel>().unwrap(), m, "{spec}");
+        }
+        assert_eq!("".parse::<LatencyModel>().unwrap(), LatencyModel::None);
+        assert_eq!("0".parse::<LatencyModel>().unwrap(), LatencyModel::None);
+        assert!("warp:9".parse::<LatencyModel>().is_err());
+        assert!("constant:-1".parse::<LatencyModel>().is_err());
+        assert!("lognormal:1".parse::<LatencyModel>().is_err());
+        assert!("trace:".parse::<LatencyModel>().is_err());
+    }
+
+    #[test]
+    fn samples_are_deterministic_per_agent_round() {
+        let m: LatencyModel = "lognormal:1.0,0.8".parse().unwrap();
+        let a = m.sample(42, 3, 5);
+        assert_eq!(a.to_bits(), m.sample(42, 3, 5).to_bits());
+        assert_ne!(a.to_bits(), m.sample(42, 4, 5).to_bits(), "per-agent streams differ");
+        assert_ne!(a.to_bits(), m.sample(42, 3, 6).to_bits(), "per-round streams differ");
+        assert_ne!(a.to_bits(), m.sample(43, 3, 5).to_bits(), "per-seed streams differ");
+        assert!(a > 0.0 && a.is_finite());
+    }
+
+    #[test]
+    fn trace_samples_come_from_the_trace() {
+        let m: LatencyModel = "trace:0.25,1.5,4.0".parse().unwrap();
+        for aid in 0..32 {
+            let s = m.sample(7, aid, 0);
+            assert!([0.25, 1.5, 4.0].contains(&s), "got {s}");
+        }
+    }
+
+    #[test]
+    fn zero_and_constant_models() {
+        assert_eq!(LatencyModel::None.sample(1, 2, 3), 0.0);
+        assert!(LatencyModel::None.is_none());
+        let c: LatencyModel = "constant:2.5".parse().unwrap();
+        assert_eq!(c.sample(1, 2, 3), 2.5);
+        assert!(!c.is_none());
+    }
+
+    #[test]
+    fn lognormal_median_is_roughly_right() {
+        let m = LatencyModel::Lognormal { median: 2.0, sigma: 0.5 };
+        let mut xs: Vec<f64> = (0..4001).map(|aid| m.sample(11, aid, 0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[xs.len() / 2];
+        assert!((med - 2.0).abs() < 0.2, "empirical median {med}");
+    }
+}

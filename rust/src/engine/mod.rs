@@ -1,0 +1,259 @@
+//! Event-driven round engine with virtual time.
+//!
+//! The lockstep loop in `Entrypoint::run_lockstep` is a synchronous
+//! barrier: every sampled agent trains, then the round aggregates. That
+//! shape cannot express the scheduling realities of cross-device FL —
+//! stragglers, round deadlines with partial participation, or
+//! FedBuff-style buffered aggregation (Nguyen et al., 2022) — so this
+//! module restructures the round loop around a discrete-event queue:
+//!
+//! - typed [`Event`]s ([`Event::ClientFinished`], [`Event::DeltaArrived`],
+//!   [`Event::RoundDeadline`], [`Event::EvalDue`]) ordered by a
+//!   simulated timestamp ([`SimTime`]),
+//! - a [`Clock`] trait with a deterministic [`VirtualClock`] (time jumps
+//!   to the next event) and a [`WallClock`] (events are stamped with
+//!   measured walltime),
+//! - per-client [`LatencyModel`]s (constant / lognormal / trace-driven),
+//!   seeded from `(seed, agent_id, round)` so every straggler
+//!   distribution is bit-reproducible,
+//! - a [`RoundPolicy`] bundling latency, deadline, goal-count, and
+//!   staleness weighting into one value derived from `FlParams`.
+//!
+//! **The degenerate policy is the lockstep loop.** With zero latency, no
+//! deadline, and no goal-count, every event of a round fires at the same
+//! instant and drains in schedule order — the exact dispatch order of
+//! the lockstep loop — and the order-invariant `StreamingAccumulator`
+//! reduce makes the aggregate bit-identical. `tests/engine_e2e.rs` pins
+//! `Entrypoint::run` (which always routes through this engine) against
+//! the retained `run_lockstep` reference at multiple worker counts.
+//!
+//! Because the streaming reduce is an exact fixed-point integer sum,
+//! buffered/async aggregation is *purely a scheduling change*: a stale
+//! delta is just a push with a staleness-discounted weight
+//! ([`RoundPolicy::stream_weight`]), and deadline- or goal-triggered
+//! finalize is just when the round stops draining arrivals.
+
+pub mod clock;
+pub mod driver;
+pub mod latency;
+pub mod policy;
+
+pub use clock::{Clock, ClockKind, SimTime, VirtualClock, WallClock};
+pub use latency::LatencyModel;
+pub use policy::RoundPolicy;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::metrics::EventRecord;
+
+/// A typed engine event — everything that can happen between "cohort
+/// dispatched" and "round finalized".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A sampled client finished its local training for `round` (its
+    /// device is free to be sampled again).
+    ClientFinished {
+        /// The client that finished.
+        agent_id: usize,
+        /// The round it was dispatched in.
+        round: usize,
+    },
+    /// A client's delta reached the server and is ready to aggregate.
+    /// When this fires in a later round than it was dispatched in, the
+    /// update is *stale* and is weight-discounted on the buffered path.
+    DeltaArrived {
+        /// The client whose update arrived.
+        agent_id: usize,
+        /// The round the update was computed in (its dispatch round).
+        round: usize,
+    },
+    /// The server's collection window for `round` expired: finalize with
+    /// whatever arrived (partial participation).
+    RoundDeadline {
+        /// The round whose window expired.
+        round: usize,
+    },
+    /// Global-model evaluation fell due after `round` finalized.
+    EvalDue {
+        /// The round that was just finalized.
+        round: usize,
+    },
+}
+
+impl Event {
+    /// Stable snake_case tag, used in event logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::ClientFinished { .. } => "client_finished",
+            Event::DeltaArrived { .. } => "delta_arrived",
+            Event::RoundDeadline { .. } => "round_deadline",
+            Event::EvalDue { .. } => "eval_due",
+        }
+    }
+
+    /// The originating agent, for client events.
+    pub fn agent_id(&self) -> Option<usize> {
+        match self {
+            Event::ClientFinished { agent_id, .. } | Event::DeltaArrived { agent_id, .. } => {
+                Some(*agent_id)
+            }
+            _ => None,
+        }
+    }
+
+    /// The round the event belongs to (dispatch round for client events).
+    pub fn round(&self) -> usize {
+        match self {
+            Event::ClientFinished { round, .. }
+            | Event::DeltaArrived { round, .. }
+            | Event::RoundDeadline { round }
+            | Event::EvalDue { round } => *round,
+        }
+    }
+
+    /// The loggable record of this event firing at `time`, processed in
+    /// round `in_round` (`staleness` = `in_round - dispatch round` for
+    /// arrivals).
+    pub fn to_record(&self, time: SimTime, in_round: usize, staleness: Option<u64>) -> EventRecord {
+        EventRecord {
+            time: time.as_secs_f64(),
+            kind: self.kind(),
+            round: in_round,
+            agent_id: self.agent_id(),
+            staleness,
+        }
+    }
+}
+
+/// An [`Event`] with its firing time and insertion sequence number.
+///
+/// Ordering is by `(time, seq)`: `seq` is assigned at schedule time, so
+/// simultaneous events fire in the order they were scheduled. Under the
+/// degenerate policy every event of a round fires at `time == now`, and
+/// this tie-break is exactly what reproduces the lockstep dispatch order.
+#[derive(Clone, Debug)]
+pub struct Scheduled {
+    /// When the event fires.
+    pub time: SimTime,
+    /// Schedule-order tie-break (unique per queue).
+    pub seq: u64,
+    /// The event itself.
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// Min-heap of [`Scheduled`] events, popped in `(time, seq)` order.
+///
+/// The total order is deterministic for any insertion order of
+/// *distinct* times, and insertion order for ties — which is itself
+/// deterministic because scheduling happens in dispatch order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Scheduled>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` to fire at `time`.
+    pub fn push(&mut self, time: SimTime, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(std::cmp::Reverse(Scheduled { time, seq, event }));
+    }
+
+    /// Pop the earliest event (ties in schedule order).
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn us(t: u64) -> SimTime {
+        SimTime::from_micros(t)
+    }
+
+    #[test]
+    fn queue_pops_in_time_order_regardless_of_insertion_order() {
+        // The virtual-time determinism contract: shuffled arrival of
+        // distinct-time events drains in the same order every time.
+        let mut times: Vec<u64> = (0..64).map(|i| i * 17 + 3).collect();
+        Rng::new(99).shuffle(&mut times);
+        let mut q = EventQueue::new();
+        for &t in &times {
+            q.push(us(t), Event::RoundDeadline { round: t as usize });
+        }
+        let mut drained = Vec::new();
+        while let Some(s) = q.pop() {
+            drained.push(s.time.as_micros());
+        }
+        let mut sorted = times.clone();
+        sorted.sort_unstable();
+        assert_eq!(drained, sorted);
+    }
+
+    #[test]
+    fn simultaneous_events_fire_in_schedule_order() {
+        // The degenerate-policy contract: zero-latency ties drain in
+        // dispatch order.
+        let mut q = EventQueue::new();
+        for aid in [5usize, 2, 9, 0] {
+            q.push(SimTime::ZERO, Event::DeltaArrived { agent_id: aid, round: 0 });
+        }
+        let order: Vec<usize> =
+            std::iter::from_fn(|| q.pop()).map(|s| s.event.agent_id().unwrap()).collect();
+        assert_eq!(order, vec![5, 2, 9, 0]);
+    }
+
+    #[test]
+    fn event_kinds_and_accessors() {
+        let e = Event::DeltaArrived { agent_id: 3, round: 7 };
+        assert_eq!(e.kind(), "delta_arrived");
+        assert_eq!(e.agent_id(), Some(3));
+        assert_eq!(e.round(), 7);
+        let d = Event::RoundDeadline { round: 2 };
+        assert_eq!(d.kind(), "round_deadline");
+        assert_eq!(d.agent_id(), None);
+        let r = d.to_record(us(1_500_000), 2, None);
+        assert_eq!(r.kind, "round_deadline");
+        assert!((r.time - 1.5).abs() < 1e-12);
+    }
+}

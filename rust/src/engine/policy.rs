@@ -1,0 +1,145 @@
+//! The round scheduling policy — when a round stops collecting updates
+//! and how late updates are weighted.
+
+use super::clock::{ClockKind, SimTime};
+use super::latency::LatencyModel;
+
+/// Fixed-point scale applied to buffered-mode stream weights so the
+/// staleness discount survives integer rounding: a weight is
+/// `round(base * 1024 / (1 + staleness)^alpha)`. The scale cancels in
+/// the accumulator's normalized weighted mean. It is applied to *every*
+/// update of a non-degenerate run (never mixed with unscaled weights),
+/// and not at all under the degenerate policy — scaling perturbs the
+/// fixed-point quantisation, and degenerate runs are pinned
+/// bit-identical to the lockstep reference.
+const STALENESS_WEIGHT_SCALE: f64 = 1024.0;
+
+/// Everything the engine needs to schedule a run, derived from
+/// `FlParams` by `FlParams::round_policy`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundPolicy {
+    /// Per-client dispatch→arrival latency distribution.
+    pub latency: LatencyModel,
+    /// Collection window per round; `None` waits for every arrival.
+    pub deadline: Option<SimTime>,
+    /// Buffered-aggregation goal: finalize the round as soon as this
+    /// many updates (fresh + stale) arrived — FedBuff's buffer size K.
+    pub goal: Option<usize>,
+    /// Staleness discount exponent `alpha` in `(1 + staleness)^-alpha`
+    /// (staleness = rounds between dispatch and application).
+    pub staleness_alpha: f64,
+    /// Virtual (simulated) or wall (measured) time.
+    pub clock: ClockKind,
+}
+
+impl Default for RoundPolicy {
+    fn default() -> Self {
+        Self::lockstep()
+    }
+}
+
+impl RoundPolicy {
+    /// The degenerate policy: zero latency, wait for everyone, virtual
+    /// clock — exactly the lockstep loop.
+    pub fn lockstep() -> Self {
+        Self {
+            latency: LatencyModel::None,
+            deadline: None,
+            goal: None,
+            staleness_alpha: 0.5,
+            clock: ClockKind::Virtual,
+        }
+    }
+
+    /// True when this policy reproduces the lockstep loop bit-identically
+    /// (zero latency, no deadline, no goal, virtual clock).
+    pub fn is_degenerate(&self) -> bool {
+        self.latency.is_none()
+            && self.deadline.is_none()
+            && self.goal.is_none()
+            && self.clock == ClockKind::Virtual
+    }
+
+    /// True when rounds may finalize before every dispatched update
+    /// arrives (a deadline or goal-count is set), i.e. updates can be
+    /// applied stale in later rounds — FedBuff-style buffering.
+    pub fn buffered(&self) -> bool {
+        self.deadline.is_some() || self.goal.is_some()
+    }
+
+    /// The integer weight a delta contributes to the streaming reduce:
+    /// `base` (the shard's sample count, or 1 for uniform rules) under
+    /// the degenerate policy, else fixed-point staleness-discounted
+    /// (never 0 — an accepted update always contributes).
+    pub fn stream_weight(&self, base: u64, staleness: u64) -> u64 {
+        if self.is_degenerate() {
+            return base;
+        }
+        let discount = (1.0 + staleness as f64).powf(-self.staleness_alpha);
+        ((base as f64 * STALENESS_WEIGHT_SCALE * discount).round() as u64).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lockstep_policy_is_degenerate() {
+        let p = RoundPolicy::lockstep();
+        assert!(p.is_degenerate());
+        assert!(!p.buffered());
+        assert_eq!(RoundPolicy::default(), p);
+    }
+
+    #[test]
+    fn any_async_knob_breaks_degeneracy() {
+        let mut p = RoundPolicy::lockstep();
+        p.latency = LatencyModel::Constant(0.5);
+        assert!(!p.is_degenerate());
+        assert!(!p.buffered(), "latency alone does not buffer across rounds");
+
+        let mut p = RoundPolicy::lockstep();
+        p.deadline = Some(SimTime::from_secs_f64(2.0));
+        assert!(!p.is_degenerate());
+        assert!(p.buffered());
+
+        let mut p = RoundPolicy::lockstep();
+        p.goal = Some(4);
+        assert!(!p.is_degenerate());
+        assert!(p.buffered());
+
+        let mut p = RoundPolicy::lockstep();
+        p.clock = ClockKind::Wall;
+        assert!(!p.is_degenerate());
+    }
+
+    #[test]
+    fn degenerate_weight_is_the_raw_base() {
+        // Bit-parity with the lockstep reference requires the exact
+        // same integer weights it pushes.
+        let p = RoundPolicy::lockstep();
+        for base in [0u64, 1, 37, 5000] {
+            assert_eq!(p.stream_weight(base, 0), base);
+        }
+    }
+
+    #[test]
+    fn staleness_discount_is_monotone_and_never_zero() {
+        let mut p = RoundPolicy::lockstep();
+        p.goal = Some(2);
+        p.staleness_alpha = 0.5;
+        let fresh = p.stream_weight(50, 0);
+        assert_eq!(fresh, 50 * 1024, "fresh updates carry the full scaled base");
+        let mut last = fresh;
+        for staleness in 1..6 {
+            let w = p.stream_weight(50, staleness);
+            assert!(w < last, "staleness {staleness}: {w} !< {last}");
+            assert!(w >= 1);
+            last = w;
+        }
+        // alpha = 0 disables the discount entirely.
+        p.staleness_alpha = 0.0;
+        assert_eq!(p.stream_weight(50, 9), 50 * 1024);
+    }
+}

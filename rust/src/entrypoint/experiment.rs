@@ -1,0 +1,364 @@
+//! The `Experiment` builder — the redesigned construction API.
+//!
+//! TorchFL's pitch is bootstrapping an FL experiment in a few lines;
+//! the struct-literal `FlParams { 24 fields... }` plus a hand-loaded
+//! manifest was not that. [`Experiment::builder`] gives the same
+//! surface as typed setters over [`FlParams`] defaults, resolves the
+//! execution environment from the chosen backend, and validates the
+//! whole config in [`ExperimentBuilder::build`]:
+//!
+//! ```no_run
+//! use ferrisfl::prelude::*;
+//!
+//! let mut exp = Experiment::builder()
+//!     .name("quickstart")
+//!     .model("mlp-s")
+//!     .dataset("synth-mnist")
+//!     .num_agents(10)
+//!     .sampling_ratio(0.5)
+//!     .rounds(5)
+//!     .local_epochs(2)
+//!     .split(Scheme::NonIid { niid_factor: 3 })
+//!     .build()?;
+//! let result = exp.run(&mut ConsoleLogger::default())?;
+//! # Ok::<(), ferrisfl::util::error::Error>(())
+//! ```
+//!
+//! The low-level path (`FlParams` literal + `Entrypoint::new`) remains
+//! public for harnesses that need to sweep raw configs.
+
+use std::sync::Arc;
+
+use crate::config::{FlParams, Mode, Optimizer};
+use crate::engine::{ClockKind, LatencyModel};
+use crate::federation::Scheme;
+use crate::loggers::Logger;
+use crate::metrics::RoundRecord;
+use crate::runtime::{BackendKind, EvalStats, Manifest};
+use crate::util::error::Result;
+
+use super::{Entrypoint, RunResult};
+
+/// A fully-constructed federated experiment, ready to run.
+///
+/// Thin wrapper over [`Entrypoint`] — built by [`ExperimentBuilder`],
+/// which is the supported way to construct one.
+pub struct Experiment {
+    inner: Entrypoint,
+}
+
+impl Experiment {
+    /// Start building an experiment from the default [`FlParams`].
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder { params: FlParams::default(), manifest: None, artifacts_dir: None }
+    }
+
+    /// Run the experiment through the round engine, emitting records
+    /// into `logger`.
+    pub fn run(&mut self, logger: &mut dyn Logger) -> Result<RunResult> {
+        self.inner.run(logger)
+    }
+
+    /// The validated experiment config.
+    pub fn params(&self) -> &FlParams {
+        &self.inner.params
+    }
+
+    /// Number of agents holding shards.
+    pub fn num_agents(&self) -> usize {
+        self.inner.agents.len()
+    }
+
+    /// Current global model parameters.
+    pub fn global_params(&self) -> &[f32] {
+        self.inner.global_params()
+    }
+
+    /// Evaluate the current global model on the test split.
+    pub fn evaluate(&self) -> Result<EvalStats> {
+        self.inner.evaluate()
+    }
+
+    /// Convenience: the last round that evaluated, if any.
+    pub fn last_eval_round(result: &RunResult) -> Option<&RoundRecord> {
+        result.rounds.iter().rev().find(|r| !r.eval_loss.is_nan())
+    }
+
+    /// Escape hatch to the underlying [`Entrypoint`].
+    pub fn entrypoint(&mut self) -> &mut Entrypoint {
+        &mut self.inner
+    }
+}
+
+/// Typed, chainable setters over [`FlParams`]; [`Self::build`] validates
+/// and constructs the [`Experiment`].
+pub struct ExperimentBuilder {
+    params: FlParams,
+    manifest: Option<Arc<Manifest>>,
+    artifacts_dir: Option<String>,
+}
+
+impl ExperimentBuilder {
+    /// Experiment name (log file prefix).
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.params.experiment_name = name.into();
+        self
+    }
+
+    /// Zoo model variant.
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.params.model = model.into();
+        self
+    }
+
+    /// Dataset registry entry.
+    pub fn dataset(mut self, dataset: impl Into<String>) -> Self {
+        self.params.dataset = dataset.into();
+        self
+    }
+
+    /// Total number of agents K.
+    pub fn num_agents(mut self, n: usize) -> Self {
+        self.params.num_agents = n;
+        self
+    }
+
+    /// Fraction of agents sampled per round, in `(0, 1]`.
+    pub fn sampling_ratio(mut self, r: f64) -> Self {
+        self.params.sampling_ratio = r;
+        self
+    }
+
+    /// Global federation rounds T (`FlParams::global_epochs`).
+    pub fn rounds(mut self, t: usize) -> Self {
+        self.params.global_epochs = t;
+        self
+    }
+
+    /// Local epochs per sampled agent per round.
+    pub fn local_epochs(mut self, e: usize) -> Self {
+        self.params.local_epochs = e;
+        self
+    }
+
+    /// Data distribution across agents.
+    pub fn split(mut self, split: Scheme) -> Self {
+        self.params.split = split;
+        self
+    }
+
+    /// Sampler registry name (`random`, `reputation`, ...).
+    pub fn sampler(mut self, sampler: impl Into<String>) -> Self {
+        self.params.sampler = sampler.into();
+        self
+    }
+
+    /// Aggregator registry name (`fedavg`, `median`, `trim:0.25`, ...).
+    pub fn aggregator(mut self, aggregator: impl Into<String>) -> Self {
+        self.params.aggregator = aggregator.into();
+        self
+    }
+
+    /// Local optimizer.
+    pub fn optimizer(mut self, optimizer: Optimizer) -> Self {
+        self.params.optimizer = optimizer;
+        self
+    }
+
+    /// Training mode.
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.params.mode = mode;
+        self
+    }
+
+    /// Start from pretrained weights (finetune / featext).
+    pub fn use_pretrained(mut self, yes: bool) -> Self {
+        self.params.use_pretrained = yes;
+        self
+    }
+
+    /// Local learning rate.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.params.lr = lr;
+        self
+    }
+
+    /// RNG seed for the whole experiment.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.params.seed = seed;
+        self
+    }
+
+    /// Worker threads simulating parallel client devices (0 = auto).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.params.workers = n;
+        self
+    }
+
+    /// Run each cohort as one fused lockstep step stream (SGD only).
+    pub fn fuse(mut self, yes: bool) -> Self {
+        self.params.fuse = yes;
+        self
+    }
+
+    /// Evaluate the global model every N rounds (0 = only at the end).
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.params.eval_every = n;
+        self
+    }
+
+    /// Cap per-agent local steps per epoch (0 = full shard).
+    pub fn max_local_steps(mut self, n: usize) -> Self {
+        self.params.max_local_steps = n;
+        self
+    }
+
+    /// Directory for CSV/JSONL logs (empty = no file logs).
+    pub fn log_dir(mut self, dir: impl Into<String>) -> Self {
+        self.params.log_dir = dir.into();
+        self
+    }
+
+    /// Per-round dropout probability of a sampled agent, in `[0, 1)`.
+    pub fn dropout(mut self, p: f64) -> Self {
+        self.params.dropout = p;
+        self
+    }
+
+    /// Server-side defense registry name (`none`, `normfilter:T`, ...).
+    pub fn defense(mut self, defense: impl Into<String>) -> Self {
+        self.params.defense = defense.into();
+        self
+    }
+
+    /// Client update compression registry name (`none`, `topk:0.1`, ...).
+    pub fn compression(mut self, compression: impl Into<String>) -> Self {
+        self.params.compression = compression.into();
+        self
+    }
+
+    /// Execution backend (default native; pjrt needs the cargo feature
+    /// and an artifacts dir — see [`Self::artifacts_dir`]).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.params.backend = backend;
+        self
+    }
+
+    /// Per-client latency model for the round engine.
+    pub fn latency(mut self, latency: LatencyModel) -> Self {
+        self.params.latency = latency;
+        self
+    }
+
+    /// Round collection window in simulated seconds (0 = none).
+    pub fn deadline_secs(mut self, secs: f64) -> Self {
+        self.params.deadline_secs = secs;
+        self
+    }
+
+    /// Buffered-aggregation goal count (FedBuff's K; 0 = whole cohort).
+    pub fn agg_goal(mut self, k: usize) -> Self {
+        self.params.agg_goal = k;
+        self
+    }
+
+    /// Staleness discount exponent for buffered updates.
+    pub fn staleness_alpha(mut self, alpha: f64) -> Self {
+        self.params.staleness_alpha = alpha;
+        self
+    }
+
+    /// Engine clock: virtual (deterministic) or wall (measured).
+    pub fn clock(mut self, clock: ClockKind) -> Self {
+        self.params.clock = clock;
+        self
+    }
+
+    /// Use an already-loaded execution manifest (overrides backend/
+    /// artifacts resolution).
+    pub fn manifest(mut self, manifest: Arc<Manifest>) -> Self {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Where to look for AOT artifacts when the backend needs them
+    /// (default `artifacts`).
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Replace the accumulated params wholesale (escape hatch for
+    /// sweeps that start from an existing config).
+    pub fn params(mut self, params: FlParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Validate the config ([`FlParams::validate`]), resolve the
+    /// execution environment, and construct the experiment.
+    pub fn build(self) -> Result<Experiment> {
+        self.params.validate()?;
+        let manifest = match self.manifest {
+            Some(m) => m,
+            None => match self.params.backend {
+                BackendKind::Native => Arc::new(Manifest::native()),
+                BackendKind::Pjrt => {
+                    Arc::new(Manifest::load(self.artifacts_dir.as_deref().unwrap_or("artifacts"))?)
+                }
+            },
+        };
+        Ok(Experiment { inner: Entrypoint::new(self.params, manifest)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loggers::NullLogger;
+
+    #[test]
+    fn builder_builds_and_runs_a_tiny_experiment() {
+        let mut exp = Experiment::builder()
+            .name("builder_smoke")
+            .model("mlp-s")
+            .dataset("synth-mnist")
+            .num_agents(4)
+            .sampling_ratio(1.0)
+            .rounds(1)
+            .local_epochs(1)
+            .max_local_steps(2)
+            .workers(1)
+            .eval_every(0)
+            .build()
+            .unwrap();
+        assert_eq!(exp.num_agents(), 4);
+        assert_eq!(exp.params().experiment_name, "builder_smoke");
+        let res = exp.run(&mut NullLogger).unwrap();
+        assert_eq!(res.rounds.len(), 1);
+        assert!(Experiment::last_eval_round(&res).is_none());
+        assert!(!exp.global_params().is_empty());
+    }
+
+    #[test]
+    fn build_runs_validate() {
+        let err = Experiment::builder().sampling_ratio(0.0).build();
+        assert!(err.is_err(), "invalid configs must fail at build()");
+        let err = Experiment::builder().fuse(true).optimizer(Optimizer::Adam).build();
+        assert!(err.is_err(), "fuse is SGD-only");
+    }
+
+    #[test]
+    fn builder_sets_engine_knobs() {
+        let b = Experiment::builder()
+            .latency("constant:0.5".parse().unwrap())
+            .deadline_secs(2.0)
+            .agg_goal(3)
+            .staleness_alpha(1.0)
+            .clock(ClockKind::Virtual);
+        assert_eq!(b.params.latency, LatencyModel::Constant(0.5));
+        let pol = b.params.round_policy();
+        assert!(pol.buffered());
+        assert_eq!(pol.goal, Some(3));
+    }
+}

@@ -31,8 +31,11 @@
 //! from contending for cores — per-agent results are identical to the
 //! pooled path.
 
+pub mod experiment;
 pub mod trainer;
 pub mod worker;
+
+pub use experiment::{Experiment, ExperimentBuilder};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -48,7 +51,7 @@ use crate::incentives::ContributionTracker;
 use crate::loggers::Logger;
 use crate::metrics::{Accumulator, AgentRecord, RoundRecord};
 use crate::profiler::SimpleProfiler;
-use crate::runtime::{BackendKind, EvalStats, Manifest};
+use crate::runtime::{EvalStats, Manifest};
 use crate::samplers::{self, Sampler};
 use crate::util::error::Result;
 use crate::util::{Rng, WorkerPool};
@@ -88,6 +91,9 @@ pub struct RunResult {
     pub dropped: Vec<Vec<usize>>,
     /// Updates rejected by the defense, per round.
     pub defense_rejected: Vec<Vec<usize>>,
+    /// Total simulated seconds on the engine's clock (0 for the
+    /// lockstep reference and the degenerate policy).
+    pub sim_secs: f64,
 }
 
 /// The federated experiment orchestrator.
@@ -96,17 +102,17 @@ pub struct Entrypoint {
     pub manifest: Arc<Manifest>,
     pub dataset: Arc<Dataset>,
     pub agents: Vec<Agent>,
-    sampler: Box<dyn Sampler>,
-    aggregator: Box<dyn Aggregator>,
-    defense: Box<dyn Defense>,
-    compressor: Box<dyn Compressor>,
-    pool: WorkerPool,
-    global: Vec<f32>,
-    key: RuntimeKey,
-    rng: Rng,
+    pub(crate) sampler: Box<dyn Sampler>,
+    pub(crate) aggregator: Box<dyn Aggregator>,
+    pub(crate) defense: Box<dyn Defense>,
+    pub(crate) compressor: Box<dyn Compressor>,
+    pub(crate) pool: WorkerPool,
+    pub(crate) global: Vec<f32>,
+    pub(crate) key: RuntimeKey,
+    pub(crate) rng: Rng,
     /// Streaming-round reduce state, allocated on the first streaming
     /// round and reused (reset) every round after.
-    stream_acc: Option<Arc<StreamingAccumulator>>,
+    pub(crate) stream_acc: Option<Arc<StreamingAccumulator>>,
 }
 
 impl Entrypoint {
@@ -123,11 +129,11 @@ impl Entrypoint {
         let agents = agents::from_partition(partition.shards);
 
         let key = RuntimeKey {
-            backend: BackendKind::parse(&params.backend)?,
+            backend: params.backend,
             model: params.model.clone(),
             dataset: params.dataset.clone(),
-            optimizer: params.optimizer.clone(),
-            mode: params.mode.clone(),
+            optimizer: params.optimizer.to_string(),
+            mode: params.mode.to_string(),
             entry_tag: String::new(),
         };
         // W^0 comes from the executor (op 5: model loading) — weight
@@ -176,7 +182,7 @@ impl Entrypoint {
     /// and may reject — whole deltas; compressors rewrite them on the
     /// "wire" before aggregation). Gated on the traits' own
     /// capability probes, not on config names.
-    fn stream_kind(&self) -> Option<StreamKind> {
+    pub(crate) fn stream_kind(&self) -> Option<StreamKind> {
         if !self.defense.is_passthrough() || !self.compressor.is_identity() {
             return None;
         }
@@ -189,7 +195,22 @@ impl Entrypoint {
     }
 
     /// Run the full experiment, emitting records into `logger`.
+    ///
+    /// Routes through the event-driven round engine (see
+    /// [`crate::engine`]): the scheduling policy comes from
+    /// `FlParams::round_policy`, and with the default config (zero
+    /// latency, no deadline, no goal-count) the engine's degenerate
+    /// policy reproduces [`Self::run_lockstep`] bit-identically — the
+    /// parity is pinned by `tests/engine_e2e.rs`.
     pub fn run(&mut self, logger: &mut dyn Logger) -> Result<RunResult> {
+        crate::engine::driver::run_engine(self, logger)
+    }
+
+    /// The original synchronous round loop, retained as the golden
+    /// reference the engine's degenerate policy is pinned against
+    /// (the same idiom as `NaiveMlp` and the serial GEMM drivers:
+    /// the trusted implementation stays, bit-exact, as the oracle).
+    pub fn run_lockstep(&mut self, logger: &mut dyn Logger) -> Result<RunResult> {
         let mut profiler = SimpleProfiler::new();
         let mut rounds = Vec::new();
         let mut agent_records = Vec::new();
@@ -222,8 +243,9 @@ impl Entrypoint {
                 });
             }
             if sampled.is_empty() {
-                // whole cohort offline: skip the round
-                dropped_log.push(dropped);
+                // whole cohort offline: skip the round (the dropped
+                // list is still surfaced to the logger, like any round)
+                dropped_log.push(dropped.clone());
                 rejected_log.push(Vec::new());
                 let rec = RoundRecord {
                     round,
@@ -232,7 +254,10 @@ impl Entrypoint {
                     eval_loss: f64::NAN,
                     eval_acc: f64::NAN,
                     sampled,
+                    dropped,
+                    rejected: Vec::new(),
                     secs: t_round.elapsed().as_secs_f64(),
+                    sim_secs: 0.0,
                 };
                 logger.log_round(&rec)?;
                 rounds.push(rec);
@@ -366,7 +391,7 @@ impl Entrypoint {
             // 2b. server-side defense screens the cohort before Eq. 2.
             let report = profiler.time("defense", || self.defense.screen(&mut updates));
             rejected_log.push(report.rejected.clone());
-            dropped_log.push(dropped);
+            dropped_log.push(dropped.clone());
             if updates.is_empty() {
                 // defense rejected everything: keep the old global model
                 let rec = RoundRecord {
@@ -376,7 +401,10 @@ impl Entrypoint {
                     eval_loss: f64::NAN,
                     eval_acc: f64::NAN,
                     sampled,
+                    dropped,
+                    rejected: report.rejected,
                     secs: t_round.elapsed().as_secs_f64(),
+                    sim_secs: 0.0,
                 };
                 logger.log_round(&rec)?;
                 rounds.push(rec);
@@ -433,7 +461,10 @@ impl Entrypoint {
                 eval_loss: eval.map_or(f64::NAN, |e| e.mean_loss()),
                 eval_acc: eval.map_or(f64::NAN, |e| e.accuracy()),
                 sampled,
+                dropped,
+                rejected: report.rejected,
                 secs: t_round.elapsed().as_secs_f64(),
+                sim_secs: 0.0,
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -451,6 +482,7 @@ impl Entrypoint {
             contributions,
             dropped: dropped_log,
             defense_rejected: rejected_log,
+            sim_secs: 0.0,
         })
     }
 
@@ -472,6 +504,7 @@ impl Entrypoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::BackendKind;
 
     #[test]
     fn entrypoint_validates_params() {

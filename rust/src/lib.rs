@@ -38,8 +38,20 @@
 //! this repository. PJRT-specific integration tests self-skip unless the
 //! `pjrt` feature is enabled *and* `artifacts/manifest.json` exists.
 //!
+//! ## Round engine
+//!
+//! Rounds execute on an event-driven engine ([`engine`]) with a
+//! simulated clock: per-client latency models, round deadlines with
+//! partial participation, and FedBuff-style buffered aggregation are
+//! scheduling policies over one event queue. The default policy (no
+//! latency, no deadline, virtual clock) reproduces the classic
+//! lockstep loop bit-for-bit; see [`engine`] for the event taxonomy
+//! and [`config::FlParams::round_policy`] for the knobs.
+//!
 //! Quickstart: `cargo run --release --example quickstart`, or
 //! `cargo run --release -- run --config configs/quickstart.toml`.
+//! In code, start from [`Experiment::builder`](prelude::Experiment::builder)
+//! via [`prelude`].
 
 pub mod agents;
 pub mod aggregators;
@@ -48,6 +60,7 @@ pub mod compression;
 pub mod config;
 pub mod datasets;
 pub mod defense;
+pub mod engine;
 pub mod entrypoint;
 pub mod federation;
 pub mod incentives;
@@ -59,3 +72,21 @@ pub mod runtime;
 pub mod samplers;
 pub mod util;
 pub mod zoo;
+
+/// One-stop imports for building and running experiments:
+/// `use ferrisfl::prelude::*;`.
+pub mod prelude {
+    pub use crate::config::{FlParams, Mode, Optimizer};
+    pub use crate::engine::{
+        Clock, ClockKind, Event, EventQueue, LatencyModel, RoundPolicy, SimTime, VirtualClock,
+        WallClock,
+    };
+    pub use crate::entrypoint::{Entrypoint, Experiment, ExperimentBuilder, RunResult};
+    pub use crate::federation::Scheme;
+    pub use crate::loggers::{
+        ConsoleLogger, CsvLogger, JsonlLogger, Logger, MultiLogger, NullLogger,
+    };
+    pub use crate::metrics::{AgentRecord, EventRecord, RoundRecord};
+    pub use crate::runtime::{BackendKind, EvalStats, Manifest};
+    pub use crate::util::error::{Error, Result};
+}

@@ -11,7 +11,7 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use crate::metrics::{AgentRecord, RoundRecord};
+use crate::metrics::{AgentRecord, EventRecord, RoundRecord};
 use crate::util::error::{Context, Result};
 use crate::util::Json;
 
@@ -19,6 +19,11 @@ use crate::util::Json;
 pub trait Logger: Send {
     fn log_round(&mut self, rec: &RoundRecord) -> Result<()>;
     fn log_agent(&mut self, rec: &AgentRecord) -> Result<()>;
+    /// One engine event (arrival, deadline, eval) — the per-event
+    /// channel of the round engine. Default: ignore.
+    fn log_event(&mut self, _rec: &EventRecord) -> Result<()> {
+        Ok(())
+    }
     /// Flush buffers (called at experiment end).
     fn finish(&mut self) -> Result<()> {
         Ok(())
@@ -56,13 +61,24 @@ impl Logger for ConsoleLogger {
                 r.eval_loss, r.eval_acc
             )
         };
+        let mut extras = String::new();
+        if !r.dropped.is_empty() {
+            extras.push_str(&format!(" | {} dropped", r.dropped.len()));
+        }
+        if !r.rejected.is_empty() {
+            extras.push_str(&format!(" | {} rejected", r.rejected.len()));
+        }
+        if r.sim_secs > 0.0 {
+            extras.push_str(&format!(" | sim {:.2}s", r.sim_secs));
+        }
         println!(
-            "[round {:>3}] train loss {:.4} acc {:.3}{} | {} agents | {:.2}s",
+            "[round {:>3}] train loss {:.4} acc {:.3}{} | {} agents{} | {:.2}s",
             r.round,
             r.train_loss,
             r.train_acc,
             eval,
             r.sampled.len(),
+            extras,
             r.secs
         );
         Ok(())
@@ -81,12 +97,26 @@ impl Logger for ConsoleLogger {
         }
         Ok(())
     }
+
+    fn log_event(&mut self, r: &EventRecord) -> Result<()> {
+        if self.verbose {
+            let agent = r.agent_id.map_or(String::new(), |a| format!(" agent {a}"));
+            let stale = match r.staleness {
+                Some(s) if s > 0 => format!(" (stale {s})"),
+                _ => String::new(),
+            };
+            println!("  [t={:>9.3}s] {}{}{} round {}", r.time, r.kind, agent, stale, r.round);
+        }
+        Ok(())
+    }
 }
 
-/// CSV sink: `<dir>/<name>_rounds.csv` + `<dir>/<name>_agents.csv`.
+/// CSV sink: `<dir>/<name>_rounds.csv` + `<dir>/<name>_agents.csv` +
+/// `<dir>/<name>_events.csv` (the engine's per-event channel).
 pub struct CsvLogger {
     rounds: BufWriter<File>,
     agents: BufWriter<File>,
+    events: BufWriter<File>,
 }
 
 impl CsvLogger {
@@ -102,15 +132,20 @@ impl CsvLogger {
             File::create(dir.join(format!("{name}_agents.csv")))
                 .context("creating agents csv")?,
         );
+        let mut events = BufWriter::new(
+            File::create(dir.join(format!("{name}_events.csv")))
+                .context("creating events csv")?,
+        );
         writeln!(
             rounds,
-            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,secs"
+            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,num_dropped,num_rejected,secs,sim_secs"
         )?;
         writeln!(
             agents,
             "round,agent_id,final_loss,final_acc,num_samples,secs"
         )?;
-        Ok(Self { rounds, agents })
+        writeln!(events, "time,kind,round,agent_id,staleness")?;
+        Ok(Self { rounds, agents, events })
     }
 }
 
@@ -118,14 +153,17 @@ impl Logger for CsvLogger {
     fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
         writeln!(
             self.rounds,
-            "{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{}",
             r.round,
             r.train_loss,
             r.train_acc,
             r.eval_loss,
             r.eval_acc,
             r.sampled.len(),
-            r.secs
+            r.dropped.len(),
+            r.rejected.len(),
+            r.secs,
+            r.sim_secs
         )?;
         Ok(())
     }
@@ -144,9 +182,17 @@ impl Logger for CsvLogger {
         Ok(())
     }
 
+    fn log_event(&mut self, r: &EventRecord) -> Result<()> {
+        let agent = r.agent_id.map_or(String::new(), |a| a.to_string());
+        let stale = r.staleness.map_or(String::new(), |s| s.to_string());
+        writeln!(self.events, "{},{},{},{},{}", r.time, r.kind, r.round, agent, stale)?;
+        Ok(())
+    }
+
     fn finish(&mut self) -> Result<()> {
         self.rounds.flush()?;
         self.agents.flush()?;
+        self.events.flush()?;
         Ok(())
     }
 }
@@ -182,7 +228,16 @@ impl Logger for JsonlLogger {
                 "sampled",
                 Json::Arr(r.sampled.iter().map(|&i| Json::num(i as f64)).collect()),
             ),
+            (
+                "dropped",
+                Json::Arr(r.dropped.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            (
+                "rejected",
+                Json::Arr(r.rejected.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
             ("secs", Json::num(r.secs)),
+            ("sim_secs", Json::num(r.sim_secs)),
         ]);
         writeln!(self.out, "{}", j.to_string())?;
         Ok(())
@@ -205,6 +260,23 @@ impl Logger for JsonlLogger {
             ("secs", Json::num(r.secs)),
         ]);
         writeln!(self.out, "{}", j.to_string())?;
+        Ok(())
+    }
+
+    fn log_event(&mut self, r: &EventRecord) -> Result<()> {
+        let mut pairs = vec![
+            ("kind", Json::str("event")),
+            ("event", Json::str(r.kind)),
+            ("time", Json::num(r.time)),
+            ("round", Json::num(r.round as f64)),
+        ];
+        if let Some(a) = r.agent_id {
+            pairs.push(("agent_id", Json::num(a as f64)));
+        }
+        if let Some(s) = r.staleness {
+            pairs.push(("staleness", Json::num(s as f64)));
+        }
+        writeln!(self.out, "{}", Json::obj(pairs).to_string())?;
         Ok(())
     }
 
@@ -240,6 +312,13 @@ impl Logger for MultiLogger {
         Ok(())
     }
 
+    fn log_event(&mut self, r: &EventRecord) -> Result<()> {
+        for s in &mut self.sinks {
+            s.log_event(r)?;
+        }
+        Ok(())
+    }
+
     fn finish(&mut self) -> Result<()> {
         for s in &mut self.sinks {
             s.finish()?;
@@ -260,7 +339,20 @@ mod tests {
             eval_loss: 1.0,
             eval_acc: 0.6,
             sampled: vec![1, 4],
+            dropped: vec![7],
+            rejected: vec![],
             secs: 0.25,
+            sim_secs: 0.0,
+        }
+    }
+
+    fn sample_event() -> EventRecord {
+        EventRecord {
+            time: 1.5,
+            kind: "delta_arrived",
+            round: 3,
+            agent_id: Some(4),
+            staleness: Some(1),
         }
     }
 
@@ -276,17 +368,21 @@ mod tests {
     }
 
     #[test]
-    fn csv_logger_writes_both_channels() {
+    fn csv_logger_writes_all_channels() {
         let dir = std::env::temp_dir().join(format!("ferrisfl-csv-{}", std::process::id()));
         let mut l = CsvLogger::create(&dir, "t").unwrap();
         l.log_round(&sample_round()).unwrap();
         l.log_agent(&sample_agent()).unwrap();
+        l.log_event(&sample_event()).unwrap();
         l.finish().unwrap();
         let rounds = std::fs::read_to_string(dir.join("t_rounds.csv")).unwrap();
         assert!(rounds.lines().count() == 2);
-        assert!(rounds.contains("3,1.25,0.5,1,0.6,2,0.25"));
+        assert!(rounds.contains("3,1.25,0.5,1,0.6,2,1,0,0.25,0"));
         let agents = std::fs::read_to_string(dir.join("t_agents.csv")).unwrap();
         assert!(agents.contains("3,4,1,0.7,50,0.1"));
+        let events = std::fs::read_to_string(dir.join("t_events.csv")).unwrap();
+        assert!(events.starts_with("time,kind,round,agent_id,staleness"));
+        assert!(events.contains("1.5,delta_arrived,3,4,1"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -297,15 +393,16 @@ mod tests {
         let mut l = JsonlLogger::create(&dir, "t").unwrap();
         l.log_round(&sample_round()).unwrap();
         l.log_agent(&sample_agent()).unwrap();
+        l.log_event(&sample_event()).unwrap();
         l.finish().unwrap();
         let text = std::fs::read_to_string(dir.join("t.jsonl")).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 2);
+        assert_eq!(lines.len(), 3);
         for line in lines {
             let v = Json::parse(line).unwrap();
             assert!(matches!(
                 v.req("kind").unwrap().as_str().unwrap(),
-                "round" | "agent"
+                "round" | "agent" | "event"
             ));
         }
         std::fs::remove_dir_all(&dir).ok();
@@ -319,6 +416,7 @@ mod tests {
         ]);
         m.log_round(&sample_round()).unwrap();
         m.log_agent(&sample_agent()).unwrap();
+        m.log_event(&sample_event()).unwrap();
         m.finish().unwrap();
     }
 }

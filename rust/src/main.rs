@@ -22,6 +22,7 @@ ferrisfl — FerrisFL: bootstrap federated-learning experiments (TorchFL repro)
 
 USAGE:
   ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>] [--fuse]
+               [--latency <model>] [--deadline <secs>] [--goal <k>] [--staleness-alpha <a>] [--clock virtual|wall]
   ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
   ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
   ferrisfl info [--backend native|pjrt] [--artifacts <dir>]
@@ -30,6 +31,14 @@ BACKENDS:
   native  pure-rust CPU executor, no artifacts needed (default)
   pjrt    AOT HLO artifacts via PJRT/XLA (build with --features pjrt,
           then `make artifacts` and pass --artifacts <dir>)
+
+ROUND ENGINE (all optional; defaults reproduce the lockstep loop):
+  --latency <model>       per-client latency: none | constant:SECS |
+                          lognormal:MEDIAN,SIGMA | trace:S1,S2,...
+  --deadline <secs>       close each round after this simulated window
+  --goal <k>              finalize once k updates arrived (FedBuff)
+  --staleness-alpha <a>   staleness discount exponent (default 0.5)
+  --clock virtual|wall    simulated (deterministic) or measured time
 
 EXPERIMENTS (paper artefacts):
   table1 table2 table3 table4 fig6 fig7 fig8i fig8ii fig9 fig10 | all
@@ -107,8 +116,24 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flags.contains("fuse") {
         params.fuse = true;
     }
-    let backend = backend_of(args, &params.backend)?;
-    params.backend = backend.name().into();
+    if let Some(l) = args.opt("latency") {
+        params.latency = l.parse()?;
+    }
+    if let Some(d) = args.opt("deadline") {
+        params.deadline_secs = d.parse()?;
+    }
+    if let Some(g) = args.opt("goal") {
+        params.agg_goal = g.parse()?;
+    }
+    if let Some(a) = args.opt("staleness-alpha") {
+        params.staleness_alpha = a.parse()?;
+    }
+    if let Some(c) = args.opt("clock") {
+        params.clock = c.parse()?;
+    }
+    params.validate()?;
+    let backend = backend_of(args, params.backend.name())?;
+    params.backend = backend;
     let manifest = load_manifest(args, backend)?;
 
     println!(

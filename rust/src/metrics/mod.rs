@@ -19,8 +19,35 @@ pub struct RoundRecord {
     pub eval_acc: f64,
     /// Ids of the sampled agents.
     pub sampled: Vec<usize>,
+    /// Ids of sampled agents that dropped out of the round.
+    pub dropped: Vec<usize>,
+    /// Ids of agents whose updates the defense rejected.
+    pub rejected: Vec<usize>,
     /// Wall-clock seconds for the round.
     pub secs: f64,
+    /// Simulated seconds the round spanned on the engine's clock
+    /// (0 under the degenerate zero-latency policy).
+    pub sim_secs: f64,
+}
+
+/// One engine event, as surfaced to the loggers (the `engine` module's
+/// per-event channel: JSONL `kind = "event"` lines, the
+/// `<name>_events.csv` file).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventRecord {
+    /// Seconds since the start of the run on the engine's clock —
+    /// simulated (virtual clock) or measured (wall clock).
+    pub time: f64,
+    /// Event tag: `client_finished`, `delta_arrived`, `round_deadline`,
+    /// or `eval_due`.
+    pub kind: &'static str,
+    /// The round the event was processed in.
+    pub round: usize,
+    /// Originating agent (client events only).
+    pub agent_id: Option<usize>,
+    /// For `delta_arrived`: rounds between dispatch and application
+    /// (0 = fresh, >0 = buffered stale update).
+    pub staleness: Option<u64>,
 }
 
 /// One agent's local-training metrics for one round (one Fig 9 point).

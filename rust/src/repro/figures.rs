@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use crate::config::FlParams;
+use crate::config::{FlParams, Mode, Optimizer};
 use crate::datasets::{Dataset, Split};
 use crate::entrypoint::trainer::{self, TrainConfig, TrainMode};
 use crate::entrypoint::Entrypoint;
@@ -137,8 +137,8 @@ pub fn fig8i(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             split: Scheme::parse(split)?,
             sampler: "random".into(),
             aggregator: "fedavg".into(),
-            optimizer: "sgd".into(),
-            mode: "full".into(),
+            optimizer: Optimizer::Sgd,
+            mode: Mode::Full,
             use_pretrained: false,
             lr: 0.05,
             seed: opts.seed,
@@ -150,7 +150,8 @@ pub fn fig8i(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
-            backend: opts.backend.clone(),
+            backend: opts.backend.parse()?,
+            ..FlParams::default()
         };
         let (rounds, _) = run_fl(manifest, p)?;
         for r in rounds {
@@ -186,8 +187,8 @@ pub fn fig8ii(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             split: Scheme::parse(split)?,
             sampler: "random".into(),
             aggregator: "fedavg".into(),
-            optimizer: "adam".into(),
-            mode: "featext".into(),
+            optimizer: Optimizer::Adam,
+            mode: Mode::Featext,
             use_pretrained: true,
             lr: 0.001,
             seed: opts.seed,
@@ -199,7 +200,8 @@ pub fn fig8ii(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
             dropout: 0.0,
             defense: "none".into(),
             compression: "none".into(),
-            backend: opts.backend.clone(),
+            backend: opts.backend.parse()?,
+            ..FlParams::default()
         };
         let (rounds, _) = run_fl(manifest, p)?;
         for r in rounds {
@@ -228,8 +230,8 @@ pub fn fig9(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         split: Scheme::NonIid { niid_factor: 3 },
         sampler: "random".into(),
         aggregator: "fedavg".into(),
-        optimizer: "sgd".into(),
-        mode: "full".into(),
+        optimizer: Optimizer::Sgd,
+        mode: Mode::Full,
         use_pretrained: false,
         lr: 0.05,
         seed: opts.seed,
@@ -241,7 +243,8 @@ pub fn fig9(manifest: &Arc<Manifest>, opts: &ReproOptions) -> Result<()> {
         dropout: 0.0,
         defense: "none".into(),
         compression: "none".into(),
-        backend: opts.backend.clone(),
+        backend: opts.backend.parse()?,
+        ..FlParams::default()
     };
     let (_, agent_records) = run_fl(manifest, p)?;
 

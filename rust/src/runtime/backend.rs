@@ -59,6 +59,14 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
+impl std::str::FromStr for BackendKind {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        BackendKind::parse(s)
+    }
+}
+
 /// Result of one train step.
 #[derive(Clone, Copy, Debug)]
 pub struct StepStats {

@@ -169,7 +169,7 @@ fn resolve(request: Option<&str>, detected: SimdLevel) -> (SimdLevel, Option<Str
 pub fn level() -> SimdLevel {
     static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
     *LEVEL.get_or_init(|| {
-        let request = std::env::var("FERRISFL_SIMD").ok();
+        let request = crate::util::env::simd();
         let (level, warning) = resolve(request.as_deref(), detected());
         if let Some(w) = warning {
             eprintln!("warning: {w}");

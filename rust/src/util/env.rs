@@ -1,0 +1,134 @@
+//! The `FERRISFL_*` environment knobs, in one place.
+//!
+//! Every env var the crate reads is declared, parsed, and documented
+//! here; call sites go through the typed accessors instead of
+//! scattering `std::env::var` strings. The knobs and their consumers:
+//!
+//! | Variable | Accessor | Meaning |
+//! |---|---|---|
+//! | `FERRISFL_THREADS` | [`threads`] | GEMM panel threads (`0`/`auto` = detect) |
+//! | `FERRISFL_SIMD` | [`simd`] | SIMD level override (`0`/`scalar`/`avx2`/`neon`/`auto`) |
+//! | `FERRISFL_SYNTH_CACHE` | [`synth_cache_enabled`] | `0` disables the synthesis cache |
+//! | `FERRISFL_BENCH_FAST` | [`bench_fast`] | non-`0` shrinks bench workloads for CI |
+//! | `FERRISFL_BENCH_JSON` | [`bench_json`] | bench snapshot path override |
+//!
+//! **Precedence** is uniform across the crate: an explicit config value
+//! (an `FlParams`/builder field, a CLI flag, a TOML key) beats the
+//! environment, and the environment beats auto-detection. Env knobs
+//! deliberately cover only what has no config-file home — process-level
+//! tuning (threads, SIMD, caches) and bench harness plumbing.
+//!
+//! Accessors that cache per-process do so at *their* call site (e.g.
+//! `util::threadpool::gemm_threads` resolves once into a `OnceLock`);
+//! this module itself re-reads the environment on every call so tests
+//! can exercise the parsers purely.
+
+use std::path::PathBuf;
+
+/// GEMM panel-thread count (see `util::threadpool::gemm_threads`).
+pub const THREADS: &str = "FERRISFL_THREADS";
+/// SIMD dispatch override (see `runtime::simd::level`).
+pub const SIMD: &str = "FERRISFL_SIMD";
+/// Synthesis-cache switch (see `datasets::SynthCache`).
+pub const SYNTH_CACHE: &str = "FERRISFL_SYNTH_CACHE";
+/// Bench fast-mode switch (see `benchutil::fast_mode`).
+pub const BENCH_FAST: &str = "FERRISFL_BENCH_FAST";
+/// Bench JSON snapshot path (see `benchutil::bench_json_path`).
+pub const BENCH_JSON: &str = "FERRISFL_BENCH_JSON";
+
+/// A parsed `FERRISFL_THREADS` request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ThreadsVar {
+    /// Unset, empty, `0`, or `auto` — detect from the machine.
+    Auto,
+    /// An explicit thread count (callers clamp to their own range).
+    Count(usize),
+    /// Set to something unparseable; the offending text, for warnings.
+    Invalid(String),
+}
+
+/// Parse a raw `FERRISFL_THREADS` value (pure; see [`threads`]).
+pub fn parse_threads(raw: Option<&str>) -> ThreadsVar {
+    match raw.map(str::trim) {
+        None | Some("") | Some("0") | Some("auto") => ThreadsVar::Auto,
+        Some(s) => match s.parse::<usize>() {
+            Ok(0) => ThreadsVar::Auto,
+            Ok(n) => ThreadsVar::Count(n),
+            Err(_) => ThreadsVar::Invalid(s.to_string()),
+        },
+    }
+}
+
+/// `FERRISFL_THREADS`: requested GEMM panel-thread count.
+pub fn threads() -> ThreadsVar {
+    parse_threads(std::env::var(THREADS).ok().as_deref())
+}
+
+/// `FERRISFL_SIMD`: the raw SIMD level request, if set. Validation is
+/// architecture-dependent and lives in `runtime::simd::resolve`.
+pub fn simd() -> Option<String> {
+    std::env::var(SIMD).ok()
+}
+
+/// Parse a raw `FERRISFL_SYNTH_CACHE` value (pure; see
+/// [`synth_cache_enabled`]): only a literal `0` disables the cache.
+pub fn parse_synth_cache(raw: Option<&str>) -> bool {
+    raw != Some("0")
+}
+
+/// `FERRISFL_SYNTH_CACHE`: whether the per-worker synthesis cache is
+/// enabled (default yes; `0` disables).
+pub fn synth_cache_enabled() -> bool {
+    parse_synth_cache(std::env::var(SYNTH_CACHE).ok().as_deref())
+}
+
+/// Parse a raw `FERRISFL_BENCH_FAST` value (pure; see [`bench_fast`]):
+/// set to anything but `0` means fast mode.
+pub fn parse_bench_fast(raw: Option<&str>) -> bool {
+    matches!(raw, Some(v) if v != "0")
+}
+
+/// `FERRISFL_BENCH_FAST`: whether benches shrink their workloads so CI
+/// can smoke-run them on every merge.
+pub fn bench_fast() -> bool {
+    parse_bench_fast(std::env::var(BENCH_FAST).ok().as_deref())
+}
+
+/// `FERRISFL_BENCH_JSON`: explicit bench snapshot path, if set. The
+/// default (workspace-root `BENCH_native.json`) is resolved by
+/// `benchutil::bench_json_path`, which owns the fallback.
+pub fn bench_json() -> Option<PathBuf> {
+    std::env::var(BENCH_JSON).ok().map(PathBuf::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_parsing() {
+        assert_eq!(parse_threads(None), ThreadsVar::Auto);
+        assert_eq!(parse_threads(Some("")), ThreadsVar::Auto);
+        assert_eq!(parse_threads(Some("0")), ThreadsVar::Auto);
+        assert_eq!(parse_threads(Some("auto")), ThreadsVar::Auto);
+        assert_eq!(parse_threads(Some(" 6 ")), ThreadsVar::Count(6));
+        assert_eq!(parse_threads(Some("lots")), ThreadsVar::Invalid("lots".into()));
+    }
+
+    #[test]
+    fn synth_cache_parsing() {
+        assert!(parse_synth_cache(None));
+        assert!(parse_synth_cache(Some("1")));
+        assert!(!parse_synth_cache(Some("0")));
+        // Historical behaviour: only a bare "0" disables.
+        assert!(parse_synth_cache(Some(" 0 ")));
+    }
+
+    #[test]
+    fn bench_fast_parsing() {
+        assert!(!parse_bench_fast(None));
+        assert!(!parse_bench_fast(Some("0")));
+        assert!(parse_bench_fast(Some("1")));
+        assert!(parse_bench_fast(Some("yes")));
+    }
+}

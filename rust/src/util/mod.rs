@@ -3,8 +3,10 @@
 //! FerrisFL builds fully offline with **no external crates at all**, so
 //! the small infrastructure pieces a project would normally pull from
 //! crates.io (anyhow, rand, serde_json, tokio/rayon) are implemented
-//! here, each with its own unit tests.
+//! here, each with its own unit tests. The [`env`] module is the single
+//! registry of `FERRISFL_*` environment knobs.
 
+pub mod env;
 pub mod error;
 pub mod json;
 pub mod rng;

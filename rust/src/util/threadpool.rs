@@ -223,19 +223,16 @@ pub fn gemm_threads() -> usize {
             .map(|n| n.get())
             .unwrap_or(4)
             .clamp(1, 8);
-        let req = std::env::var("FERRISFL_THREADS").ok();
-        match req.as_deref().map(str::trim) {
-            None | Some("") | Some("0") | Some("auto") => auto,
-            Some(s) => match s.parse::<usize>() {
-                Ok(n) => n.clamp(1, MAX_PANEL_WORKERS + 1),
-                Err(_) => {
-                    eprintln!(
-                        "warning: unknown FERRISFL_THREADS value {s:?} \
-                         (want a thread count, 0, or auto); using {auto}"
-                    );
-                    auto
-                }
-            },
+        match crate::util::env::threads() {
+            crate::util::env::ThreadsVar::Auto => auto,
+            crate::util::env::ThreadsVar::Count(n) => n.clamp(1, MAX_PANEL_WORKERS + 1),
+            crate::util::env::ThreadsVar::Invalid(s) => {
+                eprintln!(
+                    "warning: unknown FERRISFL_THREADS value {s:?} \
+                     (want a thread count, 0, or auto); using {auto}"
+                );
+                auto
+            }
         }
     })
 }

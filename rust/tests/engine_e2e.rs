@@ -1,0 +1,268 @@
+//! End-to-end tests for the event-driven round engine.
+//!
+//! Pins the engine's two headline contracts (see `engine::driver`):
+//!
+//! 1. **Lockstep parity** — under the degenerate policy (zero latency,
+//!    no deadline, no goal, virtual clock) `Entrypoint::run` is
+//!    BIT-IDENTICAL to the retained `run_lockstep` reference, at any
+//!    worker count, across the streaming / fused / materialized
+//!    aggregation paths and with dropout + compression in play.
+//! 2. **Deterministic virtual time** — FedBuff-style buffered runs
+//!    (latency + deadline / goal-count finalize) replay bit-identically
+//!    and actually buffer: deadlines fire, stragglers arrive in later
+//!    rounds with `staleness > 0`, and their updates are applied.
+
+use std::sync::Arc;
+
+use ferrisfl::config::FlParams;
+use ferrisfl::entrypoint::{Entrypoint, RunResult};
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::Logger;
+use ferrisfl::metrics::{AgentRecord, EventRecord, RoundRecord};
+use ferrisfl::runtime::{BackendKind, Manifest};
+use ferrisfl::util::error::Result;
+
+/// Logger that records every channel verbatim, for assertions.
+#[derive(Default)]
+struct CaptureLogger {
+    rounds: Vec<RoundRecord>,
+    agents: Vec<AgentRecord>,
+    events: Vec<EventRecord>,
+}
+
+impl Logger for CaptureLogger {
+    fn log_round(&mut self, rec: &RoundRecord) -> Result<()> {
+        self.rounds.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_agent(&mut self, rec: &AgentRecord) -> Result<()> {
+        self.agents.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_event(&mut self, rec: &EventRecord) -> Result<()> {
+        self.events.push(rec.clone());
+        Ok(())
+    }
+}
+
+/// Tiny-but-representative workload: small model, non-IID split, eval
+/// every round, few local steps so the whole file stays fast.
+fn base_params(name: &str) -> FlParams {
+    FlParams {
+        experiment_name: name.into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 6,
+        sampling_ratio: 0.5,
+        global_epochs: 2,
+        local_epochs: 1,
+        split: Scheme::NonIid { niid_factor: 2 },
+        lr: 0.05,
+        seed: 42,
+        workers: 1,
+        eval_every: 1,
+        max_local_steps: 4,
+        backend: BackendKind::Native,
+        ..FlParams::default()
+    }
+}
+
+/// Run `params` through the engine (`run`) or the lockstep reference
+/// (`run_lockstep`); return the result, final global params, and log.
+fn run_with(params: FlParams, lockstep: bool) -> (RunResult, Vec<f32>, CaptureLogger) {
+    let manifest = Arc::new(Manifest::native());
+    let mut ep = Entrypoint::new(params, manifest).unwrap();
+    let mut log = CaptureLogger::default();
+    let res = if lockstep {
+        ep.run_lockstep(&mut log)
+    } else {
+        ep.run(&mut log)
+    }
+    .unwrap();
+    let global = ep.global_params().to_vec();
+    (res, global, log)
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Everything except walltime (`secs`) and the profiler must match to
+/// the bit. NaNs (skipped evals, empty rounds) compare via `to_bits`,
+/// which both loops produce from the same `f64::NAN` path.
+fn assert_bit_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round, "{tag}: round index");
+        assert_eq!(bits(ra.train_loss), bits(rb.train_loss), "{tag} r{r}: train_loss");
+        assert_eq!(bits(ra.train_acc), bits(rb.train_acc), "{tag} r{r}: train_acc");
+        assert_eq!(bits(ra.eval_loss), bits(rb.eval_loss), "{tag} r{r}: eval_loss");
+        assert_eq!(bits(ra.eval_acc), bits(rb.eval_acc), "{tag} r{r}: eval_acc");
+        assert_eq!(ra.sampled, rb.sampled, "{tag} r{r}: sampled");
+        assert_eq!(ra.dropped, rb.dropped, "{tag} r{r}: dropped");
+        assert_eq!(ra.rejected, rb.rejected, "{tag} r{r}: rejected");
+        assert_eq!(bits(ra.sim_secs), bits(rb.sim_secs), "{tag} r{r}: sim_secs");
+    }
+    assert_eq!(a.agent_records.len(), b.agent_records.len(), "{tag}: agent record count");
+    for (aa, ab) in a.agent_records.iter().zip(&b.agent_records) {
+        let tag = format!("{tag} r{} agent {}", aa.round, aa.agent_id);
+        assert_eq!(aa.round, ab.round, "{tag}: round");
+        assert_eq!(aa.agent_id, ab.agent_id, "{tag}: agent_id");
+        assert_eq!(aa.num_samples, ab.num_samples, "{tag}: num_samples");
+        let la: Vec<u64> = aa.epoch_losses.iter().map(|&x| bits(x)).collect();
+        let lb: Vec<u64> = ab.epoch_losses.iter().map(|&x| bits(x)).collect();
+        assert_eq!(la, lb, "{tag}: epoch_losses");
+        let ca: Vec<u64> = aa.epoch_accs.iter().map(|&x| bits(x)).collect();
+        let cb: Vec<u64> = ab.epoch_accs.iter().map(|&x| bits(x)).collect();
+        assert_eq!(ca, cb, "{tag}: epoch_accs");
+    }
+    assert_eq!(a.comm.dense_bytes, b.comm.dense_bytes, "{tag}: dense_bytes");
+    assert_eq!(a.comm.wire_bytes, b.comm.wire_bytes, "{tag}: wire_bytes");
+    assert_eq!(bits(a.final_eval.loss_sum), bits(b.final_eval.loss_sum), "{tag}: eval loss_sum");
+    assert_eq!(bits(a.final_eval.correct), bits(b.final_eval.correct), "{tag}: eval correct");
+    assert_eq!(bits(a.final_eval.count), bits(b.final_eval.count), "{tag}: eval count");
+    assert_eq!(a.dropped, b.dropped, "{tag}: dropped");
+    assert_eq!(a.defense_rejected, b.defense_rejected, "{tag}: defense_rejected");
+}
+
+fn assert_globals_identical(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: global param count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: global param {i}");
+    }
+}
+
+/// The ISSUE's acceptance pin: the degenerate engine IS the lockstep
+/// loop, bit for bit, at any worker count and on every aggregation
+/// path (streaming fedavg, fused cohort, materialized median +
+/// defense, dropout + stochastic compression).
+#[test]
+fn degenerate_engine_is_bit_identical_to_lockstep() {
+    let configs: Vec<(&str, FlParams)> = vec![
+        ("stream_w1", base_params("parity_stream_w1")),
+        ("stream_w3", FlParams { workers: 3, ..base_params("parity_stream_w3") }),
+        ("fused", FlParams { fuse: true, ..base_params("parity_fused") }),
+        (
+            "dropout_randk",
+            FlParams {
+                workers: 2,
+                dropout: 0.25,
+                compression: "randk:0.5".into(),
+                ..base_params("parity_dropout_randk")
+            },
+        ),
+        (
+            "median_materialized",
+            FlParams {
+                aggregator: "median".into(),
+                defense: "normfilter:1000".into(),
+                ..base_params("parity_median")
+            },
+        ),
+    ];
+    for (tag, params) in configs {
+        let (res_e, glob_e, log_e) = run_with(params.clone(), false);
+        let (res_l, glob_l, log_l) = run_with(params, true);
+        assert_bit_identical(&res_e, &res_l, tag);
+        assert_globals_identical(&glob_e, &glob_l, tag);
+        assert_eq!(log_e.rounds.len(), log_l.rounds.len(), "{tag}: logged rounds");
+        assert_eq!(log_e.agents.len(), log_l.agents.len(), "{tag}: logged agents");
+        assert_eq!(res_e.sim_secs, 0.0, "{tag}: degenerate runs spend no simulated time");
+    }
+}
+
+/// A buffered (FedBuff-style) virtual-time run is a pure function of
+/// its config: replaying it reproduces every metric, every global
+/// parameter, and the entire event log bit-for-bit.
+#[test]
+fn buffered_virtual_time_run_is_deterministic() {
+    let mk = || FlParams {
+        num_agents: 8,
+        global_epochs: 3,
+        latency: "lognormal:0.5,0.8".parse().unwrap(),
+        deadline_secs: 1.0,
+        agg_goal: 2,
+        ..base_params("fedbuff_det")
+    };
+    let (res_a, glob_a, log_a) = run_with(mk(), false);
+    let (res_b, glob_b, log_b) = run_with(mk(), false);
+    assert_bit_identical(&res_a, &res_b, "fedbuff replay");
+    assert_globals_identical(&glob_a, &glob_b, "fedbuff replay");
+    assert_eq!(log_a.events, log_b.events, "fedbuff replay: event logs");
+    assert!(!log_a.events.is_empty(), "buffered runs log per-event records");
+    assert!(res_a.sim_secs > 0.0, "latency must advance the virtual clock");
+}
+
+/// Deadline-triggered finalize: with constant 2s latency and a 1s
+/// deadline no client ever beats its own round, so every round closes
+/// at the deadline and round N's updates are applied in round N+1 with
+/// staleness 1 — the canonical straggler/buffering scenario.
+#[test]
+fn deadline_closes_rounds_and_stale_updates_apply_later() {
+    let params = FlParams {
+        num_agents: 8,
+        global_epochs: 3,
+        latency: "constant:2.0".parse().unwrap(),
+        deadline_secs: 1.0,
+        ..base_params("fedbuff_deadline")
+    };
+    let (res, _glob, log) = run_with(params, false);
+    assert_eq!(res.rounds.len(), 3);
+    assert!(
+        res.rounds[0].train_loss.is_nan(),
+        "no update can beat the round-0 deadline, so round 0 aggregates nothing"
+    );
+    assert!(
+        !res.rounds[1].train_loss.is_nan(),
+        "round 1 must apply round 0's straggler updates"
+    );
+    assert!(
+        log.events.iter().any(|e| e.kind == "round_deadline" && e.round == 0),
+        "the round-0 deadline event must fire and be logged"
+    );
+    let stale = log
+        .events
+        .iter()
+        .filter(|e| e.kind == "delta_arrived" && e.staleness.unwrap_or(0) >= 1)
+        .count();
+    assert!(stale > 0, "stragglers must arrive in later rounds with staleness >= 1");
+    for r in &res.rounds {
+        assert!(r.sim_secs > 0.0, "round {}: deadline rounds consume simulated time", r.round);
+    }
+    assert!(res.sim_secs >= 3.0 - 1e-9, "three 1s-deadline rounds take >= 3 simulated seconds");
+}
+
+/// Goal-count finalize (FedBuff's buffer size K): with no deadline and
+/// K = 2, every round closes as soon as two updates arrive — the rest
+/// stay in flight and are buffered into later rounds.
+#[test]
+fn goal_count_finalizes_rounds_early() {
+    let params = FlParams {
+        num_agents: 8,
+        global_epochs: 2,
+        latency: "trace:0.2,0.4,0.6,0.8".parse().unwrap(),
+        agg_goal: 2,
+        ..base_params("fedbuff_goal")
+    };
+    let (res, _glob, log) = run_with(params, false);
+    assert_eq!(res.rounds.len(), 2);
+    for r in &res.rounds {
+        assert!(!r.train_loss.is_nan(), "round {}: goal-count rounds aggregate", r.round);
+    }
+    assert!(
+        log.events.iter().all(|e| e.kind != "round_deadline"),
+        "no deadline is configured, so no deadline events may fire"
+    );
+    for round in 0..2 {
+        let applied = log
+            .events
+            .iter()
+            .filter(|e| e.kind == "delta_arrived" && e.round == round)
+            .count();
+        assert_eq!(applied, 2, "round {round} closes after exactly goal = 2 arrivals");
+    }
+    assert!(res.sim_secs > 0.0);
+}

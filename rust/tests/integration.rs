@@ -17,7 +17,7 @@ use ferrisfl::entrypoint::worker::{self, LocalJob, RuntimeKey};
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::NullLogger;
-use ferrisfl::runtime::Manifest;
+use ferrisfl::runtime::{BackendKind, Manifest};
 use ferrisfl::util::Rng;
 
 fn native_manifest() -> Arc<Manifest> {
@@ -33,7 +33,7 @@ fn native_fl_params(name: &str) -> FlParams {
         experiment_name: name.into(),
         model: "mlp-s".into(),
         dataset: "synth-mnist".into(),
-        backend: "native".into(),
+        backend: BackendKind::Native,
         ..FlParams::default()
     }
 }
@@ -872,7 +872,7 @@ mod pjrt {
             experiment_name: "itest_pjrt".into(),
             model: "mlp-s".into(),
             dataset: "synth-mnist".into(),
-            backend: "pjrt".into(),
+            backend: BackendKind::Pjrt,
             num_agents: 8,
             sampling_ratio: 0.5,
             global_epochs: 3,
