@@ -132,6 +132,38 @@ fn main() {
         rows.push(("workers_4_fedbuff".to_string(), s.to_json(Some(1.0))));
     }
 
+    // Faulty round (chaos + recovery): the fedbuff workload with 20%
+    // mid-training crashes, two retries with backoff, and per-delta
+    // integrity checksums. Tracks the overhead of the fault layer —
+    // checksum computation on every update plus retry scheduling —
+    // against the clean fedbuff row above.
+    {
+        let params = FlParams {
+            experiment_name: "bench_round_faulty".into(),
+            latency: "lognormal:0.5,0.8".parse().unwrap(),
+            deadline_secs: 1.5,
+            agg_goal: 8,
+            faults: "crash:0.2".parse().unwrap(),
+            retry: 2,
+            backoff: "0.1,2,0.1".parse().unwrap(),
+            ..params_for(4, iters + 1, &manifest)
+        };
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let mut logger = NullLogger;
+        let res = ep.run(&mut logger).unwrap();
+        let mut times: Vec<f64> = res.rounds[1..].iter().map(|r| r.secs).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = BenchStats {
+            iters: times.len(),
+            min: times[0],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            p50: times[times.len() / 2],
+            max: times[times.len() - 1],
+        };
+        report("round walltime, workers=4 faulty", &s, "");
+        rows.push(("workers_4_faulty".to_string(), s.to_json(Some(1.0))));
+    }
+
     header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");
     let steady_rounds = if fast_mode() { 2 } else { 5 };
     let params = FlParams {

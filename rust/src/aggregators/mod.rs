@@ -19,7 +19,7 @@
 
 pub mod streaming;
 
-pub use streaming::StreamingAccumulator;
+pub use streaming::{delta_checksum, StreamingAccumulator};
 
 use crate::runtime::ModelExecutor;
 use crate::util::error::{bail, Result};

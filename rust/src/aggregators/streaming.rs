@@ -35,6 +35,7 @@ use std::sync::Mutex;
 
 use crate::runtime::simd;
 use crate::util::error::{bail, Result};
+use crate::util::rng;
 
 /// Coordinates per lock stripe (64 KiB of `f32` delta per stripe).
 const STRIPE_COORDS: usize = 1 << 14;
@@ -179,6 +180,29 @@ impl StreamingAccumulator {
     }
 }
 
+/// Integrity checksum over a delta's quantised fixed-point terms.
+///
+/// Each coordinate is quantised exactly as the streaming reduce would
+/// fold it at weight 1 — `(d.clamp(±2⁶⁰) * 2⁴⁰) as i128`, the same
+/// formula as the `fixed_accumulate` kernels — and the i128 terms plus
+/// the length are chained through a SplitMix64 finalizer. Pure integer
+/// math on deterministically quantised terms: the digest is
+/// bit-identical across platforms, SIMD levels, and thread counts.
+///
+/// The engine stamps every update with this at dispatch and verifies it
+/// on arrival, *before* the accumulator push, rejecting corrupt frames;
+/// it is the frame checksum of the future multi-process wire protocol,
+/// where the quantised i64 terms themselves go on the wire.
+pub fn delta_checksum(delta: &[f32]) -> u64 {
+    let mut h = rng::splitmix64_mix(0xF4A3_0D15_ED0C_0DE5 ^ delta.len() as u64);
+    for &d in delta {
+        let q = ((d as f64).clamp(-FX_TERM_LIMIT, FX_TERM_LIMIT) * FX_SCALE) as i128;
+        h = rng::splitmix64_mix(h ^ q as u64);
+        h = rng::splitmix64_mix(h ^ (q >> 64) as u64);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +308,29 @@ mod tests {
         assert!(acc.push(&[0.0, f32::NAN, 0.0], 1).is_err());
         assert!(acc.push(&[f32::INFINITY, 0.0, 0.0], 1).is_err());
         assert_eq!(acc.count(), 0, "rejected pushes must not count");
+    }
+
+    #[test]
+    fn checksum_detects_any_representable_perturbation() {
+        let mut rng = Rng::new(0xc4ec);
+        let delta: Vec<f32> = (0..512).map(|_| rng.next_gaussian() * 0.01).collect();
+        let h = delta_checksum(&delta);
+        assert_eq!(h, delta_checksum(&delta), "pure function of the payload");
+        // Any single-coordinate bump above the 2^-40 grid must change
+        // the digest — this is exactly the corruption model the fault
+        // layer injects (`payload[j] += 1.0`).
+        for j in [0usize, 7, 255, 511] {
+            let mut bad = delta.clone();
+            bad[j] += 1.0;
+            assert_ne!(h, delta_checksum(&bad), "coord {j}");
+        }
+        // Length and order are part of the frame.
+        assert_ne!(h, delta_checksum(&delta[..511]));
+        let mut swapped = delta.clone();
+        swapped.swap(0, 1);
+        assert_ne!(h, delta_checksum(&swapped));
+        // Empty frames hash deterministically too.
+        assert_eq!(delta_checksum(&[]), delta_checksum(&[]));
     }
 
     #[test]

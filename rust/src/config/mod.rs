@@ -8,7 +8,9 @@ pub mod toml;
 
 use std::str::FromStr;
 
-use crate::engine::{ClockKind, LatencyModel, RoundPolicy, SimTime};
+use crate::engine::{
+    Backoff, ClockKind, FaultPlan, LatencyModel, RecoveryPolicy, RoundPolicy, SimTime,
+};
 use crate::federation::Scheme;
 use crate::runtime::BackendKind;
 use crate::util::error::{bail, Context, Error, Result};
@@ -165,6 +167,23 @@ pub struct FlParams {
     /// Engine clock (`engine.clock`): deterministic virtual time
     /// (default) or measured wall time.
     pub clock: ClockKind,
+    /// Seeded fault plan for the engine (`faults.plan`): crash /
+    /// delta-loss / delta-corruption probabilities and a churn trace.
+    /// `fl.dropout` folds in as its crash-before-delivery term.
+    pub faults: FaultPlan,
+    /// Max retry attempts per failed client per round (`faults.retry`;
+    /// 0 = failures are final).
+    pub retry: u32,
+    /// Exponential retry backoff with seeded jitter (`faults.backoff`,
+    /// `BASE[,FACTOR[,JITTER]]` in simulated seconds).
+    pub backoff: Backoff,
+    /// Minimum fraction of the planned cohort that must arrive for the
+    /// round to aggregate (`faults.quorum`; 0 = no quorum). Below it the
+    /// round is skipped with the global model unchanged.
+    pub quorum: f64,
+    /// Resample a replacement client from the available pool when one
+    /// fails permanently (`faults.resample`).
+    pub resample: bool,
 }
 
 impl Default for FlParams {
@@ -199,6 +218,11 @@ impl Default for FlParams {
             agg_goal: 0,
             staleness_alpha: 0.5,
             clock: ClockKind::Virtual,
+            faults: FaultPlan::default(),
+            retry: 0,
+            backoff: Backoff::default(),
+            quorum: 0.0,
+            resample: false,
         }
     }
 }
@@ -252,6 +276,11 @@ impl FlParams {
             staleness_alpha: doc
                 .get_float("engine.staleness_alpha", d.staleness_alpha)?,
             clock: doc.get_str("engine.clock", d.clock.name())?.parse()?,
+            faults: doc.get_str("faults.plan", &d.faults.to_string())?.parse()?,
+            retry: doc.get_int("faults.retry", d.retry as i64)? as u32,
+            backoff: doc.get_str("faults.backoff", &d.backoff.to_string())?.parse()?,
+            quorum: doc.get_float("faults.quorum", d.quorum)?,
+            resample: doc.get_bool("faults.resample", d.resample)?,
         };
         p.validate()?;
         Ok(p)
@@ -285,8 +314,8 @@ impl FlParams {
         if self.fuse && self.optimizer != Optimizer::Sgd {
             bail!("fuse = true requires optimizer = sgd (the fused lockstep path is SGD-only)");
         }
-        if !(0.0..1.0).contains(&self.dropout) {
-            bail!("dropout must be in [0, 1)");
+        if !(0.0..=1.0).contains(&self.dropout) {
+            bail!("dropout must be in [0, 1] (1 = every sampled agent drops, rounds skip)");
         }
         self.latency.validate()?;
         if !self.deadline_secs.is_finite() || self.deadline_secs < 0.0 {
@@ -295,6 +324,8 @@ impl FlParams {
         if !self.staleness_alpha.is_finite() || self.staleness_alpha < 0.0 {
             bail!("staleness_alpha must be finite and >= 0");
         }
+        self.faults.validate()?;
+        self.recovery_policy().validate()?;
         Ok(())
     }
 
@@ -309,6 +340,30 @@ impl FlParams {
             goal: (self.agg_goal > 0).then_some(self.agg_goal),
             staleness_alpha: self.staleness_alpha,
             clock: self.clock,
+            faults: self.fault_plan(),
+            recovery: self.recovery_policy(),
+        }
+    }
+
+    /// The effective fault plan: `faults.plan` with `fl.dropout` folded
+    /// in as the crash-before-delivery probability (the legacy knob
+    /// takes precedence so existing configs keep their exact draws).
+    pub fn fault_plan(&self) -> FaultPlan {
+        let mut plan = self.faults.clone();
+        if self.dropout > 0.0 {
+            plan.dropout = self.dropout;
+        }
+        plan
+    }
+
+    /// The failure-recovery policy (`faults.retry` / `faults.backoff` /
+    /// `faults.quorum` / `faults.resample`).
+    pub fn recovery_policy(&self) -> RecoveryPolicy {
+        RecoveryPolicy {
+            max_retries: self.retry,
+            backoff: self.backoff,
+            resample: self.resample,
+            quorum: self.quorum,
         }
     }
 }
@@ -418,6 +473,8 @@ mod tests {
             "name = \"x\"\n[run]\nbackend = \"tpu\"\n",
             "name = \"x\"\n[engine]\nclock = \"cuckoo\"\n",
             "name = \"x\"\n[engine]\nlatency = \"warp:9\"\n",
+            "name = \"x\"\n[faults]\nplan = \"warp:0.1\"\n",
+            "name = \"x\"\n[faults]\nbackoff = \"1,0.5\"\n",
         ] {
             assert!(FlParams::from_toml(toml).is_err(), "{toml}");
         }
@@ -449,6 +506,61 @@ mod tests {
         let d = FlParams::default().round_policy();
         assert!(d.is_degenerate());
         assert_eq!(d, RoundPolicy::lockstep());
+    }
+
+    #[test]
+    fn faults_section_parses_and_maps_to_policy() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "chaos"
+            [faults]
+            plan = "crash:0.2;drop:0.1;churn:flapping:60,0.8"
+            retry = 2
+            backoff = "0.5,2,0.25"
+            quorum = 0.4
+            resample = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.retry, 2);
+        assert!(p.resample);
+        let pol = p.round_policy();
+        assert!(!pol.is_degenerate());
+        assert!(pol.chaos_active());
+        assert_eq!(pol.faults.crash, 0.2);
+        assert_eq!(pol.recovery.max_retries, 2);
+        assert_eq!(pol.recovery.backoff, "0.5,2,0.25".parse().unwrap());
+        assert_eq!(pol.recovery.quorum, 0.4);
+        // The defaults are fault-free with no recovery.
+        let d = FlParams::default();
+        assert!(d.fault_plan().is_inert());
+        assert!(d.recovery_policy().is_none());
+        assert!(!d.round_policy().chaos_active());
+    }
+
+    #[test]
+    fn legacy_dropout_folds_into_the_fault_plan() {
+        let mut p = FlParams::default();
+        p.dropout = 0.25;
+        let plan = p.fault_plan();
+        assert_eq!(plan.dropout, 0.25);
+        assert!(plan.is_vanilla());
+        assert!(p.round_policy().is_degenerate(), "dropout alone keeps lockstep parity");
+        // fl.dropout takes precedence over a plan's own dropout term.
+        p.faults = "dropout:0.9".parse().unwrap();
+        assert_eq!(p.fault_plan().dropout, 0.25);
+        // dropout = 1.0 is legal: every round skips, model unchanged.
+        p.dropout = 1.0;
+        p.validate().unwrap();
+        p.dropout = 1.1;
+        assert!(p.validate().is_err());
+        // Recovery knobs are validated too.
+        let mut p = FlParams::default();
+        p.quorum = 1.5;
+        assert!(p.validate().is_err());
+        let mut p = FlParams::default();
+        p.backoff.factor = 0.5;
+        assert!(p.validate().is_err());
     }
 
     #[test]

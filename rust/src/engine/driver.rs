@@ -14,43 +14,146 @@
 //!    reference), minus agents still busy with an earlier round,
 //! 2. run local training on the worker pool / fused path (compute is
 //!    synchronous — the *simulated* timeline is what reorders),
-//! 3. schedule [`Event::ClientFinished`] + [`Event::DeltaArrived`] at
-//!    `dispatch_time + latency` per client, and [`Event::RoundDeadline`]
-//!    if the policy has a collection window,
+//! 3. schedule each client's attempt on the queue: the fault plan draws
+//!    its fate (deliver / crash mid-training / delta lost / delta
+//!    corrupted), its availability trace can preempt it, and the happy
+//!    path is [`Event::ClientFinished`] + [`Event::DeltaArrived`] at
+//!    `dispatch_time + latency` — plus [`Event::RoundDeadline`] if the
+//!    policy has a collection window,
 //! 4. drain events in `(time, seq)` order until the round closes: at
-//!    goal-count, at the deadline, or when everything in flight arrived,
+//!    goal-count, at the deadline, or when every slot resolved
+//!    (arrived or permanently failed) with nothing left in flight.
+//!    Failures route through the recovery policy: [`Event::RetryDue`]
+//!    after backoff re-sends the cached update (local training is a
+//!    pure function of `(seed, round, agent)`, so a retry recomputes
+//!    nothing), and permanent failures can resample a replacement
+//!    client. Every arrival is verified against its dispatch-time
+//!    integrity checksum before it can be aggregated.
 //! 5. screen, aggregate (stale deltas are pushed staleness-weighted),
-//!    evaluate, log — identical to the reference.
+//!    evaluate, log — identical to the reference. Rounds that close
+//!    below the recovery policy's quorum (or with nothing usable) are
+//!    skipped with the global model byte-unchanged.
 //!
 //! Updates still in flight when the run's last round closes are
 //! discarded (the experiment is over); their devices simply never
 //! report back.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::aggregators::{StreamKind, Update};
+use crate::aggregators::{delta_checksum, StreamKind, Update};
 use crate::entrypoint::worker::{self, LocalJob};
 use crate::entrypoint::{CommStats, Entrypoint, RunResult};
 use crate::incentives::ContributionTracker;
 use crate::loggers::Logger;
-use crate::metrics::{Accumulator, AgentRecord, RoundRecord};
+use crate::metrics::{
+    Accumulator, AgentRecord, RecoveryStats, RoundOutcome, RoundRecord, SkipReason,
+};
 use crate::profiler::SimpleProfiler;
 use crate::util::error::{bail, Result};
 
 use super::clock::{self, ClockKind, SimTime};
+use super::faults::{FailureReason, Fate, FaultPlan};
+use super::latency::LatencyModel;
 use super::{Event, EventQueue};
 
 /// A computed update waiting for its arrival event.
 struct Pending {
     update: Update,
     record: AgentRecord,
-    /// The round the update was dispatched in (staleness base).
-    origin_round: usize,
     /// Raw stream weight (shard sample count or 1), before any
     /// staleness discount.
     base_weight: u64,
+    /// Integrity checksum stamped at dispatch; arrivals must match it.
+    checksum: u64,
+    /// The attempt currently in flight (0 = original dispatch).
+    attempt: u32,
+    /// Whether `ClientFinished` already fired for this client+round
+    /// (metrics and the agent record are emitted exactly once).
+    finished: bool,
+    /// When the in-flight frame is fated to be corrupted: the seed for
+    /// which coordinate gets flipped.
+    corrupt_coord: Option<u64>,
+}
+
+/// Everything the per-attempt scheduler needs, bundled so the fault
+/// draws stay pure functions of `(seed, agent, round, attempt)`.
+struct FaultCtx<'a> {
+    plan: &'a FaultPlan,
+    latency: &'a LatencyModel,
+    /// Wall clock: measured local-training time is part of the latency.
+    wall: bool,
+    seed: u64,
+}
+
+/// Schedule the events of one training/delivery attempt for a client,
+/// honoring the fault plan: crash mid-training, delta loss/corruption,
+/// and churn preemption. Under a vanilla plan this schedules exactly
+/// the legacy `ClientFinished` + `DeltaArrived` pair at `t0 + latency`.
+fn dispatch_attempt(
+    ctx: &FaultCtx,
+    queue: &mut EventQueue,
+    agent_id: usize,
+    origin: usize,
+    attempt: u32,
+    t0: SimTime,
+    pending: &mut Pending,
+) {
+    pending.attempt = attempt;
+    pending.corrupt_coord = None;
+    // Offline at dispatch: the attempt fails on the spot.
+    if !ctx.plan.availability.is_on(ctx.seed, agent_id, t0) {
+        let reason = FailureReason::Offline;
+        queue.push(t0, Event::ClientFailed { agent_id, round: origin, attempt, reason });
+        return;
+    }
+    let mut latency = ctx.latency.sample_attempt(ctx.seed, agent_id, origin, attempt);
+    if ctx.wall {
+        latency += pending.record.secs;
+    }
+    let draw = ctx.plan.draw(ctx.seed, agent_id, origin, attempt);
+    // The attempt's terminal instant: its arrival, or the crash point
+    // partway through the drawn latency.
+    let secs = match draw.fate {
+        Fate::CrashMidTraining { frac } => latency * frac,
+        _ => latency,
+    };
+    let end = t0.saturating_add(SimTime::from_secs_f64(secs));
+    // Churn preempts the fate: going offline mid-attempt kills it at
+    // the trace's transition instant.
+    if let Some(off) = ctx.plan.availability.next_offline(ctx.seed, agent_id, t0, end) {
+        queue.push(off, Event::AvailabilityChanged { agent_id, round: origin, online: false });
+        let reason = FailureReason::Offline;
+        queue.push(off, Event::ClientFailed { agent_id, round: origin, attempt, reason });
+        return;
+    }
+    match draw.fate {
+        Fate::CrashMidTraining { .. } => {
+            let reason = FailureReason::Crash;
+            queue.push(end, Event::ClientFailed { agent_id, round: origin, attempt, reason });
+        }
+        Fate::DeltaLost => {
+            if !pending.finished {
+                queue.push(end, Event::ClientFinished { agent_id, round: origin });
+            }
+            let reason = FailureReason::DeltaLost;
+            queue.push(end, Event::ClientFailed { agent_id, round: origin, attempt, reason });
+        }
+        Fate::DeltaCorrupted { coord } => {
+            pending.corrupt_coord = Some(coord);
+            if !pending.finished {
+                queue.push(end, Event::ClientFinished { agent_id, round: origin });
+            }
+            queue.push(end, Event::DeltaArrived { agent_id, round: origin });
+        }
+        Fate::Deliver => {
+            if !pending.finished {
+                queue.push(end, Event::ClientFinished { agent_id, round: origin });
+            }
+            queue.push(end, Event::DeltaArrived { agent_id, round: origin });
+        }
+    }
 }
 
 /// Run the full experiment through the event engine.
@@ -67,11 +170,19 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
             ep.params.compression
         );
     }
+    let seed = ep.params.seed;
+    let plan = policy.faults.clone();
+    let recovery = policy.recovery.clone();
+    // With faults or recovery in play the driver routes every dispatch
+    // through fate draws and failure events; otherwise it takes the
+    // legacy schedule (dropout stays a silent dispatch-time drop).
+    let chaos = policy.chaos_active();
 
     let mut clock = clock::from_kind(policy.clock);
     let mut queue = EventQueue::new();
     // Agents with an update in flight, keyed by agent id. An agent has
-    // at most one: it cannot be re-sampled until its delta arrives.
+    // at most one: it cannot be re-sampled until its delta arrives or
+    // its attempts are exhausted.
     let mut flying: BTreeMap<usize, Pending> = BTreeMap::new();
 
     let mut profiler = SimpleProfiler::new();
@@ -92,19 +203,10 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         let mut sampled =
             profiler.time("sampling", || ep.sampler.sample(&ep.agents, k, &mut ep.rng));
 
-        // 1b. straggler/failure injection, identical draws to the
-        // reference.
+        // 1b. crash-before-delivery — the fault plan's degenerate
+        // (legacy dropout) model, with draws identical to the reference.
         let mut dropped = Vec::new();
-        if ep.params.dropout > 0.0 {
-            sampled.retain(|&aid| {
-                if ep.rng.next_f64() < ep.params.dropout {
-                    dropped.push(aid);
-                    false
-                } else {
-                    true
-                }
-            });
-        }
+        plan.apply_dropout(&mut ep.rng, &mut sampled, &mut dropped);
 
         // 1c. devices still training an earlier round's job sit this
         // round out (only possible under non-degenerate policies; the
@@ -113,7 +215,16 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
             sampled.retain(|aid| !flying.contains_key(aid));
         }
 
-        if sampled.is_empty() && flying.is_empty() {
+        // Under chaos, dropout casualties are first-class failures: they
+        // occupy a cohort slot, can retry, and can be replaced. (Busy
+        // devices are not slots — their previous attempt is the slot.)
+        let failed_at_dispatch: Vec<usize> = if chaos {
+            dropped.iter().copied().filter(|aid| !flying.contains_key(aid)).collect()
+        } else {
+            Vec::new()
+        };
+
+        if sampled.is_empty() && failed_at_dispatch.is_empty() && flying.is_empty() {
             // whole cohort offline and nothing in flight: skip the round
             dropped_log.push(dropped.clone());
             rejected_log.push(Vec::new());
@@ -128,6 +239,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                 rejected: Vec::new(),
                 secs: t_round.elapsed().as_secs_f64(),
                 sim_secs: 0.0,
+                outcome: RoundOutcome::Skipped(SkipReason::EmptyCohort),
+                recovery: RecoveryStats::default(),
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -152,18 +265,29 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         } else {
             None
         };
+        // Everyone who trains this round: the surviving cohort, plus —
+        // under chaos with retries — the dispatch-time casualties, whose
+        // cached updates a retry may re-send. (Training is a pure
+        // function of `(seed, round, agent)`, so this changes no draws.)
+        let train_ids: Vec<usize> = if chaos && recovery.max_retries > 0 {
+            sampled.iter().chain(failed_at_dispatch.iter()).copied().collect()
+        } else {
+            sampled.clone()
+        };
         let stream_weights: Vec<u64> = match stream_kind {
             Some(StreamKind::SampleWeighted) => {
                 let ws: Vec<u64> =
-                    sampled.iter().map(|&aid| ep.agents[aid].shard.len() as u64).collect();
+                    train_ids.iter().map(|&aid| ep.agents[aid].shard.len() as u64).collect();
                 if ws.iter().sum::<u64>() == 0 {
                     vec![1; ws.len()]
                 } else {
                     ws
                 }
             }
-            _ => vec![1; sampled.len()],
+            _ => vec![1; train_ids.len()],
         };
+        let uniform_weights = matches!(stream_kind, Some(StreamKind::SampleWeighted))
+            && train_ids.iter().all(|&aid| ep.agents[aid].shard.is_empty());
 
         // 3. local training — synchronous compute on the pool or the
         // fused lockstep path, exactly as the reference, except the
@@ -184,13 +308,13 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
             seed: ep.params.seed,
         };
         let results: Vec<Result<(Update, AgentRecord)>> = if ep.params.fuse {
-            let jobs: Vec<LocalJob> = sampled.iter().map(|&aid| mk_job(aid)).collect();
+            let jobs: Vec<LocalJob> = train_ids.iter().map(|&aid| mk_job(aid)).collect();
             let list = worker::with_runtime(&ep.manifest, &ep.key, |rt| {
                 worker::run_local_fused(rt, &ep.dataset, &jobs)
             })?;
             list.into_iter().map(Ok).collect()
         } else {
-            let jobs: Vec<_> = sampled
+            let jobs: Vec<_> = train_ids
                 .iter()
                 .map(|&aid| {
                     let job = mk_job(aid);
@@ -208,37 +332,74 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         };
         profiler.record("local_training", t_local.elapsed().as_secs_f64());
 
-        // 4. schedule this cohort's events at dispatch + latency. Under
-        // a wall clock the measured local-training time is the compute
-        // latency, with the configured model on top as network latency;
-        // under the virtual clock the model is the whole latency.
-        let dispatched = sampled.len();
+        // 4. schedule this cohort's attempts. Under a wall clock the
+        // measured local-training time is the compute latency, with the
+        // configured model on top as network latency; under the virtual
+        // clock the model is the whole latency. Dispatch-time casualties
+        // (dropout) enter the queue as immediate failures so the
+        // recovery machinery sees them like any other crash.
+        let ctx = FaultCtx {
+            plan: &plan,
+            latency: &policy.latency,
+            wall: policy.clock == ClockKind::Wall,
+            seed,
+        };
+        // Open slots for *this* round: each resolves by a fresh arrival
+        // or a permanent failure (whose slot a replacement can keep
+        // open). The round (absent deadline/goal) closes when all slots
+        // resolved and nothing is left in flight.
+        let mut open = 0usize;
+        let planned = sampled.len() + failed_at_dispatch.len();
+        let survivors = sampled.len();
+        let mut used: BTreeSet<usize> = train_ids.iter().copied().collect();
         for (i, res) in results.into_iter().enumerate() {
             let (update, record) = res?;
             let aid = record.agent_id;
-            let mut latency = policy.latency.sample(ep.params.seed, aid, round);
-            if policy.clock == ClockKind::Wall {
-                latency += record.secs;
+            let checksum = delta_checksum(&update.delta);
+            let mut pending = Pending {
+                update,
+                record,
+                base_weight: stream_weights[i],
+                checksum,
+                attempt: 0,
+                finished: false,
+                corrupt_coord: None,
+            };
+            if i < survivors {
+                dispatch_attempt(&ctx, &mut queue, aid, round, 0, round_start, &mut pending);
+            } else {
+                let reason = FailureReason::Dropout;
+                let ev = Event::ClientFailed { agent_id: aid, round, attempt: 0, reason };
+                queue.push(round_start, ev);
             }
-            let at = round_start.saturating_add(SimTime::from_secs_f64(latency));
-            queue.push(at, Event::ClientFinished { agent_id: aid, round });
-            queue.push(at, Event::DeltaArrived { agent_id: aid, round });
-            flying.insert(
-                aid,
-                Pending { update, record, origin_round: round, base_weight: stream_weights[i] },
-            );
+            flying.insert(aid, pending);
+            open += 1;
+        }
+        // Chaos without retries: dispatch-time casualties have no cached
+        // update to re-send, so they enter the queue as immediate
+        // permanent failures — still slots (a replacement can fill
+        // them), just never trained and never in flight.
+        if chaos && recovery.max_retries == 0 {
+            for &aid in &failed_at_dispatch {
+                used.insert(aid);
+                open += 1;
+                let reason = FailureReason::Dropout;
+                let ev = Event::ClientFailed { agent_id: aid, round, attempt: 0, reason };
+                queue.push(round_start, ev);
+            }
         }
         if let Some(window) = policy.deadline {
             queue.push(round_start.saturating_add(window), Event::RoundDeadline { round });
         }
 
         // 5. drain events until the round closes: goal-count reached,
-        // deadline fired, or everything in flight has arrived.
+        // deadline fired, or every slot resolved with nothing in flight.
         let goal = policy.goal.unwrap_or(usize::MAX);
         let mut updates: Vec<Update> = Vec::new();
         let mut train_loss = Accumulator::default();
         let mut train_acc = Accumulator::default();
-        let mut fresh = 0usize;
+        let mut stats = RecoveryStats::default();
+        let mut resample_rng = RecoveryPolicyRng::new(seed, round);
         let mut close_time: Option<SimTime> = None;
         while close_time.is_none() {
             let Some(sch) = queue.pop() else {
@@ -253,20 +414,58 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                     logger.log_event(&sch.event.to_record(sch.time, round, None))?;
                     // Fold the client's local metrics into the round it
                     // finished in — for the degenerate policy this is
-                    // the dispatch round, in the reference's order.
-                    let record = flying
-                        .get(&agent_id)
-                        .expect("ClientFinished without a pending update")
-                        .record
-                        .clone();
-                    train_loss.add(record.final_loss());
-                    train_acc.add(record.final_acc());
-                    ep.agents[agent_id].record_round(record.final_loss(), ep.params.local_epochs);
-                    logger.log_agent(&record)?;
-                    agent_records.push(record);
+                    // the dispatch round, in the reference's order. A
+                    // retried client finishes exactly once.
+                    let pending = flying
+                        .get_mut(&agent_id)
+                        .expect("ClientFinished without a pending update");
+                    if !pending.finished {
+                        pending.finished = true;
+                        let record = pending.record.clone();
+                        train_loss.add(record.final_loss());
+                        train_acc.add(record.final_acc());
+                        ep.agents[agent_id]
+                            .record_round(record.final_loss(), ep.params.local_epochs);
+                        logger.log_agent(&record)?;
+                        agent_records.push(record);
+                    }
                 }
                 Event::DeltaArrived { agent_id, round: origin } => {
                     let staleness = (round - origin) as u64;
+                    // Integrity screen: the payload that arrived must
+                    // match the checksum stamped at dispatch. A fated
+                    // corruption flips one coordinate of the frame; the
+                    // quantised-term digest catches it and the frame is
+                    // rejected before it can touch the accumulator.
+                    let (rejected, attempt) = {
+                        let pending = flying
+                            .get(&agent_id)
+                            .expect("DeltaArrived without a pending update");
+                        let arrived = match pending.corrupt_coord {
+                            None => delta_checksum(&pending.update.delta),
+                            Some(coord) => {
+                                let mut frame = pending.update.delta.clone();
+                                if !frame.is_empty() {
+                                    let j = (coord % frame.len() as u64) as usize;
+                                    frame[j] += 1.0;
+                                }
+                                delta_checksum(&frame)
+                            }
+                        };
+                        (arrived != pending.checksum, pending.attempt)
+                    };
+                    if rejected {
+                        stats.corrupt_rejected += 1;
+                        let rej = Event::DeltaRejected { agent_id, round: origin };
+                        logger.log_event(&rej.to_record(sch.time, round, Some(staleness)))?;
+                        // Route the rejection through the failure path:
+                        // same retry/backoff/replacement machinery.
+                        let reason = FailureReason::Corrupt;
+                        let ev =
+                            Event::ClientFailed { agent_id, round: origin, attempt, reason };
+                        queue.push(sch.time, ev);
+                        continue;
+                    }
                     logger.log_event(&sch.event.to_record(sch.time, round, Some(staleness)))?;
                     let pending =
                         flying.remove(&agent_id).expect("DeltaArrived without a pending update");
@@ -287,11 +486,67 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                     }
                     updates.push(update);
                     if staleness == 0 {
-                        fresh += 1;
+                        open = open.saturating_sub(1);
                     }
-                    if updates.len() >= goal || (fresh == dispatched && flying.is_empty()) {
+                    if updates.len() >= goal || (open == 0 && flying.is_empty()) {
                         close_time = Some(sch.time);
                     }
+                }
+                Event::ClientFailed { agent_id, round: origin, attempt, reason: _ } => {
+                    logger.log_event(&sch.event.to_record(sch.time, round, None))?;
+                    stats.failures += 1;
+                    if attempt < recovery.max_retries {
+                        // Schedule the retry after backoff; the jitter
+                        // draw belongs to the failed attempt's stream.
+                        let jitter = plan.draw(seed, agent_id, origin, attempt).jitter;
+                        let delay = recovery.backoff.delay_secs(attempt, jitter);
+                        let due = sch.time.saturating_add(SimTime::from_secs_f64(delay));
+                        let next = attempt + 1;
+                        let ev =
+                            Event::RetryDue { agent_id, round: origin, attempt: next };
+                        queue.push(due, ev);
+                        continue;
+                    }
+                    // Permanent failure: free the device, resolve (or
+                    // transfer) the slot.
+                    flying.remove(&agent_id);
+                    if origin == round {
+                        let replaced = try_replace(
+                            ep,
+                            &ctx,
+                            &recovery,
+                            &mut queue,
+                            &mut flying,
+                            &mut used,
+                            &mut resample_rng,
+                            &mut stats,
+                            &mut profiler,
+                            round,
+                            sch.time,
+                            &global,
+                            stream_kind,
+                            uniform_weights,
+                        )?;
+                        if !replaced {
+                            open = open.saturating_sub(1);
+                        }
+                    }
+                    if open == 0 && flying.is_empty() {
+                        close_time = Some(sch.time);
+                    }
+                }
+                Event::RetryDue { agent_id, round: origin, attempt } => {
+                    logger.log_event(&sch.event.to_record(sch.time, round, None))?;
+                    stats.retries += 1;
+                    let pending = flying
+                        .get_mut(&agent_id)
+                        .expect("RetryDue without a pending update");
+                    dispatch_attempt(
+                        &ctx, &mut queue, agent_id, origin, attempt, sch.time, pending,
+                    );
+                }
+                Event::AvailabilityChanged { .. } => {
+                    logger.log_event(&sch.event.to_record(sch.time, round, None))?;
                 }
                 Event::RoundDeadline { round: r } if r == round => {
                     logger.log_event(&sch.event.to_record(sch.time, round, None))?;
@@ -300,13 +555,40 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                 // A deadline for a round that already closed early (at
                 // its goal-count or with a full buffer) is superseded.
                 Event::RoundDeadline { .. } => {}
-                Event::EvalDue { .. } => {
-                    unreachable!("EvalDue is emitted at round close, never queued")
+                Event::EvalDue { .. } | Event::DeltaRejected { .. } => {
+                    unreachable!("emitted at processing time, never queued")
                 }
             }
         }
         let close = close_time.unwrap_or(round_start);
         let sim_secs = close.saturating_sub(round_start).as_secs_f64();
+
+        // 5b. quorum: a round that closed with fewer arrivals than the
+        // recovery policy demands is skipped gracefully — the buffered
+        // arrivals are discarded and the global model stays
+        // byte-unchanged.
+        let quorum_min = recovery.quorum_min(planned);
+        if updates.len() < quorum_min {
+            dropped_log.push(dropped.clone());
+            rejected_log.push(Vec::new());
+            let rec = RoundRecord {
+                round,
+                train_loss: train_loss.mean(),
+                train_acc: train_acc.mean(),
+                eval_loss: f64::NAN,
+                eval_acc: f64::NAN,
+                sampled,
+                dropped,
+                rejected: Vec::new(),
+                secs: t_round.elapsed().as_secs_f64(),
+                sim_secs,
+                outcome: RoundOutcome::Skipped(SkipReason::Quorum),
+                recovery: stats,
+            };
+            logger.log_round(&rec)?;
+            rounds.push(rec);
+            continue;
+        }
 
         // 6. server-side defense + per-round bookkeeping — identical to
         // the reference (dropped/rejected are logged for every round).
@@ -314,8 +596,9 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         rejected_log.push(report.rejected.clone());
         dropped_log.push(dropped.clone());
         if updates.is_empty() {
-            // nothing arrived (deadline with zero arrivals) or the
-            // defense rejected everything: keep the old global model
+            // nothing usable arrived (deadline with zero arrivals,
+            // every frame corrupt) or the defense rejected everything:
+            // keep the old global model
             let rec = RoundRecord {
                 round,
                 train_loss: train_loss.mean(),
@@ -327,6 +610,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                 rejected: report.rejected,
                 secs: t_round.elapsed().as_secs_f64(),
                 sim_secs,
+                outcome: RoundOutcome::Skipped(SkipReason::NoUpdates),
+                recovery: stats,
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -381,6 +666,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
             rejected: report.rejected,
             secs: t_round.elapsed().as_secs_f64(),
             sim_secs,
+            outcome: RoundOutcome::Aggregated,
+            recovery: stats,
         };
         logger.log_round(&rec)?;
         rounds.push(rec);
@@ -400,4 +687,95 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         defense_rejected: rejected_log,
         sim_secs: clock.now().as_secs_f64(),
     })
+}
+
+/// The per-round replacement-resampling stream (see
+/// [`super::recovery::RecoveryPolicy::resample_rng`]): picks are drawn
+/// in event order, which is deterministic, so replacement cohorts
+/// replay bit-identically.
+struct RecoveryPolicyRng(crate::util::Rng);
+
+impl RecoveryPolicyRng {
+    fn new(seed: u64, round: usize) -> Self {
+        Self(super::recovery::RecoveryPolicy::resample_rng(seed, round))
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        self.0.next_below(n as u64) as usize
+    }
+}
+
+/// Resample a replacement client for a permanently failed slot, train
+/// it (synchronously — the simulated timeline schedules its delivery),
+/// and dispatch its first attempt at `now`. Returns `false` when the
+/// policy has resampling off or the pool is exhausted (the slot then
+/// resolves as failed).
+#[allow(clippy::too_many_arguments)]
+fn try_replace(
+    ep: &mut Entrypoint,
+    ctx: &FaultCtx,
+    recovery: &super::recovery::RecoveryPolicy,
+    queue: &mut EventQueue,
+    flying: &mut BTreeMap<usize, Pending>,
+    used: &mut BTreeSet<usize>,
+    rng: &mut RecoveryPolicyRng,
+    stats: &mut RecoveryStats,
+    profiler: &mut SimpleProfiler,
+    round: usize,
+    now: SimTime,
+    global: &Arc<Vec<f32>>,
+    stream_kind: Option<StreamKind>,
+    uniform_weights: bool,
+) -> Result<bool> {
+    if !recovery.resample {
+        return Ok(false);
+    }
+    // The available pool: registered agents that are not mid-flight,
+    // were not already part of this round, and are online right now.
+    let candidates: Vec<usize> = (0..ep.agents.len())
+        .filter(|aid| {
+            !flying.contains_key(aid)
+                && !used.contains(aid)
+                && ctx.plan.availability.is_on(ctx.seed, *aid, now)
+        })
+        .collect();
+    if candidates.is_empty() {
+        return Ok(false);
+    }
+    let pick = candidates[rng.pick(candidates.len())];
+    used.insert(pick);
+    stats.replacements += 1;
+    let job = LocalJob {
+        agent_id: pick,
+        round,
+        shard: ep.agents[pick].shard.clone(),
+        global: Arc::clone(global),
+        lr: ep.params.lr,
+        local_epochs: ep.params.local_epochs,
+        max_steps_per_epoch: ep.params.max_local_steps,
+        seed: ep.params.seed,
+    };
+    let t_local = Instant::now();
+    let (update, record) =
+        worker::with_runtime(&ep.manifest, &ep.key, |rt| worker::run_local(rt, &ep.dataset, &job))?;
+    profiler.record("local_training", t_local.elapsed().as_secs_f64());
+    let base_weight = match stream_kind {
+        Some(StreamKind::SampleWeighted) if !uniform_weights => {
+            ep.agents[pick].shard.len() as u64
+        }
+        _ => 1,
+    };
+    let checksum = delta_checksum(&update.delta);
+    let mut pending = Pending {
+        update,
+        record,
+        base_weight,
+        checksum,
+        attempt: 0,
+        finished: false,
+        corrupt_coord: None,
+    };
+    dispatch_attempt(ctx, queue, pick, round, 0, now, &mut pending);
+    flying.insert(pick, pending);
+    Ok(true)
 }

@@ -1,0 +1,540 @@
+//! Seeded fault injection for the event engine (config: `[faults]`).
+//!
+//! A [`FaultPlan`] describes *what goes wrong* in a round: clients that
+//! crash before delivery (the legacy `fl.dropout` coin flip), clients
+//! that crash partway through training, deltas lost or corrupted in
+//! flight, and availability churn (flapping / diurnal on-off cycles).
+//! Every draw comes from an independent SplitMix64 stream keyed by
+//! `Rng::new(seed ^ FAULT_SALT).split(agent).split(round)` (with a
+//! further `.split(attempt)` for retries), so a chaos scenario is a
+//! pure function of `(seed, FaultPlan)` — bit-reproducible at any
+//! worker count and independent of the training RNG streams.
+//!
+//! What to *do about it* — retries, backoff, replacement sampling,
+//! quorum — lives in [`super::recovery::RecoveryPolicy`]; the driver
+//! threads both through the `(SimTime, seq)` event queue.
+
+use std::str::FromStr;
+
+use crate::engine::clock::SimTime;
+use crate::util::error::{bail, Context, Error, Result};
+use crate::util::Rng;
+
+/// Salt decorrelating fault streams from every other use of the seed.
+pub const FAULT_SALT: u64 = 0x4641_554C_54; // "FAULT"
+
+/// Extra salt for availability (churn) streams: an agent's on/off trace
+/// is a property of the *timeline*, not of any one round, so it is keyed
+/// by `(seed, agent)` only and must not collide with per-round draws.
+const AVAIL_SALT: u64 = 0x4348_5552_4E; // "CHURN"
+
+/// A client availability (churn) trace: when is an agent reachable?
+///
+/// Both cyclic models are closed-form — an agent is *on* during the
+/// first `duty` fraction of each of its periods — so availability at
+/// any instant is O(1) to query and never needs global transition
+/// events: the driver only inspects the agents it is about to dispatch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Availability {
+    /// Every agent is always reachable. The default.
+    #[default]
+    Always,
+    /// Fast, desynchronized on/off cycling: each agent draws its own
+    /// period uniformly from `[0.5, 1.5) * mean_period` and a random
+    /// phase, then is on for `duty` of every period.
+    Flapping {
+        /// Mean cycle length in seconds.
+        mean_period: f64,
+        /// Fraction of each cycle the agent is on, in `[0, 1]`.
+        duty: f64,
+    },
+    /// Diurnal cycle: every agent shares one period (e.g. 86400 s) but
+    /// has its own phase (its "timezone"), and is on for `duty` of it.
+    Diurnal {
+        /// Shared cycle length in seconds.
+        period: f64,
+        /// Fraction of each cycle the agent is on, in `[0, 1]`.
+        duty: f64,
+    },
+}
+
+impl Availability {
+    /// The agent's `(period, on_secs, phase)` cycle, or `None` when it
+    /// is always on. Pure function of `(seed, agent)`.
+    fn cycle(&self, seed: u64, agent_id: usize) -> Option<(f64, f64, f64)> {
+        let mut rng = Rng::new(seed ^ FAULT_SALT ^ AVAIL_SALT).split(agent_id as u64);
+        match *self {
+            Availability::Always => None,
+            Availability::Flapping { mean_period, duty } => {
+                let period = mean_period * (0.5 + rng.next_f64());
+                let phase = rng.next_f64() * period;
+                Some((period, duty.clamp(0.0, 1.0) * period, phase))
+            }
+            Availability::Diurnal { period, duty } => {
+                let phase = rng.next_f64() * period;
+                Some((period, duty.clamp(0.0, 1.0) * period, phase))
+            }
+        }
+    }
+
+    /// Is `agent_id` reachable at simulated time `t`?
+    pub fn is_on(&self, seed: u64, agent_id: usize, t: SimTime) -> bool {
+        match self.cycle(seed, agent_id) {
+            None => true,
+            Some((period, on_secs, phase)) => (t.as_secs_f64() + phase) % period < on_secs,
+        }
+    }
+
+    /// The first instant after `from` and at-or-before `until` at which
+    /// `agent_id` goes offline, assuming it is on at `from`. `None` when
+    /// it stays on through the whole window.
+    pub fn next_offline(
+        &self,
+        seed: u64,
+        agent_id: usize,
+        from: SimTime,
+        until: SimTime,
+    ) -> Option<SimTime> {
+        let (period, on_secs, phase) = self.cycle(seed, agent_id)?;
+        if on_secs >= period {
+            return None; // duty 1.0: never off
+        }
+        let t0 = from.as_secs_f64();
+        let pos = (t0 + phase) % period;
+        if pos >= on_secs {
+            // Already off at `from` (callers screen this case first).
+            return Some(from);
+        }
+        let off = SimTime::from_secs_f64(t0 + (on_secs - pos));
+        (off <= until).then_some(off)
+    }
+
+    /// True for [`Availability::Always`].
+    pub fn is_always(&self) -> bool {
+        matches!(self, Availability::Always)
+    }
+}
+
+/// What happens to one training/delivery attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fate {
+    /// Training completes and the delta arrives intact.
+    Deliver,
+    /// The client dies at this fraction of its train+upload latency;
+    /// nothing arrives.
+    CrashMidTraining {
+        /// Fraction of the attempt's latency at which the crash hits.
+        frac: f64,
+    },
+    /// Training completes but the delta is lost in flight.
+    DeltaLost,
+    /// Training completes but the in-flight frame is corrupted; the
+    /// server's integrity checksum rejects it on arrival.
+    DeltaCorrupted {
+        /// Seeds which coordinate of the delta gets flipped.
+        coord: u64,
+    },
+}
+
+/// One attempt's fault draws, fixed at dispatch time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttemptDraw {
+    /// The attempt's fate.
+    pub fate: Fate,
+    /// Uniform in `[0, 1)`: backoff jitter if this attempt fails.
+    pub jitter: f64,
+}
+
+/// Why a client attempt failed, for event logs and stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureReason {
+    /// Crash-before-delivery at cohort dispatch (the legacy dropout).
+    Dropout,
+    /// Crash mid-training.
+    Crash,
+    /// Delta lost in flight.
+    DeltaLost,
+    /// The agent was (or went) offline per its availability trace.
+    Offline,
+    /// The delta arrived but failed the integrity checksum.
+    Corrupt,
+}
+
+impl FailureReason {
+    /// Stable snake_case tag, used in event logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureReason::Dropout => "dropout",
+            FailureReason::Crash => "crash",
+            FailureReason::DeltaLost => "delta_lost",
+            FailureReason::Offline => "offline",
+            FailureReason::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// A seeded description of everything that can go wrong in a run.
+///
+/// Config/CLI syntax (semicolon-separated `key:value` terms, `none` for
+/// the empty plan):
+///
+/// ```text
+/// crash:0.2;drop:0.1;corrupt:0.05;churn:flapping:60,0.8
+/// dropout:0.3;churn:diurnal:86400,0.6
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// P(crash before delivery) at cohort dispatch — the legacy
+    /// `fl.dropout` knob, drawn from the *main* experiment RNG in
+    /// cohort order so it stays bit-identical to the historical path.
+    pub dropout: f64,
+    /// P(crash mid-training) per attempt.
+    pub crash: f64,
+    /// P(delta lost in flight) per attempt.
+    pub drop_delta: f64,
+    /// P(delta corrupted in flight) per attempt.
+    pub corrupt: f64,
+    /// Availability/churn trace.
+    pub availability: Availability,
+}
+
+impl FaultPlan {
+    /// True when only the legacy dropout model can fire: no richer
+    /// fault draws, no churn. The engine's lockstep-parity contract
+    /// holds exactly for vanilla plans (with recovery off).
+    pub fn is_vanilla(&self) -> bool {
+        self.crash <= 0.0
+            && self.drop_delta <= 0.0
+            && self.corrupt <= 0.0
+            && self.availability.is_always()
+    }
+
+    /// True when nothing at all can fail.
+    pub fn is_inert(&self) -> bool {
+        self.dropout <= 0.0 && self.is_vanilla()
+    }
+
+    /// The legacy crash-before-delivery screen, folded in from the old
+    /// `params.dropout` path: one Bernoulli draw per cohort member *in
+    /// cohort order from the main experiment RNG* — the exact draw
+    /// sequence `run_lockstep` has always made, pinned bit-identical by
+    /// `tests/engine_e2e.rs`. Survivors stay in `sampled`; casualties
+    /// move to `dropped`.
+    pub fn apply_dropout(&self, rng: &mut Rng, sampled: &mut Vec<usize>, dropped: &mut Vec<usize>) {
+        if self.dropout > 0.0 {
+            sampled.retain(|&aid| {
+                if rng.next_f64() < self.dropout {
+                    dropped.push(aid);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+    }
+
+    /// The fault stream for one `(agent, round, attempt)`. Attempt 0 is
+    /// the ISSUE's base stream
+    /// `Rng::new(seed ^ FAULT_SALT).split(agent).split(round)`; retries
+    /// split once more so each attempt redraws independently.
+    fn attempt_rng(seed: u64, agent_id: usize, round: usize, attempt: u32) -> Rng {
+        let rng = Rng::new(seed ^ FAULT_SALT).split(agent_id as u64).split(round as u64);
+        if attempt == 0 {
+            rng
+        } else {
+            rng.split(attempt as u64)
+        }
+    }
+
+    /// Draw the fate of one attempt. Deterministic: a pure function of
+    /// `(seed, agent_id, round, attempt)` — never of event interleaving,
+    /// worker count, or training numerics. The draw order is fixed
+    /// (crash, crash-fraction, drop, corrupt, corrupt-coordinate,
+    /// jitter) so every fate classification consumes the same stream.
+    pub fn draw(&self, seed: u64, agent_id: usize, round: usize, attempt: u32) -> AttemptDraw {
+        let mut rng = Self::attempt_rng(seed, agent_id, round, attempt);
+        let u_crash = rng.next_f64();
+        let frac = rng.next_f64();
+        let u_drop = rng.next_f64();
+        let u_corrupt = rng.next_f64();
+        let coord = rng.next_u64();
+        let jitter = rng.next_f64();
+        let fate = if u_crash < self.crash {
+            Fate::CrashMidTraining { frac }
+        } else if u_drop < self.drop_delta {
+            Fate::DeltaLost
+        } else if u_corrupt < self.corrupt {
+            Fate::DeltaCorrupted { coord }
+        } else {
+            Fate::Deliver
+        };
+        AttemptDraw { fate, jitter }
+    }
+
+    /// Reject plans a struct literal could build but parsing would not.
+    pub fn validate(&self) -> Result<()> {
+        let prob = |name: &str, v: f64| -> Result<()> {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("fault plan {name} must be a probability in [0, 1], got {v}");
+            }
+            Ok(())
+        };
+        prob("dropout", self.dropout)?;
+        prob("crash", self.crash)?;
+        prob("drop", self.drop_delta)?;
+        prob("corrupt", self.corrupt)?;
+        match self.availability {
+            Availability::Always => {}
+            Availability::Flapping { mean_period: p, duty }
+            | Availability::Diurnal { period: p, duty } => {
+                if !(p.is_finite() && p > 0.0) {
+                    bail!("churn period must be a positive number of seconds, got {p}");
+                }
+                if !(0.0..=1.0).contains(&duty) {
+                    bail!("churn duty cycle must be in [0, 1], got {duty}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = Error;
+
+    /// `none` | `TERM[;TERM...]` with terms `dropout:P`, `crash:P`,
+    /// `drop:P`, `corrupt:P`, `churn:flapping:PERIOD,DUTY`,
+    /// `churn:diurnal:PERIOD,DUTY` — the config/CLI syntax.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let mut plan = FaultPlan::default();
+        if matches!(s.to_ascii_lowercase().as_str(), "" | "none" | "0") {
+            return Ok(plan);
+        }
+        for term in s.split(';') {
+            let term = term.trim();
+            let (key, args) = term.split_once(':').with_context(|| {
+                format!(
+                    "fault plan term {term:?} needs key:value \
+                     (dropout:P | crash:P | drop:P | corrupt:P | churn:MODEL:PERIOD,DUTY)"
+                )
+            })?;
+            let args = args.trim();
+            match key.trim().to_ascii_lowercase().as_str() {
+                "dropout" => {
+                    plan.dropout = args.parse().with_context(|| format!("dropout:{args}"))?;
+                }
+                "crash" => plan.crash = args.parse().with_context(|| format!("crash:{args}"))?,
+                "drop" => {
+                    plan.drop_delta = args.parse().with_context(|| format!("drop:{args}"))?;
+                }
+                "corrupt" => {
+                    plan.corrupt = args.parse().with_context(|| format!("corrupt:{args}"))?;
+                }
+                "churn" => {
+                    let (model, rest) = args
+                        .split_once(':')
+                        .with_context(|| format!("churn needs MODEL:PERIOD,DUTY, got {args:?}"))?;
+                    let (period, duty) = rest
+                        .split_once(',')
+                        .with_context(|| format!("churn needs PERIOD,DUTY, got {rest:?}"))?;
+                    let period = period.trim().parse::<f64>().context("churn PERIOD")?;
+                    let duty = duty.trim().parse::<f64>().context("churn DUTY")?;
+                    plan.availability = match model.trim().to_ascii_lowercase().as_str() {
+                        "flapping" => Availability::Flapping { mean_period: period, duty },
+                        "diurnal" => Availability::Diurnal { period, duty },
+                        other => bail!("unknown churn model {other:?} (flapping | diurnal)"),
+                    };
+                }
+                other => bail!(
+                    "unknown fault plan term {other:?} \
+                     (dropout | crash | drop | corrupt | churn)"
+                ),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_inert() {
+            return f.write_str("none");
+        }
+        let mut sep = "";
+        let mut term = |f: &mut std::fmt::Formatter<'_>, t: String| -> std::fmt::Result {
+            let r = write!(f, "{sep}{t}");
+            sep = ";";
+            r
+        };
+        if self.dropout > 0.0 {
+            term(f, format!("dropout:{}", self.dropout))?;
+        }
+        if self.crash > 0.0 {
+            term(f, format!("crash:{}", self.crash))?;
+        }
+        if self.drop_delta > 0.0 {
+            term(f, format!("drop:{}", self.drop_delta))?;
+        }
+        if self.corrupt > 0.0 {
+            term(f, format!("corrupt:{}", self.corrupt))?;
+        }
+        match self.availability {
+            Availability::Always => {}
+            Availability::Flapping { mean_period, duty } => {
+                term(f, format!("churn:flapping:{mean_period},{duty}"))?;
+            }
+            Availability::Diurnal { period, duty } => {
+                term(f, format!("churn:diurnal:{period},{duty}"))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_roundtrips() {
+        for spec in [
+            "none",
+            "dropout:0.3",
+            "crash:0.2;drop:0.1;corrupt:0.05",
+            "crash:0.2;churn:flapping:60,0.8",
+            "churn:diurnal:86400,0.5",
+        ] {
+            let p: FaultPlan = spec.parse().unwrap();
+            assert_eq!(p.to_string().parse::<FaultPlan>().unwrap(), p, "{spec}");
+        }
+        assert_eq!("".parse::<FaultPlan>().unwrap(), FaultPlan::default());
+        assert_eq!("none".parse::<FaultPlan>().unwrap().to_string(), "none");
+        assert!("crash:1.5".parse::<FaultPlan>().is_err());
+        assert!("warp:0.1".parse::<FaultPlan>().is_err());
+        assert!("churn:tidal:60,0.5".parse::<FaultPlan>().is_err());
+        assert!("churn:flapping:0,0.5".parse::<FaultPlan>().is_err());
+        assert!("churn:flapping:60,1.5".parse::<FaultPlan>().is_err());
+    }
+
+    #[test]
+    fn vanilla_and_inert_classification() {
+        assert!(FaultPlan::default().is_inert());
+        let dropout_only: FaultPlan = "dropout:0.5".parse().unwrap();
+        assert!(dropout_only.is_vanilla(), "dropout alone is the legacy model");
+        assert!(!dropout_only.is_inert());
+        let chaos: FaultPlan = "crash:0.1".parse().unwrap();
+        assert!(!chaos.is_vanilla());
+    }
+
+    #[test]
+    fn apply_dropout_matches_the_legacy_draw_sequence() {
+        // One next_f64 per cohort member, in cohort order, from the
+        // caller's RNG — the exact legacy `retain` loop.
+        let plan: FaultPlan = "dropout:0.5".parse().unwrap();
+        let mut rng_a = Rng::new(7);
+        let mut sampled = vec![3usize, 1, 4, 1, 5, 9, 2, 6];
+        let mut dropped = Vec::new();
+        plan.apply_dropout(&mut rng_a, &mut sampled, &mut dropped);
+
+        let mut rng_b = Rng::new(7);
+        let mut expect_sampled = vec![3usize, 1, 4, 1, 5, 9, 2, 6];
+        let mut expect_dropped = Vec::new();
+        expect_sampled.retain(|&aid| {
+            if rng_b.next_f64() < 0.5 {
+                expect_dropped.push(aid);
+                false
+            } else {
+                true
+            }
+        });
+        assert_eq!(sampled, expect_sampled);
+        assert_eq!(dropped, expect_dropped);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "identical draw count");
+        assert!(!dropped.is_empty() && !sampled.is_empty(), "both outcomes occur at p=0.5");
+
+        // dropout == 0 makes no draws at all.
+        let mut rng_c = Rng::new(7);
+        let mut untouched = vec![1usize, 2, 3];
+        FaultPlan::default().apply_dropout(&mut rng_c, &mut untouched, &mut Vec::new());
+        assert_eq!(rng_c.next_u64(), Rng::new(7).next_u64());
+        assert_eq!(untouched, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_their_key() {
+        let plan: FaultPlan = "crash:0.4;drop:0.3;corrupt:0.2".parse().unwrap();
+        let a = plan.draw(42, 3, 5, 0);
+        assert_eq!(a, plan.draw(42, 3, 5, 0), "replay is exact");
+        assert_ne!(a, plan.draw(42, 4, 5, 0), "per-agent streams differ");
+        assert_ne!(a, plan.draw(42, 3, 6, 0), "per-round streams differ");
+        assert_ne!(a, plan.draw(42, 3, 5, 1), "per-attempt streams differ");
+        assert_ne!(a, plan.draw(43, 3, 5, 0), "per-seed streams differ");
+    }
+
+    #[test]
+    fn fates_cover_the_plan_and_an_inert_plan_always_delivers() {
+        let inert = FaultPlan::default();
+        for aid in 0..64 {
+            assert_eq!(inert.draw(1, aid, 0, 0).fate, Fate::Deliver);
+        }
+        let chaotic: FaultPlan = "crash:0.3;drop:0.3;corrupt:0.3".parse().unwrap();
+        let mut seen = [false; 4];
+        for aid in 0..256 {
+            match chaotic.draw(1, aid, 0, 0).fate {
+                Fate::Deliver => seen[0] = true,
+                Fate::CrashMidTraining { frac } => {
+                    assert!((0.0..1.0).contains(&frac));
+                    seen[1] = true;
+                }
+                Fate::DeltaLost => seen[2] = true,
+                Fate::DeltaCorrupted { .. } => seen[3] = true,
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all four fates occur at these rates: {seen:?}");
+    }
+
+    #[test]
+    fn flapping_availability_cycles_on_and_off() {
+        let av = Availability::Flapping { mean_period: 10.0, duty: 0.5 };
+        let (mut on, mut off) = (0, 0);
+        for aid in 0..32 {
+            for t in 0..40 {
+                if av.is_on(42, aid, SimTime::from_secs_f64(t as f64)) {
+                    on += 1;
+                } else {
+                    off += 1;
+                }
+            }
+        }
+        // duty 0.5 puts roughly half the probe grid on each side.
+        assert!(on > 300 && off > 300, "on={on} off={off}");
+        // Purity: the trace replays exactly.
+        let t = SimTime::from_secs_f64(13.7);
+        assert_eq!(av.is_on(42, 5, t), av.is_on(42, 5, t));
+    }
+
+    #[test]
+    fn next_offline_finds_the_first_transition() {
+        let av = Availability::Diurnal { period: 10.0, duty: 0.5 };
+        for aid in 0..32 {
+            // Find an on-instant, then the transition must be within
+            // one on-window and the instant just before it still on.
+            let mut t = 0.0;
+            while !av.is_on(42, aid, SimTime::from_secs_f64(t)) {
+                t += 0.25;
+            }
+            let from = SimTime::from_secs_f64(t);
+            let until = SimTime::from_secs_f64(t + 20.0);
+            let off = av.next_offline(42, aid, from, until).expect("duty 0.5 must transition");
+            assert!(off > from && off <= until);
+            assert!(!av.is_on(42, aid, off.saturating_add(SimTime::from_secs_f64(0.001))));
+        }
+        // Always / duty-1.0 traces never go offline.
+        let far = SimTime::from_secs_f64(1e9);
+        assert_eq!(Availability::Always.next_offline(1, 0, SimTime::ZERO, far), None);
+        let solid = Availability::Diurnal { period: 10.0, duty: 1.0 };
+        assert_eq!(solid.next_offline(1, 0, SimTime::ZERO, far), None);
+    }
+}

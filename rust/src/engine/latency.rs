@@ -46,7 +46,22 @@ impl LatencyModel {
     /// The latency of `agent_id` in `round`, in seconds. Deterministic:
     /// a pure function of `(seed, agent_id, round)`.
     pub fn sample(&self, seed: u64, agent_id: usize, round: usize) -> f64 {
-        let mut rng = || Rng::new(seed ^ LATENCY_SALT).split(agent_id as u64).split(round as u64);
+        self.sample_attempt(seed, agent_id, round, 0)
+    }
+
+    /// The latency of retry attempt `attempt` (0 = the original
+    /// dispatch, which draws exactly [`LatencyModel::sample`]'s stream;
+    /// retries split the stream once more so each attempt redraws
+    /// independently but reproducibly).
+    pub fn sample_attempt(&self, seed: u64, agent_id: usize, round: usize, attempt: u32) -> f64 {
+        let mut rng = || {
+            let r = Rng::new(seed ^ LATENCY_SALT).split(agent_id as u64).split(round as u64);
+            if attempt == 0 {
+                r
+            } else {
+                r.split(attempt as u64)
+            }
+        };
         match self {
             LatencyModel::None => 0.0,
             LatencyModel::Constant(secs) => *secs,
@@ -161,6 +176,21 @@ mod tests {
         assert_ne!(a.to_bits(), m.sample(42, 3, 6).to_bits(), "per-round streams differ");
         assert_ne!(a.to_bits(), m.sample(43, 3, 5).to_bits(), "per-seed streams differ");
         assert!(a > 0.0 && a.is_finite());
+    }
+
+    #[test]
+    fn attempt_zero_is_the_base_sample_and_retries_redraw() {
+        let m: LatencyModel = "lognormal:1.0,0.8".parse().unwrap();
+        let base = m.sample(42, 3, 5);
+        assert_eq!(base.to_bits(), m.sample_attempt(42, 3, 5, 0).to_bits());
+        let retry1 = m.sample_attempt(42, 3, 5, 1);
+        let retry2 = m.sample_attempt(42, 3, 5, 2);
+        assert_ne!(base.to_bits(), retry1.to_bits(), "retries redraw");
+        assert_ne!(retry1.to_bits(), retry2.to_bits(), "per-attempt streams differ");
+        assert_eq!(retry1.to_bits(), m.sample_attempt(42, 3, 5, 1).to_bits(), "replay is exact");
+        // Constant models are attempt-invariant by construction.
+        let c: LatencyModel = "constant:2.5".parse().unwrap();
+        assert_eq!(c.sample_attempt(1, 2, 3, 7), 2.5);
     }
 
     #[test]

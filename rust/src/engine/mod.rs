@@ -17,7 +17,12 @@
 //!   seeded from `(seed, agent_id, round)` so every straggler
 //!   distribution is bit-reproducible,
 //! - a [`RoundPolicy`] bundling latency, deadline, goal-count, and
-//!   staleness weighting into one value derived from `FlParams`.
+//!   staleness weighting into one value derived from `FlParams`,
+//! - seeded fault injection ([`FaultPlan`]: crashes, lost/corrupt
+//!   deltas, churn traces) and failure recovery ([`RecoveryPolicy`]:
+//!   retry/backoff, replacement resampling, quorum skip) layered on the
+//!   same queue via [`Event::ClientFailed`], [`Event::RetryDue`], and
+//!   [`Event::AvailabilityChanged`].
 //!
 //! **The degenerate policy is the lockstep loop.** With zero latency, no
 //! deadline, and no goal-count, every event of a round fires at the same
@@ -35,12 +40,16 @@
 
 pub mod clock;
 pub mod driver;
+pub mod faults;
 pub mod latency;
 pub mod policy;
+pub mod recovery;
 
 pub use clock::{Clock, ClockKind, SimTime, VirtualClock, WallClock};
+pub use faults::{Availability, FailureReason, FaultPlan};
 pub use latency::LatencyModel;
 pub use policy::RoundPolicy;
+pub use recovery::{Backoff, RecoveryPolicy};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -79,6 +88,50 @@ pub enum Event {
         /// The round that was just finalized.
         round: usize,
     },
+    /// A client attempt failed: crash-before-delivery, crash
+    /// mid-training, delta lost in flight, offline per its churn trace,
+    /// or (via the integrity screen) a corrupt delta. The recovery
+    /// policy decides whether a retry or replacement follows.
+    ClientFailed {
+        /// The client that failed.
+        agent_id: usize,
+        /// The round the attempt was dispatched for.
+        round: usize,
+        /// Which attempt failed (0 = the original dispatch).
+        attempt: u32,
+        /// What went wrong.
+        reason: FailureReason,
+    },
+    /// A failed client's backoff expired: re-dispatch its cached update
+    /// as attempt number `attempt`.
+    RetryDue {
+        /// The client to re-dispatch.
+        agent_id: usize,
+        /// The round the attempt belongs to.
+        round: usize,
+        /// The attempt number about to be dispatched.
+        attempt: u32,
+    },
+    /// An agent's availability trace transitioned while it had an
+    /// attempt in flight (only transitions the engine acts on are
+    /// scheduled; traces are closed-form, not globally materialized).
+    AvailabilityChanged {
+        /// The agent whose availability flipped.
+        agent_id: usize,
+        /// The round its in-flight attempt belongs to.
+        round: usize,
+        /// The new state (`false` = went offline).
+        online: bool,
+    },
+    /// A delta arrived but failed the integrity checksum and was
+    /// rejected before the accumulator push. Emitted at arrival
+    /// processing (never queued), like [`Event::EvalDue`].
+    DeltaRejected {
+        /// The client whose frame was corrupt.
+        agent_id: usize,
+        /// The round the update was computed in.
+        round: usize,
+    },
 }
 
 impl Event {
@@ -89,15 +142,22 @@ impl Event {
             Event::DeltaArrived { .. } => "delta_arrived",
             Event::RoundDeadline { .. } => "round_deadline",
             Event::EvalDue { .. } => "eval_due",
+            Event::ClientFailed { .. } => "client_failed",
+            Event::RetryDue { .. } => "retry_due",
+            Event::AvailabilityChanged { .. } => "availability_changed",
+            Event::DeltaRejected { .. } => "delta_rejected",
         }
     }
 
     /// The originating agent, for client events.
     pub fn agent_id(&self) -> Option<usize> {
         match self {
-            Event::ClientFinished { agent_id, .. } | Event::DeltaArrived { agent_id, .. } => {
-                Some(*agent_id)
-            }
+            Event::ClientFinished { agent_id, .. }
+            | Event::DeltaArrived { agent_id, .. }
+            | Event::ClientFailed { agent_id, .. }
+            | Event::RetryDue { agent_id, .. }
+            | Event::AvailabilityChanged { agent_id, .. }
+            | Event::DeltaRejected { agent_id, .. } => Some(*agent_id),
             _ => None,
         }
     }
@@ -108,7 +168,19 @@ impl Event {
             Event::ClientFinished { round, .. }
             | Event::DeltaArrived { round, .. }
             | Event::RoundDeadline { round }
-            | Event::EvalDue { round } => *round,
+            | Event::EvalDue { round }
+            | Event::ClientFailed { round, .. }
+            | Event::RetryDue { round, .. }
+            | Event::AvailabilityChanged { round, .. }
+            | Event::DeltaRejected { round, .. } => *round,
+        }
+    }
+
+    /// The failure reason, for `client_failed` events.
+    pub fn reason(&self) -> Option<&'static str> {
+        match self {
+            Event::ClientFailed { reason, .. } => Some(reason.name()),
+            _ => None,
         }
     }
 
@@ -122,6 +194,7 @@ impl Event {
             round: in_round,
             agent_id: self.agent_id(),
             staleness,
+            reason: self.reason(),
         }
     }
 }
@@ -255,5 +328,33 @@ mod tests {
         let r = d.to_record(us(1_500_000), 2, None);
         assert_eq!(r.kind, "round_deadline");
         assert!((r.time - 1.5).abs() < 1e-12);
+        assert_eq!(r.reason, None);
+    }
+
+    #[test]
+    fn failure_event_kinds_and_reasons() {
+        let fail = Event::ClientFailed {
+            agent_id: 4,
+            round: 1,
+            attempt: 2,
+            reason: FailureReason::DeltaLost,
+        };
+        assert_eq!(fail.kind(), "client_failed");
+        assert_eq!(fail.agent_id(), Some(4));
+        assert_eq!(fail.round(), 1);
+        let rec = fail.to_record(us(250_000), 1, None);
+        assert_eq!(rec.reason, Some("delta_lost"));
+
+        let retry = Event::RetryDue { agent_id: 4, round: 1, attempt: 3 };
+        assert_eq!(retry.kind(), "retry_due");
+        assert_eq!(retry.to_record(us(0), 1, None).reason, None);
+
+        let avail = Event::AvailabilityChanged { agent_id: 9, round: 0, online: false };
+        assert_eq!(avail.kind(), "availability_changed");
+        assert_eq!(avail.agent_id(), Some(9));
+
+        let rej = Event::DeltaRejected { agent_id: 7, round: 2 };
+        assert_eq!(rej.kind(), "delta_rejected");
+        assert_eq!(rej.round(), 2);
     }
 }

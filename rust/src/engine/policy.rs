@@ -2,7 +2,9 @@
 //! and how late updates are weighted.
 
 use super::clock::{ClockKind, SimTime};
+use super::faults::FaultPlan;
 use super::latency::LatencyModel;
+use super::recovery::RecoveryPolicy;
 
 /// Fixed-point scale applied to buffered-mode stream weights so the
 /// staleness discount survives integer rounding: a weight is
@@ -30,6 +32,10 @@ pub struct RoundPolicy {
     pub staleness_alpha: f64,
     /// Virtual (simulated) or wall (measured) time.
     pub clock: ClockKind,
+    /// Seeded fault injection (crashes, lost/corrupt deltas, churn).
+    pub faults: FaultPlan,
+    /// What to do about failures (retry/backoff, resampling, quorum).
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for RoundPolicy {
@@ -48,16 +54,31 @@ impl RoundPolicy {
             goal: None,
             staleness_alpha: 0.5,
             clock: ClockKind::Virtual,
+            faults: FaultPlan::default(),
+            recovery: RecoveryPolicy::none(),
         }
     }
 
     /// True when this policy reproduces the lockstep loop bit-identically
-    /// (zero latency, no deadline, no goal, virtual clock).
+    /// (zero latency, no deadline, no goal, virtual clock, at most the
+    /// legacy dropout fault, no recovery). A vanilla fault plan keeps
+    /// parity because its dropout draws are the reference's own; any
+    /// richer fault or recovery knob changes what a round can do (skip
+    /// on quorum, retry, replace) and breaks degeneracy.
     pub fn is_degenerate(&self) -> bool {
         self.latency.is_none()
             && self.deadline.is_none()
             && self.goal.is_none()
             && self.clock == ClockKind::Virtual
+            && self.faults.is_vanilla()
+            && self.recovery.is_none()
+    }
+
+    /// True when the fault/recovery machinery is in play: the driver
+    /// routes dispatch through fate draws, availability screens, and
+    /// failure events instead of the plain schedule.
+    pub fn chaos_active(&self) -> bool {
+        !self.faults.is_vanilla() || !self.recovery.is_none()
     }
 
     /// True when rounds may finalize before every dispatched update
@@ -112,6 +133,34 @@ mod tests {
         let mut p = RoundPolicy::lockstep();
         p.clock = ClockKind::Wall;
         assert!(!p.is_degenerate());
+    }
+
+    #[test]
+    fn faults_and_recovery_break_degeneracy_except_vanilla_dropout() {
+        // The legacy dropout is drawn from the main experiment RNG in
+        // the reference's own order, so it preserves lockstep parity.
+        let mut p = RoundPolicy::lockstep();
+        p.faults = "dropout:0.25".parse().unwrap();
+        assert!(p.is_degenerate(), "vanilla dropout keeps lockstep parity");
+        assert!(!p.chaos_active());
+
+        let mut p = RoundPolicy::lockstep();
+        p.faults = "crash:0.1".parse().unwrap();
+        assert!(!p.is_degenerate());
+        assert!(p.chaos_active());
+
+        let mut p = RoundPolicy::lockstep();
+        p.faults = "churn:diurnal:60,0.5".parse().unwrap();
+        assert!(!p.is_degenerate());
+
+        let mut p = RoundPolicy::lockstep();
+        p.recovery.max_retries = 2;
+        assert!(!p.is_degenerate());
+        assert!(p.chaos_active());
+
+        let mut p = RoundPolicy::lockstep();
+        p.recovery.quorum = 0.5;
+        assert!(!p.is_degenerate(), "quorum can skip rounds the reference would aggregate");
     }
 
     #[test]

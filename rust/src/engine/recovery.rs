@@ -1,0 +1,239 @@
+//! Failure recovery for the event engine (config: `[faults]` knobs
+//! `retry` / `backoff` / `resample` / `quorum`).
+//!
+//! Where [`super::faults::FaultPlan`] injects failures, a
+//! [`RecoveryPolicy`] decides what the server does about them:
+//!
+//! - **retry with backoff** — a failed client attempt is re-dispatched
+//!   after `base * factor^attempt * (1 + jitter * U)` seconds, up to
+//!   `max_retries` extra attempts. Local training is a pure function of
+//!   `(seed, round, agent)`, so a retry re-sends the *identical* delta
+//!   the first attempt computed — the engine caches it and never
+//!   recomputes.
+//! - **replacement resampling** — when a client fails permanently, an
+//!   available, not-yet-used agent is drawn (from a per-round recovery
+//!   stream) to fill its cohort slot.
+//! - **quorum** — if a round closes with fewer arrivals than
+//!   `ceil(quorum * planned_cohort)`, the round is skipped gracefully:
+//!   the global model is left byte-unchanged and the skip is logged,
+//!   instead of aggregating a degenerate cohort.
+//!
+//! Backoff jitter comes from the failed attempt's own fault stream
+//! (see [`super::faults::AttemptDraw::jitter`]) and replacement picks
+//! from [`RecoveryPolicy::resample_rng`], so recovery — like the
+//! faults themselves — replays bit-identically from the seed. This
+//! retry/backoff schedule is the timeout policy the multi-process
+//! transport (ROADMAP) inherits.
+
+use std::str::FromStr;
+
+use crate::engine::faults::FAULT_SALT;
+use crate::util::error::{bail, Context, Error, Result};
+use crate::util::Rng;
+
+/// Salt (as a `split` argument on the fault stream) for the per-round
+/// replacement-resampling stream. Far outside the agent-id range, so it
+/// can never collide with an agent's per-round fault stream.
+const RESAMPLE_SALT: u64 = u64::MAX;
+
+/// Exponential backoff with seeded jitter, in seconds.
+///
+/// Config/CLI syntax: `BASE[,FACTOR[,JITTER]]` — e.g. `0.5`, `0.5,2`,
+/// `0.5,2,0.1`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Backoff {
+    /// Delay before the first retry, in seconds.
+    pub base: f64,
+    /// Multiplier per further attempt (1.0 = constant delay).
+    pub factor: f64,
+    /// Jitter amplitude in `[0, 1]`: the delay is scaled by
+    /// `1 + jitter * U` with `U` uniform in `[0, 1)`.
+    pub jitter: f64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base: 1.0, factor: 2.0, jitter: 0.1 }
+    }
+}
+
+impl Backoff {
+    /// The delay after failed attempt number `attempt` (0-based), given
+    /// that attempt's jitter draw `jitter_u` in `[0, 1)`.
+    pub fn delay_secs(&self, attempt: u32, jitter_u: f64) -> f64 {
+        let growth = self.factor.powi(attempt.min(i32::MAX as u32) as i32);
+        self.base * growth * (1.0 + self.jitter * jitter_u)
+    }
+
+    /// Reject schedules a struct literal could build but parsing would
+    /// not.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.base.is_finite() && self.base >= 0.0) {
+            bail!("backoff base must be a non-negative number of seconds, got {}", self.base);
+        }
+        if !(self.factor.is_finite() && self.factor >= 1.0) {
+            bail!("backoff factor must be >= 1, got {}", self.factor);
+        }
+        if !(0.0..=1.0).contains(&self.jitter) {
+            bail!("backoff jitter must be in [0, 1], got {}", self.jitter);
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for Backoff {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut parts = s.split(',').map(str::trim);
+        let d = Backoff::default();
+        let base = parts
+            .next()
+            .filter(|p| !p.is_empty())
+            .with_context(|| format!("backoff needs BASE[,FACTOR[,JITTER]], got {s:?}"))?
+            .parse::<f64>()
+            .context("backoff BASE")?;
+        let factor = match parts.next() {
+            Some(p) => p.parse::<f64>().context("backoff FACTOR")?,
+            None => d.factor,
+        };
+        let jitter = match parts.next() {
+            Some(p) => p.parse::<f64>().context("backoff JITTER")?,
+            None => d.jitter,
+        };
+        if parts.next().is_some() {
+            bail!("backoff takes at most BASE,FACTOR,JITTER, got {s:?}");
+        }
+        let b = Backoff { base, factor, jitter };
+        b.validate()?;
+        Ok(b)
+    }
+}
+
+impl std::fmt::Display for Backoff {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{},{},{}", self.base, self.factor, self.jitter)
+    }
+}
+
+/// What the server does about client failures.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Extra attempts per client per round (0 = fail permanently on the
+    /// first failure).
+    pub max_retries: u32,
+    /// Retry delay schedule.
+    pub backoff: Backoff,
+    /// Resample a replacement client when one fails permanently.
+    pub resample: bool,
+    /// Minimum fraction of the planned cohort that must arrive, in
+    /// `[0, 1]`; a round closing below `ceil(quorum * planned)` is
+    /// skipped with the model unchanged. 0 disables the check.
+    pub quorum: f64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy::none()
+    }
+}
+
+impl RecoveryPolicy {
+    /// The inert policy: no retries, no replacements, no quorum.
+    pub fn none() -> Self {
+        RecoveryPolicy { max_retries: 0, backoff: Backoff::default(), resample: false, quorum: 0.0 }
+    }
+
+    /// True when the policy can never change a round's behaviour.
+    pub fn is_none(&self) -> bool {
+        self.max_retries == 0 && !self.resample && self.quorum <= 0.0
+    }
+
+    /// The minimum number of arrivals a `planned`-client round needs to
+    /// aggregate.
+    pub fn quorum_min(&self, planned: usize) -> usize {
+        if self.quorum <= 0.0 {
+            0
+        } else {
+            (self.quorum * planned as f64).ceil() as usize
+        }
+    }
+
+    /// The per-round stream replacement clients are drawn from. Picks
+    /// are made in event order, which is itself deterministic, so
+    /// replacement cohorts replay bit-identically.
+    pub fn resample_rng(seed: u64, round: usize) -> Rng {
+        Rng::new(seed ^ FAULT_SALT).split(RESAMPLE_SALT).split(round as u64)
+    }
+
+    /// Reject policies a struct literal could build but parsing/config
+    /// validation would not.
+    pub fn validate(&self) -> Result<()> {
+        self.backoff.validate()?;
+        if !(0.0..=1.0).contains(&self.quorum) {
+            bail!("quorum must be a fraction in [0, 1], got {}", self.quorum);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_parses_and_roundtrips() {
+        for spec in ["0.5", "0.5,2", "0.5,2,0.1", "1,1,0"] {
+            let b: Backoff = spec.parse().unwrap();
+            assert_eq!(b.to_string().parse::<Backoff>().unwrap(), b, "{spec}");
+        }
+        assert_eq!("2.5".parse::<Backoff>().unwrap().factor, Backoff::default().factor);
+        assert!("".parse::<Backoff>().is_err());
+        assert!("-1".parse::<Backoff>().is_err());
+        assert!("1,0.5".parse::<Backoff>().is_err(), "factor < 1 shrinks: rejected");
+        assert!("1,2,1.5".parse::<Backoff>().is_err());
+        assert!("1,2,0.1,9".parse::<Backoff>().is_err());
+    }
+
+    #[test]
+    fn backoff_delays_grow_exponentially_with_bounded_jitter() {
+        let b: Backoff = "0.5,2,0.5".parse().unwrap();
+        for attempt in 0..5u32 {
+            let lo = 0.5 * 2f64.powi(attempt as i32);
+            let d0 = b.delay_secs(attempt, 0.0);
+            let d1 = b.delay_secs(attempt, 0.999);
+            assert_eq!(d0, lo, "zero jitter draw is the bare schedule");
+            assert!(d1 > lo && d1 < lo * 1.5, "jitter adds at most 50%: {d1}");
+        }
+    }
+
+    #[test]
+    fn quorum_minimum_rounds_up() {
+        let p = RecoveryPolicy { quorum: 0.5, ..RecoveryPolicy::none() };
+        assert_eq!(p.quorum_min(0), 0);
+        assert_eq!(p.quorum_min(4), 2);
+        assert_eq!(p.quorum_min(5), 3, "ceil, not floor");
+        assert_eq!(RecoveryPolicy::none().quorum_min(100), 0);
+        let all = RecoveryPolicy { quorum: 1.0, ..RecoveryPolicy::none() };
+        assert_eq!(all.quorum_min(7), 7);
+    }
+
+    #[test]
+    fn none_policy_classification() {
+        assert!(RecoveryPolicy::none().is_none());
+        assert!(!RecoveryPolicy { max_retries: 1, ..RecoveryPolicy::none() }.is_none());
+        assert!(!RecoveryPolicy { resample: true, ..RecoveryPolicy::none() }.is_none());
+        assert!(!RecoveryPolicy { quorum: 0.25, ..RecoveryPolicy::none() }.is_none());
+        RecoveryPolicy::none().validate().unwrap();
+    }
+
+    #[test]
+    fn resample_stream_is_per_round_and_deterministic() {
+        let mut a = RecoveryPolicy::resample_rng(42, 3);
+        let mut b = RecoveryPolicy::resample_rng(42, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = RecoveryPolicy::resample_rng(42, 4);
+        let mut a2 = RecoveryPolicy::resample_rng(42, 3);
+        assert_ne!(a2.next_u64(), c.next_u64(), "per-round streams differ");
+    }
+}

@@ -30,7 +30,7 @@
 use std::sync::Arc;
 
 use crate::config::{FlParams, Mode, Optimizer};
-use crate::engine::{ClockKind, LatencyModel};
+use crate::engine::{Backoff, ClockKind, FaultPlan, LatencyModel};
 use crate::federation::Scheme;
 use crate::loggers::Logger;
 use crate::metrics::RoundRecord;
@@ -219,9 +219,41 @@ impl ExperimentBuilder {
         self
     }
 
-    /// Per-round dropout probability of a sampled agent, in `[0, 1)`.
+    /// Per-round dropout probability of a sampled agent, in `[0, 1]`.
     pub fn dropout(mut self, p: f64) -> Self {
         self.params.dropout = p;
+        self
+    }
+
+    /// Seeded fault-injection plan (crashes, delta loss/corruption,
+    /// availability churn). Replays bit-identically from the seed.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.params.faults = plan;
+        self
+    }
+
+    /// Retry attempts per failed client delivery (0 = no retries).
+    pub fn retry(mut self, max_retries: u32) -> Self {
+        self.params.retry = max_retries;
+        self
+    }
+
+    /// Exponential backoff schedule for retries.
+    pub fn backoff(mut self, backoff: Backoff) -> Self {
+        self.params.backoff = backoff;
+        self
+    }
+
+    /// Minimum fraction of the planned cohort that must arrive, else
+    /// the round skips without touching the model, in `[0, 1]`.
+    pub fn quorum(mut self, frac: f64) -> Self {
+        self.params.quorum = frac;
+        self
+    }
+
+    /// Replace permanently-failed clients with fresh resampled ones.
+    pub fn resample(mut self, yes: bool) -> Self {
+        self.params.resample = yes;
         self
     }
 
@@ -360,5 +392,21 @@ mod tests {
         let pol = b.params.round_policy();
         assert!(pol.buffered());
         assert_eq!(pol.goal, Some(3));
+    }
+
+    #[test]
+    fn builder_sets_fault_knobs() {
+        let b = Experiment::builder()
+            .fault_plan("crash:0.2;drop:0.1".parse().unwrap())
+            .retry(2)
+            .backoff("0.5,2,0.25".parse().unwrap())
+            .quorum(0.5)
+            .resample(true);
+        let pol = b.params.round_policy();
+        assert!(pol.chaos_active());
+        assert_eq!(pol.recovery.max_retries, 2);
+        assert_eq!(pol.recovery.quorum, 0.5);
+        assert!(pol.recovery.resample);
+        assert_eq!(pol.recovery.backoff.to_string(), "0.5,2,0.25");
     }
 }

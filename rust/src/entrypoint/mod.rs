@@ -49,7 +49,9 @@ use crate::defense::{self, Defense};
 use crate::federation;
 use crate::incentives::ContributionTracker;
 use crate::loggers::Logger;
-use crate::metrics::{Accumulator, AgentRecord, RoundRecord};
+use crate::metrics::{
+    Accumulator, AgentRecord, RecoveryStats, RoundOutcome, RoundRecord, SkipReason,
+};
 use crate::profiler::SimpleProfiler;
 use crate::runtime::{EvalStats, Manifest};
 use crate::samplers::{self, Sampler};
@@ -219,6 +221,7 @@ impl Entrypoint {
         let mut dropped_log = Vec::new();
         let mut rejected_log = Vec::new();
         let k = self.params.sampled_per_round();
+        let fault_plan = self.params.fault_plan();
 
         for round in 0..self.params.global_epochs {
             let t_round = Instant::now();
@@ -231,17 +234,10 @@ impl Entrypoint {
             // 1b. straggler/failure injection: each sampled device drops
             // with probability `dropout` (cross-device FL reality; the
             // round proceeds with survivors, paper Fig 1 lifecycle).
+            // The draw loop lives on `FaultPlan` so the engine's richer
+            // fault model provably shares this exact RNG sequence.
             let mut dropped = Vec::new();
-            if self.params.dropout > 0.0 {
-                sampled.retain(|&aid| {
-                    if self.rng.next_f64() < self.params.dropout {
-                        dropped.push(aid);
-                        false
-                    } else {
-                        true
-                    }
-                });
-            }
+            fault_plan.apply_dropout(&mut self.rng, &mut sampled, &mut dropped);
             if sampled.is_empty() {
                 // whole cohort offline: skip the round (the dropped
                 // list is still surfaced to the logger, like any round)
@@ -258,6 +254,8 @@ impl Entrypoint {
                     rejected: Vec::new(),
                     secs: t_round.elapsed().as_secs_f64(),
                     sim_secs: 0.0,
+                    outcome: RoundOutcome::Skipped(SkipReason::EmptyCohort),
+                    recovery: RecoveryStats::default(),
                 };
                 logger.log_round(&rec)?;
                 rounds.push(rec);
@@ -405,6 +403,8 @@ impl Entrypoint {
                     rejected: report.rejected,
                     secs: t_round.elapsed().as_secs_f64(),
                     sim_secs: 0.0,
+                    outcome: RoundOutcome::Skipped(SkipReason::NoUpdates),
+                    recovery: RecoveryStats::default(),
                 };
                 logger.log_round(&rec)?;
                 rounds.push(rec);
@@ -465,6 +465,8 @@ impl Entrypoint {
                 rejected: report.rejected,
                 secs: t_round.elapsed().as_secs_f64(),
                 sim_secs: 0.0,
+                outcome: RoundOutcome::Aggregated,
+                recovery: RecoveryStats::default(),
             };
             logger.log_round(&rec)?;
             rounds.push(rec);

@@ -48,6 +48,12 @@
 //! lockstep loop bit-for-bit; see [`engine`] for the event taxonomy
 //! and [`config::FlParams::round_policy`] for the knobs.
 //!
+//! Seeded fault injection ([`engine::FaultPlan`]: crashes, delta
+//! loss/corruption, availability churn) and recovery
+//! ([`engine::RecoveryPolicy`]: retry/backoff, resampling, quorum)
+//! layer on top of the same queue and replay bit-identically from
+//! `(seed, plan)` at any worker count.
+//!
 //! Quickstart: `cargo run --release --example quickstart`, or
 //! `cargo run --release -- run --config configs/quickstart.toml`.
 //! In code, start from [`Experiment::builder`](prelude::Experiment::builder)
@@ -78,15 +84,17 @@ pub mod zoo;
 pub mod prelude {
     pub use crate::config::{FlParams, Mode, Optimizer};
     pub use crate::engine::{
-        Clock, ClockKind, Event, EventQueue, LatencyModel, RoundPolicy, SimTime, VirtualClock,
-        WallClock,
+        Availability, Backoff, Clock, ClockKind, Event, EventQueue, FailureReason, FaultPlan,
+        LatencyModel, RecoveryPolicy, RoundPolicy, SimTime, VirtualClock, WallClock,
     };
     pub use crate::entrypoint::{Entrypoint, Experiment, ExperimentBuilder, RunResult};
     pub use crate::federation::Scheme;
     pub use crate::loggers::{
         ConsoleLogger, CsvLogger, JsonlLogger, Logger, MultiLogger, NullLogger,
     };
-    pub use crate::metrics::{AgentRecord, EventRecord, RoundRecord};
+    pub use crate::metrics::{
+        AgentRecord, EventRecord, RecoveryStats, RoundOutcome, RoundRecord, SkipReason,
+    };
     pub use crate::runtime::{BackendKind, EvalStats, Manifest};
     pub use crate::util::error::{Error, Result};
 }

@@ -11,7 +11,7 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use crate::metrics::{AgentRecord, EventRecord, RoundRecord};
+use crate::metrics::{AgentRecord, EventRecord, RecoveryStats, RoundRecord};
 use crate::util::error::{Context, Result};
 use crate::util::Json;
 
@@ -71,6 +71,16 @@ impl Logger for ConsoleLogger {
         if r.sim_secs > 0.0 {
             extras.push_str(&format!(" | sim {:.2}s", r.sim_secs));
         }
+        if r.outcome.is_skipped() {
+            extras.push_str(&format!(" | {}", r.outcome.name()));
+        }
+        if r.recovery != RecoveryStats::default() {
+            let s = r.recovery;
+            extras.push_str(&format!(
+                " | {} failed/{} retried/{} corrupt/{} replaced",
+                s.failures, s.retries, s.corrupt_rejected, s.replacements
+            ));
+        }
         println!(
             "[round {:>3}] train loss {:.4} acc {:.3}{} | {} agents{} | {:.2}s",
             r.round,
@@ -105,7 +115,8 @@ impl Logger for ConsoleLogger {
                 Some(s) if s > 0 => format!(" (stale {s})"),
                 _ => String::new(),
             };
-            println!("  [t={:>9.3}s] {}{}{} round {}", r.time, r.kind, agent, stale, r.round);
+            let why = r.reason.map_or(String::new(), |w| format!(" [{w}]"));
+            println!("  [t={:>9.3}s] {}{}{}{} round {}", r.time, r.kind, agent, stale, why, r.round);
         }
         Ok(())
     }
@@ -136,15 +147,18 @@ impl CsvLogger {
             File::create(dir.join(format!("{name}_events.csv")))
                 .context("creating events csv")?,
         );
+        // New columns append after the legacy ones, so downstream
+        // consumers indexing by position keep working (pinned by
+        // `csv_fault_columns_append_after_the_legacy_ones`).
         writeln!(
             rounds,
-            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,num_dropped,num_rejected,secs,sim_secs"
+            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,num_dropped,num_rejected,secs,sim_secs,outcome,failures,retries,corrupt_rejected,replacements"
         )?;
         writeln!(
             agents,
             "round,agent_id,final_loss,final_acc,num_samples,secs"
         )?;
-        writeln!(events, "time,kind,round,agent_id,staleness")?;
+        writeln!(events, "time,kind,round,agent_id,staleness,reason")?;
         Ok(Self { rounds, agents, events })
     }
 }
@@ -153,7 +167,7 @@ impl Logger for CsvLogger {
     fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
         writeln!(
             self.rounds,
-            "{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             r.round,
             r.train_loss,
             r.train_acc,
@@ -163,7 +177,12 @@ impl Logger for CsvLogger {
             r.dropped.len(),
             r.rejected.len(),
             r.secs,
-            r.sim_secs
+            r.sim_secs,
+            r.outcome.name(),
+            r.recovery.failures,
+            r.recovery.retries,
+            r.recovery.corrupt_rejected,
+            r.recovery.replacements
         )?;
         Ok(())
     }
@@ -185,7 +204,8 @@ impl Logger for CsvLogger {
     fn log_event(&mut self, r: &EventRecord) -> Result<()> {
         let agent = r.agent_id.map_or(String::new(), |a| a.to_string());
         let stale = r.staleness.map_or(String::new(), |s| s.to_string());
-        writeln!(self.events, "{},{},{},{},{}", r.time, r.kind, r.round, agent, stale)?;
+        let why = r.reason.unwrap_or("");
+        writeln!(self.events, "{},{},{},{},{},{}", r.time, r.kind, r.round, agent, stale, why)?;
         Ok(())
     }
 
@@ -238,6 +258,11 @@ impl Logger for JsonlLogger {
             ),
             ("secs", Json::num(r.secs)),
             ("sim_secs", Json::num(r.sim_secs)),
+            ("outcome", Json::str(r.outcome.name())),
+            ("failures", Json::num(r.recovery.failures as f64)),
+            ("retries", Json::num(r.recovery.retries as f64)),
+            ("corrupt_rejected", Json::num(r.recovery.corrupt_rejected as f64)),
+            ("replacements", Json::num(r.recovery.replacements as f64)),
         ]);
         writeln!(self.out, "{}", j.to_string())?;
         Ok(())
@@ -275,6 +300,9 @@ impl Logger for JsonlLogger {
         }
         if let Some(s) = r.staleness {
             pairs.push(("staleness", Json::num(s as f64)));
+        }
+        if let Some(w) = r.reason {
+            pairs.push(("reason", Json::str(w)));
         }
         writeln!(self.out, "{}", Json::obj(pairs).to_string())?;
         Ok(())
@@ -331,6 +359,8 @@ impl Logger for MultiLogger {
 mod tests {
     use super::*;
 
+    use crate::metrics::{RoundOutcome, SkipReason};
+
     fn sample_round() -> RoundRecord {
         RoundRecord {
             round: 3,
@@ -343,6 +373,8 @@ mod tests {
             rejected: vec![],
             secs: 0.25,
             sim_secs: 0.0,
+            outcome: RoundOutcome::Aggregated,
+            recovery: RecoveryStats::default(),
         }
     }
 
@@ -353,6 +385,7 @@ mod tests {
             round: 3,
             agent_id: Some(4),
             staleness: Some(1),
+            reason: None,
         }
     }
 
@@ -383,6 +416,35 @@ mod tests {
         let events = std::fs::read_to_string(dir.join("t_events.csv")).unwrap();
         assert!(events.starts_with("time,kind,round,agent_id,staleness"));
         assert!(events.contains("1.5,delta_arrived,3,4,1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_fault_columns_append_after_the_legacy_ones() {
+        // The legacy column order is pinned: fault/recovery columns only
+        // ever APPEND, so positional consumers of old logs keep working.
+        let dir = std::env::temp_dir().join(format!("ferrisfl-csvf-{}", std::process::id()));
+        let mut l = CsvLogger::create(&dir, "t").unwrap();
+        let mut r = sample_round();
+        r.outcome = RoundOutcome::Skipped(SkipReason::Quorum);
+        r.recovery =
+            RecoveryStats { failures: 3, retries: 2, corrupt_rejected: 1, replacements: 1 };
+        l.log_round(&r).unwrap();
+        let mut e = sample_event();
+        e.kind = "client_failed";
+        e.staleness = None;
+        e.reason = Some("crash");
+        l.log_event(&e).unwrap();
+        l.finish().unwrap();
+        let rounds = std::fs::read_to_string(dir.join("t_rounds.csv")).unwrap();
+        assert!(rounds.starts_with(
+            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,num_dropped,\
+             num_rejected,secs,sim_secs,outcome,failures,retries,corrupt_rejected,replacements"
+        ));
+        assert!(rounds.contains("0.25,0,skipped_quorum,3,2,1,1"), "{rounds}");
+        let events = std::fs::read_to_string(dir.join("t_events.csv")).unwrap();
+        assert!(events.starts_with("time,kind,round,agent_id,staleness,reason"));
+        assert!(events.contains("1.5,client_failed,3,4,,crash"), "{events}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -23,6 +23,7 @@ ferrisfl — FerrisFL: bootstrap federated-learning experiments (TorchFL repro)
 USAGE:
   ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>] [--fuse]
                [--latency <model>] [--deadline <secs>] [--goal <k>] [--staleness-alpha <a>] [--clock virtual|wall]
+               [--fault-plan <plan>] [--retry <n>] [--backoff <b[,f[,j]]>] [--quorum <frac>] [--resample]
   ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
   ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
   ferrisfl info [--backend native|pjrt] [--artifacts <dir>]
@@ -39,6 +40,17 @@ ROUND ENGINE (all optional; defaults reproduce the lockstep loop):
   --goal <k>              finalize once k updates arrived (FedBuff)
   --staleness-alpha <a>   staleness discount exponent (default 0.5)
   --clock virtual|wall    simulated (deterministic) or measured time
+
+FAULTS & RECOVERY (seeded chaos; replays bit-identically):
+  --fault-plan <plan>     none | TERM[;TERM...] with dropout:P crash:P
+                          drop:P corrupt:P churn:flapping:PERIOD,DUTY
+                          churn:diurnal:PERIOD,DUTY
+  --retry <n>             retry attempts per failed client (default 0)
+  --backoff <b[,f[,j]]>   retry backoff BASE[,FACTOR[,JITTER]] seconds
+  --quorum <frac>         skip rounds with fewer arrivals than this
+                          fraction of the planned cohort
+  --resample              replace permanently failed clients from the
+                          available pool
 
 EXPERIMENTS (paper artefacts):
   table1 table2 table3 table4 fig6 fig7 fig8i fig8ii fig9 fig10 | all
@@ -61,7 +73,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // Flags we know take no value.
-                if matches!(name, "quick" | "verbose" | "help" | "fuse") {
+                if matches!(name, "quick" | "verbose" | "help" | "fuse" | "resample") {
                     flags.insert(name.to_string());
                 } else {
                     let v = argv
@@ -130,6 +142,21 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(c) = args.opt("clock") {
         params.clock = c.parse()?;
+    }
+    if let Some(p) = args.opt("fault-plan") {
+        params.faults = p.parse()?;
+    }
+    if let Some(r) = args.opt("retry") {
+        params.retry = r.parse()?;
+    }
+    if let Some(b) = args.opt("backoff") {
+        params.backoff = b.parse()?;
+    }
+    if let Some(q) = args.opt("quorum") {
+        params.quorum = q.parse()?;
+    }
+    if args.flags.contains("resample") {
+        params.resample = true;
     }
     params.validate()?;
     let backend = backend_of(args, params.backend.name())?;

@@ -5,6 +5,62 @@
 //! series). Plain data + a tiny accumulator; serialisation lives in
 //! `loggers`.
 
+/// How a round ended: with an aggregate, or skipped with the global
+/// model byte-unchanged.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// Arrived updates were aggregated into a new global model.
+    #[default]
+    Aggregated,
+    /// The round was skipped; the global model is unchanged.
+    Skipped(SkipReason),
+}
+
+/// Why a round was skipped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SkipReason {
+    /// Every sampled client failed at dispatch (or none were sampled)
+    /// and nothing was in flight.
+    EmptyCohort,
+    /// The round closed with no usable updates: zero arrivals before
+    /// the deadline, every arrival corrupt, or the defense rejected
+    /// everything.
+    NoUpdates,
+    /// Fewer arrivals than the recovery policy's quorum.
+    Quorum,
+}
+
+impl RoundOutcome {
+    /// Stable snake_case tag, used in round logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundOutcome::Aggregated => "aggregated",
+            RoundOutcome::Skipped(SkipReason::EmptyCohort) => "skipped_empty_cohort",
+            RoundOutcome::Skipped(SkipReason::NoUpdates) => "skipped_no_updates",
+            RoundOutcome::Skipped(SkipReason::Quorum) => "skipped_quorum",
+        }
+    }
+
+    /// True for any [`RoundOutcome::Skipped`] variant.
+    pub fn is_skipped(self) -> bool {
+        matches!(self, RoundOutcome::Skipped(_))
+    }
+}
+
+/// Per-round failure/recovery counters (all zero on a fault-free round).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Failed client attempts observed while this round was open
+    /// (any reason: dropout, crash, lost delta, offline, corrupt).
+    pub failures: u32,
+    /// Retry attempts dispatched.
+    pub retries: u32,
+    /// Deltas rejected by the integrity checksum.
+    pub corrupt_rejected: u32,
+    /// Replacement clients resampled after permanent failures.
+    pub replacements: u32,
+}
+
 /// Global model metrics after one federation round (one Fig 8 point).
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
@@ -28,6 +84,10 @@ pub struct RoundRecord {
     /// Simulated seconds the round spanned on the engine's clock
     /// (0 under the degenerate zero-latency policy).
     pub sim_secs: f64,
+    /// Whether the round aggregated or was skipped (and why).
+    pub outcome: RoundOutcome,
+    /// Failure/recovery counters for the round.
+    pub recovery: RecoveryStats,
 }
 
 /// One engine event, as surfaced to the loggers (the `engine` module's
@@ -39,7 +99,8 @@ pub struct EventRecord {
     /// simulated (virtual clock) or measured (wall clock).
     pub time: f64,
     /// Event tag: `client_finished`, `delta_arrived`, `round_deadline`,
-    /// or `eval_due`.
+    /// `eval_due`, `client_failed`, `retry_due`, `availability_changed`,
+    /// or `delta_rejected`.
     pub kind: &'static str,
     /// The round the event was processed in.
     pub round: usize,
@@ -48,6 +109,9 @@ pub struct EventRecord {
     /// For `delta_arrived`: rounds between dispatch and application
     /// (0 = fresh, >0 = buffered stale update).
     pub staleness: Option<u64>,
+    /// For `client_failed`: why the attempt failed (`dropout`, `crash`,
+    /// `delta_lost`, `offline`, `corrupt`).
+    pub reason: Option<&'static str>,
 }
 
 /// One agent's local-training metrics for one round (one Fig 9 point).
@@ -149,5 +213,21 @@ mod tests {
         };
         assert_eq!(r.final_loss(), 1.5);
         assert_eq!(r.final_acc(), 0.5);
+    }
+
+    #[test]
+    fn round_outcome_tags_and_default() {
+        assert_eq!(RoundOutcome::default(), RoundOutcome::Aggregated);
+        assert!(!RoundOutcome::Aggregated.is_skipped());
+        for (o, tag) in [
+            (RoundOutcome::Aggregated, "aggregated"),
+            (RoundOutcome::Skipped(SkipReason::EmptyCohort), "skipped_empty_cohort"),
+            (RoundOutcome::Skipped(SkipReason::NoUpdates), "skipped_no_updates"),
+            (RoundOutcome::Skipped(SkipReason::Quorum), "skipped_quorum"),
+        ] {
+            assert_eq!(o.name(), tag);
+            assert_eq!(o.is_skipped(), o != RoundOutcome::Aggregated);
+        }
+        assert_eq!(RecoveryStats::default(), RecoveryStats::default());
     }
 }

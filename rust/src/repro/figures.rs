@@ -116,6 +116,24 @@ fn run_fl(
         res.final_eval.mean_loss(),
         res.final_eval.accuracy()
     );
+    let mut fail = 0u32;
+    let mut retry = 0u32;
+    let mut corrupt = 0u32;
+    let mut replaced = 0u32;
+    let mut skipped = 0usize;
+    for r in &res.rounds {
+        fail += r.recovery.failures;
+        retry += r.recovery.retries;
+        corrupt += r.recovery.corrupt_rejected;
+        replaced += r.recovery.replacements;
+        skipped += usize::from(r.outcome.is_skipped());
+    }
+    if fail + retry + corrupt + replaced > 0 || skipped > 0 {
+        println!(
+            "recovery: {fail} failed attempts, {retry} retries, {corrupt} corrupt \
+             deltas rejected, {replaced} clients replaced, {skipped} rounds skipped"
+        );
+    }
     Ok((res.rounds, res.agent_records))
 }
 

@@ -1,0 +1,311 @@
+//! End-to-end tests for the fault-injection and recovery layer.
+//!
+//! Pins the chaos contracts (see `engine::faults` / `engine::recovery`):
+//!
+//! 1. **Seeded chaos replays** — a faulty run is a pure function of
+//!    `(seed, FaultPlan, RecoveryPolicy)`: every metric, global
+//!    parameter, event, and recovery counter is bit-identical across
+//!    replays and worker counts.
+//! 2. **Graceful degradation** — empty cohorts, quorum misses, and
+//!    all-corrupt rounds skip with the global model byte-unchanged;
+//!    with retries enabled the model still converges under churn.
+
+use std::sync::Arc;
+
+use ferrisfl::config::FlParams;
+use ferrisfl::entrypoint::{Entrypoint, RunResult};
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::Logger;
+use ferrisfl::metrics::{
+    AgentRecord, EventRecord, RecoveryStats, RoundOutcome, RoundRecord, SkipReason,
+};
+use ferrisfl::runtime::{BackendKind, Manifest};
+use ferrisfl::util::error::Result;
+
+/// Logger that records every channel verbatim, for assertions.
+#[derive(Default)]
+struct CaptureLogger {
+    rounds: Vec<RoundRecord>,
+    events: Vec<EventRecord>,
+}
+
+impl Logger for CaptureLogger {
+    fn log_round(&mut self, rec: &RoundRecord) -> Result<()> {
+        self.rounds.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_agent(&mut self, _rec: &AgentRecord) -> Result<()> {
+        Ok(())
+    }
+
+    fn log_event(&mut self, rec: &EventRecord) -> Result<()> {
+        self.events.push(rec.clone());
+        Ok(())
+    }
+}
+
+/// Tiny-but-representative workload (mirrors `engine_e2e`).
+fn base_params(name: &str) -> FlParams {
+    FlParams {
+        experiment_name: name.into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 6,
+        sampling_ratio: 0.5,
+        global_epochs: 2,
+        local_epochs: 1,
+        split: Scheme::NonIid { niid_factor: 2 },
+        lr: 0.05,
+        seed: 42,
+        workers: 1,
+        eval_every: 1,
+        max_local_steps: 4,
+        backend: BackendKind::Native,
+        ..FlParams::default()
+    }
+}
+
+/// Run `params` through the engine, also capturing the global model
+/// BEFORE the run so skip paths can assert it stayed byte-unchanged.
+fn run_engine(params: FlParams) -> (RunResult, Vec<f32>, Vec<f32>, CaptureLogger) {
+    let manifest = Arc::new(Manifest::native());
+    let mut ep = Entrypoint::new(params, manifest).unwrap();
+    let initial = ep.global_params().to_vec();
+    let mut log = CaptureLogger::default();
+    let res = ep.run(&mut log).unwrap();
+    let global = ep.global_params().to_vec();
+    (res, initial, global, log)
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Everything except walltime (`secs`) must match to the bit,
+/// including the new outcome and recovery columns.
+fn assert_bit_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        let r = ra.round;
+        assert_eq!(bits(ra.train_loss), bits(rb.train_loss), "{tag} r{r}: train_loss");
+        assert_eq!(bits(ra.train_acc), bits(rb.train_acc), "{tag} r{r}: train_acc");
+        assert_eq!(bits(ra.eval_loss), bits(rb.eval_loss), "{tag} r{r}: eval_loss");
+        assert_eq!(bits(ra.eval_acc), bits(rb.eval_acc), "{tag} r{r}: eval_acc");
+        assert_eq!(ra.sampled, rb.sampled, "{tag} r{r}: sampled");
+        assert_eq!(ra.dropped, rb.dropped, "{tag} r{r}: dropped");
+        assert_eq!(ra.rejected, rb.rejected, "{tag} r{r}: rejected");
+        assert_eq!(bits(ra.sim_secs), bits(rb.sim_secs), "{tag} r{r}: sim_secs");
+        assert_eq!(ra.outcome, rb.outcome, "{tag} r{r}: outcome");
+        assert_eq!(ra.recovery, rb.recovery, "{tag} r{r}: recovery stats");
+    }
+    assert_eq!(a.comm.dense_bytes, b.comm.dense_bytes, "{tag}: dense_bytes");
+    assert_eq!(a.comm.wire_bytes, b.comm.wire_bytes, "{tag}: wire_bytes");
+    assert_eq!(bits(a.final_eval.loss_sum), bits(b.final_eval.loss_sum), "{tag}: eval loss_sum");
+    assert_eq!(bits(a.final_eval.correct), bits(b.final_eval.correct), "{tag}: eval correct");
+}
+
+fn assert_globals_identical(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: global param count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: global param {i}");
+    }
+}
+
+fn total_stats(res: &RunResult) -> RecoveryStats {
+    let mut t = RecoveryStats::default();
+    for r in &res.rounds {
+        t.failures += r.recovery.failures;
+        t.retries += r.recovery.retries;
+        t.corrupt_rejected += r.recovery.corrupt_rejected;
+        t.replacements += r.recovery.replacements;
+    }
+    t
+}
+
+/// The ISSUE's acceptance pin: a chaos scenario — crashes, lost and
+/// corrupted deltas, flapping churn, retries with backoff, quorum, and
+/// replacement resampling all at once — replays bit-identically from
+/// `(seed, plan)` at any worker count.
+#[test]
+fn chaos_scenario_replays_bit_identically_across_worker_counts() {
+    let mk = |workers: usize| FlParams {
+        num_agents: 12,
+        sampling_ratio: 0.75,
+        global_epochs: 3,
+        workers,
+        latency: "lognormal:0.5,0.8".parse().unwrap(),
+        deadline_secs: 2.0,
+        faults: "crash:0.35;drop:0.25;corrupt:0.35;churn:flapping:4,0.8".parse().unwrap(),
+        retry: 2,
+        backoff: "0.2,2,0.5".parse().unwrap(),
+        quorum: 0.3,
+        resample: true,
+        ..base_params("chaos_replay")
+    };
+    let (res_1, _, glob_1, log_1) = run_engine(mk(1));
+    let (res_2, _, glob_2, log_2) = run_engine(mk(2));
+    let (res_4, _, glob_4, log_4) = run_engine(mk(4));
+    assert_bit_identical(&res_1, &res_2, "w1 vs w2");
+    assert_bit_identical(&res_1, &res_4, "w1 vs w4");
+    assert_globals_identical(&glob_1, &glob_2, "w1 vs w2");
+    assert_globals_identical(&glob_1, &glob_4, "w1 vs w4");
+    assert_eq!(log_1.events, log_2.events, "w1 vs w2: event logs");
+    assert_eq!(log_1.events, log_4.events, "w1 vs w4: event logs");
+    let t = total_stats(&res_1);
+    assert!(t.failures > 0, "this plan must inject failures (got {t:?})");
+    assert!(t.retries > 0, "retry 2 must dispatch retries (got {t:?})");
+}
+
+/// Availability churn surfaces as typed events: offline clients fail at
+/// dispatch with reason `offline`, and online clients whose window
+/// closes mid-flight are preempted with an `availability_changed` edge.
+#[test]
+fn churn_preempts_clients_and_logs_availability_edges() {
+    let params = FlParams {
+        num_agents: 8,
+        sampling_ratio: 1.0,
+        global_epochs: 3,
+        latency: "constant:1.0".parse().unwrap(),
+        faults: "churn:flapping:1,0.25".parse().unwrap(),
+        retry: 3,
+        ..base_params("chaos_churn")
+    };
+    let (_res, _, _, log) = run_engine(params);
+    assert!(
+        log.events.iter().any(|e| e.kind == "client_failed" && e.reason == Some("offline")),
+        "with 25% duty most dispatches must hit an offline client"
+    );
+    assert!(
+        log.events.iter().any(|e| e.kind == "availability_changed"),
+        "online windows of ~0.25s cannot cover a 1s delivery: preemption must fire"
+    );
+    assert!(
+        log.events.iter().any(|e| e.kind == "retry_due"),
+        "failed clients must be retried"
+    );
+}
+
+/// Convergence smoke: with 30% crash churn but retries enabled, the
+/// round engine still trains — eval loss decreases over the run.
+#[test]
+fn training_converges_under_crash_churn_with_retries() {
+    let params = FlParams {
+        num_agents: 8,
+        sampling_ratio: 1.0,
+        global_epochs: 3,
+        max_local_steps: 8,
+        latency: "lognormal:0.1,0.5".parse().unwrap(),
+        faults: "crash:0.3".parse().unwrap(),
+        retry: 3,
+        backoff: "0.05,2,0.1".parse().unwrap(),
+        ..base_params("chaos_convergence")
+    };
+    let (res, _, _, _) = run_engine(params);
+    assert_eq!(res.rounds.len(), 3);
+    for r in &res.rounds {
+        assert_eq!(
+            r.outcome,
+            RoundOutcome::Aggregated,
+            "round {}: retry 3 makes permanent loss of a client vanishingly rare",
+            r.round
+        );
+    }
+    let first = res.rounds.first().unwrap().eval_loss;
+    let last = res.rounds.last().unwrap().eval_loss;
+    assert!(first.is_finite() && last.is_finite(), "eval every round");
+    assert!(
+        last < first,
+        "churn with retries must not stop convergence: first {first}, last {last}"
+    );
+}
+
+/// `dropout = 1.0` regression (the legacy panic): every round skips as
+/// an empty cohort, the global model stays byte-unchanged, and the
+/// engine still matches the lockstep reference bit-for-bit.
+#[test]
+fn full_dropout_skips_rounds_without_touching_the_model() {
+    let params = FlParams { dropout: 1.0, ..base_params("chaos_full_dropout") };
+    let (res, initial, global, _log) = run_engine(params.clone());
+    assert_eq!(res.rounds.len(), 2);
+    for r in &res.rounds {
+        assert_eq!(
+            r.outcome,
+            RoundOutcome::Skipped(SkipReason::EmptyCohort),
+            "round {}: everyone dropped",
+            r.round
+        );
+        assert!(r.train_loss.is_nan(), "round {}: nothing trained", r.round);
+    }
+    assert_globals_identical(&initial, &global, "full dropout");
+
+    // Lockstep parity still holds at the degenerate extreme.
+    let manifest = Arc::new(Manifest::native());
+    let mut ep = Entrypoint::new(params, manifest).unwrap();
+    let mut log = CaptureLogger::default();
+    let res_l = ep.run_lockstep(&mut log).unwrap();
+    assert_bit_identical(&res, &res_l, "engine vs lockstep");
+    assert_globals_identical(&global, ep.global_params(), "engine vs lockstep");
+}
+
+/// Quorum skip: a goal-count round that closes with fewer arrivals
+/// than the quorum demands is discarded — the buffered update is not
+/// applied and the model is unchanged.
+#[test]
+fn quorum_miss_skips_the_round_deterministically() {
+    let params = FlParams {
+        num_agents: 4,
+        sampling_ratio: 1.0,
+        global_epochs: 1,
+        latency: "constant:1.0".parse().unwrap(),
+        agg_goal: 1,
+        quorum: 1.0,
+        ..base_params("chaos_quorum")
+    };
+    let (res, initial, global, log) = run_engine(params);
+    assert_eq!(res.rounds.len(), 1);
+    assert_eq!(
+        res.rounds[0].outcome,
+        RoundOutcome::Skipped(SkipReason::Quorum),
+        "1 arrival < quorum ceil(1.0 * 4)"
+    );
+    assert_globals_identical(&initial, &global, "quorum skip");
+    let arrivals = log.events.iter().filter(|e| e.kind == "delta_arrived").count();
+    assert_eq!(arrivals, 1, "goal = 1 closes the round after exactly one arrival");
+}
+
+/// Delta integrity: with every delivery corrupted, the checksum rejects
+/// each one (logged as `delta_rejected`, counted, and re-routed through
+/// the failure path), the round ends with no usable updates, and the
+/// model is unchanged.
+#[test]
+fn corrupted_deltas_are_rejected_by_the_checksum() {
+    let retry = 1u32;
+    let params = FlParams {
+        num_agents: 4,
+        sampling_ratio: 1.0,
+        global_epochs: 1,
+        latency: "constant:0.1".parse().unwrap(),
+        faults: "corrupt:1".parse().unwrap(),
+        retry,
+        backoff: "0.05".parse().unwrap(),
+        ..base_params("chaos_corrupt")
+    };
+    let (res, initial, global, log) = run_engine(params);
+    assert_eq!(res.rounds.len(), 1);
+    assert_eq!(res.rounds[0].outcome, RoundOutcome::Skipped(SkipReason::NoUpdates));
+    assert_globals_identical(&initial, &global, "all-corrupt round");
+    let t = total_stats(&res);
+    let attempts = 4 * (retry + 1);
+    assert_eq!(t.corrupt_rejected, attempts, "every attempt's delta is corrupted");
+    assert_eq!(t.failures, attempts, "every rejection routes through the failure path");
+    assert_eq!(t.retries, 4 * retry, "each client retries exactly `retry` times");
+    let rejected = log.events.iter().filter(|e| e.kind == "delta_rejected").count();
+    assert_eq!(rejected, attempts as usize, "each rejection is logged");
+    assert!(
+        log.events
+            .iter()
+            .any(|e| e.kind == "client_failed" && e.reason == Some("corrupt")),
+        "rejections surface as corrupt client failures"
+    );
+}

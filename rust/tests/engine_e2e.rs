@@ -105,6 +105,8 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult, tag: &str) {
         assert_eq!(ra.dropped, rb.dropped, "{tag} r{r}: dropped");
         assert_eq!(ra.rejected, rb.rejected, "{tag} r{r}: rejected");
         assert_eq!(bits(ra.sim_secs), bits(rb.sim_secs), "{tag} r{r}: sim_secs");
+        assert_eq!(ra.outcome, rb.outcome, "{tag} r{r}: outcome");
+        assert_eq!(ra.recovery, rb.recovery, "{tag} r{r}: recovery stats");
     }
     assert_eq!(a.agent_records.len(), b.agent_records.len(), "{tag}: agent record count");
     for (aa, ab) in a.agent_records.iter().zip(&b.agent_records) {
