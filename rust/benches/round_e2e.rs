@@ -15,7 +15,7 @@ use std::sync::Arc;
 use ferrisfl::benchutil::{
     self, fast_mode, header, merge_section, report, BenchStats,
 };
-use ferrisfl::config::{FlParams, Mode, Optimizer};
+use ferrisfl::config::{FlParams, Mode, Optimizer, Topology};
 use ferrisfl::entrypoint::Entrypoint;
 use ferrisfl::federation::Scheme;
 use ferrisfl::loggers::NullLogger;
@@ -162,6 +162,36 @@ fn main() {
         };
         report("round walltime, workers=4 faulty", &s, "");
         rows.push(("workers_4_faulty".to_string(), s.to_json(Some(1.0))));
+    }
+
+    // Distributed round (multiprocess:2): the same workload as
+    // workers_1/2 but trained in two spawned worker processes pushing
+    // framed fixed-point deltas over Unix sockets. Tracks the wire
+    // overhead (framing, checksums, socket hops) against the in-process
+    // rows; fleet spawn + handshake happen before round 0, so the
+    // recorded rounds measure the steady protocol cost.
+    {
+        std::env::set_var("FERRISFL_WORKER_BIN", env!("CARGO_BIN_EXE_ferrisfl"));
+        let params = FlParams {
+            experiment_name: "bench_round_2proc".into(),
+            topology: Topology::MultiProcess { workers: 2 },
+            ..params_for(1, iters + 1, &manifest)
+        };
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let mut logger = NullLogger;
+        let res = ep.run(&mut logger).unwrap();
+        std::env::remove_var("FERRISFL_WORKER_BIN");
+        let mut times: Vec<f64> = res.rounds[1..].iter().map(|r| r.secs).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = BenchStats {
+            iters: times.len(),
+            min: times[0],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            p50: times[times.len() / 2],
+            max: times[times.len() - 1],
+        };
+        report("round walltime, 2 worker processes (uds)", &s, "");
+        rows.push(("workers_2proc".to_string(), s.to_json(Some(1.0))));
     }
 
     header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");

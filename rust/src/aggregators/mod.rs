@@ -19,7 +19,9 @@
 
 pub mod streaming;
 
-pub use streaming::{delta_checksum, StreamingAccumulator};
+pub use streaming::{
+    delta_checksum, quantize_weighted, quantized_checksum, StreamingAccumulator,
+};
 
 use crate::runtime::ModelExecutor;
 use crate::util::error::{bail, Result};

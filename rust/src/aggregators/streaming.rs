@@ -155,6 +155,39 @@ impl StreamingAccumulator {
         Ok(())
     }
 
+    /// Fold one agent's *pre-quantised* contribution in: `terms[j]` must
+    /// be the exact fixed-point term the kernel would have produced for
+    /// this `(delta, weight)` pair — i.e. [`quantize_weighted`]'s output.
+    ///
+    /// This is the wire-side twin of [`push`](Self::push): a remote
+    /// worker quantises locally, ships the i64 terms, and the leader
+    /// adds them here with exact integer math. Because the in-memory
+    /// reduce is already integer-exact and order-invariant, the result
+    /// is bit-identical to a local `push` of the same delta — the wire
+    /// format *is* the in-memory contract.
+    pub fn push_quantized(&self, terms: &[i64], weight: u64) -> Result<()> {
+        if terms.len() != self.len {
+            bail!(
+                "streaming push of {} quantised terms into accumulator of {}",
+                terms.len(),
+                self.len
+            );
+        }
+        let nstripes = self.stripes.len();
+        let start = self.count.fetch_add(1, Ordering::AcqRel) % nstripes;
+        for turn in 0..nstripes {
+            let s = (start + turn) % nstripes;
+            let lo = s * STRIPE_COORDS;
+            let mut acc = self.stripes[s].lock().expect("streaming stripe poisoned");
+            let take = acc.len();
+            for (a, &q) in acc.iter_mut().zip(&terms[lo..lo + take]) {
+                *a += q as i128;
+            }
+        }
+        self.total_weight.fetch_add(weight, Ordering::AcqRel);
+        Ok(())
+    }
+
     /// The weighted mean delta `Δ̄ = Σ w_i·delta_i / Σ w_i`.
     ///
     /// Call after all pushes have completed (e.g. after the worker-pool
@@ -197,6 +230,49 @@ pub fn delta_checksum(delta: &[f32]) -> u64 {
     let mut h = rng::splitmix64_mix(0xF4A3_0D15_ED0C_0DE5 ^ delta.len() as u64);
     for &d in delta {
         let q = ((d as f64).clamp(-FX_TERM_LIMIT, FX_TERM_LIMIT) * FX_SCALE) as i128;
+        h = rng::splitmix64_mix(h ^ q as u64);
+        h = rng::splitmix64_mix(h ^ (q >> 64) as u64);
+    }
+    h
+}
+
+/// Quantise one weighted delta to the streaming reduce's fixed-point
+/// grid: `terms[j] = ((w·delta[j]).clamp(±2⁶⁰) · 2⁴⁰) as integer` —
+/// exactly the per-term formula of the `fixed_accumulate` kernels, so
+/// [`StreamingAccumulator::push_quantized`] of the result is
+/// bit-identical to [`StreamingAccumulator::push`] of the raw delta.
+///
+/// This is the multi-process wire encoding: workers quantise locally
+/// and ship these i64 terms; the leader never sees the f32 delta.
+/// Non-finite coordinates fail fast (mirroring `push`), and a weighted
+/// term too large for i64 (|w·d| ≥ 2⁶³/2⁴⁰ = 2²³) is an error rather
+/// than a silent wrap — real deltas are orders of magnitude below it.
+pub fn quantize_weighted(delta: &[f32], weight: u64) -> Result<Vec<i64>> {
+    if let Some(pos) = delta.iter().position(|d| !d.is_finite()) {
+        bail!("quantize rejected: delta[{pos}] is {}", delta[pos]);
+    }
+    let w = weight as f64;
+    let mut terms = Vec::with_capacity(delta.len());
+    for (j, &d) in delta.iter().enumerate() {
+        let term = (w * d as f64).clamp(-FX_TERM_LIMIT, FX_TERM_LIMIT);
+        let q = (term * FX_SCALE) as i128;
+        let Ok(q64) = i64::try_from(q) else {
+            bail!("quantize rejected: term[{j}] = {q} overflows the i64 wire format");
+        };
+        terms.push(q64);
+    }
+    Ok(terms)
+}
+
+/// Integrity checksum over already-quantised wire terms, using the same
+/// SplitMix64 chain as [`delta_checksum`]. For a weight-1 delta whose
+/// terms fit the grid, `quantized_checksum(&quantize_weighted(d, 1)?)`
+/// equals `delta_checksum(d)` — the wire digest and the in-memory
+/// digest are one function.
+pub fn quantized_checksum(terms: &[i64]) -> u64 {
+    let mut h = rng::splitmix64_mix(0xF4A3_0D15_ED0C_0DE5 ^ terms.len() as u64);
+    for &t in terms {
+        let q = t as i128;
         h = rng::splitmix64_mix(h ^ q as u64);
         h = rng::splitmix64_mix(h ^ (q >> 64) as u64);
     }
@@ -331,6 +407,63 @@ mod tests {
         assert_ne!(h, delta_checksum(&swapped));
         // Empty frames hash deterministically too.
         assert_eq!(delta_checksum(&[]), delta_checksum(&[]));
+    }
+
+    /// The wire contract: quantise-then-push-terms must finalize
+    /// bit-identically to pushing the raw f32 delta, across shapes that
+    /// straddle stripes and under shuffled arrival orders mixing local
+    /// and wire-side pushes.
+    #[test]
+    fn push_quantized_is_bit_identical_to_push() {
+        let mut rng = Rng::new(0x91f3);
+        for (k, p) in [(1usize, 64usize), (4, 1000), (7, STRIPE_COORDS + 13)] {
+            let ups = updates(&mut rng, k, p);
+            let local = stream_mean(&ups, &(0..k).collect::<Vec<_>>(), p);
+            let mut order: Vec<usize> = (0..k).collect();
+            for trial in 0..3 {
+                rng.shuffle(&mut order);
+                let acc = StreamingAccumulator::new(p);
+                for (pos, &i) in order.iter().enumerate() {
+                    let w = ups[i].num_samples as u64;
+                    // Alternate wire-side and local pushes: the mix must
+                    // still land on the same bits.
+                    if (pos + trial) % 2 == 0 {
+                        let terms = quantize_weighted(&ups[i].delta, w).unwrap();
+                        acc.push_quantized(&terms, w).unwrap();
+                    } else {
+                        acc.push(&ups[i].delta, w).unwrap();
+                    }
+                }
+                let wire = acc.finalize().unwrap();
+                assert!(local == wire, "k={k} p={p} order {order:?}: wire != local");
+            }
+        }
+    }
+
+    /// At weight 1 every term fits the i64 wire format and the wire
+    /// digest collapses to the in-memory delta digest.
+    #[test]
+    fn quantized_checksum_matches_delta_checksum_at_unit_weight() {
+        let mut rng = Rng::new(0x77aa);
+        let delta: Vec<f32> = (0..300).map(|_| rng.next_gaussian() * 0.01).collect();
+        let terms = quantize_weighted(&delta, 1).unwrap();
+        assert_eq!(quantized_checksum(&terms), delta_checksum(&delta));
+        // And any single-term perturbation changes it.
+        let mut bad = terms.clone();
+        bad[123] ^= 1;
+        assert_ne!(quantized_checksum(&bad), quantized_checksum(&terms));
+        assert_ne!(quantized_checksum(&terms[..299]), quantized_checksum(&terms));
+    }
+
+    #[test]
+    fn quantize_rejects_non_finite_and_overflow() {
+        assert!(quantize_weighted(&[0.0, f32::NAN], 1).is_err());
+        assert!(quantize_weighted(&[f32::INFINITY], 1).is_err());
+        // |w·d| = 2^40 · 2^40 = 2^80 after scaling: overflows i64.
+        assert!(quantize_weighted(&[1.0e12], 1 << 40).is_err());
+        // Length mismatch on the accumulator side still errors.
+        let acc = StreamingAccumulator::new(4);
+        assert!(acc.push_quantized(&[0; 3], 1).is_err());
     }
 
     #[test]

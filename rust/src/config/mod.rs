@@ -95,6 +95,114 @@ impl std::fmt::Display for Mode {
     }
 }
 
+/// Where the round's cohort executes (config `transport.topology`,
+/// CLI `--topology`, builder `Experiment::builder().topology(...)`).
+///
+/// Everything but [`Topology::Single`] runs the distributed executor
+/// ([`crate::transport`]): the leader drives the round loop and
+/// streams framed, fixed-point-quantised deltas back from workers.
+/// The reduce is order-invariant integer math, so every topology
+/// produces a final model byte-identical to `single` at the same seed.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Everything in one process (the in-process worker pool); default.
+    #[default]
+    Single,
+    /// N worker *threads* in this process, each speaking the full wire
+    /// protocol over an in-memory channel transport — the codec and
+    /// leader/worker roles without process-spawning cost.
+    InProc { workers: usize },
+    /// N spawned worker *processes* on this host, connected over Unix
+    /// domain sockets.
+    MultiProcess { workers: usize },
+    /// Listen on `addr` (e.g. `127.0.0.1:7070`) and wait for N workers
+    /// to connect over TCP (`ferrisfl worker --connect tcp:<addr>`,
+    /// possibly from other machines).
+    Tcp { addr: String, workers: usize },
+}
+
+impl Topology {
+    /// Stable family tag: `single | inproc | multiprocess | tcp`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Single => "single",
+            Topology::InProc { .. } => "inproc",
+            Topology::MultiProcess { .. } => "multiprocess",
+            Topology::Tcp { .. } => "tcp",
+        }
+    }
+
+    /// True for the in-process (non-distributed) topology.
+    pub fn is_single(&self) -> bool {
+        matches!(self, Topology::Single)
+    }
+
+    /// Transport worker endpoints (0 for `single`).
+    pub fn num_workers(&self) -> usize {
+        match self {
+            Topology::Single => 0,
+            Topology::InProc { workers }
+            | Topology::MultiProcess { workers }
+            | Topology::Tcp { workers, .. } => *workers,
+        }
+    }
+
+    /// Range checks (workers ≥ 1, well-formed address).
+    pub fn validate(&self) -> Result<()> {
+        if !self.is_single() && self.num_workers() == 0 {
+            bail!("topology {self} needs at least 1 worker");
+        }
+        if let Topology::Tcp { addr, .. } = self {
+            if addr.is_empty() || !addr.contains(':') {
+                bail!("tcp topology needs host:port, got {addr:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for Topology {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let t = s.trim().to_ascii_lowercase();
+        let parse_n = |rest: &str, what: &str| -> Result<usize> {
+            let n: usize = rest
+                .parse()
+                .map_err(|_| crate::err!("bad worker count {rest:?} in {what} topology"))?;
+            Ok(n)
+        };
+        if t == "single" {
+            return Ok(Topology::Single);
+        }
+        if let Some(rest) = t.strip_prefix("inproc:") {
+            return Ok(Topology::InProc { workers: parse_n(rest, "inproc")? });
+        }
+        if let Some(rest) = t.strip_prefix("multiprocess:") {
+            return Ok(Topology::MultiProcess { workers: parse_n(rest, "multiprocess")? });
+        }
+        if let Some(rest) = s.trim().strip_prefix("tcp:") {
+            let (addr, workers) = match rest.rsplit_once('/') {
+                Some((addr, n)) => (addr, parse_n(n, "tcp")?),
+                None => (rest, 1),
+            };
+            return Ok(Topology::Tcp { addr: addr.to_string(), workers });
+        }
+        bail!("unknown topology {s:?} (single | inproc:N | multiprocess:N | tcp:<addr>[/N])")
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Topology::Single => f.write_str("single"),
+            Topology::InProc { workers } => write!(f, "inproc:{workers}"),
+            Topology::MultiProcess { workers } => write!(f, "multiprocess:{workers}"),
+            Topology::Tcp { addr, workers } => write!(f, "tcp:{addr}/{workers}"),
+        }
+    }
+}
+
 /// All hyperparameters of one FL experiment — the paper's `FLParams`.
 #[derive(Clone, Debug)]
 pub struct FlParams {
@@ -184,6 +292,14 @@ pub struct FlParams {
     /// Resample a replacement client from the available pool when one
     /// fails permanently (`faults.resample`).
     pub resample: bool,
+    /// Execution topology (`transport.topology`): single process
+    /// (default) or the distributed leader/worker executor.
+    pub topology: Topology,
+    /// Straggler timeout in wall seconds for distributed rounds
+    /// (`transport.timeout_secs`): how long the leader waits for a
+    /// worker's delta before counting a failure against the
+    /// `faults.retry` budget.
+    pub transport_timeout_secs: f64,
 }
 
 impl Default for FlParams {
@@ -223,6 +339,8 @@ impl Default for FlParams {
             backoff: Backoff::default(),
             quorum: 0.0,
             resample: false,
+            topology: Topology::Single,
+            transport_timeout_secs: 30.0,
         }
     }
 }
@@ -281,6 +399,11 @@ impl FlParams {
             backoff: doc.get_str("faults.backoff", &d.backoff.to_string())?.parse()?,
             quorum: doc.get_float("faults.quorum", d.quorum)?,
             resample: doc.get_bool("faults.resample", d.resample)?,
+            topology: doc
+                .get_str("transport.topology", &d.topology.to_string())?
+                .parse()?,
+            transport_timeout_secs: doc
+                .get_float("transport.timeout_secs", d.transport_timeout_secs)?,
         };
         p.validate()?;
         Ok(p)
@@ -326,7 +449,100 @@ impl FlParams {
         }
         self.faults.validate()?;
         self.recovery_policy().validate()?;
+        self.topology.validate()?;
+        if !self.topology.is_single() {
+            // Distributed rounds replicate the *degenerate* engine path
+            // bit-for-bit; knobs that change simulation semantics (sim
+            // latency, deadlines, buffering, injected faults beyond
+            // dropout, replacement resampling, quorum skips) have no
+            // wire equivalent yet, so reject them loudly rather than
+            // diverge silently. `retry`/`backoff` stay legal: in
+            // distributed mode they are the wire-level resend budget.
+            if self.backend != BackendKind::Native {
+                bail!("topology {} requires the native backend", self.topology);
+            }
+            if self.fuse {
+                bail!("fuse = true is incompatible with topology {}", self.topology);
+            }
+            if self.latency != LatencyModel::None
+                || self.deadline_secs > 0.0
+                || self.agg_goal > 0
+                || self.clock != ClockKind::Virtual
+            {
+                bail!(
+                    "topology {} supports only the lockstep engine policy \
+                     (no latency model, deadline, agg_goal, or wall clock)",
+                    self.topology
+                );
+            }
+            if !self.fault_plan().is_vanilla() || self.resample || self.quorum > 0.0 {
+                bail!(
+                    "topology {} supports dropout but not injected faults, \
+                     resampling, or quorum",
+                    self.topology
+                );
+            }
+            let t = self.transport_timeout_secs;
+            if !t.is_finite() || t <= 0.0 {
+                bail!("transport.timeout_secs must be finite and > 0, got {t}");
+            }
+        }
         Ok(())
+    }
+
+    /// Serialize the fields a remote worker needs into TOML text — the
+    /// payload of the wire `Init` frame. The worker parses it with
+    /// [`FlParams::from_toml`] and rebuilds dataset, shards, and
+    /// runtime deterministically from the seed; leader-only concerns
+    /// (topology, logging, eval cadence, pool size) are pinned to
+    /// worker-appropriate values rather than forwarded.
+    pub fn to_wire_toml(&self) -> String {
+        // TOML floats must contain a dot or exponent; Rust's shortest
+        // round-trip `Display` for finite floats always prints a dot
+        // for integral values except via `{}` on e.g. 1.0 -> "1", so
+        // append ".0" when needed.
+        fn float(v: f64) -> String {
+            let s = v.to_string();
+            if s.contains('.') || s.contains('e') || s.contains("inf") || s.contains("NaN") {
+                s
+            } else {
+                format!("{s}.0")
+            }
+        }
+        // The first-party TOML parser has no escape sequences: a string
+        // ends at the first `"`. Registry names never contain quotes;
+        // a quoted experiment name degrades to `'` rather than
+        // producing an unparseable frame.
+        fn quote(s: &str) -> String {
+            format!("\"{}\"", s.replace('"', "'").replace('\n', " "))
+        }
+        let mut out = String::new();
+        out.push_str(&format!("name = {}\n", quote(&self.experiment_name)));
+        out.push_str("[fl]\n");
+        out.push_str(&format!("model = {}\n", quote(&self.model)));
+        out.push_str(&format!("dataset = {}\n", quote(&self.dataset)));
+        out.push_str(&format!("num_agents = {}\n", self.num_agents));
+        out.push_str(&format!("sampling_ratio = {}\n", float(self.sampling_ratio)));
+        out.push_str(&format!("global_epochs = {}\n", self.global_epochs));
+        out.push_str(&format!("local_epochs = {}\n", self.local_epochs));
+        out.push_str(&format!("split = {}\n", quote(&self.split.to_string())));
+        out.push_str(&format!("sampler = {}\n", quote(&self.sampler)));
+        out.push_str(&format!("aggregator = {}\n", quote(&self.aggregator)));
+        out.push_str(&format!("seed = {}\n", self.seed as i64));
+        out.push_str(&format!("dropout = {}\n", float(self.dropout)));
+        out.push_str(&format!("defense = {}\n", quote(&self.defense)));
+        out.push_str(&format!("compression = {}\n", quote(&self.compression)));
+        out.push_str("[train]\n");
+        out.push_str(&format!("optimizer = {}\n", quote(self.optimizer.name())));
+        out.push_str(&format!("mode = {}\n", quote(self.mode.name())));
+        out.push_str(&format!("use_pretrained = {}\n", self.use_pretrained));
+        out.push_str(&format!("lr = {}\n", float(self.lr as f64)));
+        out.push_str("[run]\n");
+        out.push_str("workers = 1\n");
+        out.push_str("eval_every = 0\n");
+        out.push_str(&format!("max_local_steps = {}\n", self.max_local_steps));
+        out.push_str("backend = \"native\"\n");
+        out
     }
 
     /// The engine scheduling policy this config asks for (with the
@@ -475,9 +691,130 @@ mod tests {
             "name = \"x\"\n[engine]\nlatency = \"warp:9\"\n",
             "name = \"x\"\n[faults]\nplan = \"warp:0.1\"\n",
             "name = \"x\"\n[faults]\nbackoff = \"1,0.5\"\n",
+            "name = \"x\"\n[transport]\ntopology = \"mesh:3\"\n",
+            "name = \"x\"\n[transport]\ntopology = \"multiprocess:zero\"\n",
         ] {
             assert!(FlParams::from_toml(toml).is_err(), "{toml}");
         }
+    }
+
+    #[test]
+    fn topology_parses_displays_and_validates() {
+        assert_eq!("single".parse::<Topology>().unwrap(), Topology::Single);
+        assert_eq!(
+            " InProc:3 ".parse::<Topology>().unwrap(),
+            Topology::InProc { workers: 3 }
+        );
+        assert_eq!(
+            "multiprocess:2".parse::<Topology>().unwrap(),
+            Topology::MultiProcess { workers: 2 }
+        );
+        assert_eq!(
+            "tcp:127.0.0.1:7070".parse::<Topology>().unwrap(),
+            Topology::Tcp { addr: "127.0.0.1:7070".into(), workers: 1 }
+        );
+        assert_eq!(
+            "tcp:127.0.0.1:7070/4".parse::<Topology>().unwrap(),
+            Topology::Tcp { addr: "127.0.0.1:7070".into(), workers: 4 }
+        );
+        assert!("ring:4".parse::<Topology>().is_err());
+        assert!("multiprocess:".parse::<Topology>().is_err());
+        // Display round-trips through FromStr.
+        for t in [
+            Topology::Single,
+            Topology::InProc { workers: 2 },
+            Topology::MultiProcess { workers: 8 },
+            Topology::Tcp { addr: "10.0.0.2:9000".into(), workers: 3 },
+        ] {
+            assert_eq!(t.to_string().parse::<Topology>().unwrap(), t);
+        }
+        // validate(): zero workers and bad addresses are rejected.
+        assert!(Topology::MultiProcess { workers: 0 }.validate().is_err());
+        assert!(Topology::Tcp { addr: "nohost".into(), workers: 1 }.validate().is_err());
+        assert!(Topology::Single.validate().is_ok());
+        assert_eq!(Topology::InProc { workers: 5 }.num_workers(), 5);
+        assert!(Topology::Single.is_single());
+    }
+
+    #[test]
+    fn transport_section_parses_and_gates_engine_knobs() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "dist"
+            [transport]
+            topology = "multiprocess:2"
+            timeout_secs = 5.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.topology, Topology::MultiProcess { workers: 2 });
+        assert_eq!(p.transport_timeout_secs, 5.0);
+        assert_eq!(FlParams::default().topology, Topology::Single);
+
+        // Wire retries are legal — they are the resend budget…
+        let mut p = p;
+        p.retry = 2;
+        p.validate().unwrap();
+        // …but sim-semantics knobs have no distributed equivalent.
+        let base = p.clone();
+        let mut q = base.clone();
+        q.latency = "lognormal:0.5,0.8".parse().unwrap();
+        assert!(q.validate().is_err());
+        let mut q = base.clone();
+        q.agg_goal = 4;
+        assert!(q.validate().is_err());
+        let mut q = base.clone();
+        q.fuse = true;
+        assert!(q.validate().is_err());
+        let mut q = base.clone();
+        q.faults = "crash:0.2".parse().unwrap();
+        assert!(q.validate().is_err());
+        let mut q = base.clone();
+        q.quorum = 0.5;
+        assert!(q.validate().is_err());
+        let mut q = base.clone();
+        q.transport_timeout_secs = 0.0;
+        assert!(q.validate().is_err());
+        // Dropout alone stays legal (the degenerate fault plan).
+        let mut q = base.clone();
+        q.dropout = 0.25;
+        q.validate().unwrap();
+        // All of those are fine under `single`.
+        let mut q = base;
+        q.topology = Topology::Single;
+        q.agg_goal = 4;
+        q.validate().unwrap();
+    }
+
+    #[test]
+    fn wire_toml_round_trips_the_training_config() {
+        let mut p = FlParams::default();
+        p.experiment_name = "wire-exp".into();
+        p.num_agents = 37;
+        p.sampling_ratio = 0.25;
+        p.split = Scheme::NonIid { niid_factor: 2 };
+        p.seed = 0xDEAD_BEEF;
+        p.lr = 0.05;
+        p.local_epochs = 3;
+        p.dropout = 0.125;
+        p.workers = 6;
+        p.eval_every = 2;
+        p.topology = Topology::InProc { workers: 2 };
+        let q = FlParams::from_toml(&p.to_wire_toml()).unwrap();
+        // Everything that shapes local training + sharding survives…
+        assert_eq!(q.experiment_name, p.experiment_name);
+        assert_eq!(q.num_agents, p.num_agents);
+        assert_eq!(q.sampling_ratio, p.sampling_ratio);
+        assert_eq!(q.split, p.split);
+        assert_eq!(q.seed, p.seed);
+        assert_eq!(q.lr, p.lr);
+        assert_eq!(q.local_epochs, p.local_epochs);
+        assert_eq!(q.dropout, p.dropout);
+        // …while leader-only knobs are pinned for the worker.
+        assert_eq!(q.topology, Topology::Single);
+        assert_eq!(q.workers, 1);
+        assert_eq!(q.eval_every, 0);
+        assert!(q.log_dir.is_empty());
     }
 
     #[test]

@@ -195,6 +195,7 @@ impl Event {
             agent_id: self.agent_id(),
             staleness,
             reason: self.reason(),
+            worker: None,
         }
     }
 }

@@ -29,13 +29,14 @@
 
 use std::sync::Arc;
 
-use crate::config::{FlParams, Mode, Optimizer};
+use crate::config::{FlParams, Mode, Optimizer, Topology};
 use crate::engine::{Backoff, ClockKind, FaultPlan, LatencyModel};
 use crate::federation::Scheme;
 use crate::loggers::Logger;
 use crate::metrics::RoundRecord;
 use crate::runtime::{BackendKind, EvalStats, Manifest};
 use crate::util::error::Result;
+use crate::util::Parallelism;
 
 use super::{Entrypoint, RunResult};
 
@@ -192,6 +193,32 @@ impl ExperimentBuilder {
     /// Worker threads simulating parallel client devices (0 = auto).
     pub fn workers(mut self, n: usize) -> Self {
         self.params.workers = n;
+        self
+    }
+
+    /// Typed alias for [`Self::workers`]: `Parallelism::Auto` defers to
+    /// `FERRISFL_THREADS`, then hardware detection, per the crate's one
+    /// precedence rule (explicit config > env > auto).
+    pub fn parallelism(mut self, p: Parallelism) -> Self {
+        self.params.workers = match p {
+            Parallelism::Auto => 0,
+            Parallelism::Fixed(n) => n,
+        };
+        self
+    }
+
+    /// Execution topology: `single` (default, in-process engine),
+    /// `inproc:N` / `multiprocess:N` (leader + N workers over framed
+    /// transports), or `tcp:<addr>` (externally started workers).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.params.topology = topology;
+        self
+    }
+
+    /// Straggler/reconnect timeout for distributed topologies, in wall
+    /// seconds.
+    pub fn transport_timeout_secs(mut self, secs: f64) -> Self {
+        self.params.transport_timeout_secs = secs;
         self
     }
 
@@ -392,6 +419,25 @@ mod tests {
         let pol = b.params.round_policy();
         assert!(pol.buffered());
         assert_eq!(pol.goal, Some(3));
+    }
+
+    #[test]
+    fn builder_sets_topology_and_parallelism() {
+        let b = Experiment::builder()
+            .topology("inproc:3".parse().unwrap())
+            .parallelism(Parallelism::Fixed(2))
+            .transport_timeout_secs(5.0);
+        assert_eq!(b.params.topology, Topology::InProc { workers: 3 });
+        assert_eq!(b.params.workers, 2);
+        assert_eq!(b.params.transport_timeout_secs, 5.0);
+        let b = b.parallelism(Parallelism::Auto);
+        assert_eq!(b.params.workers, 0);
+        // Distributed topologies reject engine-only knobs at build().
+        let err = Experiment::builder()
+            .topology("multiprocess:2".parse().unwrap())
+            .deadline_secs(2.0)
+            .build();
+        assert!(err.is_err(), "deadlines are single-process engine scheduling");
     }
 
     #[test]

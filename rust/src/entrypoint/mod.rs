@@ -56,7 +56,7 @@ use crate::profiler::SimpleProfiler;
 use crate::runtime::{EvalStats, Manifest};
 use crate::samplers::{self, Sampler};
 use crate::util::error::Result;
-use crate::util::{Rng, WorkerPool};
+use crate::util::{Parallelism, Rng, WorkerPool};
 
 use worker::{LocalJob, RuntimeKey};
 
@@ -153,13 +153,10 @@ impl Entrypoint {
         let aggregator = aggregators::from_name(&params.aggregator)?;
         let defense = defense::from_name(&params.defense)?;
         let compressor = compression::from_name(&params.compression, params.seed)?;
-        let workers = if params.workers == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get().min(8))
-                .unwrap_or(4)
-        } else {
-            params.workers
-        };
+        // One precedence rule for every pool: explicit config beats
+        // `FERRISFL_THREADS` beats hardware detection.
+        let workers = Parallelism::from_workers(params.workers)
+            .resolve(Parallelism::detect().min(8));
 
         Ok(Self {
             params,
@@ -198,14 +195,22 @@ impl Entrypoint {
 
     /// Run the full experiment, emitting records into `logger`.
     ///
-    /// Routes through the event-driven round engine (see
-    /// [`crate::engine`]): the scheduling policy comes from
-    /// `FlParams::round_policy`, and with the default config (zero
-    /// latency, no deadline, no goal-count) the engine's degenerate
-    /// policy reproduces [`Self::run_lockstep`] bit-identically — the
-    /// parity is pinned by `tests/engine_e2e.rs`.
+    /// With the default `single` topology this routes through the
+    /// event-driven round engine (see [`crate::engine`]): the
+    /// scheduling policy comes from `FlParams::round_policy`, and with
+    /// the default config (zero latency, no deadline, no goal-count)
+    /// the engine's degenerate policy reproduces
+    /// [`Self::run_lockstep`] bit-identically — the parity is pinned
+    /// by `tests/engine_e2e.rs`. Distributed topologies route through
+    /// [`crate::transport`]'s leader, whose wire protocol carries the
+    /// streaming reduce's own fixed-point terms and therefore lands on
+    /// the same bits again (pinned by `tests/distributed_e2e.rs`).
     pub fn run(&mut self, logger: &mut dyn Logger) -> Result<RunResult> {
-        crate::engine::driver::run_engine(self, logger)
+        if self.params.topology.is_single() {
+            crate::engine::driver::run_engine(self, logger)
+        } else {
+            crate::transport::run_distributed(self, logger)
+        }
     }
 
     /// The original synchronous round loop, retained as the golden

@@ -54,6 +54,15 @@
 //! layer on top of the same queue and replay bit-identically from
 //! `(seed, plan)` at any worker count.
 //!
+//! ## Distributed execution
+//!
+//! Set `topology = "multiprocess:N"` (or `inproc:N` / `tcp:<addr>`) and
+//! the same experiment runs as a leader plus `N` workers over framed
+//! transports ([`transport`]): the wire carries the streaming reduce's
+//! own fixed-point terms, so the final model is bit-identical to the
+//! single-process run at the same seed, under any arrival order —
+//! including frames rejected by the digest and recovered by resends.
+//!
 //! Quickstart: `cargo run --release --example quickstart`, or
 //! `cargo run --release -- run --config configs/quickstart.toml`.
 //! In code, start from [`Experiment::builder`](prelude::Experiment::builder)
@@ -76,13 +85,14 @@ pub mod profiler;
 pub mod repro;
 pub mod runtime;
 pub mod samplers;
+pub mod transport;
 pub mod util;
 pub mod zoo;
 
 /// One-stop imports for building and running experiments:
 /// `use ferrisfl::prelude::*;`.
 pub mod prelude {
-    pub use crate::config::{FlParams, Mode, Optimizer};
+    pub use crate::config::{FlParams, Mode, Optimizer, Topology};
     pub use crate::engine::{
         Availability, Backoff, Clock, ClockKind, Event, EventQueue, FailureReason, FaultPlan,
         LatencyModel, RecoveryPolicy, RoundPolicy, SimTime, VirtualClock, WallClock,
@@ -97,4 +107,5 @@ pub mod prelude {
     };
     pub use crate::runtime::{BackendKind, EvalStats, Manifest};
     pub use crate::util::error::{Error, Result};
+    pub use crate::util::Parallelism;
 }

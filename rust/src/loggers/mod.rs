@@ -116,7 +116,11 @@ impl Logger for ConsoleLogger {
                 _ => String::new(),
             };
             let why = r.reason.map_or(String::new(), |w| format!(" [{w}]"));
-            println!("  [t={:>9.3}s] {}{}{}{} round {}", r.time, r.kind, agent, stale, why, r.round);
+            let via = r.worker.map_or(String::new(), |w| format!(" via w{w}"));
+            println!(
+                "  [t={:>9.3}s] {}{}{}{}{} round {}",
+                r.time, r.kind, agent, stale, why, via, r.round
+            );
         }
         Ok(())
     }
@@ -158,7 +162,7 @@ impl CsvLogger {
             agents,
             "round,agent_id,final_loss,final_acc,num_samples,secs"
         )?;
-        writeln!(events, "time,kind,round,agent_id,staleness,reason")?;
+        writeln!(events, "time,kind,round,agent_id,staleness,reason,worker")?;
         Ok(Self { rounds, agents, events })
     }
 }
@@ -205,7 +209,12 @@ impl Logger for CsvLogger {
         let agent = r.agent_id.map_or(String::new(), |a| a.to_string());
         let stale = r.staleness.map_or(String::new(), |s| s.to_string());
         let why = r.reason.unwrap_or("");
-        writeln!(self.events, "{},{},{},{},{},{}", r.time, r.kind, r.round, agent, stale, why)?;
+        let via = r.worker.map_or(String::new(), |w| w.to_string());
+        writeln!(
+            self.events,
+            "{},{},{},{},{},{},{}",
+            r.time, r.kind, r.round, agent, stale, why, via
+        )?;
         Ok(())
     }
 
@@ -304,6 +313,9 @@ impl Logger for JsonlLogger {
         if let Some(w) = r.reason {
             pairs.push(("reason", Json::str(w)));
         }
+        if let Some(w) = r.worker {
+            pairs.push(("worker", Json::num(w as f64)));
+        }
         writeln!(self.out, "{}", Json::obj(pairs).to_string())?;
         Ok(())
     }
@@ -386,6 +398,7 @@ mod tests {
             agent_id: Some(4),
             staleness: Some(1),
             reason: None,
+            worker: None,
         }
     }
 
@@ -445,6 +458,25 @@ mod tests {
         let events = std::fs::read_to_string(dir.join("t_events.csv")).unwrap();
         assert!(events.starts_with("time,kind,round,agent_id,staleness,reason"));
         assert!(events.contains("1.5,client_failed,3,4,,crash"), "{events}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn worker_attribution_appends_to_the_event_channel() {
+        // Distributed runs tag events with the producing worker's index;
+        // the column appends after `reason`, single-process rows leave
+        // it empty.
+        let dir = std::env::temp_dir().join(format!("ferrisfl-csvw-{}", std::process::id()));
+        let mut l = CsvLogger::create(&dir, "t").unwrap();
+        l.log_event(&sample_event()).unwrap();
+        let mut e = sample_event();
+        e.worker = Some(1);
+        l.log_event(&e).unwrap();
+        l.finish().unwrap();
+        let events = std::fs::read_to_string(dir.join("t_events.csv")).unwrap();
+        assert!(events.starts_with("time,kind,round,agent_id,staleness,reason,worker"));
+        assert!(events.contains("1.5,delta_arrived,3,4,1,,\n"), "{events}");
+        assert!(events.contains("1.5,delta_arrived,3,4,1,,1"), "{events}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

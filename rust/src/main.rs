@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! ferrisfl run --config configs/quickstart.toml [--backend native|pjrt]
+//! ferrisfl worker --connect uds:<path>|tcp:<addr>
 //! ferrisfl list [datasets|models|artifacts]
 //! ferrisfl repro <table1|table2|table3|table4|fig6|...|all> [--quick]
 //! ferrisfl info
@@ -22,8 +23,10 @@ ferrisfl — FerrisFL: bootstrap federated-learning experiments (TorchFL repro)
 
 USAGE:
   ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>] [--fuse]
+               [--topology single|inproc:N|multiprocess:N|tcp:<addr>] [--save-model <path>]
                [--latency <model>] [--deadline <secs>] [--goal <k>] [--staleness-alpha <a>] [--clock virtual|wall]
                [--fault-plan <plan>] [--retry <n>] [--backoff <b[,f[,j]]>] [--quorum <frac>] [--resample]
+  ferrisfl worker --connect uds:<path>|tcp:<host:port>
   ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
   ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
   ferrisfl info [--backend native|pjrt] [--artifacts <dir>]
@@ -40,6 +43,15 @@ ROUND ENGINE (all optional; defaults reproduce the lockstep loop):
   --goal <k>              finalize once k updates arrived (FedBuff)
   --staleness-alpha <a>   staleness discount exponent (default 0.5)
   --clock virtual|wall    simulated (deterministic) or measured time
+
+DISTRIBUTED (the wire carries the streaming reduce's fixed-point terms,
+so every topology lands on bits identical to single-process):
+  --topology <t>          single (default) | inproc:N worker threads |
+                          multiprocess:N spawned processes over Unix
+                          sockets | tcp:<addr> externally started
+                          workers (`ferrisfl worker --connect ...`)
+  --save-model <path>     write the final global model as little-endian
+                          f32 bytes (handy for byte-compare checks)
 
 FAULTS & RECOVERY (seeded chaos; replays bit-identically):
   --fault-plan <plan>     none | TERM[;TERM...] with dropout:P crash:P
@@ -158,6 +170,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flags.contains("resample") {
         params.resample = true;
     }
+    if let Some(t) = args.opt("topology") {
+        params.topology = t.parse()?;
+    }
     params.validate()?;
     let backend = backend_of(args, params.backend.name())?;
     params.backend = backend;
@@ -202,7 +217,28 @@ fn cmd_run(args: &Args) -> Result<()> {
         res.final_eval.count as u64,
     );
     println!("\n{}", res.profiler.report());
+    if let Some(path) = args.opt("save-model") {
+        save_model(path, ep.global_params())?;
+        println!("saved final global model to {path}");
+    }
     Ok(())
+}
+
+/// Write the global model as raw little-endian f32 bytes — a stable
+/// format that `cmp` can byte-compare across topologies.
+fn save_model(path: &str, params: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing model to {path:?}"))
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .opt("connect")
+        .context("worker requires --connect uds:<path>|tcp:<host:port>")?;
+    ferrisfl::transport::worker_main(addr)
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
@@ -270,6 +306,7 @@ fn main() -> Result<()> {
     }
     match args.positional[0].as_str() {
         "run" => cmd_run(&args),
+        "worker" => cmd_worker(&args),
         "list" => cmd_list(&args),
         "repro" => cmd_repro(&args),
         "info" => cmd_info(&args),

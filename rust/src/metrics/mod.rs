@@ -112,10 +112,14 @@ pub struct EventRecord {
     /// For `client_failed`: why the attempt failed (`dropout`, `crash`,
     /// `delta_lost`, `offline`, `corrupt`).
     pub reason: Option<&'static str>,
+    /// Which worker process/thread produced the event — `Some(i)` only
+    /// in distributed topologies, where `i` indexes the leader's worker
+    /// table; `None` for single-process runs and leader-side events.
+    pub worker: Option<usize>,
 }
 
 /// One agent's local-training metrics for one round (one Fig 9 point).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AgentRecord {
     pub round: usize,
     pub agent_id: usize,

@@ -813,9 +813,8 @@ impl ModelExecutor for NativeExecutor {
         // K×P cohort is never copied for the fan-out (the old path
         // cloned global + deltas + weights into Arcs to satisfy the
         // worker pool's 'static jobs).
-        let jobs_n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
+        let jobs_n = crate::util::Parallelism::Auto
+            .resolve(crate::util::Parallelism::detect())
             .clamp(2, 8)
             .min(p);
         let chunk = p.div_ceil(jobs_n);

@@ -1,0 +1,566 @@
+//! Length-prefixed wire frames for the multi-process executor.
+//!
+//! A frame is `magic u32 | kind u8 | payload_len u32 | payload |
+//! digest u64`, all little-endian. The payload of a `Delta` frame
+//! carries the streaming reduce's 2⁻⁴⁰ fixed-point quantised i64 terms
+//! (see [`crate::aggregators::quantize_weighted`]) — the wire format
+//! *is* the in-memory contract, so a leader that folds wire terms via
+//! `push_quantized` lands on bits identical to a single-process run.
+//!
+//! Two failure tiers, matching [`super::Received`]:
+//!
+//! - **Corrupt frame** — the envelope (magic + length) parsed, so the
+//!   stream is still in sync, but the trailing digest or the payload
+//!   decode failed. The receiver reports it and asks for a resend; the
+//!   retry budget is [`crate::config::FlParams::retry`].
+//! - **Broken stream** — bad magic, EOF mid-frame, or an insane length:
+//!   framing is lost and the connection is declared dead.
+//!
+//! The digest is the same SplitMix64 chain as
+//! [`crate::aggregators::delta_checksum`] (over the raw frame bytes
+//! here; `Delta` payloads additionally carry the semantic
+//! `quantized_checksum` of their terms, verified before the
+//! accumulator push).
+
+use crate::metrics::AgentRecord;
+use crate::util::error::{bail, Result};
+use crate::util::rng;
+
+/// Wire protocol version, exchanged in `Hello`.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Frame magic: `b"FFL1"` little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FFL1");
+
+/// `magic u32 + kind u8 + payload_len u32`.
+pub const HEADER_LEN: usize = 9;
+
+/// Trailing SplitMix64 digest.
+pub const DIGEST_LEN: usize = 8;
+
+/// Sanity cap on payload length (256 MiB ≈ a 32M-parameter delta);
+/// anything larger means framing is lost.
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+/// Everything that crosses the wire between leader and workers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Worker → leader, once after connect: protocol handshake.
+    Hello { version: u32 },
+    /// Leader → worker, once: the full experiment config as TOML text
+    /// ([`crate::config::FlParams::to_wire_toml`]). The worker rebuilds
+    /// the *entire* deterministic state — dataset, shards, runtime —
+    /// from this plus its own binary, so only config crosses the wire.
+    Init { config: String },
+    /// Leader → worker, per round: train these agents against `global`.
+    /// `agents` carries `(agent_id, stream_weight)` pairs — the weight
+    /// depends on the whole cohort (uniform fallback when every shard
+    /// is empty), which only the leader can see.
+    Assign {
+        round: u64,
+        agents: Vec<(u32, u64)>,
+        global: Vec<f32>,
+    },
+    /// Worker → leader: one agent's quantised weighted delta plus its
+    /// training record. `digest` is `quantized_checksum(&terms)`,
+    /// verified leader-side before the accumulator push.
+    Delta {
+        round: u64,
+        agent_id: u32,
+        weight: u64,
+        digest: u64,
+        terms: Vec<i64>,
+        record: AgentRecord,
+    },
+    /// Leader → worker: the delta for `(round, agent_id)` arrived
+    /// corrupt — send it again (workers cache the round's encoded
+    /// deltas, so a resend is a lookup, not a retrain).
+    Resend { round: u64, agent_id: u32 },
+    /// Leader → worker: run complete, exit cleanly.
+    Shutdown,
+    /// Worker → leader: fatal worker-side failure, with the error text.
+    WorkerError { message: String },
+}
+
+impl Message {
+    fn kind(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::Init { .. } => 2,
+            Message::Assign { .. } => 3,
+            Message::Delta { .. } => 4,
+            Message::Resend { .. } => 5,
+            Message::Shutdown => 6,
+            Message::WorkerError { .. } => 7,
+        }
+    }
+
+    /// Human-readable kind tag for logs and errors.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "hello",
+            Message::Init { .. } => "init",
+            Message::Assign { .. } => "assign",
+            Message::Delta { .. } => "delta",
+            Message::Resend { .. } => "resend",
+            Message::Shutdown => "shutdown",
+            Message::WorkerError { .. } => "worker_error",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload encode/decode — hand-rolled little-endian, zero dependencies.
+
+struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn i64s(&mut self, v: &[i64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            bail!(
+                "frame payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len().saturating_sub(self.pos)
+            );
+        };
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| crate::err!("frame string is not UTF-8: {e}"))?
+            .to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i64s(&mut self) -> Result<Vec<i64>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).unwrap_or(usize::MAX))?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).unwrap_or(usize::MAX))?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "frame payload has {} trailing bytes after decode",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+fn encode_payload(msg: &Message) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    match msg {
+        Message::Hello { version } => w.u32(*version),
+        Message::Init { config } => w.str(config),
+        Message::Assign {
+            round,
+            agents,
+            global,
+        } => {
+            w.u64(*round);
+            w.u32(agents.len() as u32);
+            for &(aid, weight) in agents {
+                w.u32(aid);
+                w.u64(weight);
+            }
+            w.f32s(global);
+        }
+        Message::Delta {
+            round,
+            agent_id,
+            weight,
+            digest,
+            terms,
+            record,
+        } => {
+            w.u64(*round);
+            w.u32(*agent_id);
+            w.u64(*weight);
+            w.u64(*digest);
+            w.i64s(terms);
+            w.f64s(&record.epoch_losses);
+            w.f64s(&record.epoch_accs);
+            w.u64(record.num_samples as u64);
+            w.f64(record.secs);
+        }
+        Message::Resend { round, agent_id } => {
+            w.u64(*round);
+            w.u32(*agent_id);
+        }
+        Message::Shutdown => {}
+        Message::WorkerError { message } => w.str(message),
+    }
+    w.buf
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
+    let mut r = PayloadReader::new(payload);
+    let msg = match kind {
+        1 => Message::Hello { version: r.u32()? },
+        2 => Message::Init { config: r.str()? },
+        3 => {
+            let round = r.u64()?;
+            let n = r.u32()? as usize;
+            let mut agents = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                agents.push((r.u32()?, r.u64()?));
+            }
+            let global = r.f32s()?;
+            Message::Assign {
+                round,
+                agents,
+                global,
+            }
+        }
+        4 => {
+            let round = r.u64()?;
+            let agent_id = r.u32()?;
+            let weight = r.u64()?;
+            let digest = r.u64()?;
+            let terms = r.i64s()?;
+            let epoch_losses = r.f64s()?;
+            let epoch_accs = r.f64s()?;
+            let num_samples = r.u64()? as usize;
+            let secs = r.f64()?;
+            Message::Delta {
+                round,
+                agent_id,
+                weight,
+                digest,
+                terms,
+                record: AgentRecord {
+                    round: round as usize,
+                    agent_id: agent_id as usize,
+                    epoch_losses,
+                    epoch_accs,
+                    num_samples,
+                    secs,
+                },
+            }
+        }
+        5 => Message::Resend {
+            round: r.u64()?,
+            agent_id: r.u32()?,
+        },
+        6 => Message::Shutdown,
+        7 => Message::WorkerError { message: r.str()? },
+        k => bail!("unknown frame kind {k}"),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+// ---------------------------------------------------------------------
+// Frame envelope.
+
+/// Frame digest: SplitMix64 chain over kind, payload length, and the
+/// payload in 8-byte little-endian chunks (zero-padded tail). Pure
+/// integer math — bit-identical on every platform.
+pub fn frame_digest(kind: u8, payload: &[u8]) -> u64 {
+    let seed = 0xFEED_F4A3_E001_0000u64 ^ ((kind as u64) << 56) ^ payload.len() as u64;
+    let mut h = rng::splitmix64_mix(seed);
+    for chunk in payload.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h = rng::splitmix64_mix(h ^ u64::from_le_bytes(word));
+    }
+    h
+}
+
+/// Encode a message into one complete wire frame.
+pub fn encode_frame(msg: &Message) -> Result<Vec<u8>> {
+    let payload = encode_payload(msg);
+    if payload.len() > MAX_PAYLOAD {
+        bail!(
+            "{} frame payload of {} bytes exceeds the {} byte cap",
+            msg.kind_name(),
+            payload.len(),
+            MAX_PAYLOAD
+        );
+    }
+    let kind = msg.kind();
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + DIGEST_LEN);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&frame_digest(kind, &payload).to_le_bytes());
+    Ok(out)
+}
+
+/// Decode one complete frame from a byte buffer (the in-proc transport
+/// and the codec tests; socket transports stream the same layout).
+///
+/// The outer `Err` means framing itself is broken (bad magic, insane
+/// or mismatched length); the inner `Err` means the envelope parsed
+/// but the content is corrupt (digest mismatch, payload decode
+/// failure) — a stream receiver can stay in sync and request a resend.
+pub fn decode_frame(bytes: &[u8]) -> Result<Result<Message>> {
+    if bytes.len() < HEADER_LEN + DIGEST_LEN {
+        bail!(
+            "frame of {} bytes is shorter than the {}-byte envelope",
+            bytes.len(),
+            HEADER_LEN + DIGEST_LEN
+        );
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad frame magic {magic:#010x} (expected {MAGIC:#010x})");
+    }
+    let kind = bytes[4];
+    let len = u32::from_le_bytes(bytes[5..9].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds the {MAX_PAYLOAD} byte cap");
+    }
+    if bytes.len() != HEADER_LEN + len + DIGEST_LEN {
+        bail!(
+            "frame length mismatch: header says {} payload bytes, buffer holds {}",
+            len,
+            bytes.len() - HEADER_LEN - DIGEST_LEN
+        );
+    }
+    let payload = &bytes[HEADER_LEN..HEADER_LEN + len];
+    let digest = u64::from_le_bytes(bytes[HEADER_LEN + len..].try_into().unwrap());
+    let want = frame_digest(kind, payload);
+    if digest != want {
+        return Ok(Err(crate::err!(
+            "frame digest mismatch: got {digest:#018x}, computed {want:#018x}"
+        )));
+    }
+    Ok(decode_payload(kind, payload))
+}
+
+/// Flip one bit inside the *payload* region of an encoded frame,
+/// leaving the envelope (magic + length) intact — the deterministic
+/// corruption the chaos knob [`crate::util::env::wire_chaos`] injects.
+/// A stream receiver stays in sync, fails the digest, and routes the
+/// sender through the resend path. No-op on empty payloads.
+pub fn corrupt_payload(frame: &mut [u8]) {
+    let len = frame.len().saturating_sub(HEADER_LEN + DIGEST_LEN);
+    if len == 0 {
+        return;
+    }
+    frame[HEADER_LEN + len / 2] ^= 0x10;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn zoo(rng: &mut Rng) -> Vec<Message> {
+        let record = AgentRecord {
+            round: 3,
+            agent_id: 17,
+            epoch_losses: vec![1.25, 0.5],
+            epoch_accs: vec![0.25, 0.875],
+            num_samples: 60,
+            secs: 0.125,
+        };
+        vec![
+            Message::Hello {
+                version: WIRE_VERSION,
+            },
+            Message::Init {
+                config: "name = \"wire\"\n[fl]\nseed = 42\n".into(),
+            },
+            Message::Assign {
+                round: 0,
+                agents: vec![],
+                global: vec![],
+            },
+            Message::Assign {
+                round: 9,
+                agents: vec![(3, 60), (81, 1), (4, 7)],
+                global: (0..517).map(|_| rng.next_gaussian() * 0.1).collect(),
+            },
+            Message::Delta {
+                round: 3,
+                agent_id: 17,
+                weight: 60,
+                digest: 0xDEAD_BEEF_0123_4567,
+                terms: (0..1031).map(|_| rng.next_u64() as i64 >> 20).collect(),
+                record,
+            },
+            Message::Resend {
+                round: 3,
+                agent_id: 17,
+            },
+            Message::Shutdown,
+            Message::WorkerError {
+                message: "shard went missing".into(),
+            },
+        ]
+    }
+
+    /// Round-trip property over the message zoo: decode(encode(m)) == m
+    /// for every variant, including empty vectors and odd lengths.
+    #[test]
+    fn round_trip_over_message_zoo() {
+        let mut rng = Rng::new(0xf1a9);
+        for msg in zoo(&mut rng) {
+            let bytes = encode_frame(&msg).unwrap();
+            let back = decode_frame(&bytes).unwrap().unwrap();
+            assert_eq!(back, msg, "{} frame", msg.kind_name());
+        }
+    }
+
+    /// Truncated frames at every boundary are *framing* errors (outer
+    /// Err), never silent misdecodes.
+    #[test]
+    fn truncated_frames_are_framing_errors() {
+        let mut rng = Rng::new(0x07c1);
+        let bytes = encode_frame(&zoo(&mut rng)[4]).unwrap();
+        for cut in [0, 4, HEADER_LEN - 1, HEADER_LEN, bytes.len() - 1] {
+            assert!(
+                decode_frame(&bytes[..cut]).is_err(),
+                "cut at {cut} must be a framing error"
+            );
+        }
+    }
+
+    /// A bit-flip in the payload leaves the envelope parseable but
+    /// fails the digest: inner Err — the resend path, not a dead
+    /// stream.
+    #[test]
+    fn bit_flipped_payloads_fail_the_digest_but_keep_framing() {
+        let mut rng = Rng::new(0xb17f);
+        for msg in zoo(&mut rng) {
+            let clean = encode_frame(&msg).unwrap();
+            let mut bad = clean.clone();
+            corrupt_payload(&mut bad);
+            if bad == clean {
+                continue; // empty payload: nothing to corrupt
+            }
+            let inner = decode_frame(&bad).unwrap();
+            assert!(inner.is_err(), "{}: corrupt payload must fail", msg.kind_name());
+        }
+    }
+
+    /// Wrong length field or wrong magic: framing is lost, fatal.
+    #[test]
+    fn wrong_length_and_bad_magic_are_fatal() {
+        let mut rng = Rng::new(0x0bad);
+        let bytes = encode_frame(&zoo(&mut rng)[3]).unwrap();
+        let mut wrong_len = bytes.clone();
+        wrong_len[5] ^= 0x01; // length field
+        assert!(decode_frame(&wrong_len).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(decode_frame(&bad_magic).is_err());
+        let mut huge = bytes;
+        huge[5..9].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_frame(&huge).is_err());
+    }
+
+    #[test]
+    fn digest_is_a_pure_function_of_kind_and_payload() {
+        assert_eq!(frame_digest(4, b"abc"), frame_digest(4, b"abc"));
+        assert_ne!(frame_digest(4, b"abc"), frame_digest(5, b"abc"));
+        assert_ne!(frame_digest(4, b"abc"), frame_digest(4, b"abd"));
+        assert_ne!(frame_digest(4, b""), frame_digest(4, b"\0"));
+    }
+}

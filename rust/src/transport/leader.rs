@@ -1,0 +1,657 @@
+//! Leader half of the multi-process federation protocol.
+//!
+//! `run_distributed` drives the same observable round loop as the
+//! engine's degenerate policy — identical sampler/dropout RNG draws,
+//! identical stream weights, identical cohort-order metric folds, and
+//! the same exact integer reduce — but local training happens in
+//! spawned workers that push framed, quantised deltas back over a
+//! [`Transport`]. Because the wire carries the streaming accumulator's
+//! own weighted fixed-point terms, the final model is bit-identical to
+//! a single-process run at the same seed, under any arrival order.
+//!
+//! Failure handling reuses the recovery config: a frame rejected by the
+//! digest (or a straggling worker hitting `transport.timeout_secs`)
+//! counts a failure, sleeps `faults.backoff` (no jitter — wall-clock
+//! retries, not simulated ones), and sends `Resend`; `faults.retry`
+//! bounds attempts per worker per round, after which the run fails
+//! rather than silently diverge from the single-process result.
+
+use std::collections::VecDeque;
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::aggregators::{quantized_checksum, StreamKind, StreamingAccumulator};
+use crate::config::Topology;
+use crate::engine::Backoff;
+use crate::entrypoint::{CommStats, Entrypoint, RunResult};
+use crate::incentives::ContributionTracker;
+use crate::loggers::Logger;
+use crate::metrics::{
+    Accumulator, AgentRecord, EventRecord, RecoveryStats, RoundOutcome, RoundRecord, SkipReason,
+};
+use crate::profiler::SimpleProfiler;
+use crate::transport::frame::Message;
+use crate::transport::{
+    accept_tcp, accept_uds, inproc_pair, Received, SocketTransport, Transport, POLL_SLICE,
+    WIRE_VERSION,
+};
+use crate::util::env;
+use crate::util::error::{bail, Context, Result};
+
+/// Distinguishes socket paths when one process runs several
+/// distributed experiments (tests, benches).
+static SOCKET_SALT: AtomicU64 = AtomicU64::new(0);
+
+/// One spawned worker to reap at shutdown.
+enum WorkerHandle {
+    /// `inproc:N` — a thread running [`super::worker::serve`].
+    Thread(JoinHandle<Result<()>>),
+    /// `multiprocess:N` — a spawned `ferrisfl worker` child.
+    Process(Child),
+    /// `tcp:<addr>` — somebody else's process; nothing to reap.
+    External,
+}
+
+/// The connected worker fleet. Dropping it kills any child processes
+/// still alive (the error path); the happy path reaps via
+/// [`Fleet::shutdown`] first, which leaves nothing for `Drop`.
+struct Fleet {
+    transports: Vec<Box<dyn Transport>>,
+    handles: Vec<WorkerHandle>,
+    socket_path: Option<PathBuf>,
+}
+
+impl Fleet {
+    /// Send `Shutdown` everywhere, then join/reap every worker,
+    /// surfacing worker-side errors.
+    fn shutdown(&mut self) -> Result<()> {
+        for t in self.transports.iter_mut() {
+            t.send(&Message::Shutdown)?;
+        }
+        // Drop the leader-side channel ends so in-process workers that
+        // miss the frame still observe a disconnect.
+        self.transports.clear();
+        for h in std::mem::take(&mut self.handles) {
+            match h {
+                WorkerHandle::Thread(j) => match j.join() {
+                    Ok(res) => res.context("in-process worker failed")?,
+                    Err(_) => bail!("in-process worker thread panicked"),
+                },
+                WorkerHandle::Process(mut c) => {
+                    let status = c.wait().context("waiting for a worker process")?;
+                    if !status.success() {
+                        bail!("a worker process exited with {status}");
+                    }
+                }
+                WorkerHandle::External => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for h in &mut self.handles {
+            if let WorkerHandle::Process(c) = h {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+        if let Some(p) = &self.socket_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Run a distributed experiment: spawn/await the fleet, handshake,
+/// drive the rounds, and shut the fleet down.
+pub(crate) fn run_distributed(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result<RunResult> {
+    let Some(stream_kind) = ep.stream_kind() else {
+        bail!(
+            "distributed topologies stream every delta, but aggregator {:?} (or an active \
+             defense/compressor) needs the materialized cohort; run with topology = \"single\"",
+            ep.params.aggregator
+        );
+    };
+    let timeout = Duration::from_secs_f64(ep.params.transport_timeout_secs);
+    let config = ep.params.to_wire_toml();
+    let mut fleet = spawn_fleet(ep)?;
+    handshake(&mut fleet, &config, timeout)?;
+    let result = drive_rounds(ep, logger, &mut fleet, stream_kind, timeout)?;
+    fleet.shutdown()?;
+    Ok(result)
+}
+
+/// Bring up the worker fleet for the configured topology.
+fn spawn_fleet(ep: &Entrypoint) -> Result<Fleet> {
+    let timeout = Duration::from_secs_f64(ep.params.transport_timeout_secs);
+    match &ep.params.topology {
+        Topology::Single => bail!("run_distributed called with the single topology"),
+        Topology::InProc { workers } => {
+            let mut transports = Vec::new();
+            let mut handles = Vec::new();
+            for w in 0..*workers {
+                let (leader_side, worker_side) = inproc_pair(&format!("worker-{w}"), "leader");
+                let handle = std::thread::Builder::new()
+                    .name(format!("ffl-worker-{w}"))
+                    .spawn(move || super::worker::serve(Box::new(worker_side)))
+                    .context("spawning an in-process worker thread")?;
+                transports.push(Box::new(leader_side) as Box<dyn Transport>);
+                handles.push(WorkerHandle::Thread(handle));
+            }
+            Ok(Fleet { transports, handles, socket_path: None })
+        }
+        Topology::MultiProcess { workers } => {
+            let salt = SOCKET_SALT.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir().join(format!(
+                "ferrisfl-{}-{}-{salt}.sock",
+                std::process::id(),
+                ep.params.seed
+            ));
+            let _ = std::fs::remove_file(&path);
+            let listener = UnixListener::bind(&path)
+                .with_context(|| format!("binding leader socket {path:?}"))?;
+            let bin = worker_binary()?;
+            let addr = format!("uds:{}", path.display());
+            let mut handles = Vec::new();
+            for w in 0..*workers {
+                let child = Command::new(&bin)
+                    .args(["worker", "--connect", &addr])
+                    .spawn()
+                    .with_context(|| format!("spawning worker process {w} from {bin:?}"))?;
+                handles.push(WorkerHandle::Process(child));
+            }
+            let deadline = Instant::now() + timeout;
+            let mut transports = Vec::new();
+            for w in 0..*workers {
+                let stream = accept_uds(&listener, deadline, &format!("worker-{w}"))?;
+                transports.push(
+                    Box::new(SocketTransport::new(format!("worker-{w}"), stream))
+                        as Box<dyn Transport>,
+                );
+            }
+            Ok(Fleet { transports, handles, socket_path: Some(path) })
+        }
+        Topology::Tcp { addr, workers } => {
+            let listener = TcpListener::bind(addr.as_str())
+                .with_context(|| format!("binding leader address {addr:?}"))?;
+            eprintln!(
+                "ferrisfl: listening on tcp:{addr}; start {workers} worker(s) with \
+                 `ferrisfl worker --connect tcp:{addr}`"
+            );
+            let deadline = Instant::now() + timeout;
+            let mut transports = Vec::new();
+            for w in 0..*workers {
+                let stream = accept_tcp(&listener, deadline, &format!("worker-{w}"))?;
+                transports.push(
+                    Box::new(SocketTransport::new(format!("worker-{w}"), stream))
+                        as Box<dyn Transport>,
+                );
+            }
+            let handles = (0..*workers).map(|_| WorkerHandle::External).collect();
+            Ok(Fleet { transports, handles, socket_path: None })
+        }
+    }
+}
+
+/// The binary to spawn `multiprocess` workers from:
+/// `FERRISFL_WORKER_BIN` (tests point it at the freshly built binary),
+/// else this very executable.
+fn worker_binary() -> Result<PathBuf> {
+    match env::worker_bin() {
+        Some(bin) => Ok(PathBuf::from(bin)),
+        None => std::env::current_exe().context("resolving the worker binary"),
+    }
+}
+
+/// Expect `Hello` from every worker, answer with the wired config.
+fn handshake(fleet: &mut Fleet, config: &str, timeout: Duration) -> Result<()> {
+    for (w, t) in fleet.transports.iter_mut().enumerate() {
+        let deadline = Instant::now() + timeout;
+        match recv_until(&mut **t, deadline)? {
+            Some(Received::Msg(Message::Hello { version }, _)) => {
+                if version != WIRE_VERSION {
+                    bail!(
+                        "worker {w} speaks wire version {version}, leader speaks {WIRE_VERSION}"
+                    );
+                }
+            }
+            Some(Received::Msg(Message::WorkerError { message }, _)) => {
+                bail!("worker {w} failed during handshake: {message}")
+            }
+            Some(Received::Msg(other, _)) => {
+                bail!("expected Hello from worker {w}, got {}", other.kind_name())
+            }
+            Some(Received::Corrupt(why)) => bail!("corrupt Hello from worker {w}: {why}"),
+            None => bail!("worker {w} never said Hello"),
+        }
+        t.send(&Message::Init { config: config.to_string() })?;
+    }
+    Ok(())
+}
+
+/// Wait until `deadline` for one frame; `None` means the peer stayed
+/// silent the whole time.
+fn recv_until(t: &mut dyn Transport, deadline: Instant) -> Result<Option<Received>> {
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Ok(None);
+        }
+        if let Some(r) = t.recv_timeout(left.min(POLL_SLICE))? {
+            return Ok(Some(r));
+        }
+    }
+}
+
+/// Round-robin the cohort over `n` workers: cohort index `i` goes to
+/// worker `i % n`, carrying its agent id and stream weight.
+fn partition_cohort(sampled: &[usize], weights: &[u64], n: usize) -> Vec<Vec<(u32, u64)>> {
+    let mut assign: Vec<Vec<(u32, u64)>> = vec![Vec::new(); n];
+    for (i, &aid) in sampled.iter().enumerate() {
+        assign[i % n].push((aid as u32, weights[i]));
+    }
+    assign
+}
+
+/// Count a rejected/lost delta against the wire retry budget and ask
+/// worker `w` to resend `agent_id`; bail when the budget is spent.
+#[allow(clippy::too_many_arguments)]
+fn reject_and_resend(
+    t: &mut dyn Transport,
+    logger: &mut dyn Logger,
+    stats: &mut RecoveryStats,
+    attempts: &mut u32,
+    budget: u32,
+    backoff: &Backoff,
+    round: usize,
+    agent_id: u32,
+    w: usize,
+    why: &str,
+    now: f64,
+) -> Result<()> {
+    stats.failures += 1;
+    stats.corrupt_rejected += 1;
+    logger.log_event(&EventRecord {
+        time: now,
+        kind: "delta_rejected",
+        round,
+        agent_id: Some(agent_id as usize),
+        staleness: None,
+        reason: Some("corrupt"),
+        worker: Some(w),
+    })?;
+    if *attempts >= budget {
+        bail!("worker {w} exhausted {budget} wire retries in round {round}: {why}");
+    }
+    // Wall-clock backoff with zero jitter: wire retries are real
+    // sleeps, not simulated delays, and must not consume RNG draws.
+    let delay = backoff.delay_secs(*attempts, 0.0);
+    *attempts += 1;
+    if delay > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(delay));
+    }
+    stats.retries += 1;
+    logger.log_event(&EventRecord {
+        time: now,
+        kind: "retry_due",
+        round,
+        agent_id: Some(agent_id as usize),
+        staleness: None,
+        reason: None,
+        worker: Some(w),
+    })?;
+    t.send(&Message::Resend { round: round as u64, agent_id })?;
+    Ok(())
+}
+
+/// The distributed round loop. Observable order matches the engine's
+/// degenerate path step for step; only where the training happens
+/// differs.
+fn drive_rounds(
+    ep: &mut Entrypoint,
+    logger: &mut dyn Logger,
+    fleet: &mut Fleet,
+    stream_kind: StreamKind,
+    timeout: Duration,
+) -> Result<RunResult> {
+    let n = fleet.transports.len();
+    let t_run = Instant::now();
+    let mut profiler = SimpleProfiler::new();
+    let mut rounds = Vec::new();
+    let mut agent_records = Vec::new();
+    let mut comm = CommStats::default();
+    let mut dropped_log = Vec::new();
+    let mut rejected_log = Vec::new();
+    let k = ep.params.sampled_per_round();
+    let fault_plan = ep.params.fault_plan();
+    let budget = ep.params.retry;
+    let backoff = ep.params.backoff.clone();
+
+    for round in 0..ep.params.global_epochs {
+        let t_round = Instant::now();
+
+        // 1. sample A^t and apply dropout — the exact RNG draws of the
+        // single-process paths, so cohorts match round for round.
+        let mut sampled =
+            profiler.time("sampling", || ep.sampler.sample(&ep.agents, k, &mut ep.rng));
+        let mut dropped = Vec::new();
+        fault_plan.apply_dropout(&mut ep.rng, &mut sampled, &mut dropped);
+        if sampled.is_empty() {
+            dropped_log.push(dropped.clone());
+            rejected_log.push(Vec::new());
+            let rec = RoundRecord {
+                round,
+                train_loss: f64::NAN,
+                train_acc: f64::NAN,
+                eval_loss: f64::NAN,
+                eval_acc: f64::NAN,
+                sampled,
+                dropped,
+                rejected: Vec::new(),
+                secs: t_round.elapsed().as_secs_f64(),
+                sim_secs: 0.0,
+                outcome: RoundOutcome::Skipped(SkipReason::EmptyCohort),
+                recovery: RecoveryStats::default(),
+            };
+            logger.log_round(&rec)?;
+            rounds.push(rec);
+            continue;
+        }
+
+        // 2. the streaming accumulator (reused across rounds) and the
+        // per-agent stream weights, exactly as the engine computes them.
+        let p = ep.global.len();
+        let acc = if ep.stream_acc.as_ref().is_some_and(|a| a.len() == p) {
+            let a = ep.stream_acc.as_ref().unwrap();
+            a.reset();
+            Arc::clone(a)
+        } else {
+            let a = Arc::new(StreamingAccumulator::new(p));
+            ep.stream_acc = Some(Arc::clone(&a));
+            a
+        };
+        let stream_weights: Vec<u64> = match stream_kind {
+            StreamKind::SampleWeighted => {
+                let ws: Vec<u64> =
+                    sampled.iter().map(|&aid| ep.agents[aid].shard.len() as u64).collect();
+                if ws.iter().sum::<u64>() == 0 {
+                    vec![1; ws.len()]
+                } else {
+                    ws
+                }
+            }
+            _ => vec![1; sampled.len()],
+        };
+
+        // 3. assign shards of the cohort round-robin and collect the
+        // framed deltas in whatever order they arrive — the integer
+        // reduce makes arrival order irrelevant.
+        let t_local = Instant::now();
+        let assign = partition_cohort(&sampled, &stream_weights, n);
+        for (w, t) in fleet.transports.iter_mut().enumerate() {
+            t.send(&Message::Assign {
+                round: round as u64,
+                agents: assign[w].clone(),
+                global: ep.global.clone(),
+            })
+            .with_context(|| format!("assigning round {round} to worker {w}"))?;
+        }
+
+        let mut pending: Vec<VecDeque<(u32, u64)>> =
+            assign.iter().map(|a| a.iter().copied().collect()).collect();
+        let mut got: Vec<Option<AgentRecord>> = vec![None; sampled.len()];
+        let mut attempts = vec![0u32; n];
+        let mut stats = RecoveryStats::default();
+        let mut outstanding = sampled.len();
+        let mut deadline = Instant::now() + timeout;
+        while outstanding > 0 {
+            let mut progressed = false;
+            for w in 0..n {
+                if pending[w].is_empty() {
+                    continue;
+                }
+                let now = t_run.elapsed().as_secs_f64();
+                match fleet.transports[w].recv_timeout(POLL_SLICE)? {
+                    None => {}
+                    Some(Received::Msg(
+                        Message::Delta { round: dr, agent_id, weight, digest, terms, record },
+                        frame_len,
+                    )) => {
+                        if dr != round as u64 {
+                            bail!("worker {w} answered round {dr} during round {round}");
+                        }
+                        let Some(pos) =
+                            pending[w].iter().position(|&(aid, _)| aid == agent_id)
+                        else {
+                            let ci = sampled.iter().position(|&a| a == agent_id as usize);
+                            if ci.is_some_and(|ci| got[ci].is_some()) {
+                                // A slow original racing a timeout-
+                                // triggered resend: drop the duplicate
+                                // (the reduce already folded it once).
+                                continue;
+                            }
+                            bail!(
+                                "worker {w} sent a delta for agent {agent_id}, which it \
+                                 does not own in round {round}"
+                            );
+                        };
+                        let expected_w = pending[w][pos].1;
+                        // Defense in depth behind the frame digest: the
+                        // terms must also hash to the delta checksum
+                        // and carry the assigned weight and length.
+                        if weight != expected_w
+                            || terms.len() != p
+                            || quantized_checksum(&terms) != digest
+                        {
+                            reject_and_resend(
+                                &mut *fleet.transports[w],
+                                logger,
+                                &mut stats,
+                                &mut attempts[w],
+                                budget,
+                                &backoff,
+                                round,
+                                agent_id,
+                                w,
+                                "delta content failed verification",
+                                now,
+                            )?;
+                            progressed = true;
+                            continue;
+                        }
+                        acc.push_quantized(&terms, weight)?;
+                        comm.dense_bytes += (terms.len() * 4) as u64;
+                        comm.wire_bytes += frame_len as u64;
+                        logger.log_event(&EventRecord {
+                            time: now,
+                            kind: "client_finished",
+                            round,
+                            agent_id: Some(agent_id as usize),
+                            staleness: None,
+                            reason: None,
+                            worker: Some(w),
+                        })?;
+                        logger.log_event(&EventRecord {
+                            time: now,
+                            kind: "delta_arrived",
+                            round,
+                            agent_id: Some(agent_id as usize),
+                            staleness: Some(0),
+                            reason: None,
+                            worker: Some(w),
+                        })?;
+                        let _ = pending[w].remove(pos);
+                        let ci = sampled
+                            .iter()
+                            .position(|&a| a == agent_id as usize)
+                            .expect("delta for an unsampled agent");
+                        got[ci] = Some(record);
+                        outstanding -= 1;
+                        progressed = true;
+                    }
+                    Some(Received::Msg(Message::WorkerError { message }, _)) => {
+                        bail!("worker {w} failed: {message}")
+                    }
+                    Some(Received::Msg(other, _)) => {
+                        bail!("unexpected {} from worker {w}", other.kind_name())
+                    }
+                    Some(Received::Corrupt(why)) => {
+                        // Streams deliver in order and workers send
+                        // their assignment in order, so the corrupt
+                        // frame is the first outstanding delta.
+                        let (agent_id, _) = *pending[w].front().expect("checked non-empty");
+                        reject_and_resend(
+                            &mut *fleet.transports[w],
+                            logger,
+                            &mut stats,
+                            &mut attempts[w],
+                            budget,
+                            &backoff,
+                            round,
+                            agent_id,
+                            w,
+                            &why,
+                            now,
+                        )?;
+                        progressed = true;
+                    }
+                }
+            }
+            if progressed {
+                deadline = Instant::now() + timeout;
+            } else if Instant::now() >= deadline {
+                // Stragglers: spend a retry per lagging worker on its
+                // first outstanding delta, or give up loudly.
+                for w in 0..n {
+                    let Some(&(agent_id, _)) = pending[w].front() else { continue };
+                    let now = t_run.elapsed().as_secs_f64();
+                    stats.failures += 1;
+                    if attempts[w] >= budget {
+                        bail!(
+                            "timed out waiting for worker {w} (agent {agent_id}) in \
+                             round {round} after {budget} retries"
+                        );
+                    }
+                    attempts[w] += 1;
+                    stats.retries += 1;
+                    logger.log_event(&EventRecord {
+                        time: now,
+                        kind: "retry_due",
+                        round,
+                        agent_id: Some(agent_id as usize),
+                        staleness: None,
+                        reason: Some("offline"),
+                        worker: Some(w),
+                    })?;
+                    fleet.transports[w]
+                        .send(&Message::Resend { round: round as u64, agent_id })?;
+                }
+                deadline = Instant::now() + timeout;
+            }
+        }
+        profiler.record("local_training", t_local.elapsed().as_secs_f64());
+
+        // 4. fold local metrics in cohort order — the engine's drain
+        // order — so the f64 accumulations are bit-identical too.
+        let mut train_loss = Accumulator::default();
+        let mut train_acc = Accumulator::default();
+        for (i, &aid) in sampled.iter().enumerate() {
+            let record = got[i].take().expect("collected every delta");
+            train_loss.add(record.final_loss());
+            train_acc.add(record.final_acc());
+            ep.agents[aid].record_round(record.final_loss(), ep.params.local_epochs);
+            logger.log_agent(&record)?;
+            agent_records.push(record);
+        }
+        rejected_log.push(Vec::new());
+        dropped_log.push(dropped.clone());
+
+        // 5. aggregate: one finalize pass over the integer reduce, the
+        // same state fold as single-process streaming rounds.
+        // (Contribution scores need materialized f32 deltas, which
+        // never exist leader-side on the wire path; they stay empty.)
+        let t_agg = Instant::now();
+        let mean = acc.finalize()?;
+        let new_global = ep.aggregator.apply_streamed(&ep.global, &mean)?;
+        ep.global = new_global;
+        profiler.record("aggregation", t_agg.elapsed().as_secs_f64());
+
+        // 6. evaluate on the leader's own pool at the configured cadence.
+        let do_eval = ep.params.eval_every > 0 && (round + 1) % ep.params.eval_every == 0;
+        let eval = if do_eval {
+            logger.log_event(&EventRecord {
+                time: t_run.elapsed().as_secs_f64(),
+                kind: "eval_due",
+                round,
+                agent_id: None,
+                staleness: None,
+                reason: None,
+                worker: None,
+            })?;
+            let t_eval = Instant::now();
+            let es = ep.evaluate()?;
+            profiler.record("evaluation", t_eval.elapsed().as_secs_f64());
+            Some(es)
+        } else {
+            None
+        };
+
+        let rec = RoundRecord {
+            round,
+            train_loss: train_loss.mean(),
+            train_acc: train_acc.mean(),
+            eval_loss: eval.map_or(f64::NAN, |e| e.mean_loss()),
+            eval_acc: eval.map_or(f64::NAN, |e| e.accuracy()),
+            sampled,
+            dropped,
+            rejected: Vec::new(),
+            secs: t_round.elapsed().as_secs_f64(),
+            sim_secs: 0.0,
+            outcome: RoundOutcome::Aggregated,
+            recovery: stats,
+        };
+        logger.log_round(&rec)?;
+        rounds.push(rec);
+    }
+
+    let final_eval = ep.evaluate()?;
+    profiler.stop();
+    logger.finish()?;
+    Ok(RunResult {
+        rounds,
+        agent_records,
+        final_eval,
+        profiler,
+        comm,
+        contributions: ContributionTracker::new(),
+        dropped: dropped_log,
+        defense_rejected: rejected_log,
+        sim_secs: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cohort_partition_is_round_robin_with_weights() {
+        let sampled = vec![9, 4, 7, 2, 5];
+        let weights = vec![10, 20, 30, 40, 50];
+        let assign = partition_cohort(&sampled, &weights, 2);
+        assert_eq!(assign[0], vec![(9, 10), (7, 30), (5, 50)]);
+        assert_eq!(assign[1], vec![(4, 20), (2, 40)]);
+        // One worker gets the whole cohort in order.
+        let all = partition_cohort(&sampled, &weights, 1);
+        assert_eq!(all[0].len(), 5);
+        assert_eq!(all[0][0], (9, 10));
+    }
+}

@@ -1,0 +1,378 @@
+//! Multi-process federation: framed transports + leader/worker halves.
+//!
+//! The engine's streaming reduce already forced every delta through one
+//! integer representation — 2^-40 fixed-point i64 terms folded into an
+//! order-invariant lock-striped accumulator. This module puts exactly
+//! that representation on the wire: workers quantize locally with
+//! [`crate::aggregators::quantize_weighted`] and the leader folds the
+//! received terms with `push_quantized`, so the wire format *is* the
+//! in-memory contract and a multi-process round lands on bits identical
+//! to the single-process engine under any arrival order.
+//!
+//! Three transports implement the same length-prefixed frame protocol
+//! (see [`frame`]):
+//!
+//! | topology         | carrier                              |
+//! |------------------|--------------------------------------|
+//! | `inproc:N`       | in-process channels (worker threads) |
+//! | `multiprocess:N` | Unix-domain sockets (spawned procs)  |
+//! | `tcp:<addr>`     | TCP (externally started workers)     |
+//!
+//! Failure semantics are split in two at [`Transport::recv_timeout`]:
+//! a frame whose *envelope* is broken (bad magic, insane length, EOF
+//! mid-frame) is unrecoverable and surfaces as `Err`; a frame whose
+//! envelope is intact but whose *content* fails the digest surfaces as
+//! [`Received::Corrupt`], which the leader routes through the existing
+//! `RecoveryPolicy` retry/backoff machinery as a `Resend`.
+
+pub mod frame;
+mod leader;
+mod worker;
+
+pub use frame::{Message, WIRE_VERSION};
+pub(crate) use leader::run_distributed;
+pub use worker::worker_main;
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{bail, Context, Result};
+
+/// Polling granularity for "wait on several peers at once" loops.
+pub(crate) const POLL_SLICE: Duration = Duration::from_millis(25);
+
+/// One successfully framed receive.
+#[derive(Debug)]
+pub enum Received {
+    /// A decoded message plus its on-the-wire frame size in bytes
+    /// (header + payload + digest), for communication accounting.
+    Msg(Message, usize),
+    /// The envelope was intact but the content failed the frame digest
+    /// or payload decode — ask the sender to resend.
+    Corrupt(String),
+}
+
+/// A reliable, ordered, framed byte channel to one peer.
+///
+/// Implementations deliver whole frames (as produced by
+/// [`frame::encode_frame`]) in order. `recv_timeout` distinguishes
+/// *idle* (`Ok(None)`: no frame started within the timeout) from
+/// *broken* (`Err`: the peer hung up or committed to a frame and then
+/// stalled or sent garbage framing) from *corrupt content*
+/// (`Ok(Some(Received::Corrupt))`).
+pub trait Transport: Send {
+    /// Human-readable peer name for error messages and logs.
+    fn peer(&self) -> &str;
+
+    /// Send one already-encoded frame.
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()>;
+
+    /// Receive one frame, waiting at most `timeout` for it to start.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Received>>;
+
+    /// Encode and send one message.
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let bytes = frame::encode_frame(msg)?;
+        self.send_raw(&bytes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-process channel transport
+// ---------------------------------------------------------------------
+
+/// Channel-backed transport: one side of an [`inproc_pair`]. Frames are
+/// moved as owned byte vectors over `mpsc`, so the protocol (and its
+/// digest check) is exercised end to end without any OS sockets.
+pub struct InProc {
+    peer: String,
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+/// Build a connected (leader-side, worker-side) transport pair.
+pub fn inproc_pair(leader_peer: &str, worker_peer: &str) -> (InProc, InProc) {
+    let (to_worker, from_leader) = mpsc::channel();
+    let (to_leader, from_worker) = mpsc::channel();
+    let leader = InProc { peer: leader_peer.to_string(), tx: to_worker, rx: from_worker };
+    let worker = InProc { peer: worker_peer.to_string(), tx: to_leader, rx: from_leader };
+    (leader, worker)
+}
+
+impl Transport for InProc {
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        if self.tx.send(bytes.to_vec()).is_err() {
+            bail!("in-process peer {} hung up", self.peer);
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Received>> {
+        let bytes = match self.rx.recv_timeout(timeout) {
+            Ok(b) => b,
+            Err(mpsc::RecvTimeoutError::Timeout) => return Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("in-process peer {} hung up", self.peer)
+            }
+        };
+        let n = bytes.len();
+        match frame::decode_frame(&bytes)
+            .with_context(|| format!("broken frame from {}", self.peer))?
+        {
+            Ok(msg) => Ok(Some(Received::Msg(msg, n))),
+            Err(e) => Ok(Some(Received::Corrupt(e.to_string()))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Socket transports (Unix-domain and TCP)
+// ---------------------------------------------------------------------
+
+/// The socket surface the framed transport needs: blocking reads and
+/// writes plus a settable read timeout. Implemented for [`UnixStream`]
+/// and [`TcpStream`]; both report an expired `SO_RCVTIMEO` as
+/// `WouldBlock`/`TimedOut`, which [`SocketTransport`] maps to "idle"
+/// only *before* the first header byte of a frame.
+pub trait IoStream: Read + Write + Send {
+    fn set_timeout(&self, timeout: Option<Duration>) -> io::Result<()>;
+}
+
+impl IoStream for UnixStream {
+    fn set_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+}
+
+impl IoStream for TcpStream {
+    fn set_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(timeout)
+    }
+}
+
+/// Framed transport over a connected byte stream.
+pub struct SocketTransport<S: IoStream> {
+    peer: String,
+    stream: S,
+}
+
+impl<S: IoStream> SocketTransport<S> {
+    pub fn new(peer: impl Into<String>, stream: S) -> Self {
+        Self { peer: peer.into(), stream }
+    }
+}
+
+fn is_idle(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+impl<S: IoStream> Transport for SocketTransport<S> {
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream
+            .write_all(bytes)
+            .and_then(|_| self.stream.flush())
+            .with_context(|| format!("sending to {}", self.peer))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Received>> {
+        self.stream
+            .set_timeout(Some(timeout.max(Duration::from_millis(1))))
+            .with_context(|| format!("setting read timeout on {}", self.peer))?;
+        let mut header = [0u8; frame::HEADER_LEN];
+        // The first byte decides idle vs. broken: nothing arriving
+        // within the timeout is a quiet peer, not a protocol error.
+        match self.stream.read(&mut header[..1]) {
+            Ok(0) => bail!("connection to {} closed", self.peer),
+            Ok(_) => {}
+            Err(e) if is_idle(&e) => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading from {}", self.peer)),
+        }
+        // Past the first byte the sender has committed to a frame; a
+        // timeout or EOF mid-frame means the stream can never re-sync,
+        // so everything below is fatal (outer Err), never Corrupt.
+        self.stream
+            .read_exact(&mut header[1..])
+            .with_context(|| format!("frame header truncated from {}", self.peer))?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        if magic != frame::MAGIC {
+            bail!("bad frame magic {magic:#010x} from {}", self.peer);
+        }
+        let len = u32::from_le_bytes(header[5..9].try_into().unwrap()) as usize;
+        if len > frame::MAX_PAYLOAD {
+            bail!("frame payload of {len} bytes from {} exceeds the cap", self.peer);
+        }
+        let mut rest = vec![0u8; len + frame::DIGEST_LEN];
+        self.stream
+            .read_exact(&mut rest)
+            .with_context(|| format!("frame body truncated from {}", self.peer))?;
+        let mut buf = Vec::with_capacity(frame::HEADER_LEN + rest.len());
+        buf.extend_from_slice(&header);
+        buf.extend_from_slice(&rest);
+        let n = buf.len();
+        match frame::decode_frame(&buf)
+            .with_context(|| format!("broken frame from {}", self.peer))?
+        {
+            Ok(msg) => Ok(Some(Received::Msg(msg, n))),
+            Err(e) => Ok(Some(Received::Corrupt(e.to_string()))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connect / accept helpers
+// ---------------------------------------------------------------------
+
+/// Connect a worker to a leader at `uds:<path>` or `tcp:<host:port>`.
+pub fn connect(addr: &str) -> Result<Box<dyn Transport>> {
+    let addr = addr.trim();
+    if let Some(path) = addr.strip_prefix("uds:") {
+        let stream = UnixStream::connect(path)
+            .with_context(|| format!("connecting to leader socket {path:?}"))?;
+        Ok(Box::new(SocketTransport::new(format!("leader@{path}"), stream)))
+    } else if let Some(tcp) = addr.strip_prefix("tcp:") {
+        let stream = TcpStream::connect(tcp)
+            .with_context(|| format!("connecting to leader at {tcp:?}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Box::new(SocketTransport::new(format!("leader@{tcp}"), stream)))
+    } else {
+        bail!("bad connect address {addr:?} (uds:<path> | tcp:<host:port>)");
+    }
+}
+
+/// Accept with a deadline: both listeners poll non-blocking so a worker
+/// that never comes up fails the run instead of hanging it.
+fn accept_deadline<S>(
+    mut accept: impl FnMut() -> io::Result<S>,
+    deadline: Instant,
+    what: &str,
+) -> Result<S> {
+    loop {
+        match accept() {
+            Ok(s) => return Ok(s),
+            Err(e) if is_idle(&e) => {
+                if Instant::now() >= deadline {
+                    bail!("timed out waiting for {what} to connect");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).with_context(|| format!("accepting {what}")),
+        }
+    }
+}
+
+/// Accept one worker connection on a Unix-domain listener.
+pub(crate) fn accept_uds(
+    listener: &UnixListener,
+    deadline: Instant,
+    what: &str,
+) -> Result<UnixStream> {
+    listener.set_nonblocking(true).context("unix listener nonblocking")?;
+    let s = accept_deadline(|| listener.accept().map(|(s, _)| s), deadline, what)?;
+    s.set_nonblocking(false).context("unix stream blocking")?;
+    Ok(s)
+}
+
+/// Accept one worker connection on a TCP listener.
+pub(crate) fn accept_tcp(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &str,
+) -> Result<TcpStream> {
+    listener.set_nonblocking(true).context("tcp listener nonblocking")?;
+    let s = accept_deadline(|| listener.accept().map(|(s, _)| s), deadline, what)?;
+    s.set_nonblocking(false).context("tcp stream blocking")?;
+    s.set_nodelay(true).ok();
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use frame::corrupt_payload;
+
+    fn hello() -> Message {
+        Message::Hello { version: WIRE_VERSION }
+    }
+
+    #[test]
+    fn inproc_round_trips_and_reports_idle() {
+        let (mut leader, mut worker) = inproc_pair("worker-0", "leader");
+        assert_eq!(leader.peer(), "worker-0");
+        leader.send(&hello()).unwrap();
+        match worker.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(Received::Msg(m, n)) => {
+                assert_eq!(m, hello());
+                assert!(n > frame::HEADER_LEN + frame::DIGEST_LEN);
+            }
+            other => panic!("expected Hello, got {other:?}"),
+        }
+        // Nothing pending: idle, not an error.
+        assert!(worker.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        // Dropping one side breaks the channel for good.
+        drop(worker);
+        assert!(leader.recv_timeout(Duration::from_millis(10)).is_err());
+        assert!(leader.send(&hello()).is_err());
+    }
+
+    #[test]
+    fn inproc_flags_payload_corruption_as_resendable() {
+        let (mut leader, mut worker) = inproc_pair("w", "l");
+        let mut bytes = frame::encode_frame(&Message::Resend { round: 3, agent_id: 7 }).unwrap();
+        corrupt_payload(&mut bytes);
+        leader.send_raw(&bytes).unwrap();
+        match worker.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(Received::Corrupt(why)) => assert!(why.contains("digest"), "{why}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uds_socket_transport_frames_idles_and_rejects_corruption() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ferrisfl-test-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let client = UnixStream::connect(&path).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let server = accept_uds(&listener, deadline, "test worker").unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = SocketTransport::new("b", client);
+        let mut b = SocketTransport::new("a", server);
+
+        // Idle before anything is sent.
+        assert!(b.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+
+        a.send(&hello()).unwrap();
+        match b.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Some(Received::Msg(m, _)) => assert_eq!(m, hello()),
+            other => panic!("expected Hello, got {other:?}"),
+        }
+
+        // Payload corruption: envelope fine, digest fails -> Corrupt.
+        let mut bytes = frame::encode_frame(&Message::Resend { round: 1, agent_id: 2 }).unwrap();
+        corrupt_payload(&mut bytes);
+        a.send_raw(&bytes).unwrap();
+        match b.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Some(Received::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+
+        // Bad magic is fatal framing, not Corrupt.
+        let mut bad = frame::encode_frame(&hello()).unwrap();
+        bad[0] ^= 0xFF;
+        a.send_raw(&bad).unwrap();
+        assert!(b.recv_timeout(Duration::from_secs(5)).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Worker half of the multi-process federation protocol.
+//!
+//! A worker is a full [`Entrypoint`] rebuilt from the leader's wired
+//! config (`FlParams::to_wire_toml`): dataset synthesis, sharding, and
+//! local-training RNG streams are all pure functions of that config, so
+//! the worker's shard table is bit-identical to the leader's without
+//! shipping any data. Each `Assign` trains its agents in order with the
+//! exact single-process `run_local` path, quantizes the delta to the
+//! streaming reduce's weighted 2^-40 fixed-point terms, and pushes one
+//! framed `Delta` back per agent.
+//!
+//! Clean frames for the current round are cached, so a `Resend` (after
+//! the leader rejects a corrupt frame or times out) replays the cached
+//! bytes instead of retraining — retries cost wire time, not compute.
+//!
+//! Fault injection: `FERRISFL_WIRE_CHAOS=N` corrupts one payload byte
+//! of this worker's first `N` *initial* delta sends (resends are always
+//! clean), which exercises the leader's digest-reject → `Resend` path
+//! end to end while leaving the final model untouched.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::aggregators::{quantize_weighted, quantized_checksum};
+use crate::config::FlParams;
+use crate::entrypoint::worker::{run_local, with_runtime, LocalJob};
+use crate::entrypoint::Entrypoint;
+use crate::runtime::Manifest;
+use crate::transport::frame::{self, Message};
+use crate::transport::{connect, Received, Transport, WIRE_VERSION};
+use crate::util::env;
+use crate::util::error::{bail, Context, Result};
+
+/// How long one blocking wait on the command channel lasts before
+/// looping; workers idle through these slices while the leader
+/// aggregates and evaluates between rounds.
+const IDLE_SLICE: Duration = Duration::from_millis(200);
+
+/// Entry point for the `ferrisfl worker` subcommand: connect to the
+/// leader at `uds:<path>` or `tcp:<host:port>` and serve rounds until
+/// `Shutdown`.
+pub fn worker_main(addr: &str) -> Result<()> {
+    serve(connect(addr)?)
+}
+
+/// Serve the leader on an established transport. On error, a best-
+/// effort `WorkerError` frame tells the leader why before returning.
+pub(crate) fn serve(mut t: Box<dyn Transport>) -> Result<()> {
+    let res = serve_inner(&mut *t);
+    if let Err(e) = &res {
+        let _ = t.send(&Message::WorkerError { message: e.to_string() });
+    }
+    res
+}
+
+fn serve_inner(t: &mut dyn Transport) -> Result<()> {
+    t.send(&Message::Hello { version: WIRE_VERSION })?;
+    let config = match recv_command(t)? {
+        Message::Init { config } => config,
+        other => bail!("expected Init from the leader, got {}", other.kind_name()),
+    };
+    let params = FlParams::from_toml(&config).context("worker rejected the wire config")?;
+    let ep = Entrypoint::new(params, Arc::new(Manifest::native()))
+        .context("worker failed to build its experiment")?;
+
+    // Injected corruption budget (tests): corrupt the first N initial
+    // delta sends of this process, then behave.
+    let mut chaos = env::wire_chaos();
+    // Clean encoded frames for the current round, for Resend replays.
+    let mut cache: HashMap<(u64, u32), Vec<u8>> = HashMap::new();
+    let mut cached_round = u64::MAX;
+
+    loop {
+        match recv_command(t)? {
+            Message::Assign { round, agents, global } => {
+                if round != cached_round {
+                    cache.clear();
+                    cached_round = round;
+                }
+                let global = Arc::new(global);
+                for (agent_id, weight) in agents {
+                    let bytes = train_one(&ep, round, agent_id, weight, Arc::clone(&global))?;
+                    cache.insert((round, agent_id), bytes.clone());
+                    if chaos > 0 {
+                        chaos -= 1;
+                        let mut bad = bytes;
+                        frame::corrupt_payload(&mut bad);
+                        t.send_raw(&bad)?;
+                    } else {
+                        t.send_raw(&bytes)?;
+                    }
+                }
+            }
+            Message::Resend { round, agent_id } => {
+                let Some(bytes) = cache.get(&(round, agent_id)) else {
+                    bail!(
+                        "leader asked to resend round {round} agent {agent_id}, \
+                         which this worker never trained"
+                    );
+                };
+                t.send_raw(bytes)?;
+            }
+            Message::Shutdown => return Ok(()),
+            other => bail!("unexpected {} from the leader", other.kind_name()),
+        }
+    }
+}
+
+/// Train one assigned agent with the single-process local path and
+/// encode its framed `Delta`. The quantisation is the same kernel the
+/// in-memory accumulator applies, so the frame carries exactly the
+/// terms a single-process round would have folded.
+fn train_one(
+    ep: &Entrypoint,
+    round: u64,
+    agent_id: u32,
+    weight: u64,
+    global: Arc<Vec<f32>>,
+) -> Result<Vec<u8>> {
+    let a = agent_id as usize;
+    if a >= ep.agents.len() {
+        bail!("assigned agent {agent_id} is out of range ({} agents)", ep.agents.len());
+    }
+    let job = LocalJob {
+        agent_id: a,
+        round: round as usize,
+        shard: ep.agents[a].shard.clone(),
+        global,
+        lr: ep.params.lr,
+        local_epochs: ep.params.local_epochs,
+        max_steps_per_epoch: ep.params.max_local_steps,
+        seed: ep.params.seed,
+    };
+    let (update, record) =
+        with_runtime(&ep.manifest, &ep.key, |rt| run_local(rt, &ep.dataset, &job))?;
+    let terms = quantize_weighted(&update.delta, weight)?;
+    let digest = quantized_checksum(&terms);
+    frame::encode_frame(&Message::Delta { round, agent_id, weight, digest, terms, record })
+}
+
+/// Block until the leader's next command. A corrupt *command* frame is
+/// fatal for the worker — only deltas have a resend path.
+fn recv_command(t: &mut dyn Transport) -> Result<Message> {
+    loop {
+        match t.recv_timeout(IDLE_SLICE)? {
+            None => continue,
+            Some(Received::Msg(msg, _)) => return Ok(msg),
+            Some(Received::Corrupt(why)) => bail!("corrupt command frame from the leader: {why}"),
+        }
+    }
+}

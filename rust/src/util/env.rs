@@ -11,6 +11,8 @@
 //! | `FERRISFL_SYNTH_CACHE` | [`synth_cache_enabled`] | `0` disables the synthesis cache |
 //! | `FERRISFL_BENCH_FAST` | [`bench_fast`] | non-`0` shrinks bench workloads for CI |
 //! | `FERRISFL_BENCH_JSON` | [`bench_json`] | bench snapshot path override |
+//! | `FERRISFL_WORKER_BIN` | [`worker_bin`] | worker binary the distributed leader spawns |
+//! | `FERRISFL_WIRE_CHAOS` | [`wire_chaos`] | corrupt the first N wire deltas (tests/CI) |
 //!
 //! **Precedence** is uniform across the crate: an explicit config value
 //! (an `FlParams`/builder field, a CLI flag, a TOML key) beats the
@@ -35,6 +37,11 @@ pub const SYNTH_CACHE: &str = "FERRISFL_SYNTH_CACHE";
 pub const BENCH_FAST: &str = "FERRISFL_BENCH_FAST";
 /// Bench JSON snapshot path (see `benchutil::bench_json_path`).
 pub const BENCH_JSON: &str = "FERRISFL_BENCH_JSON";
+/// Worker binary override for process spawning (see
+/// `transport::leader`).
+pub const WORKER_BIN: &str = "FERRISFL_WORKER_BIN";
+/// Wire-corruption chaos knob (see `transport::worker`).
+pub const WIRE_CHAOS: &str = "FERRISFL_WIRE_CHAOS";
 
 /// A parsed `FERRISFL_THREADS` request.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -101,6 +108,30 @@ pub fn bench_json() -> Option<PathBuf> {
     std::env::var(BENCH_JSON).ok().map(PathBuf::from)
 }
 
+/// `FERRISFL_WORKER_BIN`: the binary the distributed leader spawns for
+/// `multiprocess:N` workers. Unset means `std::env::current_exe()` —
+/// right for `ferrisfl run`, wrong inside a test harness, whose
+/// current exe is the test binary; tests set this to
+/// `env!("CARGO_BIN_EXE_ferrisfl")`.
+pub fn worker_bin() -> Option<String> {
+    std::env::var(WORKER_BIN).ok().filter(|s| !s.trim().is_empty())
+}
+
+/// Parse a raw `FERRISFL_WIRE_CHAOS` value (pure; see [`wire_chaos`]):
+/// the number of initial `Delta` frames each worker corrupts before
+/// sending (resends always go out clean). Unset, empty, or
+/// unparseable means 0 — no chaos.
+pub fn parse_wire_chaos(raw: Option<&str>) -> u32 {
+    raw.map(str::trim).and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// `FERRISFL_WIRE_CHAOS`: deterministic wire-corruption injection for
+/// the distributed executor's retry path (tests and the CI
+/// distributed-e2e step).
+pub fn wire_chaos() -> u32 {
+    parse_wire_chaos(std::env::var(WIRE_CHAOS).ok().as_deref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +161,13 @@ mod tests {
         assert!(!parse_bench_fast(Some("0")));
         assert!(parse_bench_fast(Some("1")));
         assert!(parse_bench_fast(Some("yes")));
+    }
+
+    #[test]
+    fn wire_chaos_parsing() {
+        assert_eq!(parse_wire_chaos(None), 0);
+        assert_eq!(parse_wire_chaos(Some("")), 0);
+        assert_eq!(parse_wire_chaos(Some("gremlins")), 0);
+        assert_eq!(parse_wire_chaos(Some(" 3 ")), 3);
     }
 }

@@ -9,10 +9,12 @@
 pub mod env;
 pub mod error;
 pub mod json;
+pub mod parallelism;
 pub mod rng;
 pub mod threadpool;
 
 pub use error::{Context, Error, Result};
 pub use json::Json;
+pub use parallelism::Parallelism;
 pub use rng::Rng;
 pub use threadpool::{gemm_threads, panel_pool, pipeline, shared_pool, PanelPool, WorkerPool};

@@ -1,0 +1,120 @@
+//! One parallelism knob, one precedence rule.
+//!
+//! Pool sizing used to be scattered: `FlParams::workers` sized the
+//! agent pool, `FERRISFL_THREADS` sized the GEMM panel fan-out, and the
+//! shared evaluation pool auto-detected on its own. [`Parallelism`]
+//! collapses them behind the crate's uniform precedence — **explicit
+//! config > environment > auto-detect** — so every pool resolves its
+//! size the same way and `FERRISFL_THREADS` becomes the single
+//! process-level override. Call sites keep their own clamps (the panel
+//! pool caps at `MAX_PANEL_WORKERS + 1`, the agent pool at 8, the
+//! shared pool at `[2, 8]`): the knob names *how many*, the site knows
+//! *how many it can use*.
+
+use std::str::FromStr;
+
+use crate::util::env::{self, ThreadsVar};
+use crate::util::error::{bail, Error, Result};
+
+/// A parallelism request: an explicit thread/worker count, or defer to
+/// the environment and then the machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Parallelism {
+    /// No explicit request — fall through to `FERRISFL_THREADS`, then
+    /// to hardware detection.
+    #[default]
+    Auto,
+    /// Exactly this many (call sites clamp to their own legal range).
+    Fixed(usize),
+}
+
+impl Parallelism {
+    /// From a config count where `0` conventionally means auto
+    /// (`FlParams::workers`, `[run] workers`).
+    pub fn from_workers(n: usize) -> Self {
+        if n == 0 {
+            Parallelism::Auto
+        } else {
+            Parallelism::Fixed(n)
+        }
+    }
+
+    /// The environment's request (`FERRISFL_THREADS`). An unparseable
+    /// value degrades to `Auto`; sites that want to warn first (the
+    /// panel pool) match [`env::threads`] themselves.
+    pub fn from_env() -> Self {
+        match env::threads() {
+            ThreadsVar::Count(n) => Parallelism::Fixed(n),
+            ThreadsVar::Auto | ThreadsVar::Invalid(_) => Parallelism::Auto,
+        }
+    }
+
+    /// Hardware parallelism (≥ 1), the final fallback.
+    pub fn detect() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Resolve to a concrete count with the crate's precedence:
+    /// `Fixed(n)` wins outright; `Auto` consults the environment, then
+    /// takes `auto_detect`. Never returns 0.
+    pub fn resolve(self, auto_detect: usize) -> usize {
+        match self {
+            Parallelism::Fixed(n) => n.max(1),
+            Parallelism::Auto => match Parallelism::from_env() {
+                Parallelism::Fixed(n) => n.max(1),
+                Parallelism::Auto => auto_detect.max(1),
+            },
+        }
+    }
+}
+
+impl FromStr for Parallelism {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" | "0" => Ok(Parallelism::Auto),
+            t => match t.parse::<usize>() {
+                Ok(n) => Ok(Parallelism::Fixed(n)),
+                Err(_) => bail!("bad parallelism {s:?} (auto | 0 | a thread count)"),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Parallelism::Auto => f.write_str("auto"),
+            Parallelism::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_displays() {
+        assert_eq!("auto".parse::<Parallelism>().unwrap(), Parallelism::Auto);
+        assert_eq!("0".parse::<Parallelism>().unwrap(), Parallelism::Auto);
+        assert_eq!(" 6 ".parse::<Parallelism>().unwrap(), Parallelism::Fixed(6));
+        assert!("many".parse::<Parallelism>().is_err());
+        assert_eq!(Parallelism::Auto.to_string(), "auto");
+        assert_eq!(Parallelism::Fixed(3).to_string(), "3");
+        assert_eq!(Parallelism::from_workers(0), Parallelism::Auto);
+        assert_eq!(Parallelism::from_workers(5), Parallelism::Fixed(5));
+    }
+
+    #[test]
+    fn explicit_beats_everything_and_never_resolves_to_zero() {
+        // Fixed short-circuits: the env never enters into it.
+        assert_eq!(Parallelism::Fixed(3).resolve(8), 3);
+        assert_eq!(Parallelism::Fixed(0).resolve(8), 1);
+        assert!(Parallelism::detect() >= 1);
+        // Auto lands on auto_detect (or the env, which tests can't
+        // assume); either way the result is >= 1.
+        assert!(Parallelism::Auto.resolve(4) >= 1);
+    }
+}

@@ -20,6 +20,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use crate::util::Parallelism;
+
 /// The process-wide shared pool: round evaluation shards test batches
 /// across it when the caller has no pool of its own (the central
 /// trainer). Guarded by a `Mutex` so one parallel region runs at a time;
@@ -28,8 +30,8 @@ use std::thread::JoinHandle;
 pub fn shared_pool() -> &'static Mutex<WorkerPool> {
     static POOL: OnceLock<Mutex<WorkerPool>> = OnceLock::new();
     POOL.get_or_init(|| {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Mutex::new(WorkerPool::new(n.clamp(2, 8)))
+        let n = Parallelism::Auto.resolve(Parallelism::detect()).clamp(2, 8);
+        Mutex::new(WorkerPool::new(n))
     })
 }
 
@@ -219,20 +221,19 @@ const MAX_PANEL_WORKERS: usize = 15;
 pub fn gemm_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        let auto = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .clamp(1, 8);
-        match crate::util::env::threads() {
-            crate::util::env::ThreadsVar::Auto => auto,
-            crate::util::env::ThreadsVar::Count(n) => n.clamp(1, MAX_PANEL_WORKERS + 1),
-            crate::util::env::ThreadsVar::Invalid(s) => {
-                eprintln!(
-                    "warning: unknown FERRISFL_THREADS value {s:?} \
-                     (want a thread count, 0, or auto); using {auto}"
-                );
-                auto
-            }
+        let auto = Parallelism::detect().clamp(1, 8);
+        // Warn on garbage before it degrades to Auto — the one site
+        // that distinguishes Invalid from unset.
+        if let crate::util::env::ThreadsVar::Invalid(s) = crate::util::env::threads() {
+            eprintln!(
+                "warning: unknown FERRISFL_THREADS value {s:?} \
+                 (want a thread count, 0, or auto); using {auto}"
+            );
+            return auto;
+        }
+        match Parallelism::from_env() {
+            Parallelism::Auto => auto,
+            Parallelism::Fixed(n) => n.clamp(1, MAX_PANEL_WORKERS + 1),
         }
     })
 }

@@ -1,0 +1,220 @@
+//! End-to-end tests for the multi-process federation executor.
+//!
+//! Pins the PR's acceptance contract: a distributed run (leader + >= 2
+//! workers over the InProc and Unix-socket transports) produces a
+//! final model **byte-identical** to the single-process engine run at
+//! the same seed — including when injected frame corruption forces the
+//! digest-reject → `Resend` recovery path.
+//!
+//! The single-process reference runs with `retry = 0` (retries are
+//! engine chaos there); distributed runs reuse `retry` as the wire
+//! resend budget, which must not change any result bit.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use ferrisfl::config::{FlParams, Topology};
+use ferrisfl::entrypoint::{Entrypoint, RunResult};
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::Logger;
+use ferrisfl::metrics::{AgentRecord, EventRecord, RoundRecord};
+use ferrisfl::runtime::{BackendKind, Manifest};
+use ferrisfl::util::error::Result;
+
+/// `FERRISFL_WIRE_CHAOS` / `FERRISFL_WORKER_BIN` are process-global and
+/// in-process worker threads read them at serve time, so every test
+/// that runs a fleet serializes on this lock.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[derive(Default)]
+struct CaptureLogger {
+    rounds: Vec<RoundRecord>,
+    agents: Vec<AgentRecord>,
+    events: Vec<EventRecord>,
+}
+
+impl Logger for CaptureLogger {
+    fn log_round(&mut self, rec: &RoundRecord) -> Result<()> {
+        self.rounds.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_agent(&mut self, rec: &AgentRecord) -> Result<()> {
+        self.agents.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_event(&mut self, rec: &EventRecord) -> Result<()> {
+        self.events.push(rec.clone());
+        Ok(())
+    }
+}
+
+fn base_params(name: &str) -> FlParams {
+    FlParams {
+        experiment_name: name.into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 6,
+        sampling_ratio: 0.5,
+        global_epochs: 2,
+        local_epochs: 1,
+        split: Scheme::NonIid { niid_factor: 2 },
+        lr: 0.05,
+        seed: 42,
+        workers: 1,
+        eval_every: 1,
+        max_local_steps: 4,
+        backend: BackendKind::Native,
+        ..FlParams::default()
+    }
+}
+
+fn run_with(params: FlParams) -> (RunResult, Vec<f32>, CaptureLogger) {
+    let mut ep = Entrypoint::new(params, Arc::new(Manifest::native())).unwrap();
+    let mut log = CaptureLogger::default();
+    let res = ep.run(&mut log).unwrap();
+    let global = ep.global_params().to_vec();
+    (res, global, log)
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Distributed vs. single-process: metrics, records, and the final
+/// model must match bit for bit. Wall-clock (`secs`), wire accounting
+/// (frames carry headers), events, and recovery counters (wire
+/// retries) are the only legitimate differences.
+fn assert_same_run(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        let r = ra.round;
+        assert_eq!(bits(ra.train_loss), bits(rb.train_loss), "{tag} r{r}: train_loss");
+        assert_eq!(bits(ra.train_acc), bits(rb.train_acc), "{tag} r{r}: train_acc");
+        assert_eq!(bits(ra.eval_loss), bits(rb.eval_loss), "{tag} r{r}: eval_loss");
+        assert_eq!(bits(ra.eval_acc), bits(rb.eval_acc), "{tag} r{r}: eval_acc");
+        assert_eq!(ra.sampled, rb.sampled, "{tag} r{r}: sampled");
+        assert_eq!(ra.dropped, rb.dropped, "{tag} r{r}: dropped");
+        assert_eq!(ra.rejected, rb.rejected, "{tag} r{r}: rejected");
+        assert_eq!(ra.outcome, rb.outcome, "{tag} r{r}: outcome");
+    }
+    assert_eq!(a.agent_records.len(), b.agent_records.len(), "{tag}: agent records");
+    for (aa, ab) in a.agent_records.iter().zip(&b.agent_records) {
+        let t = format!("{tag} r{} agent {}", aa.round, aa.agent_id);
+        assert_eq!(aa.round, ab.round, "{t}: round");
+        assert_eq!(aa.agent_id, ab.agent_id, "{t}: agent_id");
+        assert_eq!(aa.num_samples, ab.num_samples, "{t}: num_samples");
+        let la: Vec<u64> = aa.epoch_losses.iter().map(|&x| bits(x)).collect();
+        let lb: Vec<u64> = ab.epoch_losses.iter().map(|&x| bits(x)).collect();
+        assert_eq!(la, lb, "{t}: epoch_losses");
+        let ca: Vec<u64> = aa.epoch_accs.iter().map(|&x| bits(x)).collect();
+        let cb: Vec<u64> = ab.epoch_accs.iter().map(|&x| bits(x)).collect();
+        assert_eq!(ca, cb, "{t}: epoch_accs");
+    }
+    assert_eq!(a.comm.dense_bytes, b.comm.dense_bytes, "{tag}: dense_bytes");
+    assert_eq!(bits(a.final_eval.loss_sum), bits(b.final_eval.loss_sum), "{tag}: eval loss_sum");
+    assert_eq!(bits(a.final_eval.correct), bits(b.final_eval.correct), "{tag}: eval correct");
+    assert_eq!(bits(a.final_eval.count), bits(b.final_eval.count), "{tag}: eval count");
+    assert_eq!(a.dropped, b.dropped, "{tag}: dropped");
+    assert_eq!(a.defense_rejected, b.defense_rejected, "{tag}: defense_rejected");
+}
+
+fn assert_globals_identical(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: global param count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: global param {i}");
+    }
+}
+
+/// The single-process reference for a distributed config: same seed
+/// and workload, default topology, no wire-retry budget (which would
+/// activate engine chaos weighting single-process).
+fn single_reference(mut params: FlParams) -> FlParams {
+    params.topology = Topology::Single;
+    params.retry = 0;
+    params
+}
+
+#[test]
+fn inproc_fleet_is_bit_identical_to_single_process() {
+    let _guard = env_guard();
+    let distributed = FlParams {
+        topology: Topology::InProc { workers: 2 },
+        retry: 2,
+        dropout: 0.25,
+        ..base_params("dist_inproc")
+    };
+    let (res_s, glob_s, _) = run_with(single_reference(distributed.clone()));
+    let (res_d, glob_d, log_d) = run_with(distributed);
+    assert_same_run(&res_d, &res_s, "inproc");
+    assert_globals_identical(&glob_d, &glob_s, "inproc");
+    // Per-worker attribution reaches the event channel.
+    assert!(
+        log_d.events.iter().any(|e| e.kind == "delta_arrived" && e.worker.is_some()),
+        "distributed arrivals must carry worker attribution"
+    );
+    // No chaos: the wire retry machinery stays quiet.
+    for r in &res_d.rounds {
+        assert_eq!(r.recovery.retries, 0, "round {}: clean wires need no retries", r.round);
+    }
+}
+
+#[test]
+fn corrupted_frames_recover_through_retries_bit_identically() {
+    let _guard = env_guard();
+    let distributed = FlParams {
+        topology: Topology::InProc { workers: 2 },
+        retry: 2,
+        backoff: "0,1,0".parse().unwrap(),
+        ..base_params("dist_chaos")
+    };
+    let (res_s, glob_s, _) = run_with(single_reference(distributed.clone()));
+    // Each worker corrupts the payload of its first delta frame; the
+    // leader must reject both on the digest and recover via Resend.
+    std::env::set_var("FERRISFL_WIRE_CHAOS", "1");
+    let (res_d, glob_d, log_d) = run_with(distributed);
+    std::env::remove_var("FERRISFL_WIRE_CHAOS");
+    assert_same_run(&res_d, &res_s, "chaos");
+    assert_globals_identical(&glob_d, &glob_s, "chaos");
+    let corrupt: u32 = res_d.rounds.iter().map(|r| r.recovery.corrupt_rejected).sum();
+    let retries: u32 = res_d.rounds.iter().map(|r| r.recovery.retries).sum();
+    let failures: u32 = res_d.rounds.iter().map(|r| r.recovery.failures).sum();
+    assert_eq!(corrupt, 2, "both workers' first frames must be rejected");
+    assert_eq!(retries, 2, "each rejection must spend one resend");
+    assert_eq!(failures, 2);
+    assert!(
+        log_d.events.iter().any(|e| e.kind == "delta_rejected" && e.worker.is_some()),
+        "rejections must be logged with worker attribution"
+    );
+    assert!(
+        log_d.events.iter().any(|e| e.kind == "retry_due" && e.worker.is_some()),
+        "resends must be logged with worker attribution"
+    );
+}
+
+#[test]
+fn uds_worker_processes_are_bit_identical_even_under_chaos() {
+    let _guard = env_guard();
+    let distributed = FlParams {
+        topology: Topology::MultiProcess { workers: 2 },
+        retry: 2,
+        backoff: "0,1,0".parse().unwrap(),
+        ..base_params("dist_uds")
+    };
+    let (res_s, glob_s, _) = run_with(single_reference(distributed.clone()));
+    // Spawn the freshly-built CLI binary as the worker; each child
+    // inherits the chaos knob and corrupts its first delta frame.
+    std::env::set_var("FERRISFL_WORKER_BIN", env!("CARGO_BIN_EXE_ferrisfl"));
+    std::env::set_var("FERRISFL_WIRE_CHAOS", "1");
+    let (res_d, glob_d, _) = run_with(distributed);
+    std::env::remove_var("FERRISFL_WIRE_CHAOS");
+    std::env::remove_var("FERRISFL_WORKER_BIN");
+    assert_same_run(&res_d, &res_s, "uds");
+    assert_globals_identical(&glob_d, &glob_s, "uds");
+    let corrupt: u32 = res_d.rounds.iter().map(|r| r.recovery.corrupt_rejected).sum();
+    assert_eq!(corrupt, 2, "both worker processes' first frames must be rejected");
+}
