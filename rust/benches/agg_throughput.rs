@@ -120,10 +120,49 @@ fn main() {
         }
         // Robust rules (host side), K = 8.
         let ups = updates(&mut rng, 8, p);
-        for name in ["median", "trim:0.2", "fedadam", "fedavgm"] {
+        for name in ["median", "trim:0.2", "fedadam", "fedavgm", "geomedian"] {
             let mut agg = aggregators::from_name(name).unwrap();
             let s = bench(1, scaled_iters(5), || agg.aggregate(&global, &ups, None).unwrap());
             report(&format!("{name:<12} K=8"), &s, "");
+        }
+
+        // Streaming robust rules at a big cohort: K observe passes over
+        // pre-quantized wire terms + one finalize. Per-coordinate state
+        // is fixed regardless of K (the point of the sketches), so the
+        // interesting regime is K far beyond what the exact rules could
+        // materialize. Gated to one model to keep the bench short.
+        if model == "mlp-s" {
+            let k_big = 256usize;
+            let terms: Vec<Vec<i64>> = ups
+                .iter()
+                .map(|u| aggregators::quantize_weighted(&u.delta, 1).unwrap())
+                .collect();
+            let mean = vec![0.0f32; p];
+            // bytes touched: K*P i64 terms read + P state read/write
+            let bytes = ((k_big + 2) * p * 8) as f64;
+            header(&format!("Streaming robust rules, P = {p} ({model}), K = {k_big}"));
+            for (name, key) in [("sketch-median", "sketch-median"), ("sketch-trim:0.2", "sketch-trim")]
+            {
+                let mut agg = aggregators::from_name(name).unwrap();
+                let s = bench(1, scaled_iters(3), || {
+                    for i in 0..k_big {
+                        agg.observe_quantized(0, i as u64, &terms[i % terms.len()], 1).unwrap();
+                    }
+                    agg.apply_streamed(&global, &mean).unwrap()
+                });
+                report(
+                    &format!("{name:<16} K={k_big}"),
+                    &s,
+                    &format!("{:.2} GB/s", s.gb_per_sec(bytes)),
+                );
+                rows.push((
+                    format!("{model} K={k_big} {key}"),
+                    Json::obj(vec![
+                        ("mean_ms", Json::num(s.mean * 1e3)),
+                        ("gb_per_sec", Json::num(s.gb_per_sec(bytes))),
+                    ]),
+                ));
+            }
         }
     }
 

@@ -16,9 +16,15 @@
 //! - [`FedAdam`] — server Adam over the aggregated pseudo-gradient.
 //! - [`CoordinateMedian`] — coordinate-wise median of deltas.
 //! - [`TrimmedMean`] — coordinate-wise β-trimmed mean.
+//! - [`SketchMedian`] / [`SketchTrimmedMean`] / [`GeoMedian`] —
+//!   streaming-capable robust rules ([`robust`]): fixed per-coordinate
+//!   memory independent of K, so Byzantine defense no longer forces
+//!   the materialized K×P path.
 
+pub mod robust;
 pub mod streaming;
 
+pub use robust::{GeoMedian, SketchMedian, SketchTrimmedMean, GEOMEDIAN_RESERVOIR};
 pub use streaming::{
     delta_checksum, quantize_weighted, quantized_checksum, StreamingAccumulator,
 };
@@ -83,6 +89,38 @@ pub trait Aggregator: Send {
     fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
         check_streamed(global, mean)?;
         Ok(global.iter().zip(mean).map(|(g, m)| g + m).collect())
+    }
+
+    /// `true` when this rule wants to see each update individually on
+    /// the streaming path via [`Self::observe_quantized`] (the sketch
+    /// rules in [`robust`]). Such rules still declare a
+    /// [`Self::stream_kind`]; their [`Self::apply_streamed`] ignores
+    /// the accumulator mean and finalizes the observed state instead.
+    fn observes_updates(&self) -> bool {
+        false
+    }
+
+    /// Feed one update's fixed-point wire terms
+    /// ([`quantize_weighted`]) into the rule's streaming state.
+    /// `round` is the collecting round (state from another round is
+    /// discarded), `agent_id` the producer, and `weight` the integer
+    /// weight baked into `terms`. Only invoked when
+    /// [`Self::observes_updates`]; the default is a no-op.
+    fn observe_quantized(
+        &mut self,
+        _round: u64,
+        _agent_id: u64,
+        _terms: &[i64],
+        _weight: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Fraction of the last aggregation's update mass the rule
+    /// excluded (0 for plain averaging) — surfaced per round as the
+    /// `trimmed_frac` metric.
+    fn trimmed_frac(&self) -> f64 {
+        0.0
     }
 
     fn name(&self) -> &'static str;
@@ -369,7 +407,13 @@ impl Aggregator for FedAdam {
 /// Coordinate-wise median of the deltas — robust to up to
 /// ⌊(K-1)/2⌋ poisoned updates.
 #[derive(Default)]
-pub struct CoordinateMedian;
+pub struct CoordinateMedian {
+    /// Column scratch, reused across the P-loop and across rounds so
+    /// the rule does one (re)allocation per cohort size, not P per
+    /// round.
+    col: Vec<f32>,
+    last_trimmed: f64,
+}
 
 impl Aggregator for CoordinateMedian {
     fn aggregate(
@@ -381,20 +425,27 @@ impl Aggregator for CoordinateMedian {
         check(global, updates)?;
         let k = updates.len();
         let mut out = global.to_vec();
-        let mut col = vec![0.0f32; k];
+        self.col.resize(k, 0.0);
         for i in 0..global.len() {
             for (j, u) in updates.iter().enumerate() {
-                col[j] = u.delta[i];
+                self.col[j] = u.delta[i];
             }
-            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.col.sort_by(|a, b| a.partial_cmp(b).unwrap());
             let med = if k % 2 == 1 {
-                col[k / 2]
+                self.col[k / 2]
             } else {
-                0.5 * (col[k / 2 - 1] + col[k / 2])
+                0.5 * (self.col[k / 2 - 1] + self.col[k / 2])
             };
             out[i] += med;
         }
+        // A median keeps the middle rank(s); report the rest as
+        // excluded mass.
+        self.last_trimmed = (k as f64 - 1.0) / k as f64;
         Ok(out)
+    }
+
+    fn trimmed_frac(&self) -> f64 {
+        self.last_trimmed
     }
 
     fn name(&self) -> &'static str {
@@ -406,12 +457,20 @@ impl Aggregator for CoordinateMedian {
 /// values per coordinate, average the rest.
 pub struct TrimmedMean {
     pub beta: f64,
+    /// Column scratch, reused across the P-loop and across rounds (see
+    /// [`CoordinateMedian`]).
+    col: Vec<f32>,
+    last_trimmed: f64,
 }
 
 impl TrimmedMean {
     pub fn new(beta: f64) -> Self {
         assert!((0.0..0.5).contains(&beta), "beta must be in [0, 0.5)");
-        Self { beta }
+        Self {
+            beta,
+            col: Vec::new(),
+            last_trimmed: 0.0,
+        }
     }
 }
 
@@ -430,16 +489,21 @@ impl Aggregator for TrimmedMean {
         }
         let kept = k - 2 * trim;
         let mut out = global.to_vec();
-        let mut col = vec![0.0f32; k];
+        self.col.resize(k, 0.0);
         for i in 0..global.len() {
             for (j, u) in updates.iter().enumerate() {
-                col[j] = u.delta[i];
+                self.col[j] = u.delta[i];
             }
-            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let s: f32 = col[trim..k - trim].iter().sum();
+            self.col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let s: f32 = self.col[trim..k - trim].iter().sum();
             out[i] += s / kept as f32;
         }
+        self.last_trimmed = 2.0 * trim as f64 / k as f64;
         Ok(out)
+    }
+
+    fn trimmed_frac(&self) -> f64 {
+        self.last_trimmed
     }
 
     fn name(&self) -> &'static str {
@@ -447,8 +511,15 @@ impl Aggregator for TrimmedMean {
     }
 }
 
-/// Build an aggregator from its config name: `fedavg | fedavg-offload |
-/// fedsgd | fedavgm[:beta,lr] | fedadam[:lr] | median | trim[:beta]`.
+/// The aggregator name grammar — the one source of truth behind
+/// [`from_name`]'s doc, its error text, and the CLI help, so the three
+/// can't drift as rules are added.
+pub const AGGREGATOR_HELP: &str = "fedavg | fedavg-offload | fedsgd | fedavgm[:beta,lr] | \
+     fedadam[:lr] | median | trim[:beta] | sketch-median | sketch-trim[:beta] | \
+     geomedian[:reservoir]";
+
+/// Build an aggregator from its config name; the grammar is
+/// [`AGGREGATOR_HELP`].
 pub fn from_name(name: &str) -> Result<Box<dyn Aggregator>> {
     let t = name.trim().to_ascii_lowercase();
     match t.as_str() {
@@ -456,10 +527,13 @@ pub fn from_name(name: &str) -> Result<Box<dyn Aggregator>> {
         // "fedavg-pjrt" kept as a config-compat alias for offload.
         "fedavg-offload" | "fedavg-pjrt" => return Ok(Box::new(FedAvg { offload: true })),
         "fedsgd" => return Ok(Box::new(FedSgd)),
-        "median" => return Ok(Box::new(CoordinateMedian)),
+        "median" => return Ok(Box::new(CoordinateMedian::default())),
         "fedavgm" => return Ok(Box::new(FedAvgM::new(0.9, 1.0))),
         "fedadam" => return Ok(Box::new(FedAdam::new(0.01))),
         "trim" => return Ok(Box::new(TrimmedMean::new(0.1))),
+        "sketch-median" => return Ok(Box::new(SketchMedian::default())),
+        "sketch-trim" => return Ok(Box::new(SketchTrimmedMean::new(0.1))),
+        "geomedian" => return Ok(Box::new(GeoMedian::new(GEOMEDIAN_RESERVOIR))),
         _ => {}
     }
     if let Some(rest) = t.strip_prefix("fedavgm:") {
@@ -473,12 +547,27 @@ pub fn from_name(name: &str) -> Result<Box<dyn Aggregator>> {
         return Ok(Box::new(FedAdam::new(rest.parse()?)));
     }
     if let Some(rest) = t.strip_prefix("trim:") {
-        return Ok(Box::new(TrimmedMean::new(rest.parse()?)));
+        let beta: f64 = rest.parse()?;
+        if !(0.0..0.5).contains(&beta) {
+            bail!("trim fraction must be in [0, 0.5), got {beta}");
+        }
+        return Ok(Box::new(TrimmedMean::new(beta)));
     }
-    bail!(
-        "unknown aggregator {name:?} (fedavg | fedavg-offload | fedsgd | \
-         fedavgm[:b,lr] | fedadam[:lr] | median | trim[:b])"
-    )
+    if let Some(rest) = t.strip_prefix("sketch-trim:") {
+        let beta: f64 = rest.parse()?;
+        if !(0.0..0.5).contains(&beta) {
+            bail!("trim fraction must be in [0, 0.5), got {beta}");
+        }
+        return Ok(Box::new(SketchTrimmedMean::new(beta)));
+    }
+    if let Some(rest) = t.strip_prefix("geomedian:") {
+        let r: usize = rest.parse()?;
+        if r == 0 {
+            bail!("geomedian reservoir must be >= 1");
+        }
+        return Ok(Box::new(GeoMedian::new(r)));
+    }
+    bail!("unknown aggregator {name:?} ({AGGREGATOR_HELP})")
 }
 
 #[cfg(test)]
@@ -569,8 +658,10 @@ mod tests {
         let mut ups: Vec<Update> =
             (0..4).map(|i| upd(i, vec![0.1; 4], 1)).collect();
         ups.push(upd(4, vec![1e6; 4], 1)); // poisoned
-        let out = CoordinateMedian.aggregate(&global, &ups, None).unwrap();
+        let mut med = CoordinateMedian::default();
+        let out = med.aggregate(&global, &ups, None).unwrap();
         assert!(out.iter().all(|&v| (v - 0.1).abs() < 1e-5), "{out:?}");
+        assert!((med.trimmed_frac() - 0.8).abs() < 1e-12);
     }
 
     #[test]
@@ -582,7 +673,7 @@ mod tests {
             upd(2, vec![3.0], 1),
             upd(3, vec![4.0], 1),
         ];
-        let out = CoordinateMedian.aggregate(&global, &ups, None).unwrap();
+        let out = CoordinateMedian::default().aggregate(&global, &ups, None).unwrap();
         assert!((out[0] - 2.5).abs() < 1e-6);
     }
 
@@ -595,10 +686,10 @@ mod tests {
             upd(2, vec![0.2, 0.2], 1),
             upd(3, vec![100.0, 100.0], 1),
         ];
-        let out = TrimmedMean::new(0.25)
-            .aggregate(&global, &ups, None)
-            .unwrap();
+        let mut tm = TrimmedMean::new(0.25);
+        let out = tm.aggregate(&global, &ups, None).unwrap();
         assert!(out.iter().all(|&v| (v - 0.2).abs() < 1e-5), "{out:?}");
+        assert!((tm.trimmed_frac() - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -618,11 +709,20 @@ mod tests {
         for n in [
             "fedavg", "fedavg-offload", "fedavg-pjrt", "fedsgd", "fedavgm",
             "fedavgm:0.9,1.0", "fedadam", "fedadam:0.05", "median", "trim", "trim:0.2",
+            "sketch-median", "sketch-trim", "sketch-trim:0.3", "geomedian", "geomedian:16",
         ] {
             assert!(from_name(n).is_ok(), "{n}");
         }
         assert!(from_name("bogus").is_err());
         assert!(from_name("fedavgm:1").is_err());
+        // Out-of-range knobs are config errors, not panics.
+        assert!(from_name("trim:0.5").is_err());
+        assert!(from_name("sketch-trim:0.7").is_err());
+        assert!(from_name("geomedian:0").is_err());
+        // The rejection text carries the full grammar so it can't
+        // drift from the help string.
+        let err = from_name("bogus").unwrap_err().to_string();
+        assert!(err.contains(AGGREGATOR_HELP), "{err}");
     }
 
     #[test]
@@ -696,8 +796,17 @@ mod tests {
         assert_eq!(FedSgd.stream_kind(), Some(StreamKind::Uniform));
         assert_eq!(FedAvgM::new(0.9, 1.0).stream_kind(), Some(StreamKind::SampleWeighted));
         assert_eq!(FedAdam::new(0.01).stream_kind(), Some(StreamKind::SampleWeighted));
-        assert_eq!(CoordinateMedian.stream_kind(), None);
+        assert_eq!(CoordinateMedian::default().stream_kind(), None);
         assert_eq!(TrimmedMean::new(0.1).stream_kind(), None);
+        // The sketch rules stream (uniform weights) and observe every
+        // update; the exact robust rules stay materialized.
+        for name in ["sketch-median", "sketch-trim:0.2", "geomedian:8"] {
+            let a = from_name(name).unwrap();
+            assert_eq!(a.stream_kind(), Some(StreamKind::Uniform), "{name}");
+            assert!(a.observes_updates(), "{name}");
+        }
+        assert!(!FedAvg::default().observes_updates());
+        assert!(!CoordinateMedian::default().observes_updates());
     }
 
     #[test]

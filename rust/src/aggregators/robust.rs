@@ -1,0 +1,837 @@
+//! Streaming-capable Byzantine-robust aggregation rules.
+//!
+//! The exact robust rules ([`CoordinateMedian`], [`TrimmedMean`]) need
+//! every delta at once, which forces the K×P materialized path — the
+//! memory wall this module breaks. The rules here consume updates one
+//! at a time through [`Aggregator::observe_quantized`] into **fixed
+//! per-coordinate state whose size is independent of K**:
+//!
+//! - [`SketchMedian`] — coordinate-wise median over a per-coordinate
+//!   octave histogram ([`QuantileSketch`]).
+//! - [`SketchTrimmedMean`] — coordinate-wise β-trimmed mean over the
+//!   same sketch.
+//! - [`GeoMedian`] — approximate geometric median: Weiszfeld iteration
+//!   over a bounded, deterministically-sampled reservoir of deltas.
+//!
+//! ## Determinism contract
+//!
+//! Observations are the streaming reduce's own fixed-point wire terms
+//! ([`quantize_weighted`] at weight 1 — these rules are
+//! [`StreamKind::Uniform`]), so the engine path (deltas quantized
+//! locally) and the distributed path (terms received off the wire in
+//! `transport/leader.rs`) feed bit-identical integers. Sketch state is
+//! purely integral and commutative (bucket counts + shifted sums), and
+//! the reservoir selects by a pure priority hash of
+//! `(round, agent_id)`, so the finalized model is bit-identical under
+//! any arrival order, at any worker count, in any topology.
+//!
+//! ## Accuracy contract
+//!
+//! The sketch buckets magnitudes by octave (factor-of-two bands) on the
+//! 2⁻⁴⁰ fixed-point grid, with a near-zero band below ~2.4e-4. The
+//! median estimate is the mean of the bucket containing the median
+//! rank, so its error is bounded by that bucket's width: at most a
+//! factor of 2 in magnitude plus the near-zero band —
+//! `|sketch − exact| ≤ |exact| + 2.4e-4` coordinate-wise, and exact
+//! when the rank-adjacent updates agree (point masses). The trimmed
+//! mean prorates partially-trimmed buckets by kept fraction. The
+//! geometric median is exact up to Weiszfeld convergence whenever
+//! K ≤ the reservoir size, and a subsample approximation beyond it.
+
+use super::streaming::{FX_SCALE, FX_TERM_LIMIT};
+use super::{check, check_streamed, Aggregator, StreamKind, Update};
+use crate::runtime::ModelExecutor;
+use crate::util::error::{bail, Result};
+use crate::util::rng::splitmix64_mix;
+
+#[cfg(doc)]
+use super::{quantize_weighted, CoordinateMedian, TrimmedMean};
+
+/// Magnitudes below `2^SKETCH_MIN_BITS` on the grid (≈ 2.4e-4 in delta
+/// units) collapse into one near-zero band.
+const SKETCH_MIN_BITS: u32 = 28;
+/// Magnitudes at or above `2^SKETCH_MAX_BITS` (≈ 128.0 in delta units)
+/// share the top octave.
+const SKETCH_MAX_BITS: u32 = 47;
+const SKETCH_OCTAVES: usize = (SKETCH_MAX_BITS - SKETCH_MIN_BITS + 1) as usize;
+/// Buckets per coordinate: a signed octave pair per band + the
+/// near-zero band. Fixed — this is what makes sketch memory
+/// independent of K.
+pub const SKETCH_BUCKETS: usize = 2 * SKETCH_OCTAVES + 1;
+/// Per-bucket sums store `term >> SUM_SHIFT` so K updates of the
+/// largest representable term stay within i64 (saturating on overflow).
+/// Costs 2⁻²⁴ ≈ 6e-8 of delta resolution per term — noise next to the
+/// octave width.
+const SUM_SHIFT: u32 = 16;
+
+/// Salt for the reservoir priority hash (b"GEOM").
+const GEO_SALT: u64 = 0x4745_4F4D;
+
+/// Default Weiszfeld reservoir size.
+pub const GEOMEDIAN_RESERVOIR: usize = 32;
+const WEISZFELD_ITERS: usize = 64;
+const WEISZFELD_EPS: f64 = 1e-12;
+
+/// Quantize one delta coordinate exactly as [`quantize_weighted`] does
+/// at weight 1, so the materialized `aggregate()` path observes the
+/// same integers the streamed path receives off the wire.
+fn quantize1(d: f32) -> Result<i64> {
+    if !d.is_finite() {
+        bail!("non-finite delta term {d}");
+    }
+    let scaled = (d as f64).clamp(-FX_TERM_LIMIT, FX_TERM_LIMIT) * FX_SCALE;
+    match i64::try_from(scaled as i128) {
+        Ok(v) => Ok(v),
+        Err(_) => bail!("delta term {d} overflows the fixed-point grid"),
+    }
+}
+
+/// Undo the wire weight: round-half-away-from-zero division, so both
+/// topologies recover the identical weight-1 term from a weighted one.
+/// Weight 1 (the only weight Uniform rules see in practice) is exact.
+fn unweight(term: i64, weight: u64) -> i64 {
+    let w = weight.max(1) as i64;
+    let half = w / 2;
+    if term >= 0 {
+        (term + half) / w
+    } else {
+        (term - half) / w
+    }
+}
+
+/// Ascending-value bucket index of a grid term: negative octaves
+/// largest-magnitude first, then the near-zero band, then positive
+/// octaves smallest-magnitude first.
+fn bucket_of(v: i64) -> usize {
+    let mag = v.unsigned_abs();
+    if mag < (1u64 << SKETCH_MIN_BITS) {
+        return SKETCH_OCTAVES;
+    }
+    let bits = 64 - mag.leading_zeros();
+    let oct = ((bits - 1).min(SKETCH_MAX_BITS) - SKETCH_MIN_BITS) as usize;
+    if v < 0 {
+        SKETCH_OCTAVES - 1 - oct
+    } else {
+        SKETCH_OCTAVES + 1 + oct
+    }
+}
+
+/// Per-coordinate octave histogram on the streaming reduce's
+/// fixed-point grid: `SKETCH_BUCKETS` buckets of (count, shifted sum)
+/// per coordinate. Integral and commutative, so merging observations in
+/// any order yields identical state.
+pub struct QuantileSketch {
+    params: usize,
+    /// Updates observed since the last reset.
+    k: u32,
+    /// Round the current state belongs to; a new round resets first.
+    round: u64,
+    counts: Vec<u32>,
+    sums: Vec<i64>,
+}
+
+impl QuantileSketch {
+    pub fn new(params: usize) -> Self {
+        Self {
+            params,
+            k: 0,
+            round: 0,
+            counts: vec![0; params * SKETCH_BUCKETS],
+            sums: vec![0; params * SKETCH_BUCKETS],
+        }
+    }
+
+    pub fn updates(&self) -> u32 {
+        self.k
+    }
+
+    /// Bytes of sketch state — a function of P only, never of K.
+    pub fn state_bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<u32>()
+            + self.sums.len() * std::mem::size_of::<i64>()
+    }
+
+    fn reset(&mut self, round: u64) {
+        self.k = 0;
+        self.round = round;
+        self.counts.fill(0);
+        self.sums.fill(0);
+    }
+
+    /// Fold one update's weighted terms in. Resizes on a parameter-count
+    /// change and self-heals across skipped rounds by resetting when
+    /// the collecting round moves on.
+    fn observe(&mut self, round: u64, terms: &[i64], weight: u64) {
+        if terms.len() != self.params {
+            self.params = terms.len();
+            self.counts = vec![0; self.params * SKETCH_BUCKETS];
+            self.sums = vec![0; self.params * SKETCH_BUCKETS];
+            self.k = 0;
+            self.round = round;
+        } else if round != self.round {
+            self.reset(round);
+        }
+        for (i, &t) in terms.iter().enumerate() {
+            let v = unweight(t, weight);
+            let slot = i * SKETCH_BUCKETS + bucket_of(v);
+            self.counts[slot] += 1;
+            self.sums[slot] = self.sums[slot].saturating_add(v >> SUM_SHIFT);
+        }
+        self.k += 1;
+    }
+
+    /// Coordinate-wise median estimate: the mean of the bucket holding
+    /// the lower-middle rank `(k−1)/2`, walking buckets in ascending
+    /// value order.
+    fn median(&self, out: &mut Vec<f32>) {
+        let unit = (1u64 << SUM_SHIFT) as f64 / FX_SCALE;
+        let rank = u64::from((self.k - 1) / 2);
+        out.clear();
+        for i in 0..self.params {
+            let row = i * SKETCH_BUCKETS;
+            let mut cum = 0u64;
+            let mut med = 0.0f64;
+            for b in 0..SKETCH_BUCKETS {
+                let c = u64::from(self.counts[row + b]);
+                if c > 0 && cum + c > rank {
+                    med = self.sums[row + b] as f64 * unit / c as f64;
+                    break;
+                }
+                cum += c;
+            }
+            out.push(med as f32);
+        }
+    }
+
+    /// Coordinate-wise β-trimmed mean estimate: drop `⌊βk⌋` ranks off
+    /// each tail, prorating partially-kept buckets by kept fraction.
+    fn trimmed_mean(&self, beta: f64, out: &mut Vec<f32>) -> Result<usize> {
+        let k = u64::from(self.k);
+        let trim = (k as f64 * beta).floor() as u64;
+        if 2 * trim >= k {
+            bail!("trimmed mean with beta={beta} leaves no updates for k={k}");
+        }
+        let unit = (1u64 << SUM_SHIFT) as f64 / FX_SCALE;
+        let (lo, hi) = (trim, k - trim);
+        out.clear();
+        for i in 0..self.params {
+            let row = i * SKETCH_BUCKETS;
+            let mut cum = 0u64;
+            let mut total = 0.0f64;
+            for b in 0..SKETCH_BUCKETS {
+                let c = u64::from(self.counts[row + b]);
+                if c == 0 {
+                    continue;
+                }
+                let (b_lo, b_hi) = (cum, cum + c);
+                cum = b_hi;
+                let kept = b_hi.min(hi).saturating_sub(b_lo.max(lo));
+                if kept == 0 {
+                    continue;
+                }
+                total += self.sums[row + b] as f64 * unit * (kept as f64 / c as f64);
+            }
+            out.push((total / (hi - lo) as f64) as f32);
+        }
+        Ok(trim as usize)
+    }
+}
+
+/// Coordinate-wise sketch median — the streaming counterpart of
+/// [`CoordinateMedian`]; see the module docs for the accuracy contract.
+#[derive(Default)]
+pub struct SketchMedian {
+    sketch: Option<QuantileSketch>,
+    scratch: Vec<f32>,
+    last_trimmed: f64,
+}
+
+impl SketchMedian {
+    fn finalize(&mut self, global: &[f32]) -> Result<Vec<f32>> {
+        let sketch = match self.sketch.as_mut() {
+            Some(s) if s.updates() > 0 => s,
+            _ => bail!("sketch-median finalized with no observed updates"),
+        };
+        let k = f64::from(sketch.updates());
+        // A median keeps ~one rank per coordinate; report the rest as
+        // trimmed mass, mirroring the exact rule.
+        self.last_trimmed = (k - 1.0) / k;
+        let mut med = std::mem::take(&mut self.scratch);
+        sketch.median(&mut med);
+        sketch.reset(0);
+        let out = global.iter().zip(&med).map(|(g, m)| g + m).collect();
+        self.scratch = med;
+        Ok(out)
+    }
+}
+
+impl Aggregator for SketchMedian {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&dyn ModelExecutor>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        observe_materialized(self, updates)?;
+        self.finalize(global)
+    }
+
+    fn stream_kind(&self) -> Option<StreamKind> {
+        Some(StreamKind::Uniform)
+    }
+
+    fn observes_updates(&self) -> bool {
+        true
+    }
+
+    fn observe_quantized(
+        &mut self,
+        round: u64,
+        _agent_id: u64,
+        terms: &[i64],
+        weight: u64,
+    ) -> Result<()> {
+        self.sketch
+            .get_or_insert_with(|| QuantileSketch::new(terms.len()))
+            .observe(round, terms, weight);
+        Ok(())
+    }
+
+    fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
+        check_streamed(global, mean)?;
+        self.finalize(global)
+    }
+
+    fn trimmed_frac(&self) -> f64 {
+        self.last_trimmed
+    }
+
+    fn name(&self) -> &'static str {
+        "sketch-median"
+    }
+}
+
+/// Coordinate-wise sketch β-trimmed mean — the streaming counterpart
+/// of [`TrimmedMean`].
+pub struct SketchTrimmedMean {
+    pub beta: f64,
+    sketch: Option<QuantileSketch>,
+    scratch: Vec<f32>,
+    last_trimmed: f64,
+}
+
+impl SketchTrimmedMean {
+    pub fn new(beta: f64) -> Self {
+        assert!(
+            (0.0..0.5).contains(&beta),
+            "trim fraction must be in [0, 0.5)"
+        );
+        Self {
+            beta,
+            sketch: None,
+            scratch: Vec::new(),
+            last_trimmed: 0.0,
+        }
+    }
+
+    fn finalize(&mut self, global: &[f32]) -> Result<Vec<f32>> {
+        let beta = self.beta;
+        let sketch = match self.sketch.as_mut() {
+            Some(s) if s.updates() > 0 => s,
+            _ => bail!("sketch-trim finalized with no observed updates"),
+        };
+        let k = f64::from(sketch.updates());
+        let mut mean = std::mem::take(&mut self.scratch);
+        let trim = sketch.trimmed_mean(beta, &mut mean)?;
+        self.last_trimmed = 2.0 * trim as f64 / k;
+        sketch.reset(0);
+        let out = global.iter().zip(&mean).map(|(g, m)| g + m).collect();
+        self.scratch = mean;
+        Ok(out)
+    }
+}
+
+impl Aggregator for SketchTrimmedMean {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&dyn ModelExecutor>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        observe_materialized(self, updates)?;
+        self.finalize(global)
+    }
+
+    fn stream_kind(&self) -> Option<StreamKind> {
+        Some(StreamKind::Uniform)
+    }
+
+    fn observes_updates(&self) -> bool {
+        true
+    }
+
+    fn observe_quantized(
+        &mut self,
+        round: u64,
+        _agent_id: u64,
+        terms: &[i64],
+        weight: u64,
+    ) -> Result<()> {
+        self.sketch
+            .get_or_insert_with(|| QuantileSketch::new(terms.len()))
+            .observe(round, terms, weight);
+        Ok(())
+    }
+
+    fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
+        check_streamed(global, mean)?;
+        self.finalize(global)
+    }
+
+    fn trimmed_frac(&self) -> f64 {
+        self.last_trimmed
+    }
+
+    fn name(&self) -> &'static str {
+        "sketch-trim"
+    }
+}
+
+/// One retained delta: `(priority, agent_id, delta)`. The priority is a
+/// pure hash of `(round, agent_id)`, so which updates the reservoir
+/// keeps — and hence the finalized model — is independent of arrival
+/// order and worker count.
+type ReservoirEntry = (u64, u64, Vec<f32>);
+
+/// Approximate geometric median: Weiszfeld iteration over a bounded
+/// reservoir of at most `reservoir` deltas. Memory is `reservoir × P`,
+/// independent of K; for K ≤ `reservoir` it is the exact (converged)
+/// geometric median of all updates.
+pub struct GeoMedian {
+    pub reservoir: usize,
+    round: u64,
+    seen: u32,
+    entries: Vec<ReservoirEntry>,
+    last_trimmed: f64,
+}
+
+impl GeoMedian {
+    pub fn new(reservoir: usize) -> Self {
+        assert!(reservoir >= 1, "geomedian reservoir must be >= 1");
+        Self {
+            reservoir,
+            round: 0,
+            seen: 0,
+            entries: Vec::new(),
+            last_trimmed: 0.0,
+        }
+    }
+
+    fn priority(round: u64, agent_id: u64) -> u64 {
+        splitmix64_mix(splitmix64_mix(round ^ GEO_SALT) ^ agent_id)
+    }
+
+    fn reset(&mut self, round: u64) {
+        self.round = round;
+        self.seen = 0;
+        self.entries.clear();
+    }
+
+    fn observe(&mut self, round: u64, agent_id: u64, delta: Vec<f32>) {
+        if round != self.round {
+            self.reset(round);
+        }
+        self.seen += 1;
+        let entry = (Self::priority(round, agent_id), agent_id, delta);
+        if self.entries.len() < self.reservoir {
+            self.entries.push(entry);
+            return;
+        }
+        // Keep the `reservoir` smallest (priority, agent) keys.
+        let (worst, _) = self
+            .entries
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, e)| (e.0, e.1))
+            .map(|(i, e)| (i, (e.0, e.1)))
+            .expect("reservoir is non-empty");
+        if (entry.0, entry.1) < (self.entries[worst].0, self.entries[worst].1) {
+            self.entries[worst] = entry;
+        }
+    }
+
+    /// Weiszfeld fixed-point iteration in f64, from the coordinate
+    /// mean. Pure arithmetic over the sorted reservoir: deterministic.
+    fn weiszfeld(entries: &[ReservoirEntry]) -> Vec<f32> {
+        let p = entries[0].2.len();
+        let n = entries.len() as f64;
+        let mut y: Vec<f64> = vec![0.0; p];
+        for (_, _, x) in entries {
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi += f64::from(xi) / n;
+            }
+        }
+        let mut next = vec![0.0f64; p];
+        for _ in 0..WEISZFELD_ITERS {
+            let mut wsum = 0.0f64;
+            next.fill(0.0);
+            for (_, _, x) in entries {
+                let d2: f64 = x
+                    .iter()
+                    .zip(&y)
+                    .map(|(&xi, yi)| (f64::from(xi) - yi).powi(2))
+                    .sum();
+                let w = 1.0 / d2.sqrt().max(WEISZFELD_EPS);
+                wsum += w;
+                for (ni, &xi) in next.iter_mut().zip(x) {
+                    *ni += w * f64::from(xi);
+                }
+            }
+            let mut moved = 0.0f64;
+            for (yi, ni) in y.iter_mut().zip(&next) {
+                let v = ni / wsum;
+                moved += (v - *yi).powi(2);
+                *yi = v;
+            }
+            if moved <= 1e-24 {
+                break;
+            }
+        }
+        y.iter().map(|&v| v as f32).collect()
+    }
+
+    fn finalize(&mut self, global: &[f32]) -> Result<Vec<f32>> {
+        if self.entries.is_empty() {
+            bail!("geomedian finalized with no observed updates");
+        }
+        self.entries.sort_unstable_by_key(|e| (e.0, e.1));
+        let med = Self::weiszfeld(&self.entries);
+        self.last_trimmed =
+            f64::from(self.seen - self.entries.len() as u32) / f64::from(self.seen);
+        self.reset(0);
+        Ok(global.iter().zip(&med).map(|(g, m)| g + m).collect())
+    }
+}
+
+impl Aggregator for GeoMedian {
+    fn aggregate(
+        &mut self,
+        global: &[f32],
+        updates: &[Update],
+        _rt: Option<&dyn ModelExecutor>,
+    ) -> Result<Vec<f32>> {
+        check(global, updates)?;
+        observe_materialized(self, updates)?;
+        self.finalize(global)
+    }
+
+    fn stream_kind(&self) -> Option<StreamKind> {
+        Some(StreamKind::Uniform)
+    }
+
+    fn observes_updates(&self) -> bool {
+        true
+    }
+
+    fn observe_quantized(
+        &mut self,
+        round: u64,
+        agent_id: u64,
+        terms: &[i64],
+        weight: u64,
+    ) -> Result<()> {
+        let delta: Vec<f32> = terms
+            .iter()
+            .map(|&t| (unweight(t, weight) as f64 / FX_SCALE) as f32)
+            .collect();
+        self.observe(round, agent_id, delta);
+        Ok(())
+    }
+
+    fn apply_streamed(&mut self, global: &[f32], mean: &[f32]) -> Result<Vec<f32>> {
+        check_streamed(global, mean)?;
+        self.finalize(global)
+    }
+
+    fn trimmed_frac(&self) -> f64 {
+        self.last_trimmed
+    }
+
+    fn name(&self) -> &'static str {
+        "geomedian"
+    }
+}
+
+/// Materialized-path shim: feed `aggregate()`'s updates through the
+/// same quantize→observe pipeline the streamed path uses, so both
+/// paths are bit-identical. Round 0 here is fine — observers reset on
+/// finalize.
+fn observe_materialized(agg: &mut dyn Aggregator, updates: &[Update]) -> Result<()> {
+    let mut terms = Vec::with_capacity(updates[0].delta.len());
+    for u in updates {
+        terms.clear();
+        for &d in &u.delta {
+            terms.push(quantize1(d)?);
+        }
+        agg.observe_quantized(0, u.agent_id as u64, &terms, 1)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregators::{quantize_weighted, CoordinateMedian, TrimmedMean};
+
+    fn upd(agent_id: usize, delta: Vec<f32>) -> Update {
+        Update {
+            agent_id,
+            delta,
+            num_samples: 10,
+        }
+    }
+
+    #[test]
+    fn quantize1_matches_the_wire_quantizer() {
+        let delta = [0.5f32, -0.25, 1e-9, -3.75, 0.0, 100.0];
+        let wire = quantize_weighted(&delta, 1).unwrap();
+        let local: Vec<i64> = delta.iter().map(|&d| quantize1(d).unwrap()).collect();
+        assert_eq!(wire, local);
+    }
+
+    #[test]
+    fn bucket_order_is_ascending_in_value() {
+        // Most-negative → near-zero → most-positive.
+        let samples: Vec<i64> = vec![
+            i64::MIN + 1,
+            -(1 << 50),
+            -(1 << 30),
+            -(1 << 28),
+            -(1 << 27),
+            0,
+            1 << 27,
+            1 << 28,
+            1 << 30,
+            1 << 50,
+            i64::MAX,
+        ];
+        let buckets: Vec<usize> = samples.iter().map(|&v| bucket_of(v)).collect();
+        let mut sorted = buckets.clone();
+        sorted.sort_unstable();
+        assert_eq!(buckets, sorted, "bucket_of must be monotone: {buckets:?}");
+        assert!(buckets.iter().all(|&b| b < SKETCH_BUCKETS));
+        assert_eq!(bucket_of(0), SKETCH_OCTAVES);
+    }
+
+    #[test]
+    fn sketch_median_is_exact_on_point_masses() {
+        // 5 honest copies of v, 2 adversaries at -8v: the median bucket
+        // holds only copies of v, so the estimate is exact (up to the
+        // 2^-SUM_SHIFT grid shift).
+        let v = vec![0.5f32, -0.25, 0.125];
+        let mut updates: Vec<Update> = (0..5).map(|i| upd(i, v.clone())).collect();
+        let poisoned: Vec<f32> = v.iter().map(|x| -8.0 * x).collect();
+        updates.push(upd(5, poisoned.clone()));
+        updates.push(upd(6, poisoned));
+        let global = vec![0.0f32; 3];
+        let out = SketchMedian::default()
+            .aggregate(&global, &updates, None)
+            .unwrap();
+        for (o, e) in out.iter().zip(&v) {
+            assert!((o - e).abs() < 1e-4, "median {o} vs exact {e}");
+        }
+    }
+
+    #[test]
+    fn sketch_median_tracks_exact_median_within_tolerance() {
+        // Spread values across octaves; sketch error is bounded by the
+        // containing bucket's width: |s - e| <= |e| + 2.5e-4.
+        let k = 9;
+        let p = 16;
+        let mut updates = Vec::new();
+        for a in 0..k {
+            let delta: Vec<f32> = (0..p)
+                .map(|i| {
+                    let sign = if (a + i) % 2 == 0 { 1.0 } else { -1.0 };
+                    sign * 0.01f32 * (1.5f32.powi(a as i32) + i as f32 * 0.1)
+                })
+                .collect();
+            updates.push(upd(a, delta));
+        }
+        let global = vec![0.0f32; p];
+        let sketch = SketchMedian::default()
+            .aggregate(&global, &updates, None)
+            .unwrap();
+        let exact = CoordinateMedian::default()
+            .aggregate(&global, &updates, None)
+            .unwrap();
+        for (s, e) in sketch.iter().zip(&exact) {
+            assert!(
+                (s - e).abs() <= e.abs() + 2.5e-4,
+                "sketch {s} drifted from exact {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_trim_matches_exact_on_uniform_columns_and_drops_outliers() {
+        // 8 honest updates sharing one value per coordinate + 2 wild
+        // outliers; trim:0.2 drops exactly the outliers, and every kept
+        // bucket is a point mass, so sketch == exact (up to grid shift).
+        let v = vec![0.25f32, -0.5, 0.0625];
+        let mut updates: Vec<Update> = (0..8).map(|i| upd(i, v.clone())).collect();
+        updates.push(upd(8, vec![40.0, 40.0, 40.0]));
+        updates.push(upd(9, vec![-40.0, -40.0, -40.0]));
+        let global = vec![0.0f32; 3];
+        let sketch = SketchTrimmedMean::new(0.2)
+            .aggregate(&global, &updates, None)
+            .unwrap();
+        let exact = TrimmedMean::new(0.2)
+            .aggregate(&global, &updates, None)
+            .unwrap();
+        for ((s, e), want) in sketch.iter().zip(&exact).zip(&v) {
+            assert!((s - e).abs() < 1e-4, "sketch {s} vs exact {e}");
+            assert!((s - want).abs() < 1e-4, "outliers leaked into {s}");
+        }
+    }
+
+    #[test]
+    fn robust_rules_tolerate_floor_half_sign_flips_where_fedavg_flips() {
+        // The Byzantine tolerance property: with ⌊(K−1)/2⌋ = 4 of K = 9
+        // updates sign-flipped and scaled (−9×), every robust rule
+        // still recovers the honest value, while the FedAvg mean
+        // points the *opposite* way — (5·v − 36·v)/9 = −31/9·v.
+        let v = vec![0.25f32, -0.5, 0.0625];
+        let poisoned: Vec<f32> = v.iter().map(|x| -9.0 * x).collect();
+        let mut updates: Vec<Update> = (0..5).map(|i| upd(i, v.clone())).collect();
+        updates.extend((5..9).map(|i| upd(i, poisoned.clone())));
+        let global = vec![0.0f32; 3];
+
+        let rules: Vec<(&str, Box<dyn Aggregator>)> = vec![
+            ("median", Box::new(CoordinateMedian::default())),
+            ("trim", Box::new(TrimmedMean::new(0.45))),
+            ("sketch-median", Box::<SketchMedian>::default()),
+            ("sketch-trim", Box::new(SketchTrimmedMean::new(0.45))),
+            ("geomedian", Box::new(GeoMedian::new(GEOMEDIAN_RESERVOIR))),
+        ];
+        for (name, mut agg) in rules {
+            let out = agg.aggregate(&global, &updates, None).unwrap();
+            for (o, e) in out.iter().zip(&v) {
+                assert!((o - e).abs() < 1e-3, "{name}: {o} strayed from honest {e}");
+            }
+        }
+
+        let avg = super::super::FedAvg::default().aggregate(&global, &updates, None).unwrap();
+        for (a, e) in avg.iter().zip(&v) {
+            assert!(a * e < 0.0, "fedavg must flip sign under the attack: {a} vs honest {e}");
+        }
+    }
+
+    #[test]
+    fn sketch_state_is_independent_of_k() {
+        let p = 64;
+        let small = {
+            let mut s = QuantileSketch::new(p);
+            let terms = vec![1i64 << 30; p];
+            for _ in 0..10 {
+                s.observe(0, &terms, 1);
+            }
+            s.state_bytes()
+        };
+        let large = {
+            let mut s = QuantileSketch::new(p);
+            let terms = vec![1i64 << 30; p];
+            for _ in 0..1000 {
+                s.observe(0, &terms, 1);
+            }
+            s.state_bytes()
+        };
+        assert_eq!(small, large, "sketch memory must not grow with K");
+    }
+
+    #[test]
+    fn observers_are_permutation_invariant_bit_for_bit() {
+        let global = vec![0.1f32; 8];
+        let mut updates: Vec<Update> = (0..7)
+            .map(|a| {
+                let delta: Vec<f32> = (0..8)
+                    .map(|i| ((a * 13 + i * 7) as f32).sin() * 0.3)
+                    .collect();
+                upd(a, delta)
+            })
+            .collect();
+        let mk: Vec<fn() -> Box<dyn Aggregator>> = vec![
+            || Box::new(SketchMedian::default()),
+            || Box::new(SketchTrimmedMean::new(0.2)),
+            || Box::new(GeoMedian::new(4)),
+            || Box::new(GeoMedian::new(GEOMEDIAN_RESERVOIR)),
+        ];
+        for make in mk {
+            let forward = make().aggregate(&global, &updates, None).unwrap();
+            updates.reverse();
+            let backward = make().aggregate(&global, &updates, None).unwrap();
+            updates.reverse();
+            assert_eq!(forward, backward, "order changed the result");
+        }
+    }
+
+    #[test]
+    fn geomedian_resists_minority_point_attack() {
+        // 3 honest at v, 2 adversaries at -8v: the geometric median of
+        // the point cloud sits at v.
+        let v = vec![0.5f32, -0.25, 0.125, 0.0];
+        let mut updates: Vec<Update> = (0..3).map(|i| upd(i, v.clone())).collect();
+        let poisoned: Vec<f32> = v.iter().map(|x| -8.0 * x).collect();
+        updates.push(upd(3, poisoned.clone()));
+        updates.push(upd(4, poisoned));
+        let global = vec![0.0f32; 4];
+        let mut agg = GeoMedian::new(GEOMEDIAN_RESERVOIR);
+        let out = agg.aggregate(&global, &updates, None).unwrap();
+        for (o, e) in out.iter().zip(&v) {
+            assert!((o - e).abs() < 1e-3, "geomedian {o} vs honest {e}");
+        }
+        assert_eq!(agg.trimmed_frac(), 0.0, "no reservoir eviction at K=5");
+    }
+
+    #[test]
+    fn geomedian_reservoir_is_bounded_and_reports_trim() {
+        let p = 4;
+        let global = vec![0.0f32; p];
+        let updates: Vec<Update> = (0..50).map(|a| upd(a, vec![0.25f32; p])).collect();
+        let mut agg = GeoMedian::new(8);
+        let out = agg.aggregate(&global, &updates, None).unwrap();
+        for o in &out {
+            assert!((o - 0.25).abs() < 1e-5);
+        }
+        assert!((agg.trimmed_frac() - 42.0 / 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observers_reset_between_rounds() {
+        let global = vec![0.0f32; 2];
+        let mut agg = SketchMedian::default();
+        // Round 3 observes garbage that is never finalized …
+        agg.observe_quantized(3, 0, &[i64::MAX / 2, i64::MAX / 2], 1)
+            .unwrap();
+        // … then round 4 starts: the stale state must not leak in.
+        agg.observe_quantized(4, 1, &quantize_weighted(&[0.5, -0.5], 1).unwrap(), 1)
+            .unwrap();
+        let out = agg.apply_streamed(&global, &[0.0, 0.0]).unwrap();
+        assert!((out[0] - 0.5).abs() < 1e-4);
+        assert!((out[1] + 0.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn finalize_without_observations_is_an_error() {
+        let global = vec![0.0f32; 2];
+        assert!(SketchMedian::default()
+            .apply_streamed(&global, &[0.0, 0.0])
+            .is_err());
+        assert!(SketchTrimmedMean::new(0.2)
+            .apply_streamed(&global, &[0.0, 0.0])
+            .is_err());
+        assert!(GeoMedian::new(4).apply_streamed(&global, &[0.0, 0.0]).is_err());
+    }
+}

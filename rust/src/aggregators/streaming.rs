@@ -41,13 +41,14 @@ use crate::util::rng;
 const STRIPE_COORDS: usize = 1 << 14;
 
 /// Fixed-point scale: contributions are quantised to multiples of
-/// 2⁻⁴⁰ before the exact integer reduce.
-const FX_SCALE: f64 = (1u64 << 40) as f64;
+/// 2⁻⁴⁰ before the exact integer reduce. Shared with the robust
+/// sketch rules ([`super::robust`]), which live on the same grid.
+pub(crate) const FX_SCALE: f64 = (1u64 << 40) as f64;
 
 /// Headroom clamp on |w·delta| per term (pre-scale): at 2⁶⁰ the scaled
 /// term fits in 100 bits, so the i128 accumulator holds ≥ 2²⁷ terms
 /// before it could wrap — far beyond any cohort.
-const FX_TERM_LIMIT: f64 = (1u64 << 60) as f64;
+pub(crate) const FX_TERM_LIMIT: f64 = (1u64 << 60) as f64;
 
 /// A shared, lock-striped, order-invariant weighted-delta accumulator.
 ///

@@ -9,7 +9,8 @@ pub mod toml;
 use std::str::FromStr;
 
 use crate::engine::{
-    Backoff, ClockKind, FaultPlan, LatencyModel, RecoveryPolicy, RoundPolicy, SimTime,
+    AdversaryPlan, Backoff, ClockKind, FaultPlan, LatencyModel, RecoveryPolicy, RoundPolicy,
+    SimTime,
 };
 use crate::federation::Scheme;
 use crate::runtime::BackendKind;
@@ -279,6 +280,14 @@ pub struct FlParams {
     /// delta-loss / delta-corruption probabilities and a churn trace.
     /// `fl.dropout` folds in as its crash-before-delivery term.
     pub faults: FaultPlan,
+    /// Seeded Byzantine adversary plan (`faults.adversary`): sign-flip
+    /// / scale / noise perturbations and a colluding fixed set, drawn
+    /// from a dedicated salt stream keyed by `(seed, agent, round)` —
+    /// the attack replays bit-identically at any worker count and in
+    /// any topology. Unlike `faults.plan` casualties, a poisoned delta
+    /// is *well-formed*: it passes the integrity checksum and must be
+    /// defeated by the aggregation rule.
+    pub adversary: AdversaryPlan,
     /// Max retry attempts per failed client per round (`faults.retry`;
     /// 0 = failures are final).
     pub retry: u32,
@@ -335,6 +344,7 @@ impl Default for FlParams {
             staleness_alpha: 0.5,
             clock: ClockKind::Virtual,
             faults: FaultPlan::default(),
+            adversary: AdversaryPlan::default(),
             retry: 0,
             backoff: Backoff::default(),
             quorum: 0.0,
@@ -395,6 +405,9 @@ impl FlParams {
                 .get_float("engine.staleness_alpha", d.staleness_alpha)?,
             clock: doc.get_str("engine.clock", d.clock.name())?.parse()?,
             faults: doc.get_str("faults.plan", &d.faults.to_string())?.parse()?,
+            adversary: doc
+                .get_str("faults.adversary", &d.adversary.to_string())?
+                .parse()?,
             retry: doc.get_int("faults.retry", d.retry as i64)? as u32,
             backoff: doc.get_str("faults.backoff", &d.backoff.to_string())?.parse()?,
             quorum: doc.get_float("faults.quorum", d.quorum)?,
@@ -448,6 +461,7 @@ impl FlParams {
             bail!("staleness_alpha must be finite and >= 0");
         }
         self.faults.validate()?;
+        self.adversary.validate()?;
         self.recovery_policy().validate()?;
         self.topology.validate()?;
         if !self.topology.is_single() {
@@ -542,6 +556,12 @@ impl FlParams {
         out.push_str("eval_every = 0\n");
         out.push_str(&format!("max_local_steps = {}\n", self.max_local_steps));
         out.push_str("backend = \"native\"\n");
+        // The adversary plan must ride the wire: workers poison their
+        // own deltas *before* quantize+frame, so the leader-side
+        // checksum passes and only the aggregation rule stands between
+        // the attack and the global model.
+        out.push_str("[faults]\n");
+        out.push_str(&format!("adversary = {}\n", quote(&self.adversary.to_string())));
         out
     }
 
@@ -690,6 +710,8 @@ mod tests {
             "name = \"x\"\n[engine]\nclock = \"cuckoo\"\n",
             "name = \"x\"\n[engine]\nlatency = \"warp:9\"\n",
             "name = \"x\"\n[faults]\nplan = \"warp:0.1\"\n",
+            "name = \"x\"\n[faults]\nadversary = \"adv:warp:0.1\"\n",
+            "name = \"x\"\n[faults]\nadversary = \"adv:signflip:1.5\"\n",
             "name = \"x\"\n[faults]\nbackoff = \"1,0.5\"\n",
             "name = \"x\"\n[transport]\ntopology = \"mesh:3\"\n",
             "name = \"x\"\n[transport]\ntopology = \"multiprocess:zero\"\n",
@@ -800,6 +822,7 @@ mod tests {
         p.workers = 6;
         p.eval_every = 2;
         p.topology = Topology::InProc { workers: 2 };
+        p.adversary = "adv:signflip:0.25;adv:collude:-4,0.3".parse().unwrap();
         let q = FlParams::from_toml(&p.to_wire_toml()).unwrap();
         // Everything that shapes local training + sharding survives…
         assert_eq!(q.experiment_name, p.experiment_name);
@@ -810,6 +833,8 @@ mod tests {
         assert_eq!(q.lr, p.lr);
         assert_eq!(q.local_epochs, p.local_epochs);
         assert_eq!(q.dropout, p.dropout);
+        // The adversary plan rides the wire so workers poison on-device.
+        assert_eq!(q.adversary, p.adversary);
         // …while leader-only knobs are pinned for the worker.
         assert_eq!(q.topology, Topology::Single);
         assert_eq!(q.workers, 1);
@@ -852,6 +877,7 @@ mod tests {
             name = "chaos"
             [faults]
             plan = "crash:0.2;drop:0.1;churn:flapping:60,0.8"
+            adversary = "adv:scale:-5,0.3;adv:noise:0.5,0.1"
             retry = 2
             backoff = "0.5,2,0.25"
             quorum = 0.4
@@ -861,6 +887,11 @@ mod tests {
         .unwrap();
         assert_eq!(p.retry, 2);
         assert!(p.resample);
+        assert_eq!(p.adversary.scale, -5.0);
+        assert_eq!(p.adversary.scale_p, 0.3);
+        assert_eq!(p.adversary.noise_sigma, 0.5);
+        assert_eq!(p.adversary.noise_p, 0.1);
+        assert!(FlParams::default().adversary.is_none());
         let pol = p.round_policy();
         assert!(!pol.is_degenerate());
         assert!(pol.chaos_active());

@@ -241,6 +241,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                 sim_secs: 0.0,
                 outcome: RoundOutcome::Skipped(SkipReason::EmptyCohort),
                 recovery: RecoveryStats::default(),
+                adversarial: 0,
+                trimmed_frac: 0.0,
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -352,9 +354,17 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         let planned = sampled.len() + failed_at_dispatch.len();
         let survivors = sampled.len();
         let mut used: BTreeSet<usize> = train_ids.iter().copied().collect();
+        let mut adversarial = 0u32;
         for (i, res) in results.into_iter().enumerate() {
-            let (update, record) = res?;
+            let (mut update, record) = res?;
             let aid = record.agent_id;
+            // Byzantine adversary: the perturbation lands before the
+            // integrity checksum is stamped, so a poisoned delta is a
+            // *well-formed* frame — checksums verify integrity, not
+            // honesty, and only the aggregation rule can defeat it.
+            if ep.params.adversary.perturb(seed, aid as u64, round as u64, &mut update.delta) {
+                adversarial += 1;
+            }
             let checksum = delta_checksum(&update.delta);
             let mut pending = Pending {
                 update,
@@ -478,6 +488,21 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                         // the policy's staleness weight.
                         comm.wire_bytes += dense;
                         let w = policy.stream_weight(pending.base_weight, staleness);
+                        if ep.aggregator.observes_updates() {
+                            // Sketch rules fold each update into their
+                            // fixed-size state as it arrives — the
+                            // observation is the wire's own quantized
+                            // terms, so this is bit-identical to the
+                            // distributed leader's feed.
+                            let terms =
+                                crate::aggregators::quantize_weighted(&update.delta, w)?;
+                            ep.aggregator.observe_quantized(
+                                round as u64,
+                                agent_id as u64,
+                                &terms,
+                                w,
+                            )?;
+                        }
                         acc.push(&update.delta, w)?;
                     } else {
                         let compressed = ep.compressor.compress(&update.delta);
@@ -526,6 +551,7 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                             &global,
                             stream_kind,
                             uniform_weights,
+                            &mut adversarial,
                         )?;
                         if !replaced {
                             open = open.saturating_sub(1);
@@ -584,6 +610,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                 sim_secs,
                 outcome: RoundOutcome::Skipped(SkipReason::Quorum),
                 recovery: stats,
+                adversarial,
+                trimmed_frac: 0.0,
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -612,6 +640,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                 sim_secs,
                 outcome: RoundOutcome::Skipped(SkipReason::NoUpdates),
                 recovery: stats,
+                adversarial,
+                trimmed_frac: 0.0,
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -668,6 +698,8 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
             sim_secs,
             outcome: RoundOutcome::Aggregated,
             recovery: stats,
+            adversarial,
+            trimmed_frac: ep.aggregator.trimmed_frac(),
         };
         logger.log_round(&rec)?;
         rounds.push(rec);
@@ -726,6 +758,7 @@ fn try_replace(
     global: &Arc<Vec<f32>>,
     stream_kind: Option<StreamKind>,
     uniform_weights: bool,
+    adversarial: &mut u32,
 ) -> Result<bool> {
     if !recovery.resample {
         return Ok(false);
@@ -756,9 +789,14 @@ fn try_replace(
         seed: ep.params.seed,
     };
     let t_local = Instant::now();
-    let (update, record) =
+    let (mut update, record) =
         worker::with_runtime(&ep.manifest, &ep.key, |rt| worker::run_local(rt, &ep.dataset, &job))?;
     profiler.record("local_training", t_local.elapsed().as_secs_f64());
+    // Replacements draw from the same adversary stream as any other
+    // client — a resampled device can be Byzantine too.
+    if ep.params.adversary.perturb(ctx.seed, pick as u64, round as u64, &mut update.delta) {
+        *adversarial += 1;
+    }
     let base_weight = match stream_kind {
         Some(StreamKind::SampleWeighted) if !uniform_weights => {
             ep.agents[pick].shard.len() as u64

@@ -28,6 +28,17 @@ pub const FAULT_SALT: u64 = 0x4641_554C_54; // "FAULT"
 /// by `(seed, agent)` only and must not collide with per-round draws.
 const AVAIL_SALT: u64 = 0x4348_5552_4E; // "CHURN"
 
+/// Extra salt for Byzantine adversary draws: an attack is keyed by
+/// `(seed, agent, round)` only — never by attempt — so a retried or
+/// resent delta carries the *same* poisoned bits and the attack replays
+/// identically at any worker count and in any topology.
+pub const ADV_SALT: u64 = 0x4144_5645_52; // "ADVER"
+
+/// Extra salt for colluder-set membership: whether an agent belongs to
+/// the fixed colluding set is a property of the *run*, not of any one
+/// round, so it is keyed by `(seed, agent)` only.
+const COLLUDE_SALT: u64 = 0x434F_4C4C; // "COLL"
+
 /// A client availability (churn) trace: when is an agent reachable?
 ///
 /// Both cyclic models are closed-form — an agent is *on* during the
@@ -393,6 +404,228 @@ impl std::fmt::Display for FaultPlan {
     }
 }
 
+/// A seeded Byzantine adversary model: *who* poisons their delta, and
+/// *how*. The complement of [`FaultPlan`] — faults model clients that
+/// fail, adversaries model clients that lie.
+///
+/// Config/CLI syntax (semicolon-separated `adv:*` terms, `none` for the
+/// empty plan):
+///
+/// ```text
+/// adv:signflip:0.3                  # P(delta *= -1) per (agent, round)
+/// adv:scale:-5,0.3                  # P(delta *= F) per (agent, round)
+/// adv:noise:0.5,0.2                 # P(delta += SIGMA*gaussian) per (agent, round)
+/// adv:collude:-4,0.3                # a fixed FRAC of agents scales by F every round
+/// adv:signflip:0.1;adv:noise:1,0.1  # terms compose
+/// ```
+///
+/// Every draw comes from a dedicated stream
+/// `Rng::new(seed ^ FAULT_SALT ^ ADV_SALT).split(agent).split(round)`
+/// (colluder membership from a `(seed, agent)`-keyed stream), so the
+/// attack is a pure function of `(seed, agent, round)`: it replays
+/// bit-identically at any worker count, on retries/resends, and across
+/// topologies — the engine driver and the wire workers apply the exact
+/// same perturbation to the exact same training delta.
+///
+/// Note the integrity checksums (PR 7 `delta_checksum`, PR 8 frame
+/// digests) verify *integrity, not honesty*: a poisoned delta is
+/// well-formed, passes framing, and must be defeated by the
+/// aggregation rule, not the transport.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AdversaryPlan {
+    /// P(delta is sign-flipped) per `(agent, round)`.
+    pub signflip: f64,
+    /// Scale factor applied when the scale attack fires (may be
+    /// negative: a scaled sign-flip).
+    pub scale: f64,
+    /// P(delta is scaled by [`Self::scale`]) per `(agent, round)`.
+    pub scale_p: f64,
+    /// Std-dev of the additive gaussian noise attack.
+    pub noise_sigma: f64,
+    /// P(delta gets additive noise) per `(agent, round)`.
+    pub noise_p: f64,
+    /// Scale factor the colluding fixed set applies every round.
+    pub collude_scale: f64,
+    /// Fraction of the agent population in the colluding set (each
+    /// agent's membership is one seeded Bernoulli draw, fixed for the
+    /// whole run).
+    pub collude_frac: f64,
+}
+
+impl AdversaryPlan {
+    /// True when no attack can ever fire.
+    pub fn is_none(&self) -> bool {
+        self.signflip <= 0.0
+            && self.scale_p <= 0.0
+            && self.noise_p <= 0.0
+            && self.collude_frac <= 0.0
+    }
+
+    /// Is `agent_id` in the colluding fixed set? Pure function of
+    /// `(seed, agent)` — membership never changes across rounds.
+    pub fn is_colluder(&self, seed: u64, agent_id: u64) -> bool {
+        self.collude_frac > 0.0
+            && Rng::new(seed ^ FAULT_SALT ^ ADV_SALT ^ COLLUDE_SALT).split(agent_id).next_f64()
+                < self.collude_frac
+    }
+
+    /// The per-round attack draws, in fixed order (signflip, scale,
+    /// noise), plus the stream positioned for the noise gaussians.
+    fn draws(&self, seed: u64, agent_id: u64, round: u64) -> (bool, bool, bool, Rng) {
+        let mut rng = Rng::new(seed ^ FAULT_SALT ^ ADV_SALT).split(agent_id).split(round);
+        let flip = rng.next_f64() < self.signflip;
+        let scale = rng.next_f64() < self.scale_p;
+        let noise = rng.next_f64() < self.noise_p;
+        (flip, scale, noise, rng)
+    }
+
+    /// Would [`Self::perturb`] touch this delta? Same draws, no delta
+    /// needed — lets the wire leader account adversarial deltas without
+    /// ever seeing the unpoisoned bits.
+    pub fn is_adversarial(&self, seed: u64, agent_id: u64, round: u64) -> bool {
+        if self.is_none() {
+            return false;
+        }
+        let (flip, scale, noise, _) = self.draws(seed, agent_id, round);
+        flip || scale || noise || self.is_colluder(seed, agent_id)
+    }
+
+    /// Apply the attack to one training delta in place. Returns whether
+    /// anything fired (always equal to [`Self::is_adversarial`] for the
+    /// same key). Pure function of `(seed, agent, round, delta)`.
+    pub fn perturb(&self, seed: u64, agent_id: u64, round: u64, delta: &mut [f32]) -> bool {
+        if self.is_none() {
+            return false;
+        }
+        let (flip, scale, noise, mut rng) = self.draws(seed, agent_id, round);
+        let collude = self.is_colluder(seed, agent_id);
+        if !(flip || scale || noise || collude) {
+            return false;
+        }
+        let mut factor = 1.0f32;
+        if flip {
+            factor = -factor;
+        }
+        if scale {
+            factor *= self.scale as f32;
+        }
+        if collude {
+            factor *= self.collude_scale as f32;
+        }
+        if factor != 1.0 {
+            for d in delta.iter_mut() {
+                *d *= factor;
+            }
+        }
+        if noise {
+            let sigma = self.noise_sigma as f32;
+            for d in delta.iter_mut() {
+                *d += sigma * rng.next_gaussian();
+            }
+        }
+        true
+    }
+
+    /// Reject plans a struct literal could build but parsing would not.
+    pub fn validate(&self) -> Result<()> {
+        let prob = |name: &str, v: f64| -> Result<()> {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("adversary {name} must be a probability in [0, 1], got {v}");
+            }
+            Ok(())
+        };
+        prob("signflip", self.signflip)?;
+        prob("scale P", self.scale_p)?;
+        prob("noise P", self.noise_p)?;
+        prob("collude FRAC", self.collude_frac)?;
+        if self.scale_p > 0.0 && !self.scale.is_finite() {
+            bail!("adversary scale factor must be finite, got {}", self.scale);
+        }
+        if self.noise_p > 0.0 && !(self.noise_sigma.is_finite() && self.noise_sigma >= 0.0) {
+            bail!("adversary noise SIGMA must be finite and >= 0, got {}", self.noise_sigma);
+        }
+        if self.collude_frac > 0.0 && !self.collude_scale.is_finite() {
+            bail!("adversary collude factor must be finite, got {}", self.collude_scale);
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for AdversaryPlan {
+    type Err = Error;
+
+    /// `none` | `TERM[;TERM...]` with terms `adv:signflip:P`,
+    /// `adv:scale:F,P`, `adv:noise:SIGMA,P`, `adv:collude:F,FRAC` (the
+    /// `adv:` prefix is optional per term).
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let mut plan = AdversaryPlan::default();
+        if matches!(s.to_ascii_lowercase().as_str(), "" | "none" | "0") {
+            return Ok(plan);
+        }
+        let pair = |args: &str, what: &str| -> Result<(f64, f64)> {
+            let (a, b) = args
+                .split_once(',')
+                .with_context(|| format!("adversary {what} needs two comma-separated numbers"))?;
+            Ok((
+                a.trim().parse().with_context(|| format!("{what}:{args}"))?,
+                b.trim().parse().with_context(|| format!("{what}:{args}"))?,
+            ))
+        };
+        for term in s.split(';') {
+            let term = term.trim();
+            let term = term.strip_prefix("adv:").unwrap_or(term);
+            let (key, args) = term.split_once(':').with_context(|| {
+                format!(
+                    "adversary term {term:?} needs key:value (adv:signflip:P | \
+                     adv:scale:F,P | adv:noise:SIGMA,P | adv:collude:F,FRAC)"
+                )
+            })?;
+            let args = args.trim();
+            match key.trim().to_ascii_lowercase().as_str() {
+                "signflip" => {
+                    plan.signflip = args.parse().with_context(|| format!("signflip:{args}"))?;
+                }
+                "scale" => (plan.scale, plan.scale_p) = pair(args, "scale")?,
+                "noise" => (plan.noise_sigma, plan.noise_p) = pair(args, "noise")?,
+                "collude" => (plan.collude_scale, plan.collude_frac) = pair(args, "collude")?,
+                other => bail!(
+                    "unknown adversary term {other:?} (signflip | scale | noise | collude)"
+                ),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for AdversaryPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_none() {
+            return f.write_str("none");
+        }
+        let mut sep = "";
+        let mut term = |f: &mut std::fmt::Formatter<'_>, t: String| -> std::fmt::Result {
+            let r = write!(f, "{sep}{t}");
+            sep = ";";
+            r
+        };
+        if self.signflip > 0.0 {
+            term(f, format!("adv:signflip:{}", self.signflip))?;
+        }
+        if self.scale_p > 0.0 {
+            term(f, format!("adv:scale:{},{}", self.scale, self.scale_p))?;
+        }
+        if self.noise_p > 0.0 {
+            term(f, format!("adv:noise:{},{}", self.noise_sigma, self.noise_p))?;
+        }
+        if self.collude_frac > 0.0 {
+            term(f, format!("adv:collude:{},{}", self.collude_scale, self.collude_frac))?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -493,6 +726,91 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s), "all four fates occur at these rates: {seen:?}");
+    }
+
+    #[test]
+    fn adversary_parses_and_roundtrips() {
+        for spec in [
+            "none",
+            "adv:signflip:0.3",
+            "adv:scale:-5,0.3",
+            "adv:noise:0.5,0.2",
+            "adv:collude:-4,0.3",
+            "adv:signflip:0.1;adv:noise:1,0.1",
+            "signflip:0.25", // the adv: prefix is optional
+        ] {
+            let p: AdversaryPlan = spec.parse().unwrap();
+            assert_eq!(p.to_string().parse::<AdversaryPlan>().unwrap(), p, "{spec}");
+        }
+        assert_eq!("".parse::<AdversaryPlan>().unwrap(), AdversaryPlan::default());
+        assert_eq!("none".parse::<AdversaryPlan>().unwrap().to_string(), "none");
+        assert!("adv:signflip:1.5".parse::<AdversaryPlan>().is_err());
+        assert!("adv:warp:0.1".parse::<AdversaryPlan>().is_err());
+        assert!("adv:scale:2".parse::<AdversaryPlan>().is_err(), "scale needs F,P");
+        assert!("adv:noise:-1,0.5".parse::<AdversaryPlan>().is_err(), "sigma >= 0");
+    }
+
+    #[test]
+    fn adversary_perturb_is_a_pure_function_of_its_key() {
+        let plan: AdversaryPlan = "adv:signflip:0.4;adv:noise:0.5,0.4".parse().unwrap();
+        let base = vec![0.5f32, -0.25, 0.125, 1.0];
+        // Replay is exact, and only (seed, agent, round) key the draws.
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let fired_a = plan.perturb(42, 3, 5, &mut a);
+        let fired_b = plan.perturb(42, 3, 5, &mut b);
+        assert_eq!(fired_a, fired_b);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "attack replays bit-identically"
+        );
+        assert_eq!(fired_a, plan.is_adversarial(42, 3, 5), "perturb agrees with is_adversarial");
+        // Some key in a small window both fires and stays clean.
+        let fired: Vec<bool> = (0..64).map(|aid| plan.is_adversarial(42, aid, 0)).collect();
+        assert!(fired.iter().any(|&f| f) && fired.iter().any(|&f| !f), "{fired:?}");
+    }
+
+    #[test]
+    fn adversary_modes_do_what_they_say() {
+        let base = vec![0.5f32, -0.25, 0.125];
+        // signflip:1 always fires and exactly negates.
+        let flip: AdversaryPlan = "adv:signflip:1".parse().unwrap();
+        let mut d = base.clone();
+        assert!(flip.perturb(1, 0, 0, &mut d));
+        assert_eq!(d, vec![-0.5, 0.25, -0.125]);
+        // scale with P=1 multiplies by F.
+        let scale: AdversaryPlan = "adv:scale:-4,1".parse().unwrap();
+        let mut d = base.clone();
+        assert!(scale.perturb(1, 0, 0, &mut d));
+        assert_eq!(d, vec![-2.0, 1.0, -0.5]);
+        // noise with P=1 changes the delta (almost surely).
+        let noise: AdversaryPlan = "adv:noise:0.5,1".parse().unwrap();
+        let mut d = base.clone();
+        assert!(noise.perturb(1, 0, 0, &mut d));
+        assert_ne!(d, base);
+        // An inert plan never touches anything.
+        let mut d = base.clone();
+        assert!(!AdversaryPlan::default().perturb(1, 0, 0, &mut d));
+        assert_eq!(d, base);
+    }
+
+    #[test]
+    fn colluder_set_is_fixed_across_rounds() {
+        let plan: AdversaryPlan = "adv:collude:-4,0.3".parse().unwrap();
+        let members: Vec<bool> = (0..64).map(|aid| plan.is_colluder(42, aid)).collect();
+        assert!(members.iter().any(|&m| m) && members.iter().any(|&m| !m), "{members:?}");
+        for (aid, &m) in members.iter().enumerate() {
+            // Membership is round-independent: every round agrees.
+            for round in 0..8 {
+                assert_eq!(plan.is_adversarial(42, aid as u64, round), m, "agent {aid}");
+            }
+        }
+        // Colluders scale their delta by F every round.
+        let colluder = members.iter().position(|&m| m).unwrap() as u64;
+        let mut d = vec![0.5f32, -0.25];
+        assert!(plan.perturb(42, colluder, 3, &mut d));
+        assert_eq!(d, vec![-2.0, 1.0]);
     }
 
     #[test]

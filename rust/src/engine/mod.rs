@@ -46,7 +46,7 @@ pub mod policy;
 pub mod recovery;
 
 pub use clock::{Clock, ClockKind, SimTime, VirtualClock, WallClock};
-pub use faults::{Availability, FailureReason, FaultPlan};
+pub use faults::{AdversaryPlan, Availability, FailureReason, FaultPlan};
 pub use latency::LatencyModel;
 pub use policy::RoundPolicy;
 pub use recovery::{Backoff, RecoveryPolicy};

@@ -261,6 +261,8 @@ impl Entrypoint {
                     sim_secs: 0.0,
                     outcome: RoundOutcome::Skipped(SkipReason::EmptyCohort),
                     recovery: RecoveryStats::default(),
+                    adversarial: 0,
+                    trimmed_frac: 0.0,
                 };
                 logger.log_round(&rec)?;
                 rounds.push(rec);
@@ -275,7 +277,13 @@ impl Entrypoint {
             // pass. FedAvg weights depend only on shard sizes, which are
             // known before dispatch (and the defense is a no-op on this
             // path, so the cohort cannot shrink after pushing).
-            let stream_kind = self.stream_kind();
+            // Observer rules (the sketch defenses) fold updates into
+            // leader-side state, which the pool closures cannot reach;
+            // this reference loop routes them through the materialized
+            // path — bit-identical, since their `aggregate()` replays
+            // the same quantize→observe pipeline.
+            let stream_kind =
+                if self.aggregator.observes_updates() { None } else { self.stream_kind() };
             let stream_acc = if stream_kind.is_some() {
                 let p = self.global.len();
                 if self.stream_acc.as_ref().is_some_and(|acc| acc.len() == p) {
@@ -327,9 +335,20 @@ impl Entrypoint {
                 // — the reduce is order-invariant, so the result is
                 // identical to the workers pushing as they finish.
                 let jobs: Vec<LocalJob> = sampled.iter().map(|&aid| mk_job(aid)).collect();
-                let list = worker::with_runtime(&self.manifest, &self.key, |rt| {
+                let mut list = worker::with_runtime(&self.manifest, &self.key, |rt| {
                     worker::run_local_fused(rt, &self.dataset, &jobs)
                 })?;
+                // Byzantine clients perturb before anything leaves the
+                // device — the accumulator push and the aggregate both
+                // see the poisoned delta.
+                for (update, record) in list.iter_mut() {
+                    self.params.adversary.perturb(
+                        self.params.seed,
+                        record.agent_id as u64,
+                        round as u64,
+                        &mut update.delta,
+                    );
+                }
                 if let Some(acc) = &stream_acc {
                     for (i, (update, _)) in list.iter().enumerate() {
                         acc.push(&update.delta, stream_weights[i])?;
@@ -345,11 +364,20 @@ impl Entrypoint {
                         let manifest = Arc::clone(&self.manifest);
                         let dataset = Arc::clone(&self.dataset);
                         let key = self.key.clone();
+                        let adversary = self.params.adversary.clone();
                         let stream =
                             stream_acc.as_ref().map(|acc| (Arc::clone(acc), stream_weights[i]));
                         move |_wid: usize| -> Result<_> {
                             worker::with_runtime(&manifest, &key, |rt| {
-                                let (update, record) = worker::run_local(rt, &dataset, &job)?;
+                                let (mut update, record) = worker::run_local(rt, &dataset, &job)?;
+                                // The perturbation happens on-device,
+                                // before the delta reaches the reduce.
+                                adversary.perturb(
+                                    job.seed,
+                                    job.agent_id as u64,
+                                    job.round as u64,
+                                    &mut update.delta,
+                                );
                                 if let Some((acc, w)) = &stream {
                                     acc.push(&update.delta, *w)?;
                                 }
@@ -365,8 +393,19 @@ impl Entrypoint {
             let mut updates = Vec::with_capacity(results.len());
             let mut train_loss = Accumulator::default();
             let mut train_acc = Accumulator::default();
+            let mut adversarial = 0u32;
             for res in results {
                 let (mut update, record) = res?;
+                // `perturb` fired inside the worker closure; its draw
+                // is a pure function of (seed, agent, round), so the
+                // counter can be reconstructed here.
+                if self.params.adversary.is_adversarial(
+                    self.params.seed,
+                    record.agent_id as u64,
+                    round as u64,
+                ) {
+                    adversarial += 1;
+                }
                 train_loss.add(record.final_loss());
                 train_acc.add(record.final_acc());
                 self.agents[record.agent_id]
@@ -410,6 +449,8 @@ impl Entrypoint {
                     sim_secs: 0.0,
                     outcome: RoundOutcome::Skipped(SkipReason::NoUpdates),
                     recovery: RecoveryStats::default(),
+                    adversarial,
+                    trimmed_frac: 0.0,
                 };
                 logger.log_round(&rec)?;
                 rounds.push(rec);
@@ -472,6 +513,8 @@ impl Entrypoint {
                 sim_secs: 0.0,
                 outcome: RoundOutcome::Aggregated,
                 recovery: RecoveryStats::default(),
+                adversarial,
+                trimmed_frac: self.aggregator.trimmed_frac(),
             };
             logger.log_round(&rec)?;
             rounds.push(rec);

@@ -94,8 +94,8 @@ pub mod zoo;
 pub mod prelude {
     pub use crate::config::{FlParams, Mode, Optimizer, Topology};
     pub use crate::engine::{
-        Availability, Backoff, Clock, ClockKind, Event, EventQueue, FailureReason, FaultPlan,
-        LatencyModel, RecoveryPolicy, RoundPolicy, SimTime, VirtualClock, WallClock,
+        AdversaryPlan, Availability, Backoff, Clock, ClockKind, Event, EventQueue, FailureReason,
+        FaultPlan, LatencyModel, RecoveryPolicy, RoundPolicy, SimTime, VirtualClock, WallClock,
     };
     pub use crate::entrypoint::{Entrypoint, Experiment, ExperimentBuilder, RunResult};
     pub use crate::federation::Scheme;

@@ -81,6 +81,12 @@ impl Logger for ConsoleLogger {
                 s.failures, s.retries, s.corrupt_rejected, s.replacements
             ));
         }
+        if r.adversarial > 0 {
+            extras.push_str(&format!(" | {} byzantine", r.adversarial));
+        }
+        if r.trimmed_frac > 0.0 {
+            extras.push_str(&format!(" | trimmed {:.0}%", r.trimmed_frac * 100.0));
+        }
         println!(
             "[round {:>3}] train loss {:.4} acc {:.3}{} | {} agents{} | {:.2}s",
             r.round,
@@ -156,7 +162,7 @@ impl CsvLogger {
         // `csv_fault_columns_append_after_the_legacy_ones`).
         writeln!(
             rounds,
-            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,num_dropped,num_rejected,secs,sim_secs,outcome,failures,retries,corrupt_rejected,replacements"
+            "round,train_loss,train_acc,eval_loss,eval_acc,num_sampled,num_dropped,num_rejected,secs,sim_secs,outcome,failures,retries,corrupt_rejected,replacements,adversarial,trimmed_frac"
         )?;
         writeln!(
             agents,
@@ -171,7 +177,7 @@ impl Logger for CsvLogger {
     fn log_round(&mut self, r: &RoundRecord) -> Result<()> {
         writeln!(
             self.rounds,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             r.round,
             r.train_loss,
             r.train_acc,
@@ -186,7 +192,9 @@ impl Logger for CsvLogger {
             r.recovery.failures,
             r.recovery.retries,
             r.recovery.corrupt_rejected,
-            r.recovery.replacements
+            r.recovery.replacements,
+            r.adversarial,
+            r.trimmed_frac
         )?;
         Ok(())
     }
@@ -272,6 +280,8 @@ impl Logger for JsonlLogger {
             ("retries", Json::num(r.recovery.retries as f64)),
             ("corrupt_rejected", Json::num(r.recovery.corrupt_rejected as f64)),
             ("replacements", Json::num(r.recovery.replacements as f64)),
+            ("adversarial", Json::num(r.adversarial as f64)),
+            ("trimmed_frac", Json::num(r.trimmed_frac)),
         ]);
         writeln!(self.out, "{}", j.to_string())?;
         Ok(())
@@ -387,6 +397,8 @@ mod tests {
             sim_secs: 0.0,
             outcome: RoundOutcome::Aggregated,
             recovery: RecoveryStats::default(),
+            adversarial: 0,
+            trimmed_frac: 0.0,
         }
     }
 
@@ -458,6 +470,24 @@ mod tests {
         let events = std::fs::read_to_string(dir.join("t_events.csv")).unwrap();
         assert!(events.starts_with("time,kind,round,agent_id,staleness,reason"));
         assert!(events.contains("1.5,client_failed,3,4,,crash"), "{events}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_adversary_columns_append_after_the_recovery_ones() {
+        // Same append-only contract as the fault columns: adversary /
+        // robustness counters land after `replacements`.
+        let dir = std::env::temp_dir().join(format!("ferrisfl-csva-{}", std::process::id()));
+        let mut l = CsvLogger::create(&dir, "t").unwrap();
+        let mut r = sample_round();
+        r.adversarial = 2;
+        r.trimmed_frac = 0.4;
+        l.log_round(&r).unwrap();
+        l.finish().unwrap();
+        let rounds = std::fs::read_to_string(dir.join("t_rounds.csv")).unwrap();
+        let header = rounds.lines().next().unwrap();
+        assert!(header.ends_with("replacements,adversarial,trimmed_frac"), "{header}");
+        assert!(rounds.contains("aggregated,0,0,0,0,2,0.4"), "{rounds}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

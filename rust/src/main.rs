@@ -25,7 +25,8 @@ USAGE:
   ferrisfl run --config <file.toml> [--backend native|pjrt] [--artifacts <dir>] [--workers <n>] [--fuse]
                [--topology single|inproc:N|multiprocess:N|tcp:<addr>] [--save-model <path>]
                [--latency <model>] [--deadline <secs>] [--goal <k>] [--staleness-alpha <a>] [--clock virtual|wall]
-               [--fault-plan <plan>] [--retry <n>] [--backoff <b[,f[,j]]>] [--quorum <frac>] [--resample]
+               [--fault-plan <plan>] [--adversary <spec>] [--retry <n>] [--backoff <b[,f[,j]]>]
+               [--quorum <frac>] [--resample]
   ferrisfl worker --connect uds:<path>|tcp:<host:port>
   ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
   ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
@@ -57,6 +58,13 @@ FAULTS & RECOVERY (seeded chaos; replays bit-identically):
   --fault-plan <plan>     none | TERM[;TERM...] with dropout:P crash:P
                           drop:P corrupt:P churn:flapping:PERIOD,DUTY
                           churn:diurnal:PERIOD,DUTY
+  --adversary <spec>      seeded Byzantine clients: none | TERM[;TERM...]
+                          with adv:signflip:P adv:scale:F,P
+                          adv:noise:SIGMA,P adv:collude:F,FRAC; poisoned
+                          deltas pass the integrity checks — pair with a
+                          robust --aggregator (median | trim[:beta] |
+                          sketch-median | sketch-trim[:beta] |
+                          geomedian[:reservoir])
   --retry <n>             retry attempts per failed client (default 0)
   --backoff <b[,f[,j]]>   retry backoff BASE[,FACTOR[,JITTER]] seconds
   --quorum <frac>         skip rounds with fewer arrivals than this
@@ -157,6 +165,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.opt("fault-plan") {
         params.faults = p.parse()?;
+    }
+    if let Some(a) = args.opt("adversary") {
+        params.adversary = a.parse()?;
     }
     if let Some(r) = args.opt("retry") {
         params.retry = r.parse()?;

@@ -88,6 +88,15 @@ pub struct RoundRecord {
     pub outcome: RoundOutcome,
     /// Failure/recovery counters for the round.
     pub recovery: RecoveryStats,
+    /// Updates the adversary plan perturbed this round (Byzantine
+    /// clients drawn; 0 with `adversary = "none"`). A poisoned delta
+    /// still passes the integrity checksum — this counter is the
+    /// ground truth the robust rules are up against.
+    pub adversarial: u32,
+    /// Fraction of update mass the aggregation rule excluded
+    /// (trim/median/reservoir rules; 0 for plain averaging and on
+    /// skipped rounds).
+    pub trimmed_frac: f64,
 }
 
 /// One engine event, as surfaced to the loggers (the `engine` module's

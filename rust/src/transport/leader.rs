@@ -116,7 +116,9 @@ pub(crate) fn run_distributed(ep: &mut Entrypoint, logger: &mut dyn Logger) -> R
     let Some(stream_kind) = ep.stream_kind() else {
         bail!(
             "distributed topologies stream every delta, but aggregator {:?} (or an active \
-             defense/compressor) needs the materialized cohort; run with topology = \"single\"",
+             defense/compressor) needs the materialized cohort; run with topology = \"single\", \
+             or use a sketch-based robust rule (sketch-median | sketch-trim | geomedian), \
+             which streams",
             ep.params.aggregator
         );
     };
@@ -360,6 +362,8 @@ fn drive_rounds(
                 sim_secs: 0.0,
                 outcome: RoundOutcome::Skipped(SkipReason::EmptyCohort),
                 recovery: RecoveryStats::default(),
+                adversarial: 0,
+                trimmed_frac: 0.0,
             };
             logger.log_round(&rec)?;
             rounds.push(rec);
@@ -466,6 +470,19 @@ fn drive_rounds(
                             )?;
                             progressed = true;
                             continue;
+                        }
+                        // Sketch-based robust rules fold each verified
+                        // frame's terms into their bounded state — the
+                        // same wire terms the reduce folds, so the
+                        // observation is bit-identical to every other
+                        // topology. Duplicates were dropped above.
+                        if ep.aggregator.observes_updates() {
+                            ep.aggregator.observe_quantized(
+                                round as u64,
+                                agent_id as u64,
+                                &terms,
+                                weight,
+                            )?;
                         }
                         acc.push_quantized(&terms, weight)?;
                         comm.dense_bytes += (terms.len() * 4) as u64;
@@ -584,6 +601,16 @@ fn drive_rounds(
         ep.global = new_global;
         profiler.record("aggregation", t_agg.elapsed().as_secs_f64());
 
+        // Byzantine accounting: workers poison on-device, so the leader
+        // never sees the honest bits — but the draw is a pure function
+        // of (seed, agent, round), so it can be reconstructed exactly.
+        let adversarial = sampled
+            .iter()
+            .filter(|&&aid| {
+                ep.params.adversary.is_adversarial(ep.params.seed, aid as u64, round as u64)
+            })
+            .count() as u32;
+
         // 6. evaluate on the leader's own pool at the configured cadence.
         let do_eval = ep.params.eval_every > 0 && (round + 1) % ep.params.eval_every == 0;
         let eval = if do_eval {
@@ -617,6 +644,8 @@ fn drive_rounds(
             sim_secs: 0.0,
             outcome: RoundOutcome::Aggregated,
             recovery: stats,
+            adversarial,
+            trimmed_frac: ep.aggregator.trimmed_frac(),
         };
         logger.log_round(&rec)?;
         rounds.push(rec);

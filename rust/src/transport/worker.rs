@@ -132,8 +132,14 @@ fn train_one(
         max_steps_per_epoch: ep.params.max_local_steps,
         seed: ep.params.seed,
     };
-    let (update, record) =
+    let (mut update, record) =
         with_runtime(&ep.manifest, &ep.key, |rt| run_local(rt, &ep.dataset, &job))?;
+    // Byzantine clients poison their own delta before quantize+frame:
+    // the framed terms carry the attack, the digest is computed over
+    // the poisoned bits (integrity, not honesty), and the draw is the
+    // same pure function of (seed, agent, round) the single-process
+    // paths use — so the attack replays bit-identically here.
+    ep.params.adversary.perturb(ep.params.seed, agent_id as u64, round, &mut update.delta);
     let terms = quantize_weighted(&update.delta, weight)?;
     let digest = quantized_checksum(&terms);
     frame::encode_frame(&Message::Delta { round, agent_id, weight, digest, terms, record })

@@ -1,0 +1,264 @@
+//! End-to-end tests for Byzantine adversaries + robust aggregation.
+//!
+//! Pins the PR's acceptance contract:
+//!
+//! 1. **Attack replay is bit-identical in every topology.** The
+//!    adversary draws are a pure function of `(seed, agent, round)`,
+//!    so a poisoned run at worker counts 1/2/4 (InProc) produces the
+//!    same rounds, the same adversarial counters, and a final model
+//!    byte-identical to the single-process run — the workers poison
+//!    their own deltas before quantize+frame and every frame still
+//!    passes the integrity digest (integrity, not honesty).
+//! 2. **Robust rules survive a colluding minority that breaks FedAvg.**
+//!    With a fixed colluding set scaling deltas by a negative factor,
+//!    plain averaging follows the attackers (the mean update points
+//!    *up* the loss surface) while coordinate-median and trimmed mean
+//!    keep converging.
+//! 3. **Sketch rules track the exact rules within the documented
+//!    tolerance** (`|sketch − exact| ≤ |exact| + 2.5e-4` per
+//!    coordinate per round) while keeping per-coordinate state
+//!    independent of the cohort size.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use ferrisfl::config::{FlParams, Topology};
+use ferrisfl::engine::AdversaryPlan;
+use ferrisfl::entrypoint::{Entrypoint, RunResult};
+use ferrisfl::federation::Scheme;
+use ferrisfl::loggers::Logger;
+use ferrisfl::metrics::{AgentRecord, EventRecord, RoundRecord};
+use ferrisfl::runtime::{BackendKind, Manifest};
+use ferrisfl::util::error::Result;
+
+/// In-process worker threads read process-global env knobs at serve
+/// time, so fleet-running tests serialize on this lock (same contract
+/// as `distributed_e2e.rs`).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[derive(Default)]
+struct CaptureLogger {
+    rounds: Vec<RoundRecord>,
+    agents: Vec<AgentRecord>,
+    events: Vec<EventRecord>,
+}
+
+impl Logger for CaptureLogger {
+    fn log_round(&mut self, rec: &RoundRecord) -> Result<()> {
+        self.rounds.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_agent(&mut self, rec: &AgentRecord) -> Result<()> {
+        self.agents.push(rec.clone());
+        Ok(())
+    }
+
+    fn log_event(&mut self, rec: &EventRecord) -> Result<()> {
+        self.events.push(rec.clone());
+        Ok(())
+    }
+}
+
+fn base_params(name: &str) -> FlParams {
+    FlParams {
+        experiment_name: name.into(),
+        model: "mlp-s".into(),
+        dataset: "synth-mnist".into(),
+        num_agents: 6,
+        sampling_ratio: 1.0,
+        global_epochs: 2,
+        local_epochs: 1,
+        split: Scheme::NonIid { niid_factor: 2 },
+        lr: 0.05,
+        seed: 42,
+        workers: 1,
+        eval_every: 1,
+        max_local_steps: 4,
+        backend: BackendKind::Native,
+        ..FlParams::default()
+    }
+}
+
+/// Run and return `(init_global, result, final_global)`, sanity-
+/// checking that the logger observed the run the result reports.
+fn run_with(params: FlParams) -> (Vec<f32>, RunResult, Vec<f32>) {
+    let distributed = params.topology != Topology::Single;
+    let mut ep = Entrypoint::new(params, Arc::new(Manifest::native())).unwrap();
+    let init = ep.global_params().to_vec();
+    let mut log = CaptureLogger::default();
+    let res = ep.run(&mut log).unwrap();
+    assert_eq!(log.rounds.len(), res.rounds.len(), "logger saw every round");
+    assert_eq!(log.agents.len(), res.agent_records.len(), "logger saw every agent record");
+    if distributed {
+        assert!(
+            log.events.iter().any(|e| e.kind == "delta_arrived" && e.worker.is_some()),
+            "distributed arrivals carry worker attribution"
+        );
+    }
+    let global = ep.global_params().to_vec();
+    (init, res, global)
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// The smallest seed at which `plan` puts exactly `want` of the first
+/// `agents` agents into the colluding set — pins the attack size
+/// deterministically instead of hoping the Bernoulli draws land.
+fn seed_with_colluders(plan: &AdversaryPlan, agents: u64, want: usize) -> u64 {
+    (0..20_000u64)
+        .find(|&seed| (0..agents).filter(|&a| plan.is_colluder(seed, a)).count() == want)
+        .expect("some seed yields the wanted colluder count")
+}
+
+/// Two runs must agree on every observable the wire contract pins:
+/// metrics bits, cohorts, outcomes, adversary accounting, and the
+/// final model bytes.
+fn assert_same_run(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{tag}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        let r = ra.round;
+        assert_eq!(bits(ra.train_loss), bits(rb.train_loss), "{tag} r{r}: train_loss");
+        assert_eq!(bits(ra.train_acc), bits(rb.train_acc), "{tag} r{r}: train_acc");
+        assert_eq!(bits(ra.eval_loss), bits(rb.eval_loss), "{tag} r{r}: eval_loss");
+        assert_eq!(bits(ra.eval_acc), bits(rb.eval_acc), "{tag} r{r}: eval_acc");
+        assert_eq!(ra.sampled, rb.sampled, "{tag} r{r}: sampled");
+        assert_eq!(ra.dropped, rb.dropped, "{tag} r{r}: dropped");
+        assert_eq!(ra.outcome, rb.outcome, "{tag} r{r}: outcome");
+        assert_eq!(ra.adversarial, rb.adversarial, "{tag} r{r}: adversarial count");
+        assert_eq!(bits(ra.trimmed_frac), bits(rb.trimmed_frac), "{tag} r{r}: trimmed_frac");
+    }
+    assert_eq!(bits(a.final_eval.loss_sum), bits(b.final_eval.loss_sum), "{tag}: eval loss_sum");
+    assert_eq!(bits(a.final_eval.correct), bits(b.final_eval.correct), "{tag}: eval correct");
+}
+
+fn assert_globals_identical(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: global param count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: global param {i}");
+    }
+}
+
+/// Acceptance #1: the same attack, the same bits, at any worker count.
+/// A colluding pair plus seeded per-round noise poisons deltas on the
+/// workers themselves; sketch-median streams leader-side with no
+/// materialization, and every topology lands on the single-process
+/// result byte for byte.
+#[test]
+fn byzantine_attack_replays_bit_identically_across_worker_counts() {
+    let _guard = env_guard();
+    let adversary: AdversaryPlan = "adv:collude:-5,0.34;adv:noise:0.3,0.25".parse().unwrap();
+    let seed = seed_with_colluders(&adversary, 6, 2);
+    let single = FlParams {
+        seed,
+        adversary: adversary.clone(),
+        aggregator: "sketch-median".into(),
+        ..base_params("byz_replay")
+    };
+    let (_, res_s, glob_s) = run_with(single.clone());
+    // Ground truth: the colluding pair fires every round (plus any
+    // noise draws on top), and a median keeps one rank per coordinate.
+    for r in &res_s.rounds {
+        assert!(r.adversarial >= 2, "round {}: colluders always fire", r.round);
+        assert!(r.trimmed_frac > 0.5, "round {}: median trims most of K=6", r.round);
+    }
+    for workers in [1usize, 2, 4] {
+        let distributed = FlParams {
+            topology: Topology::InProc { workers },
+            retry: 2,
+            ..single.clone()
+        };
+        let tag = format!("inproc:{workers}");
+        let (_, res_d, glob_d) = run_with(distributed);
+        assert_same_run(&res_d, &res_s, &tag);
+        assert_globals_identical(&glob_d, &glob_s, &tag);
+    }
+}
+
+/// Acceptance #2: a colluding 2-of-6 minority scaling by −5 turns the
+/// FedAvg mean into an ascent direction (the run diverges), while the
+/// exact and sketch trimmed rules drop the attackers and keep
+/// converging — the ⌊(K−1)/2⌋ tolerance the unit property tests pin,
+/// end to end through real training.
+#[test]
+fn robust_rules_converge_where_fedavg_diverges_under_collusion() {
+    let _guard = env_guard();
+    let adversary: AdversaryPlan = "adv:collude:-5,0.34".parse().unwrap();
+    let seed = seed_with_colluders(&adversary, 6, 2);
+    let attacked = |aggregator: &str| FlParams {
+        seed,
+        adversary: adversary.clone(),
+        aggregator: aggregator.into(),
+        global_epochs: 4,
+        ..base_params("byz_convergence")
+    };
+    let first_last = |res: &RunResult| {
+        let first = res.rounds.first().unwrap().eval_loss;
+        let last = res.rounds.last().unwrap().eval_loss;
+        (first, last)
+    };
+
+    let (_, res_avg, _) = run_with(attacked("fedavg"));
+    let (favg, lavg) = first_last(&res_avg);
+    assert!(
+        lavg > favg,
+        "fedavg must follow the colluders up the loss surface: first {favg}, last {lavg}"
+    );
+
+    for rule in ["median", "trim:0.34", "sketch-trim:0.34", "geomedian"] {
+        let (_, res, _) = run_with(attacked(rule));
+        let (first, last) = first_last(&res);
+        assert!(
+            last < first,
+            "{rule} must keep converging under the attack: first {first}, last {last}"
+        );
+        assert!(
+            last < lavg,
+            "{rule} must end below the poisoned fedavg run: {last} vs {lavg}"
+        );
+        for r in &res.rounds {
+            assert_eq!(r.adversarial, 2, "{rule} round {}: the fixed pair fires", r.round);
+            // geomedian's whole cohort fits its reservoir here, so it
+            // trims nothing; the trimming rules must report their cut.
+            if rule != "geomedian" {
+                assert!(r.trimmed_frac > 0.0, "{rule} round {}: robust rules trim", r.round);
+            }
+        }
+    }
+}
+
+/// Acceptance #3: one poisoned round, exact vs sketch. The sketch
+/// median's error is bounded by the containing bucket's width — per
+/// coordinate `|sketch − exact| ≤ |exact| + 2.5e-4` on the applied
+/// update — at fixed per-coordinate memory regardless of K.
+#[test]
+fn sketch_median_tracks_exact_median_within_tolerance_end_to_end() {
+    let _guard = env_guard();
+    let adversary: AdversaryPlan = "adv:collude:-5,0.3".parse().unwrap();
+    // 7 agents (odd K) so the exact and sketch median ranks coincide.
+    let seed = seed_with_colluders(&adversary, 7, 2);
+    let params = |aggregator: &str| FlParams {
+        seed,
+        adversary: adversary.clone(),
+        aggregator: aggregator.into(),
+        num_agents: 7,
+        global_epochs: 1,
+        ..base_params("byz_sketch_tol")
+    };
+    let (init, _, exact) = run_with(params("median"));
+    let (_, _, sketch) = run_with(params("sketch-median"));
+    assert_eq!(exact.len(), sketch.len());
+    for (i, ((&g0, &e), &s)) in init.iter().zip(&exact).zip(&sketch).enumerate() {
+        let exact_step = (e - g0) as f64;
+        let err = (s as f64 - e as f64).abs();
+        assert!(
+            err <= exact_step.abs() + 2.5e-4,
+            "coordinate {i}: sketch step off by {err} vs exact step {exact_step}"
+        );
+    }
+}
