@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# The end-to-end gate: one script, every suite, every CI matrix leg.
+#
+# Each suite is its own integration-test binary so a regression fails
+# as a named ::group:: in the job log instead of vanishing into the
+# test wall — and so the million-agent suite's VmHWM peak-RSS ceiling
+# measures *only* its own process (VmHWM is a process-lifetime
+# high-water mark; sharing a binary with any other test would inflate
+# it past the gate).
+#
+#   engine_e2e          lockstep parity + async rounds (virtual time)
+#   chaos_e2e           seeded fault injection + recovery replay
+#   distributed_e2e     leader + 2 UDS workers, final-model bit-identity
+#   byzantine_e2e       adversary replay + robust aggregation
+#   registry_parity     virtual registry ≡ materialized, bit for bit
+#   million_agent_e2e   10^6 agents, K=64, hard peak-RSS ceiling (VmHWM)
+#
+# Runs under whatever FERRISFL_SIMD the leg exports; suites must pass
+# on every dispatch level and both architectures. Usage:
+#   ci/e2e.sh [suite ...]     # default: all of the above
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SUITES=(
+  engine_e2e
+  chaos_e2e
+  distributed_e2e
+  byzantine_e2e
+  registry_parity
+  million_agent_e2e
+)
+if [[ $# -gt 0 ]]; then
+  SUITES=("$@")
+fi
+
+# ::group:: folds each suite in the GitHub Actions log; plain headers
+# elsewhere so the script stays useful locally.
+group()     { if [[ -n "${GITHUB_ACTIONS:-}" ]]; then echo "::group::$1"; else echo "=== $1 ==="; fi; }
+endgroup()  { if [[ -n "${GITHUB_ACTIONS:-}" ]]; then echo "::endgroup::"; fi; }
+
+failed=()
+for suite in "${SUITES[@]}"; do
+  group "e2e: ${suite}"
+  if cargo test --test "${suite}" -- --nocapture; then
+    endgroup
+  else
+    endgroup
+    echo "::error::e2e suite ${suite} failed"
+    failed+=("${suite}")
+  fi
+done
+
+if [[ ${#failed[@]} -gt 0 ]]; then
+  echo "FAILED: ${failed[*]}"
+  exit 1
+fi
+echo "all ${#SUITES[@]} e2e suites passed"

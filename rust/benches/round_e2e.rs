@@ -194,6 +194,50 @@ fn main() {
         rows.push(("workers_2proc".to_string(), s.to_json(Some(1.0))));
     }
 
+    // Million-agent round (virtualized registry): 10^6 clients, K=64
+    // sampled, one steady round. The registry derives shards, weights,
+    // and state lazily from (seed, agent_id), so the walltime and the
+    // peak-RSS delta this row records must track the cohort K, not the
+    // population — the CI memory contract (`tests/million_agent_e2e.rs`
+    // gates the hard ceiling; this row tracks the trend).
+    {
+        use ferrisfl::agents::RegistryMode;
+        let rss_before = ferrisfl::util::mem::peak_rss_bytes().unwrap_or(0);
+        let params = FlParams {
+            experiment_name: "bench_round_1m".into(),
+            num_agents: 1_000_000,
+            sampling_ratio: 64.0 / 1_000_000.0,
+            registry: RegistryMode::Virtual,
+            eval_every: 0,
+            max_local_steps: 1,
+            ..params_for(4, iters + 1, &manifest)
+        };
+        let mut ep = Entrypoint::new(params, Arc::clone(&manifest)).unwrap();
+        let mut logger = NullLogger;
+        let res = ep.run(&mut logger).unwrap();
+        let rss_after = ferrisfl::util::mem::peak_rss_bytes().unwrap_or(0);
+        let mut times: Vec<f64> = res.rounds[1..].iter().map(|r| r.secs).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = BenchStats {
+            iters: times.len(),
+            min: times[0],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            p50: times[times.len() / 2],
+            max: times[times.len() - 1],
+        };
+        let rss_delta_mb = rss_after.saturating_sub(rss_before) as f64 / (1024.0 * 1024.0);
+        report(
+            "round walltime, 1M agents K=64 (virtual)",
+            &s,
+            &format!("+{rss_delta_mb:.1} MB peak RSS"),
+        );
+        let mut row = s.to_json(Some(1.0));
+        if let Json::Obj(ref mut m) = row {
+            m.insert("peak_rss_delta_mb".into(), Json::num(rss_delta_mb));
+        }
+        rows.push(("agents_1m_k64".to_string(), row));
+    }
+
     header("steady-state rounds (workers=4, 5 rounds incl. compile amortisation)");
     let steady_rounds = if fast_mode() { 2 } else { 5 };
     let params = FlParams {

@@ -2,11 +2,14 @@
 //!
 //! Cross-device FL populations are huge (the paper's setting targets
 //! many thousands of clients); per-round sampling must stay trivial.
-//! Sweeps every sampler over 10^2..10^5 agents.
+//! Sweeps every sampler over 10^2..10^5 materialized agents, then the
+//! virtualized registry at 10^6 agents with a cohort-sized K — where
+//! the sparse Fisher–Yates and the lazy state reads keep the cost a
+//! function of K, not of the population.
 //!
 //! Run: `cargo bench --bench sampler_scaling`
 
-use ferrisfl::agents::Agent;
+use ferrisfl::agents::{Agent, AgentRegistry};
 use ferrisfl::benchutil::{bench, header, report};
 use ferrisfl::samplers;
 use ferrisfl::util::Rng;
@@ -14,23 +17,43 @@ use ferrisfl::util::Rng;
 fn main() {
     let mut seed_rng = Rng::new(9);
     for n in [100usize, 1_000, 10_000, 100_000] {
-        header(&format!("sampling 10% of {n} agents"));
+        header(&format!("sampling 10% of {n} agents (materialized)"));
         let mut agents: Vec<Agent> =
             (0..n).map(|i| Agent::new(i, Vec::new())).collect();
         for a in agents.iter_mut() {
             a.reputation = seed_rng.next_f64();
             a.last_loss = seed_rng.next_f64() * 3.0;
         }
+        let registry = AgentRegistry::from_agents(agents);
         let k = n / 10;
         for name in ["random", "round-robin", "reputation", "poc"] {
             let mut s = samplers::from_name(name).unwrap();
             let mut rng = Rng::new(17);
-            let stats = bench(2, 10, || s.sample(&agents, k, &mut rng));
+            let stats = bench(2, 10, || s.sample(&registry, k, &mut rng).unwrap());
             report(
                 &format!("{name:<12} k={k}"),
                 &stats,
                 &format!("{:.1} Magents/s", n as f64 / stats.mean / 1e6),
             );
         }
+    }
+
+    // The virtualized registry: a million agents, cohort-sized K.
+    // `random` and `poc` are O(K log K); `round-robin` is O(K);
+    // `reputation` still scans the population's weight stream per draw
+    // (O(N·K)) — kept in the sweep so the contrast is visible.
+    let n = 1_000_000usize;
+    let k = 64usize;
+    header(&format!("sampling K={k} of {n} agents (virtual registry)"));
+    let registry = AgentRegistry::virtualized(n, n);
+    for name in ["random", "round-robin", "poc"] {
+        let mut s = samplers::from_name(name).unwrap();
+        let mut rng = Rng::new(17);
+        let stats = bench(2, 10, || s.sample(&registry, k, &mut rng).unwrap());
+        report(
+            &format!("{name:<12} k={k}"),
+            &stats,
+            &format!("{:.2} us/draw", stats.mean * 1e6 / k as f64),
+        );
     }
 }

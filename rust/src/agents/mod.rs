@@ -8,6 +8,10 @@
 
 use std::collections::BTreeMap;
 
+pub mod registry;
+
+pub use registry::{AgentRegistry, RegistryMode, AUTO_VIRTUAL_THRESHOLD};
+
 /// One federated client.
 #[derive(Clone, Debug)]
 pub struct Agent {

@@ -1,0 +1,347 @@
+//! The agent registry: materialized or virtual client populations.
+//!
+//! Cross-device FL simulates populations of 10^6+ clients of which only
+//! K participate per round. Materializing an [`Agent`] per client makes
+//! *population* size, not *cohort* size, bound memory — so the registry
+//! comes in two forms behind one accessor surface:
+//!
+//! - [`AgentRegistry::Materialized`] — the eager `Vec<Agent>` the
+//!   coordinator always used. Supports every split scheme and is the
+//!   bit-parity reference for the virtual form.
+//! - [`AgentRegistry::Virtual`] — agents exist only as values derived
+//!   from `(seed, agent_id)`: shard bounds are the closed-form
+//!   [`shard_range`] over the virtual index space, and mutable state
+//!   (reputation, counters, last loss) lives in a sparse overlay keyed
+//!   by agent id, populated only for agents a round ever touched.
+//!   Memory is O(touched) = O(K · rounds), independent of population.
+//!
+//! The latency / fault / adversary streams never lived in the registry:
+//! they are already pure functions of `(seed, agent_id, round, attempt)`
+//! (PR 6/7/9), so virtualization leaves their draws untouched.
+//!
+//! **Parity contract:** at equal `(seed, population)` the explicit
+//! `materialized` and `virtual` modes produce bit-identical sampler
+//! draws, shard contents, reputation trajectories, and final models
+//! (pinned by `tests/registry_parity.rs`). `auto` keeps the legacy
+//! scheme-partitioned path (which consumes construction-time RNG draws
+//! the range modes deliberately avoid) for small populations, and
+//! resolves to `virtual` above [`AUTO_VIRTUAL_THRESHOLD`].
+
+use std::collections::BTreeMap;
+
+use super::Agent;
+use crate::federation::{shard_range, ShardSpec};
+use crate::util::error::{bail, Error, Result};
+
+/// Population size above which `registry = "auto"` stops materializing
+/// agents and switches to the virtual registry. Below it, auto keeps
+/// the legacy eager path bit-for-bit (existing configs see no change).
+pub const AUTO_VIRTUAL_THRESHOLD: usize = 10_000;
+
+/// The `[run] registry` knob: how the agent population is stored.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RegistryMode {
+    /// Legacy materialized registry below [`AUTO_VIRTUAL_THRESHOLD`],
+    /// virtual above (the default).
+    #[default]
+    Auto,
+    /// Force the eager registry with closed-form range shards — the
+    /// bit-parity reference for `virtual`. Requires an IID split.
+    Materialized,
+    /// Force the lazy registry: range shards + sparse overlay.
+    /// Requires an IID split.
+    Virtual,
+}
+
+impl RegistryMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            RegistryMode::Auto => "auto",
+            RegistryMode::Materialized => "materialized",
+            RegistryMode::Virtual => "virtual",
+        }
+    }
+
+    /// Whether this mode, at this population, runs the legacy
+    /// scheme-partitioned construction (`federation::shard`, which
+    /// consumes seeded RNG draws and supports non-IID splits).
+    pub fn uses_legacy_partition(self, num_agents: usize) -> bool {
+        self == RegistryMode::Auto && num_agents <= AUTO_VIRTUAL_THRESHOLD
+    }
+
+    /// Whether this mode, at this population, resolves to the virtual
+    /// registry.
+    pub fn resolves_virtual(self, num_agents: usize) -> bool {
+        match self {
+            RegistryMode::Auto => num_agents > AUTO_VIRTUAL_THRESHOLD,
+            RegistryMode::Materialized => false,
+            RegistryMode::Virtual => true,
+        }
+    }
+}
+
+impl std::str::FromStr for RegistryMode {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(RegistryMode::Auto),
+            "materialized" => Ok(RegistryMode::Materialized),
+            "virtual" => Ok(RegistryMode::Virtual),
+            other => bail!("unknown registry mode {other:?} (auto | materialized | virtual)"),
+        }
+    }
+}
+
+impl std::fmt::Display for RegistryMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Mutable per-agent state for virtual registries, created on first
+/// touch with the exact defaults `Agent::new` uses.
+#[derive(Clone, Debug)]
+pub struct AgentOverlay {
+    pub reputation: f64,
+    pub times_sampled: usize,
+    pub epochs_trained: usize,
+    pub last_loss: f64,
+}
+
+impl Default for AgentOverlay {
+    fn default() -> Self {
+        Self {
+            reputation: 0.5,
+            times_sampled: 0,
+            epochs_trained: 0,
+            last_loss: f64::NAN,
+        }
+    }
+}
+
+/// The agent population, materialized or virtual (see module docs).
+#[derive(Clone, Debug)]
+pub enum AgentRegistry {
+    /// Every agent eagerly constructed.
+    Materialized { agents: Vec<Agent> },
+    /// Agents derived on demand; only touched agents occupy memory.
+    Virtual {
+        num_agents: usize,
+        /// Size of the virtual train index space (≥ the dataset's
+        /// train split, so every agent owns at least one sample).
+        total_train: usize,
+        overlay: BTreeMap<usize, AgentOverlay>,
+    },
+}
+
+impl AgentRegistry {
+    /// Materialized registry from a scheme partition (the legacy path).
+    pub fn from_partition(shards: Vec<Vec<usize>>) -> Self {
+        AgentRegistry::Materialized { agents: super::from_partition(shards) }
+    }
+
+    /// Materialized registry from pre-built agents (tests, benches).
+    pub fn from_agents(agents: Vec<Agent>) -> Self {
+        AgentRegistry::Materialized { agents }
+    }
+
+    /// Materialized registry over closed-form range shards — the
+    /// parity reference for [`AgentRegistry::virtualized`]: identical
+    /// shard contents, built eagerly.
+    pub fn materialized_range(num_agents: usize, total_train: usize) -> Self {
+        let agents = (0..num_agents)
+            .map(|id| {
+                let (lo, hi) = shard_range(total_train, num_agents, id);
+                Agent::new(id, (lo..hi).collect())
+            })
+            .collect();
+        AgentRegistry::Materialized { agents }
+    }
+
+    /// Virtual registry: nothing allocated until an agent is touched.
+    pub fn virtualized(num_agents: usize, total_train: usize) -> Self {
+        AgentRegistry::Virtual { num_agents, total_train, overlay: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            AgentRegistry::Materialized { agents } => agents.len(),
+            AgentRegistry::Virtual { num_agents, .. } => *num_agents,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, AgentRegistry::Virtual { .. })
+    }
+
+    /// Agent `id`'s train shard. O(1) for virtual registries; cloned
+    /// index list for materialized ones (cohort-bounded — only sampled
+    /// agents are asked).
+    pub fn shard(&self, id: usize) -> ShardSpec {
+        match self {
+            AgentRegistry::Materialized { agents } => {
+                ShardSpec::Indices(agents[id].shard.clone())
+            }
+            AgentRegistry::Virtual { num_agents, total_train, .. } => {
+                let (lo, hi) = shard_range(*total_train, *num_agents, id);
+                ShardSpec::Range { lo, hi }
+            }
+        }
+    }
+
+    /// Agent `id`'s shard size (the sample-weighted stream weight).
+    pub fn shard_len(&self, id: usize) -> usize {
+        match self {
+            AgentRegistry::Materialized { agents } => agents[id].shard.len(),
+            AgentRegistry::Virtual { num_agents, total_train, .. } => {
+                let (lo, hi) = shard_range(*total_train, *num_agents, id);
+                hi - lo
+            }
+        }
+    }
+
+    /// Reputation in [0, 1]; 0.5 for never-touched agents.
+    pub fn reputation(&self, id: usize) -> f64 {
+        match self {
+            AgentRegistry::Materialized { agents } => agents[id].reputation,
+            AgentRegistry::Virtual { overlay, .. } => {
+                overlay.get(&id).map_or(0.5, |o| o.reputation)
+            }
+        }
+    }
+
+    /// Most recent local loss; NaN for never-trained agents.
+    pub fn last_loss(&self, id: usize) -> f64 {
+        match self {
+            AgentRegistry::Materialized { agents } => agents[id].last_loss,
+            AgentRegistry::Virtual { overlay, .. } => {
+                overlay.get(&id).map_or(f64::NAN, |o| o.last_loss)
+            }
+        }
+    }
+
+    pub fn times_sampled(&self, id: usize) -> usize {
+        match self {
+            AgentRegistry::Materialized { agents } => agents[id].times_sampled,
+            AgentRegistry::Virtual { overlay, .. } => {
+                overlay.get(&id).map_or(0, |o| o.times_sampled)
+            }
+        }
+    }
+
+    /// Record a completed local round — the same EWMA as
+    /// [`Agent::record_round`], bit-for-bit (pinned by a unit test), so
+    /// reputation trajectories agree across registry forms.
+    pub fn record_round(&mut self, id: usize, loss: f64, epochs: usize) {
+        match self {
+            AgentRegistry::Materialized { agents } => agents[id].record_round(loss, epochs),
+            AgentRegistry::Virtual { overlay, .. } => {
+                let o = overlay.entry(id).or_default();
+                let improved = o.last_loss.is_nan() || loss < o.last_loss;
+                let target = if improved { 1.0 } else { 0.0 };
+                o.reputation = 0.8 * o.reputation + 0.2 * target;
+                o.last_loss = loss;
+                o.times_sampled += 1;
+                o.epochs_trained += epochs;
+            }
+        }
+    }
+
+    /// How many agents hold allocated mutable state — the memory-
+    /// contract observable: for virtual registries this is the overlay
+    /// population (≤ agents ever trained), never the population size.
+    pub fn touched(&self) -> usize {
+        match self {
+            AgentRegistry::Materialized { agents } => agents.len(),
+            AgentRegistry::Virtual { overlay, .. } => overlay.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_displays() {
+        for (text, mode) in [
+            ("auto", RegistryMode::Auto),
+            ("materialized", RegistryMode::Materialized),
+            ("Virtual", RegistryMode::Virtual),
+        ] {
+            assert_eq!(text.parse::<RegistryMode>().unwrap(), mode);
+        }
+        assert!("eager".parse::<RegistryMode>().is_err());
+        assert_eq!(RegistryMode::Virtual.to_string(), "virtual");
+    }
+
+    #[test]
+    fn auto_resolves_by_population() {
+        assert!(RegistryMode::Auto.uses_legacy_partition(10));
+        assert!(RegistryMode::Auto.uses_legacy_partition(AUTO_VIRTUAL_THRESHOLD));
+        assert!(RegistryMode::Auto.resolves_virtual(AUTO_VIRTUAL_THRESHOLD + 1));
+        assert!(!RegistryMode::Materialized.uses_legacy_partition(10));
+        assert!(!RegistryMode::Materialized.resolves_virtual(1_000_000));
+        assert!(RegistryMode::Virtual.resolves_virtual(2));
+    }
+
+    #[test]
+    fn virtual_and_range_materialized_agree_on_reads() {
+        for &(agents, total) in &[(4usize, 10usize), (64, 64), (7, 1024)] {
+            let m = AgentRegistry::materialized_range(agents, total);
+            let v = AgentRegistry::virtualized(agents, total);
+            assert_eq!(m.len(), v.len());
+            for id in 0..agents {
+                assert_eq!(m.shard(id).to_order(), v.shard(id).to_order());
+                assert_eq!(m.shard_len(id), v.shard_len(id));
+                assert_eq!(m.reputation(id).to_bits(), v.reputation(id).to_bits());
+                assert!(m.last_loss(id).is_nan() && v.last_loss(id).is_nan());
+            }
+        }
+    }
+
+    /// The overlay EWMA must be bit-identical to `Agent::record_round`
+    /// (parity of reputation-dependent samplers rests on it).
+    #[test]
+    fn overlay_record_round_matches_agent_bitwise() {
+        let mut m = AgentRegistry::from_agents(vec![Agent::new(0, vec![0, 1])]);
+        let mut v = AgentRegistry::virtualized(1, 2);
+        for &loss in &[1.0, 0.4, 0.9, 0.2, 0.2] {
+            m.record_round(0, loss, 3);
+            v.record_round(0, loss, 3);
+            assert_eq!(m.reputation(0).to_bits(), v.reputation(0).to_bits());
+            assert_eq!(m.last_loss(0).to_bits(), v.last_loss(0).to_bits());
+            assert_eq!(m.times_sampled(0), v.times_sampled(0));
+        }
+    }
+
+    #[test]
+    fn overlay_is_sparse_in_touched_agents() {
+        let mut r = AgentRegistry::virtualized(1_000_000, 1_000_000);
+        assert_eq!(r.touched(), 0);
+        for id in [3usize, 999_999, 500_000] {
+            r.record_round(id, 0.5, 1);
+        }
+        r.record_round(3, 0.4, 1); // re-touch allocates nothing new
+        assert_eq!(r.touched(), 3);
+        assert_eq!(r.times_sampled(3), 2);
+        // Untouched neighbours still read defaults.
+        assert_eq!(r.reputation(4), 0.5);
+        assert_eq!(r.shard_len(4), 1);
+    }
+
+    #[test]
+    fn million_agent_shards_cover_the_index_space() {
+        let n = 1_000_000usize;
+        let r = AgentRegistry::virtualized(n, n);
+        // Spot-check boundaries without iterating the population.
+        assert_eq!(r.shard(0).to_order(), vec![0]);
+        assert_eq!(r.shard(n - 1).to_order(), vec![n - 1]);
+        assert_eq!(r.shard_len(n / 2), 1);
+    }
+}

@@ -8,6 +8,7 @@ pub mod toml;
 
 use std::str::FromStr;
 
+use crate::agents::RegistryMode;
 use crate::engine::{
     AdversaryPlan, Backoff, ClockKind, FaultPlan, LatencyModel, RecoveryPolicy, RoundPolicy,
     SimTime,
@@ -301,6 +302,13 @@ pub struct FlParams {
     /// Resample a replacement client from the available pool when one
     /// fails permanently (`faults.resample`).
     pub resample: bool,
+    /// How agent state is materialized (`run.registry`, CLI
+    /// `--registry`): `auto` (default) keeps the legacy eager
+    /// scheme-partitioned agents for populations up to
+    /// [`crate::agents::AUTO_VIRTUAL_THRESHOLD`] and virtualizes above
+    /// it; `materialized` / `virtual` force the closed-form
+    /// range-sharded registry (bit-identical pair, iid split only).
+    pub registry: RegistryMode,
     /// Execution topology (`transport.topology`): single process
     /// (default) or the distributed leader/worker executor.
     pub topology: Topology,
@@ -349,6 +357,7 @@ impl Default for FlParams {
             backoff: Backoff::default(),
             quorum: 0.0,
             resample: false,
+            registry: RegistryMode::Auto,
             topology: Topology::Single,
             transport_timeout_secs: 30.0,
         }
@@ -412,6 +421,7 @@ impl FlParams {
             backoff: doc.get_str("faults.backoff", &d.backoff.to_string())?.parse()?,
             quorum: doc.get_float("faults.quorum", d.quorum)?,
             resample: doc.get_bool("faults.resample", d.resample)?,
+            registry: doc.get_str("run.registry", d.registry.name())?.parse()?,
             topology: doc
                 .get_str("transport.topology", &d.topology.to_string())?
                 .parse()?,
@@ -459,6 +469,19 @@ impl FlParams {
         }
         if !self.staleness_alpha.is_finite() || self.staleness_alpha < 0.0 {
             bail!("staleness_alpha must be finite and >= 0");
+        }
+        if !self.registry.uses_legacy_partition(self.num_agents)
+            && self.split != Scheme::Iid
+        {
+            bail!(
+                "registry = {} with {} agents uses closed-form range shards, \
+                 which requires split = iid (got {}); use registry = auto with \
+                 <= {} agents for partitioned splits",
+                self.registry,
+                self.num_agents,
+                self.split,
+                crate::agents::AUTO_VIRTUAL_THRESHOLD
+            );
         }
         self.faults.validate()?;
         self.adversary.validate()?;
@@ -556,6 +579,10 @@ impl FlParams {
         out.push_str("eval_every = 0\n");
         out.push_str(&format!("max_local_steps = {}\n", self.max_local_steps));
         out.push_str("backend = \"native\"\n");
+        // The registry mode must ride the wire: both sides resolve the
+        // agent→shard map as a pure function of (num_agents, mode,
+        // train size), so leader and worker must agree on the mode.
+        out.push_str(&format!("registry = {}\n", quote(self.registry.name())));
         // The adversary plan must ride the wire: workers poison their
         // own deltas *before* quantize+frame, so the leader-side
         // checksum passes and only the aggregation rule stands between
@@ -835,6 +862,9 @@ mod tests {
         assert_eq!(q.dropout, p.dropout);
         // The adversary plan rides the wire so workers poison on-device.
         assert_eq!(q.adversary, p.adversary);
+        // The registry mode rides the wire so both sides resolve the
+        // same agent→shard map.
+        assert_eq!(q.registry, p.registry);
         // …while leader-only knobs are pinned for the worker.
         assert_eq!(q.topology, Topology::Single);
         assert_eq!(q.workers, 1);
@@ -950,6 +980,51 @@ mod tests {
         assert!(p.validate().is_err(), "fuse is SGD-only");
         p.optimizer = Optimizer::Sgd;
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn registry_parses_validates_and_rides_the_wire() {
+        let p = FlParams::from_toml(
+            r#"
+            name = "big"
+            [fl]
+            num_agents = 1000000
+            sampling_ratio = 0.000064
+            [run]
+            registry = "virtual"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.registry, RegistryMode::Virtual);
+        assert_eq!(p.sampled_per_round(), 64);
+        assert_eq!(FlParams::default().registry, RegistryMode::Auto);
+
+        // Explicit modes use range shards → iid only.
+        let mut q = FlParams::default();
+        q.registry = RegistryMode::Materialized;
+        q.validate().unwrap();
+        q.split = Scheme::NonIid { niid_factor: 2 };
+        assert!(q.validate().is_err());
+
+        // Auto above the threshold virtualizes, so it too needs iid.
+        let mut q = FlParams::default();
+        q.num_agents = crate::agents::AUTO_VIRTUAL_THRESHOLD + 1;
+        q.sampling_ratio = 0.001;
+        q.split = Scheme::Dirichlet { alpha: 0.5 };
+        assert!(q.validate().is_err());
+        q.split = Scheme::Iid;
+        q.validate().unwrap();
+
+        // An explicit mode survives the wire TOML.
+        let mut q = FlParams::default();
+        q.registry = RegistryMode::Virtual;
+        let r = FlParams::from_toml(&q.to_wire_toml()).unwrap();
+        assert_eq!(r.registry, RegistryMode::Virtual);
+
+        assert!(FlParams::from_toml(
+            "name = \"x\"\n[run]\nregistry = \"eager\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -201,7 +201,7 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         // 1. sample A^t — the same sampler and RNG draw sequence as the
         // lockstep reference.
         let mut sampled =
-            profiler.time("sampling", || ep.sampler.sample(&ep.agents, k, &mut ep.rng));
+            profiler.time("sampling", || ep.sampler.sample(&ep.registry, k, &mut ep.rng))?;
 
         // 1b. crash-before-delivery — the fault plan's degenerate
         // (legacy dropout) model, with draws identical to the reference.
@@ -279,7 +279,7 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         let stream_weights: Vec<u64> = match stream_kind {
             Some(StreamKind::SampleWeighted) => {
                 let ws: Vec<u64> =
-                    train_ids.iter().map(|&aid| ep.agents[aid].shard.len() as u64).collect();
+                    train_ids.iter().map(|&aid| ep.registry.shard_len(aid) as u64).collect();
                 if ws.iter().sum::<u64>() == 0 {
                     vec![1; ws.len()]
                 } else {
@@ -289,7 +289,7 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
             _ => vec![1; train_ids.len()],
         };
         let uniform_weights = matches!(stream_kind, Some(StreamKind::SampleWeighted))
-            && train_ids.iter().all(|&aid| ep.agents[aid].shard.is_empty());
+            && train_ids.iter().all(|&aid| ep.registry.shard_len(aid) == 0);
 
         // 3. local training — synchronous compute on the pool or the
         // fused lockstep path, exactly as the reference, except the
@@ -302,7 +302,7 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
         let mk_job = |aid: usize| LocalJob {
             agent_id: aid,
             round,
-            shard: ep.agents[aid].shard.clone(),
+            shard: ep.registry.shard(aid),
             global: Arc::clone(&global),
             lr: ep.params.lr,
             local_epochs: ep.params.local_epochs,
@@ -434,8 +434,11 @@ pub(crate) fn run_engine(ep: &mut Entrypoint, logger: &mut dyn Logger) -> Result
                         let record = pending.record.clone();
                         train_loss.add(record.final_loss());
                         train_acc.add(record.final_acc());
-                        ep.agents[agent_id]
-                            .record_round(record.final_loss(), ep.params.local_epochs);
+                        ep.registry.record_round(
+                            agent_id,
+                            record.final_loss(),
+                            ep.params.local_epochs,
+                        );
                         logger.log_agent(&record)?;
                         agent_records.push(record);
                     }
@@ -765,7 +768,9 @@ fn try_replace(
     }
     // The available pool: registered agents that are not mid-flight,
     // were not already part of this round, and are online right now.
-    let candidates: Vec<usize> = (0..ep.agents.len())
+    // (O(population) — resampling is a small-population chaos knob; the
+    // virtualized registry's million-agent contract never enables it.)
+    let candidates: Vec<usize> = (0..ep.registry.len())
         .filter(|aid| {
             !flying.contains_key(aid)
                 && !used.contains(aid)
@@ -781,7 +786,7 @@ fn try_replace(
     let job = LocalJob {
         agent_id: pick,
         round,
-        shard: ep.agents[pick].shard.clone(),
+        shard: ep.registry.shard(pick),
         global: Arc::clone(global),
         lr: ep.params.lr,
         local_epochs: ep.params.local_epochs,
@@ -799,7 +804,7 @@ fn try_replace(
     }
     let base_weight = match stream_kind {
         Some(StreamKind::SampleWeighted) if !uniform_weights => {
-            ep.agents[pick].shard.len() as u64
+            ep.registry.shard_len(pick) as u64
         }
         _ => 1,
     };

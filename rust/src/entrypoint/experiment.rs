@@ -29,6 +29,7 @@
 
 use std::sync::Arc;
 
+use crate::agents::RegistryMode;
 use crate::config::{FlParams, Mode, Optimizer, Topology};
 use crate::engine::{AdversaryPlan, Backoff, ClockKind, FaultPlan, LatencyModel};
 use crate::federation::Scheme;
@@ -65,9 +66,9 @@ impl Experiment {
         &self.inner.params
     }
 
-    /// Number of agents holding shards.
+    /// Number of agents in the registry (materialized or virtual).
     pub fn num_agents(&self) -> usize {
-        self.inner.agents.len()
+        self.inner.registry.len()
     }
 
     /// Current global model parameters.
@@ -204,6 +205,15 @@ impl ExperimentBuilder {
             Parallelism::Auto => 0,
             Parallelism::Fixed(n) => n,
         };
+        self
+    }
+
+    /// Agent-registry mode: `auto` (default — eager below
+    /// [`crate::agents::AUTO_VIRTUAL_THRESHOLD`] agents, virtual
+    /// above), or force `materialized` / `virtual` (the bit-identical
+    /// range-sharded pair; iid split only).
+    pub fn registry(mut self, mode: RegistryMode) -> Self {
+        self.params.registry = mode;
         self
     }
 
@@ -447,6 +457,30 @@ mod tests {
             .deadline_secs(2.0)
             .build();
         assert!(err.is_err(), "deadlines are single-process engine scheduling");
+    }
+
+    #[test]
+    fn builder_sets_registry_mode_and_runs_virtual() {
+        let b = Experiment::builder().registry(RegistryMode::Virtual);
+        assert_eq!(b.params.registry, RegistryMode::Virtual);
+        // A tiny forced-virtual experiment builds and runs: range
+        // shards, sparse overlay, nothing materialized per agent.
+        let mut exp = Experiment::builder()
+            .name("virt_smoke")
+            .model("mlp-s")
+            .num_agents(4)
+            .sampling_ratio(1.0)
+            .rounds(1)
+            .local_epochs(1)
+            .max_local_steps(1)
+            .workers(1)
+            .eval_every(0)
+            .registry(RegistryMode::Virtual)
+            .build()
+            .unwrap();
+        assert_eq!(exp.num_agents(), 4);
+        let res = exp.run(&mut NullLogger).unwrap();
+        assert_eq!(res.rounds.len(), 1);
     }
 
     #[test]

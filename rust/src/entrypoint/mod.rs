@@ -40,7 +40,7 @@ pub use experiment::{Experiment, ExperimentBuilder};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::agents::{self, Agent};
+use crate::agents::AgentRegistry;
 use crate::aggregators::{self, Aggregator, StreamKind, StreamingAccumulator};
 use crate::compression::{self, Compressor};
 use crate::config::FlParams;
@@ -103,7 +103,7 @@ pub struct Entrypoint {
     pub params: FlParams,
     pub manifest: Arc<Manifest>,
     pub dataset: Arc<Dataset>,
-    pub agents: Vec<Agent>,
+    pub registry: AgentRegistry,
     pub(crate) sampler: Box<dyn Sampler>,
     pub(crate) aggregator: Box<dyn Aggregator>,
     pub(crate) defense: Box<dyn Defense>,
@@ -125,10 +125,27 @@ impl Entrypoint {
         let mut rng = Rng::new(params.seed);
 
         let dataset = Arc::new(Dataset::load(&manifest, &params.dataset, params.seed)?);
-        let labels = dataset.labels(Split::Train);
-        let partition =
-            federation::shard(&labels, params.num_agents, params.split, &mut rng)?;
-        let agents = agents::from_partition(partition.shards);
+        let registry = if params.registry.uses_legacy_partition(params.num_agents) {
+            // Legacy path: materialize labels, run the scheme partition
+            // (which consumes seeded RNG draws), one eager Agent per
+            // shard — bit-for-bit what every pre-registry config got.
+            let labels = dataset.labels(Split::Train);
+            let partition =
+                federation::shard(&labels, params.num_agents, params.split, &mut rng)?;
+            AgentRegistry::from_partition(partition.shards)
+        } else {
+            // Closed-form range shards over the virtual index space.
+            // Synthesis is a pure function of (seed, split, index) for
+            // *any* index, so the space stretches to cover populations
+            // larger than the nominal train split; no construction-time
+            // RNG draws, so materialized and virtual are bit-identical.
+            let total_train = dataset.num_train().max(params.num_agents);
+            if params.registry.resolves_virtual(params.num_agents) {
+                AgentRegistry::virtualized(params.num_agents, total_train)
+            } else {
+                AgentRegistry::materialized_range(params.num_agents, total_train)
+            }
+        };
 
         let key = RuntimeKey {
             backend: params.backend,
@@ -162,7 +179,7 @@ impl Entrypoint {
             params,
             manifest,
             dataset,
-            agents,
+            registry,
             sampler,
             aggregator,
             defense,
@@ -233,8 +250,8 @@ impl Entrypoint {
 
             // 1. sample A^t
             let mut sampled = profiler.time("sampling", || {
-                self.sampler.sample(&self.agents, k, &mut self.rng)
-            });
+                self.sampler.sample(&self.registry, k, &mut self.rng)
+            })?;
 
             // 1b. straggler/failure injection: each sampled device drops
             // with probability `dropout` (cross-device FL reality; the
@@ -301,7 +318,7 @@ impl Entrypoint {
             let stream_weights: Vec<u64> = match stream_kind {
                 Some(StreamKind::SampleWeighted) => {
                     let ws: Vec<u64> =
-                        sampled.iter().map(|&aid| self.agents[aid].shard.len() as u64).collect();
+                        sampled.iter().map(|&aid| self.registry.shard_len(aid) as u64).collect();
                     if ws.iter().sum::<u64>() == 0 {
                         // all-zero sample counts: uniform fallback,
                         // mirroring aggregators::sample_weights.
@@ -318,7 +335,7 @@ impl Entrypoint {
             let mk_job = |aid: usize| LocalJob {
                 agent_id: aid,
                 round,
-                shard: self.agents[aid].shard.clone(),
+                shard: self.registry.shard(aid),
                 global: Arc::clone(&global),
                 lr: self.params.lr,
                 local_epochs: self.params.local_epochs,
@@ -408,8 +425,11 @@ impl Entrypoint {
                 }
                 train_loss.add(record.final_loss());
                 train_acc.add(record.final_acc());
-                self.agents[record.agent_id]
-                    .record_round(record.final_loss(), self.params.local_epochs);
+                self.registry.record_round(
+                    record.agent_id,
+                    record.final_loss(),
+                    self.params.local_epochs,
+                );
                 logger.log_agent(&record)?;
                 agent_records.push(record);
                 let dense = (update.delta.len() * 4) as u64;
@@ -584,7 +604,7 @@ mod tests {
         };
         let m = Arc::new(Manifest::native());
         let ep = Entrypoint::new(p, m).unwrap();
-        assert_eq!(ep.agents.len(), 4);
+        assert_eq!(ep.registry.len(), 4);
         assert!(!ep.global_params().is_empty());
     }
 }

@@ -29,6 +29,7 @@ use std::time::Instant;
 
 use crate::aggregators::Update;
 use crate::datasets::{BatchBuf, Dataset, Split, SynthCache};
+use crate::federation::ShardSpec;
 use crate::metrics::AgentRecord;
 use crate::runtime::{
     AdamState, BackendKind, FusedSlot, Manifest, ModelExecutor, NativeExecutor, StepScratch,
@@ -174,7 +175,10 @@ fn build_pjrt(_manifest: &Arc<Manifest>, key: &RuntimeKey) -> Result<Rc<dyn Mode
 pub struct LocalJob {
     pub agent_id: usize,
     pub round: usize,
-    pub shard: Vec<usize>,
+    /// Train indices this agent owns: an explicit list (legacy
+    /// partitions) or a closed-form range (the virtualized registry) —
+    /// either way `to_order()` yields the epoch's starting order.
+    pub shard: ShardSpec,
     pub global: Arc<Vec<f32>>,
     pub lr: f32,
     pub local_epochs: usize,
@@ -357,7 +361,7 @@ pub fn run_local(
 
     let mut epoch_losses = Vec::with_capacity(job.local_epochs);
     let mut epoch_accs = Vec::with_capacity(job.local_epochs);
-    let mut order = job.shard.clone();
+    let mut order = job.shard.to_order();
     let mut rng = Rng::new(job.seed)
         .split(job.round as u64)
         .split(job.agent_id as u64);
@@ -454,7 +458,7 @@ pub fn run_local_fused(
     }
     let s_count = jobs.len();
     let mut params: Vec<Vec<f32>> = jobs.iter().map(|j| (*j.global).clone()).collect();
-    let mut orders: Vec<Vec<usize>> = jobs.iter().map(|j| j.shard.clone()).collect();
+    let mut orders: Vec<Vec<usize>> = jobs.iter().map(|j| j.shard.to_order()).collect();
     let mut rngs: Vec<Rng> = jobs
         .iter()
         .map(|j| Rng::new(j.seed).split(j.round as u64).split(j.agent_id as u64))
@@ -807,7 +811,7 @@ mod tests {
                 .map(|&(aid, shard_len)| LocalJob {
                     agent_id: aid,
                     round: 2,
-                    shard: (aid * 10..aid * 10 + shard_len).collect(),
+                    shard: (aid * 10..aid * 10 + shard_len).collect::<Vec<_>>().into(),
                     global: Arc::clone(&global),
                     lr: 0.05,
                     local_epochs: 2,

@@ -68,6 +68,61 @@ impl std::fmt::Display for Scheme {
     }
 }
 
+/// One agent's training shard, either as an explicit index list (the
+/// scheme-partitioned schemes above) or as a closed-form contiguous
+/// range over the virtual index space (the virtualized registry, where
+/// materializing a million index vectors is exactly what we avoid).
+///
+/// Synthesis is a pure function of `(seed, split, index)` for *any*
+/// index, so a contiguous range of the virtual index space is already
+/// an IID sample of the procedural distribution — range shards and the
+/// explicit `(lo..hi)` index list train bit-identically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Explicit sample indices (materialized partitions).
+    Indices(Vec<usize>),
+    /// The half-open index range `[lo, hi)` (virtual registries).
+    Range { lo: usize, hi: usize },
+}
+
+impl ShardSpec {
+    pub fn len(&self) -> usize {
+        match self {
+            ShardSpec::Indices(v) => v.len(),
+            ShardSpec::Range { lo, hi } => hi - lo,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the per-agent epoch order (what local training
+    /// shuffles). Cohort-bounded: only sampled agents ever call this.
+    pub fn to_order(&self) -> Vec<usize> {
+        match self {
+            ShardSpec::Indices(v) => v.clone(),
+            ShardSpec::Range { lo, hi } => (*lo..*hi).collect(),
+        }
+    }
+}
+
+impl From<Vec<usize>> for ShardSpec {
+    fn from(v: Vec<usize>) -> Self {
+        ShardSpec::Indices(v)
+    }
+}
+
+/// Closed-form shard bounds of `agent` when `total` samples are dealt
+/// contiguously across `num_agents`: the half-open range
+/// `[agent·total/A, (agent+1)·total/A)`. Balanced within one sample,
+/// exact partition by construction, O(1) per query — the virtualized
+/// replacement for materialized IID index vectors.
+pub fn shard_range(total: usize, num_agents: usize, agent: usize) -> (usize, usize) {
+    debug_assert!(agent < num_agents);
+    (agent * total / num_agents, (agent + 1) * total / num_agents)
+}
+
 /// The result of sharding: one index list per agent.
 #[derive(Clone, Debug)]
 pub struct Partition {
@@ -358,5 +413,31 @@ mod tests {
         let mut rng = Rng::new(12);
         assert!(shard(&l, 0, Scheme::Iid, &mut rng).is_err());
         assert!(shard(&l, 10, Scheme::Iid, &mut rng).is_err());
+    }
+
+    #[test]
+    fn range_shards_partition_exactly_and_balance_within_one() {
+        for &(total, agents) in &[(10, 3), (1024, 64), (1_000_000, 1_000_000), (7, 7)] {
+            let mut covered = 0usize;
+            let (mut min, mut max) = (usize::MAX, 0usize);
+            for a in 0..agents {
+                let (lo, hi) = shard_range(total, agents, a);
+                assert_eq!(lo, covered, "gap before agent {a}");
+                covered = hi;
+                min = min.min(hi - lo);
+                max = max.max(hi - lo);
+            }
+            assert_eq!(covered, total);
+            assert!(max - min <= 1, "total={total} agents={agents}");
+        }
+    }
+
+    #[test]
+    fn shard_spec_range_orders_like_explicit_indices() {
+        let range = ShardSpec::Range { lo: 5, hi: 9 };
+        let explicit = ShardSpec::Indices(vec![5, 6, 7, 8]);
+        assert_eq!(range.len(), 4);
+        assert_eq!(range.to_order(), explicit.to_order());
+        assert!(ShardSpec::Range { lo: 3, hi: 3 }.is_empty());
     }
 }

@@ -92,6 +92,7 @@ pub mod zoo;
 /// One-stop imports for building and running experiments:
 /// `use ferrisfl::prelude::*;`.
 pub mod prelude {
+    pub use crate::agents::{AgentRegistry, RegistryMode};
     pub use crate::config::{FlParams, Mode, Optimizer, Topology};
     pub use crate::engine::{
         AdversaryPlan, Availability, Backoff, Clock, ClockKind, Event, EventQueue, FailureReason,

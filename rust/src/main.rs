@@ -26,7 +26,7 @@ USAGE:
                [--topology single|inproc:N|multiprocess:N|tcp:<addr>] [--save-model <path>]
                [--latency <model>] [--deadline <secs>] [--goal <k>] [--staleness-alpha <a>] [--clock virtual|wall]
                [--fault-plan <plan>] [--adversary <spec>] [--retry <n>] [--backoff <b[,f[,j]]>]
-               [--quorum <frac>] [--resample]
+               [--quorum <frac>] [--resample] [--registry auto|materialized|virtual]
   ferrisfl worker --connect uds:<path>|tcp:<host:port>
   ferrisfl list [datasets|models|artifacts] [--backend native|pjrt] [--artifacts <dir>]
   ferrisfl repro <experiment|all> [--quick] [--out <dir>] [--backend native|pjrt]
@@ -71,6 +71,13 @@ FAULTS & RECOVERY (seeded chaos; replays bit-identically):
                           fraction of the planned cohort
   --resample              replace permanently failed clients from the
                           available pool
+
+CROSS-DEVICE SCALE:
+  --registry <mode>       auto (default; eager agents up to 10k, then
+                          virtual) | materialized | virtual — virtual
+                          derives shards/weights/state lazily from
+                          (seed, agent_id), so memory tracks the cohort
+                          K, not the population (10^6+ agents)
 
 EXPERIMENTS (paper artefacts):
   table1 table2 table3 table4 fig6 fig7 fig8i fig8ii fig9 fig10 | all
@@ -183,6 +190,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(t) = args.opt("topology") {
         params.topology = t.parse()?;
+    }
+    if let Some(r) = args.opt("registry") {
+        params.registry = r.parse()?;
     }
     params.validate()?;
     let backend = backend_of(args, params.backend.name())?;

@@ -13,27 +13,43 @@
 //!   candidate pool of size `d`, keep the agents with the highest last
 //!   local loss (bias toward under-fit clients).
 //!
-//! All samplers return distinct agent ids and respect `k <= n`.
+//! Samplers draw ids from the [`AgentRegistry`], not a materialized
+//! agent slice, so they work unchanged over virtual million-agent
+//! populations: random and round-robin are O(K) in memory, while
+//! reputation and power-of-choice read per-agent state through the
+//! registry (the sparse overlay on virtual registries — reputation
+//! additionally streams one full weight pass per draw, O(N·K) compute,
+//! the documented cost of reputation-weighted selection at scale).
+//!
+//! All samplers return distinct agent ids; a mis-sized cohort
+//! (`k == 0` or `k > n`) is a `Result` error, not a panic.
 
-use crate::agents::Agent;
+use crate::agents::AgentRegistry;
 use crate::util::error::{bail, Result};
 use crate::util::Rng;
 
 /// Strategy interface for per-round agent selection.
 pub trait Sampler: Send {
-    /// Select `k` distinct agent indices from `agents`.
-    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize>;
+    /// Select `k` distinct agent ids from the registry. Errors on
+    /// `k == 0` or `k > registry.len()` — a config problem, not a
+    /// crash.
+    fn sample(
+        &mut self,
+        registry: &AgentRegistry,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<usize>>;
 
     /// Human-readable name used in logs.
     fn name(&self) -> &'static str;
 }
 
-fn check(agents: &[Agent], k: usize) -> Result<()> {
+fn check(n: usize, k: usize) -> Result<()> {
     if k == 0 {
         bail!("cannot sample 0 agents");
     }
-    if k > agents.len() {
-        bail!("cannot sample {k} of {} agents", agents.len());
+    if k > n {
+        bail!("cannot sample {k} of {n} agents");
     }
     Ok(())
 }
@@ -43,9 +59,14 @@ fn check(agents: &[Agent], k: usize) -> Result<()> {
 pub struct RandomSampler;
 
 impl Sampler for RandomSampler {
-    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize> {
-        check(agents, k).expect("invalid sampling request");
-        rng.sample_indices(agents.len(), k)
+    fn sample(
+        &mut self,
+        registry: &AgentRegistry,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<usize>> {
+        check(registry.len(), k)?;
+        Ok(rng.sample_indices(registry.len(), k))
     }
 
     fn name(&self) -> &'static str {
@@ -53,19 +74,24 @@ impl Sampler for RandomSampler {
     }
 }
 
-/// Deterministic rotation through the agent list.
+/// Deterministic rotation through the agent ids.
 #[derive(Default)]
 pub struct RoundRobinSampler {
     cursor: usize,
 }
 
 impl Sampler for RoundRobinSampler {
-    fn sample(&mut self, agents: &[Agent], k: usize, _rng: &mut Rng) -> Vec<usize> {
-        check(agents, k).expect("invalid sampling request");
-        let n = agents.len();
+    fn sample(
+        &mut self,
+        registry: &AgentRegistry,
+        k: usize,
+        _rng: &mut Rng,
+    ) -> Result<Vec<usize>> {
+        check(registry.len(), k)?;
+        let n = registry.len();
         let out: Vec<usize> = (0..k).map(|i| (self.cursor + i) % n).collect();
         self.cursor = (self.cursor + k) % n;
-        out
+        Ok(out)
     }
 
     fn name(&self) -> &'static str {
@@ -75,6 +101,11 @@ impl Sampler for RoundRobinSampler {
 
 /// Reputation-weighted sampling: P(i) ∝ exp(reputation_i / temperature),
 /// drawn without replacement.
+///
+/// The weight scan streams through the registry per draw instead of
+/// materializing a weight vector — already-picked agents contribute an
+/// exact `+0.0`, so the subtract-scan is bit-identical to the old
+/// zeroed-`Vec` form while costing O(K) memory on any population.
 pub struct ReputationSampler {
     pub temperature: f64,
 }
@@ -86,19 +117,28 @@ impl Default for ReputationSampler {
 }
 
 impl Sampler for ReputationSampler {
-    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize> {
-        check(agents, k).expect("invalid sampling request");
-        let mut weights: Vec<f64> = agents
-            .iter()
-            .map(|a| (a.reputation / self.temperature.max(1e-9)).exp())
-            .collect();
-        let mut out = Vec::with_capacity(k);
+    fn sample(
+        &mut self,
+        registry: &AgentRegistry,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<usize>> {
+        let n = registry.len();
+        check(n, k)?;
+        let temp = self.temperature.max(1e-9);
+        let mut out: Vec<usize> = Vec::with_capacity(k);
         for _ in 0..k {
-            let i = rng.sample_weighted(&weights);
+            let picked = &out;
+            let i = rng.sample_weighted_with(n, |i| {
+                if picked.contains(&i) {
+                    0.0 // without replacement
+                } else {
+                    (registry.reputation(i) / temp).exp()
+                }
+            });
             out.push(i);
-            weights[i] = 0.0; // without replacement
         }
-        out
+        Ok(out)
     }
 
     fn name(&self) -> &'static str {
@@ -107,7 +147,8 @@ impl Sampler for ReputationSampler {
 }
 
 /// Power-of-d-choices: draw `d >= k` random candidates, keep the `k`
-/// with the highest last local loss (unseen agents rank first).
+/// with the highest last local loss (unseen agents rank first). O(d)
+/// memory — the candidate pool, never the population.
 pub struct PowerOfChoiceSampler {
     pub d: usize,
 }
@@ -119,15 +160,20 @@ impl Default for PowerOfChoiceSampler {
 }
 
 impl Sampler for PowerOfChoiceSampler {
-    fn sample(&mut self, agents: &[Agent], k: usize, rng: &mut Rng) -> Vec<usize> {
-        check(agents, k).expect("invalid sampling request");
+    fn sample(
+        &mut self,
+        registry: &AgentRegistry,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<usize>> {
+        check(registry.len(), k)?;
         let d = if self.d == 0 { 2 * k } else { self.d }
-            .clamp(k, agents.len());
-        let mut pool = rng.sample_indices(agents.len(), d);
+            .clamp(k, registry.len());
+        let mut pool = rng.sample_indices(registry.len(), d);
         // Highest loss first; NaN (never trained) sorts before everything.
         pool.sort_by(|&a, &b| {
-            let la = agents[a].last_loss;
-            let lb = agents[b].last_loss;
+            let la = registry.last_loss(a);
+            let lb = registry.last_loss(b);
             match (la.is_nan(), lb.is_nan()) {
                 (true, true) => std::cmp::Ordering::Equal,
                 (true, false) => std::cmp::Ordering::Less,
@@ -136,7 +182,7 @@ impl Sampler for PowerOfChoiceSampler {
             }
         });
         pool.truncate(k);
-        pool
+        Ok(pool)
     }
 
     fn name(&self) -> &'static str {
@@ -174,9 +220,10 @@ pub fn from_name(name: &str) -> Result<Box<dyn Sampler>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::agents::Agent;
 
-    fn agents(n: usize) -> Vec<Agent> {
-        (0..n).map(|i| Agent::new(i, vec![i])).collect()
+    fn registry(n: usize) -> AgentRegistry {
+        AgentRegistry::from_agents((0..n).map(|i| Agent::new(i, vec![i])).collect())
     }
 
     fn assert_distinct(ids: &[usize], n: usize) {
@@ -189,12 +236,12 @@ mod tests {
 
     #[test]
     fn random_distinct_and_uniformish() {
-        let ag = agents(20);
+        let reg = registry(20);
         let mut s = RandomSampler;
         let mut rng = Rng::new(1);
         let mut counts = vec![0usize; 20];
         for _ in 0..1000 {
-            let ids = s.sample(&ag, 5, &mut rng);
+            let ids = s.sample(&reg, 5, &mut rng).unwrap();
             assert_distinct(&ids, 20);
             for i in ids {
                 counts[i] += 1;
@@ -206,12 +253,12 @@ mod tests {
 
     #[test]
     fn round_robin_covers_everyone_equally() {
-        let ag = agents(10);
+        let reg = registry(10);
         let mut s = RoundRobinSampler::default();
         let mut rng = Rng::new(2);
         let mut counts = vec![0usize; 10];
         for _ in 0..10 {
-            for i in s.sample(&ag, 3, &mut rng) {
+            for i in s.sample(&reg, 3, &mut rng).unwrap() {
                 counts[i] += 1;
             }
         }
@@ -220,30 +267,32 @@ mod tests {
 
     #[test]
     fn reputation_prefers_high_reputation() {
-        let mut ag = agents(10);
+        let mut ag: Vec<Agent> = (0..10).map(|i| Agent::new(i, vec![i])).collect();
         ag[7].reputation = 1.0;
         for a in ag.iter_mut() {
             if a.id != 7 {
                 a.reputation = 0.0;
             }
         }
+        let reg = AgentRegistry::from_agents(ag);
         let mut s = ReputationSampler { temperature: 0.1 };
         let mut rng = Rng::new(3);
         let hits = (0..200)
-            .filter(|_| s.sample(&ag, 1, &mut rng)[0] == 7)
+            .filter(|_| s.sample(&reg, 1, &mut rng).unwrap()[0] == 7)
             .count();
         assert!(hits > 150, "agent 7 sampled {hits}/200");
     }
 
     #[test]
     fn poc_picks_highest_loss() {
-        let mut ag = agents(10);
+        let mut ag: Vec<Agent> = (0..10).map(|i| Agent::new(i, vec![i])).collect();
         for a in ag.iter_mut() {
             a.last_loss = a.id as f64 * 0.1;
         }
+        let reg = AgentRegistry::from_agents(ag);
         let mut s = PowerOfChoiceSampler { d: 10 }; // full pool
         let mut rng = Rng::new(4);
-        let ids = s.sample(&ag, 3, &mut rng);
+        let ids = s.sample(&reg, 3, &mut rng).unwrap();
         assert_distinct(&ids, 10);
         // With the full pool, must be the 3 highest-loss agents.
         let mut sorted = ids.clone();
@@ -253,15 +302,55 @@ mod tests {
 
     #[test]
     fn poc_prefers_untrained_agents() {
-        let mut ag = agents(6);
+        let mut ag: Vec<Agent> = (0..6).map(|i| Agent::new(i, vec![i])).collect();
         for a in ag.iter_mut().take(5) {
             a.last_loss = 0.1;
         }
         // agent 5 never trained (NaN loss) — should rank first
+        let reg = AgentRegistry::from_agents(ag);
         let mut s = PowerOfChoiceSampler { d: 6 };
         let mut rng = Rng::new(5);
-        let ids = s.sample(&ag, 1, &mut rng);
+        let ids = s.sample(&reg, 1, &mut rng).unwrap();
         assert_eq!(ids, vec![5]);
+    }
+
+    /// Mis-sized cohorts are errors through the trait, not panics.
+    #[test]
+    fn invalid_cohort_sizes_are_errors() {
+        let reg = registry(4);
+        let mut rng = Rng::new(6);
+        for name in ["random", "round-robin", "reputation", "poc"] {
+            let mut s = from_name(name).unwrap();
+            assert!(s.sample(&reg, 0, &mut rng).is_err(), "{name}: k=0");
+            assert!(s.sample(&reg, 5, &mut rng).is_err(), "{name}: k>n");
+        }
+    }
+
+    /// Every sampler draws the same ids from a virtual registry as from
+    /// its range-materialized twin, including after reputation state
+    /// diverges from the defaults via `record_round`.
+    #[test]
+    fn samplers_bit_identical_across_registry_forms() {
+        let (n, total) = (12usize, 40usize);
+        let mut m = AgentRegistry::materialized_range(n, total);
+        let mut v = AgentRegistry::virtualized(n, total);
+        for (round, &id) in [3usize, 7, 3, 11, 0].iter().enumerate() {
+            let loss = 1.0 / (round + 1) as f64;
+            m.record_round(id, loss, 1);
+            v.record_round(id, loss, 1);
+        }
+        for name in ["random", "round-robin", "reputation", "poc"] {
+            let mut sm = from_name(name).unwrap();
+            let mut sv = from_name(name).unwrap();
+            let mut rm = Rng::new(77);
+            let mut rv = Rng::new(77);
+            for _ in 0..5 {
+                let a = sm.sample(&m, 4, &mut rm).unwrap();
+                let b = sv.sample(&v, 4, &mut rv).unwrap();
+                assert_eq!(a, b, "{name}");
+                assert_eq!(rm.state(), rv.state(), "{name}: RNG stream diverged");
+            }
+        }
     }
 
     #[test]

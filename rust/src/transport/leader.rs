@@ -343,7 +343,7 @@ fn drive_rounds(
         // 1. sample A^t and apply dropout — the exact RNG draws of the
         // single-process paths, so cohorts match round for round.
         let mut sampled =
-            profiler.time("sampling", || ep.sampler.sample(&ep.agents, k, &mut ep.rng));
+            profiler.time("sampling", || ep.sampler.sample(&ep.registry, k, &mut ep.rng))?;
         let mut dropped = Vec::new();
         fault_plan.apply_dropout(&mut ep.rng, &mut sampled, &mut dropped);
         if sampled.is_empty() {
@@ -385,7 +385,7 @@ fn drive_rounds(
         let stream_weights: Vec<u64> = match stream_kind {
             StreamKind::SampleWeighted => {
                 let ws: Vec<u64> =
-                    sampled.iter().map(|&aid| ep.agents[aid].shard.len() as u64).collect();
+                    sampled.iter().map(|&aid| ep.registry.shard_len(aid) as u64).collect();
                 if ws.iter().sum::<u64>() == 0 {
                     vec![1; ws.len()]
                 } else {
@@ -584,7 +584,7 @@ fn drive_rounds(
             let record = got[i].take().expect("collected every delta");
             train_loss.add(record.final_loss());
             train_acc.add(record.final_acc());
-            ep.agents[aid].record_round(record.final_loss(), ep.params.local_epochs);
+            ep.registry.record_round(aid, record.final_loss(), ep.params.local_epochs);
             logger.log_agent(&record)?;
             agent_records.push(record);
         }

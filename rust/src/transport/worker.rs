@@ -119,13 +119,16 @@ fn train_one(
     global: Arc<Vec<f32>>,
 ) -> Result<Vec<u8>> {
     let a = agent_id as usize;
-    if a >= ep.agents.len() {
-        bail!("assigned agent {agent_id} is out of range ({} agents)", ep.agents.len());
+    if a >= ep.registry.len() {
+        bail!("assigned agent {agent_id} is out of range ({} agents)", ep.registry.len());
     }
     let job = LocalJob {
         agent_id: a,
         round: round as usize,
-        shard: ep.agents[a].shard.clone(),
+        // The wire never carries shards: the worker's registry resolves
+        // the same agent→shard map from the wired config (num_agents,
+        // registry mode, seed) the leader used.
+        shard: ep.registry.shard(a),
         global,
         lr: ep.params.lr,
         local_epochs: ep.params.local_epochs,

@@ -9,6 +9,7 @@
 pub mod env;
 pub mod error;
 pub mod json;
+pub mod mem;
 pub mod parallelism;
 pub mod rng;
 pub mod threadpool;

@@ -104,30 +104,55 @@ impl Rng {
     }
 
     /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    ///
+    /// Sparse: instead of materializing `(0..n)` and swapping — O(n)
+    /// memory, which a 10^6-agent registry cannot afford for a K=64
+    /// cohort — only the displaced positions live in a map. Each step
+    /// draws the same `next_below(n - i)` the dense swap loop drew and
+    /// emits the value the dense loop would have left at position `i`,
+    /// so both the RNG stream and the output are bit-identical to the
+    /// materialized version at every `(n, k, seed)`; memory is O(k).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample {k} from {n}");
-        let mut idx: Vec<usize> = (0..n).collect();
+        // displaced[p] = the value currently at position p, for the
+        // positions the dense loop would have written; absent means the
+        // identity value p.
+        let mut displaced: std::collections::BTreeMap<usize, usize> =
+            std::collections::BTreeMap::new();
+        let mut out = Vec::with_capacity(k);
         for i in 0..k {
             let j = i + self.next_below((n - i) as u64) as usize;
-            idx.swap(i, j);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            displaced.insert(j, vi);
+            out.push(vj);
         }
-        idx.truncate(k);
-        idx
+        out
     }
 
     /// Sample from a discrete distribution given non-negative weights.
     /// Returns the chosen index; panics if all weights are zero.
     pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
+        self.sample_weighted_with(weights.len(), |i| weights[i])
+    }
+
+    /// [`Rng::sample_weighted`] over a weight *function* instead of a
+    /// slice: the subtract-scan streams `w(0), w(1), …` without ever
+    /// materializing a weight vector, so reputation-weighted sampling
+    /// over a virtual registry costs O(1) memory. The total is the same
+    /// left-to-right f64 sum a slice would produce, so this is
+    /// bit-identical to the slice form for equal weight sequences.
+    pub fn sample_weighted_with(&mut self, n: usize, w: impl Fn(usize) -> f64) -> usize {
+        let total: f64 = (0..n).map(&w).sum();
         assert!(total > 0.0, "sample_weighted: all-zero weights");
         let mut t = self.next_f64() * total;
-        for (i, w) in weights.iter().enumerate() {
-            t -= w;
+        for i in 0..n {
+            t -= w(i);
             if t <= 0.0 {
                 return i;
             }
         }
-        weights.len() - 1
+        n - 1
     }
 
     /// Sample from Gamma(shape, 1) — Marsaglia–Tsang, used for Dirichlet
@@ -252,6 +277,45 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 20);
         assert!(s.iter().all(|&i| i < 50));
+    }
+
+    /// The sparse partial Fisher–Yates must reproduce the dense
+    /// swap-and-truncate version exactly — same draws, same outputs —
+    /// since sampler parity across registry modes rests on it.
+    #[test]
+    fn sample_indices_matches_dense_fisher_yates() {
+        fn dense(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + rng.next_below((n - i) as u64) as usize;
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+        for seed in 0..20u64 {
+            for &(n, k) in &[(1, 1), (5, 5), (50, 20), (64, 64), (1024, 7), (100_000, 64)] {
+                let mut a = Rng::new(seed * 31 + 7);
+                let mut b = a.clone();
+                let sparse = a.sample_indices(n, k);
+                assert_eq!(sparse, dense(&mut b, n, k), "n={n} k={k} seed={seed}");
+                // Both generators ended at the same stream position.
+                assert_eq!(a.state(), b.state());
+            }
+        }
+    }
+
+    /// The streaming weight-function form is bit-identical to the slice
+    /// form (same total, same subtract-scan) — the contract that lets
+    /// virtual registries skip the weights vector.
+    #[test]
+    fn sample_weighted_with_matches_slice_form() {
+        let w = [0.25, 3.0, 0.0, 1.5, 0.75];
+        for seed in 0..50u64 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            assert_eq!(a.sample_weighted(&w), b.sample_weighted_with(w.len(), |i| w[i]));
+        }
     }
 
     #[test]

@@ -472,7 +472,7 @@ fn local_training_is_deterministic() {
     let job = LocalJob {
         agent_id: 3,
         round: 2,
-        shard: (0..200).collect(),
+        shard: (0..200).collect::<Vec<_>>().into(),
         global,
         lr: 0.05,
         local_epochs: 2,

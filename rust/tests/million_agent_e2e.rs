@@ -1,0 +1,86 @@
+//! Million-agent smoke round — the registry memory contract, CI-gated.
+//!
+//! A population of 10^6 simulated clients with K=64 sampled per round
+//! must cost memory proportional to the *cohort*, not the population:
+//! the virtualized registry derives shard bounds, sampling weights, and
+//! per-agent state lazily from `(seed, agent_id)`, and the sparse
+//! Fisher–Yates draw touches O(K) entries. This test runs one full
+//! round end to end and asserts a hard peak-RSS ceiling read from
+//! `/proc/self/status` (VmHWM) **inside the test process**.
+//!
+//! VmHWM is a process-lifetime high-water mark, so this test lives in
+//! its own integration-test binary: nothing else runs here to inflate
+//! the peak. A materialized 1M-agent registry alone (one `Agent` plus a
+//! heap-allocated shard `Vec` per client) costs well over the ceiling,
+//! so the gate genuinely distinguishes the virtual path.
+
+use ferrisfl::agents::RegistryMode;
+use ferrisfl::entrypoint::Experiment;
+use ferrisfl::loggers::NullLogger;
+use ferrisfl::util::mem::peak_rss_bytes;
+
+/// Hard ceiling for the whole test process. The virtual round measures
+/// ~tens of MB (binary + model + one cohort); an eagerly materialized
+/// million-agent population cannot fit under it.
+const PEAK_RSS_CEILING_BYTES: u64 = 128 * 1024 * 1024;
+
+const POPULATION: usize = 1_000_000;
+const COHORT: usize = 64;
+
+#[test]
+fn million_agent_round_stays_cohort_bounded() {
+    let mut exp = Experiment::builder()
+        .name("million_agent_smoke")
+        .model("mlp-s")
+        .dataset("synth-mnist")
+        .num_agents(POPULATION)
+        .sampling_ratio(COHORT as f64 / POPULATION as f64)
+        .rounds(1)
+        .local_epochs(1)
+        .max_local_steps(1)
+        .workers(2)
+        .eval_every(0)
+        .registry(RegistryMode::Virtual)
+        .build()
+        .unwrap();
+    assert_eq!(exp.num_agents(), POPULATION);
+    assert_eq!(exp.params().sampled_per_round(), COHORT);
+
+    let res = exp.run(&mut NullLogger).unwrap();
+
+    // The round really ran over the full population's id space.
+    assert_eq!(res.rounds.len(), 1);
+    let sampled = &res.rounds[0].sampled;
+    assert_eq!(sampled.len(), COHORT, "K=64 agents sampled");
+    let mut distinct = sampled.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    assert_eq!(distinct.len(), COHORT, "cohort ids are distinct");
+    assert!(distinct.iter().all(|&a| a < POPULATION), "ids in range");
+    assert!(!exp.global_params().is_empty());
+    assert!(
+        res.rounds[0].train_loss.is_finite(),
+        "the cohort actually trained: loss {}",
+        res.rounds[0].train_loss
+    );
+
+    // Sparse overlay: only the trained cohort holds mutable state.
+    let touched = exp.entrypoint().registry.touched();
+    assert!(
+        touched <= COHORT,
+        "overlay holds {touched} agents; must be <= the cohort ({COHORT})"
+    );
+    assert!(exp.entrypoint().registry.is_virtual());
+
+    // The memory contract itself. `peak_rss_bytes` is None off-Linux
+    // (procfs only); the ceiling gates every CI leg, all Linux.
+    match peak_rss_bytes() {
+        Some(peak) => assert!(
+            peak < PEAK_RSS_CEILING_BYTES,
+            "peak RSS {:.1} MB breaches the {:.0} MB million-agent ceiling",
+            peak as f64 / (1024.0 * 1024.0),
+            PEAK_RSS_CEILING_BYTES as f64 / (1024.0 * 1024.0),
+        ),
+        None => eprintln!("VmHWM unavailable (non-Linux): RSS ceiling not asserted"),
+    }
+}

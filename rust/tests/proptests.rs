@@ -130,9 +130,10 @@ fn prop_samplers_return_k_distinct_valid_ids() {
                 a.last_loss = rng.next_f64() * 3.0;
             }
         }
+        let registry = ferrisfl::agents::AgentRegistry::from_agents(agents);
         for name in ["random", "round-robin", "reputation", "poc"] {
             let mut s = samplers::from_name(name).unwrap();
-            let ids = s.sample(&agents, k, rng);
+            let ids = s.sample(&registry, k, rng).unwrap();
             assert_eq!(ids.len(), k, "{name}");
             let mut sorted = ids.clone();
             sorted.sort_unstable();

@@ -1,0 +1,147 @@
+//! Registry parity: `virtual` ≡ `materialized`, bit for bit.
+//!
+//! The virtualized registry's whole claim is that it is *not a model
+//! change*: at equal `(seed, population)` the explicit `materialized`
+//! (eager range-sharded agents) and `virtual` (closed-form shards +
+//! sparse overlay) modes must produce identical sampler draws, shard
+//! contents, fault/latency/adversary casualties, reputation
+//! trajectories, and final global models — across populations, worker
+//! counts, and every sampler in the registry. These tests pin that
+//! contract end to end, chaos included.
+
+use ferrisfl::agents::RegistryMode;
+use ferrisfl::entrypoint::{Experiment, RunResult};
+use ferrisfl::loggers::NullLogger;
+
+const POPULATIONS: [usize; 3] = [6, 64, 1024];
+
+/// Build-and-run one experiment; chaos adds seeded latency, crashes,
+/// delta corruption, a Byzantine sign-flipper, and a retry budget (all
+/// keyed by `(seed, agent, round)` — registry-independent streams).
+fn run(
+    mode: RegistryMode,
+    population: usize,
+    workers: usize,
+    sampler: &str,
+    chaos: bool,
+) -> (Experiment, RunResult) {
+    let ratio = (8.0 / population as f64).clamp(2.0 / population as f64, 0.5);
+    let mut b = Experiment::builder()
+        .name("parity")
+        .model("mlp-s")
+        .dataset("synth-mnist")
+        .num_agents(population)
+        .sampling_ratio(ratio)
+        .rounds(3)
+        .local_epochs(1)
+        .max_local_steps(1)
+        .workers(workers)
+        .eval_every(0)
+        .seed(0xFEED)
+        .sampler(sampler)
+        .registry(mode);
+    if chaos {
+        b = b
+            .latency("lognormal:0.4,0.6".parse().unwrap())
+            .fault_plan("crash:0.25;corrupt:0.15".parse().unwrap())
+            .adversary("adv:signflip:0.3".parse().unwrap())
+            .aggregator("median")
+            .retry(1)
+            .backoff("0.2,2,0.1".parse().unwrap());
+    }
+    let mut exp = b.build().unwrap();
+    let res = exp.run(&mut NullLogger).unwrap();
+    (exp, res)
+}
+
+/// Everything observable must agree — floats compared by exact bits.
+fn assert_runs_identical(tag: &str, m: &mut (Experiment, RunResult), v: &mut (Experiment, RunResult)) {
+    let (me, mr) = m;
+    let (ve, vr) = v;
+    let mb: Vec<u32> = me.global_params().iter().map(|p| p.to_bits()).collect();
+    let vb: Vec<u32> = ve.global_params().iter().map(|p| p.to_bits()).collect();
+    assert_eq!(mb, vb, "{tag}: final global model bits");
+    assert_eq!(mr.rounds.len(), vr.rounds.len(), "{tag}: round count");
+    for (a, b) in mr.rounds.iter().zip(vr.rounds.iter()) {
+        assert_eq!(a.sampled, b.sampled, "{tag} round {}: cohort", a.round);
+        assert_eq!(a.dropped, b.dropped, "{tag} round {}: casualties", a.round);
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "{tag} round {}: train loss",
+            a.round
+        );
+        assert_eq!(a.outcome, b.outcome, "{tag} round {}: outcome", a.round);
+        assert_eq!(a.recovery, b.recovery, "{tag} round {}: recovery stats", a.round);
+        assert_eq!(a.adversarial, b.adversarial, "{tag} round {}: adversaries", a.round);
+    }
+    assert_eq!(
+        mr.agent_records.len(),
+        vr.agent_records.len(),
+        "{tag}: agent records"
+    );
+
+    // Shards and mutable per-agent state agree agent-by-agent: the
+    // eager form really materialized what the lazy one derives, and
+    // the sparse overlay reproduced the eager structs' post-run EWMA
+    // reputations. shard_range is closed-form, so spot-check
+    // boundaries + strides rather than walking 1024 agents.
+    let population = me.params().num_agents;
+    assert_eq!(population, ve.params().num_agents, "{tag}: population");
+    let ids: Vec<usize> = if population <= 64 {
+        (0..population).collect()
+    } else {
+        (0..population).step_by(97).chain([population - 1]).collect()
+    };
+    for id in ids {
+        let (ms, ml, mrep, mt) = {
+            let reg = &me.entrypoint().registry;
+            (reg.shard(id).to_order(), reg.shard_len(id), reg.reputation(id), reg.times_sampled(id))
+        };
+        let (vs, vl, vrep, vt) = {
+            let reg = &ve.entrypoint().registry;
+            (reg.shard(id).to_order(), reg.shard_len(id), reg.reputation(id), reg.times_sampled(id))
+        };
+        assert_eq!(ms, vs, "{tag}: shard of agent {id}");
+        assert_eq!(ml, vl, "{tag}: shard len of agent {id}");
+        assert_eq!(mrep.to_bits(), vrep.to_bits(), "{tag}: reputation of agent {id}");
+        assert_eq!(mt, vt, "{tag}: times_sampled of agent {id}");
+    }
+}
+
+#[test]
+fn clean_rounds_are_bit_identical_across_registry_forms() {
+    for &population in &POPULATIONS {
+        for workers in [1usize, 2, 4] {
+            let tag = format!("clean pop={population} workers={workers}");
+            let mut m = run(RegistryMode::Materialized, population, workers, "random", false);
+            let mut v = run(RegistryMode::Virtual, population, workers, "random", false);
+            assert_runs_identical(&tag, &mut m, &mut v);
+        }
+    }
+}
+
+#[test]
+fn chaos_rounds_are_bit_identical_across_registry_forms() {
+    for &population in &POPULATIONS {
+        for workers in [1usize, 2, 4] {
+            let tag = format!("chaos pop={population} workers={workers}");
+            let mut m = run(RegistryMode::Materialized, population, workers, "random", true);
+            let mut v = run(RegistryMode::Virtual, population, workers, "random", true);
+            assert_runs_identical(&tag, &mut m, &mut v);
+        }
+    }
+}
+
+#[test]
+fn every_sampler_draws_identically_across_registry_forms() {
+    // Reputation and power-of-choice read per-agent state (EWMA
+    // reputation, last loss) — the sparse overlay must reproduce the
+    // eager structs' trajectories exactly for their draws to agree.
+    for sampler in ["random", "round-robin", "reputation:0.5", "poc:8"] {
+        let tag = format!("sampler={sampler} pop=64");
+        let mut m = run(RegistryMode::Materialized, 64, 2, sampler, false);
+        let mut v = run(RegistryMode::Virtual, 64, 2, sampler, false);
+        assert_runs_identical(&tag, &mut m, &mut v);
+    }
+}
